@@ -1,0 +1,43 @@
+//! §2 dtype sweep on *real* training data: capture the FFN taps of a
+//! training run and report compressibility for every tensor kind at
+//! every dtype the paper analyzes (bf16, e4m3, e3m2, e2m3, e2m1).
+//!
+//! ```bash
+//! cargo run --release --example dtype_sweep -- [--model tiny|paper] [--steps N]
+//! ```
+
+use sshuff::experiments::{capture_cached, figures, CaptureSpec};
+use sshuff::runtime::Engine;
+use sshuff::tensors::DtypeTag;
+
+fn main() -> sshuff::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |flag: &str| -> Option<String> {
+        args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+    };
+    let model = get("--model").unwrap_or_else(|| "tiny".into());
+    let mut spec = if model == "paper" { CaptureSpec::paper() } else { CaptureSpec::tiny() };
+    spec.model = model;
+    if let Some(s) = get("--steps") {
+        spec.steps = s.parse().expect("--steps");
+        spec.observe_from = (spec.steps / 4).min(spec.steps - 1);
+    }
+
+    let engine = Engine::cpu()?;
+    println!("capturing {} ({} steps, {} shards/layer)...", spec.model, spec.steps, spec.n_shards);
+    let cap = capture_cached(&engine, &spec)?;
+    println!(
+        "captured {} shards per tensor kind; final loss {:.4}\n",
+        cap.total_shards(),
+        cap.loss_curve.last().copied().unwrap_or(f32::NAN)
+    );
+    println!("mean compressibility per (tensor kind, dtype):");
+    println!("  ideal     = Shannon bound");
+    println!("  per-shard = three-stage Huffman per shard (paper's comparator)");
+    println!("  avg-book  = fixed codebook from the average of shard PMFs");
+    println!("  prev-book = fixed codebook from previous batches (deployment, §4)\n");
+    println!("{}", figures::sweep(&cap, &DtypeTag::ALL));
+    println!("Reading: avg-book within ~0.5% of per-shard and ~1% of ideal");
+    println!("reproduces the paper's Fig. 4 claim; the same holds per dtype (§3).");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the single-stage Huffman API in ~40 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. observe a few "previous batches" of a tensor's bytes (off the
+//!    critical path),
+//! 2. build a fixed codebook from the average distribution,
+//! 3. encode new batches in a single streaming pass (1-byte codebook id
+//!    on the wire instead of a 128-byte codebook),
+//! 4. decode exactly.
+
+use sshuff::singlestage::{AvgPolicy, CodebookManager, SingleStageDecoder, SingleStageEncoder};
+use sshuff::stats::Histogram256;
+use sshuff::tensors::{shard_symbols, DtypeTag, TensorKey, TensorKind};
+use sshuff::trainer::synthetic::synthetic_tap;
+
+fn main() -> sshuff::Result<()> {
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+
+    // --- off the critical path: average PMF from previous batches -----
+    let mut manager = CodebookManager::new(AvgPolicy::CumulativeMean);
+    for batch in 0..4 {
+        let tap = synthetic_tap(TensorKind::Ffn1Act, 1, 256, 256, batch);
+        manager.observe_bytes(key, &shard_symbols(&tap, DtypeTag::Bf16));
+    }
+    let id = manager.build(key).expect("observed at least one batch");
+    println!("built codebook id={id} from {} batches", manager.batches_seen(key));
+
+    // --- the critical path: one streaming pass per message ------------
+    let mut encoder = SingleStageEncoder::new(manager.registry.clone());
+    let decoder = SingleStageDecoder::new(manager.registry.clone());
+    for batch in 10..13 {
+        let tap = synthetic_tap(TensorKind::Ffn1Act, 1, 256, 256, batch);
+        let data = shard_symbols(&tap, DtypeTag::Bf16);
+        let frame = encoder.encode_with(id, &data);
+        let wire = frame.to_bytes();
+        let back = decoder.decode_bytes(&wire)?;
+        assert_eq!(back, data, "lossless");
+
+        let h = Histogram256::from_bytes(&data);
+        println!(
+            "batch {batch}: {} -> {} bytes  ({:.2}% saved; shannon bound {:.2}%)",
+            data.len(),
+            wire.len(),
+            100.0 * (1.0 - wire.len() as f64 / data.len() as f64),
+            100.0 * h.ideal_compressibility(),
+        );
+    }
+    let s = encoder.stats();
+    println!(
+        "totals: {} frames, {} symbols in, {} bytes out, compressibility {:.2}%",
+        s.frames,
+        s.symbols_in,
+        s.bytes_out,
+        100.0 * s.compressibility()
+    );
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! End-to-end driver: all three layers composed on a real workload.
+//!
+//! ```bash
+//! cargo run --release --example train_e2e -- [--model tiny|paper|100m] \
+//!     [--steps N] [--workers W] [--shards S] [--rebuild-every R]
+//! ```
+//!
+//! Per training step:
+//!   L2/L1 — the AOT-lowered transformer train step (with the Pallas
+//!           kernels compiled into the same HLO) runs under the PJRT CPU
+//!           client and returns loss + the 8 tapped FFN tensors;
+//!   L3   — the leader shards each tap (tensor-parallel column split),
+//!           routes the shards through the coordinator's worker pool
+//!           (single-stage encode, fixed codebooks), ships the frames
+//!           over the simulated fabric to a decoder peer, and verifies
+//!           bit-exact reconstruction.
+//!
+//! Codebooks are (re)built off the critical path from the *previous*
+//! steps' average distributions (paper §4). The run logs the loss curve
+//! and per-kind compression, then dumps coordinator metrics.
+//!
+//! Defaults are sized for a 1-core CPU box (see DESIGN.md §8 on the
+//! 100M-parameter preset): `--model tiny --steps 300`.
+
+use sshuff::cli::{Cli, CommandSpec, OptSpec};
+use sshuff::coordinator::{CompressJob, Coordinator};
+use sshuff::fabric::{Fabric, LinkModel};
+use sshuff::runtime::Engine;
+use sshuff::singlestage::AvgPolicy;
+use sshuff::tensors::{shard_symbols, DtypeTag, TensorKey};
+use sshuff::trainer::{shard_step, Trainer};
+use std::collections::HashMap;
+
+fn main() -> sshuff::Result<()> {
+    let cli = Cli {
+        bin: "train_e2e",
+        about: "end-to-end: train + tap + compress + ship + verify",
+        commands: vec![CommandSpec {
+            name: "run",
+            about: "run the driver",
+            opts: vec![
+                OptSpec { name: "model", takes_value: true, help: "tiny|paper|100m (default tiny)" },
+                OptSpec { name: "steps", takes_value: true, help: "training steps (default 300)" },
+                OptSpec { name: "workers", takes_value: true, help: "coordinator workers (default 4)" },
+                OptSpec { name: "shards", takes_value: true, help: "column shards (default 8)" },
+                OptSpec { name: "rebuild-every", takes_value: true, help: "codebook rebuild period (default 25)" },
+                OptSpec { name: "seed", takes_value: true, help: "seed (default 42)" },
+            ],
+        }],
+    };
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.first().map(|s| s.as_str()) != Some("run") {
+        argv.insert(0, "run".to_string());
+    }
+    let args = cli.parse(&argv).map_err(anyhow::Error::msg)?;
+    let model = args.opt_or("model", "tiny").to_string();
+    let steps: usize = args.opt_parse("steps", 300).map_err(anyhow::Error::msg)?;
+    let workers: usize = args.opt_parse("workers", 4).map_err(anyhow::Error::msg)?;
+    let n_shards: usize = args.opt_parse("shards", 8).map_err(anyhow::Error::msg)?;
+    let rebuild_every: usize = args.opt_parse("rebuild-every", 25).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.opt_parse("seed", 42).map_err(anyhow::Error::msg)?;
+
+    let engine = Engine::cpu()?;
+    println!("platform {} | model {model} | {steps} steps | {workers} workers | {n_shards} shards", engine.platform());
+    let mut trainer = Trainer::new(&engine, &model, seed)?;
+    println!("params: {}", trainer.runner.manifest.field("param_count")?);
+
+    let coord = Coordinator::new(workers, AvgPolicy::Ema(0.2));
+    let mut fabric = Fabric::new(2, LinkModel::DIE_TO_DIE);
+    let mut per_kind: HashMap<&'static str, (u64, u64)> = HashMap::new(); // raw, wire
+    let mut codebooks_live = false;
+    let t0 = std::time::Instant::now();
+
+    for step in 0..steps {
+        let out = trainer.step()?;
+        let sets = shard_step(&out, n_shards);
+
+        // --- compress every shard through the worker pool -------------
+        let mut jobs = Vec::new();
+        let mut keys = Vec::new();
+        for set in &sets {
+            let key = TensorKey::new(set.kind, DtypeTag::Bf16);
+            for shard in &set.shards {
+                let data = shard_symbols(shard, DtypeTag::Bf16);
+                // leader folds this batch into the average PMF (off the
+                // critical path: amortized, not per-frame)
+                coord.observe_bytes(key, &data);
+                jobs.push(CompressJob { seq: jobs.len() as u64, key, data });
+                keys.push(set.kind.name());
+            }
+        }
+        let originals: Vec<Vec<u8>> = jobs.iter().map(|j| j.data.clone()).collect();
+        let results = coord.encode_batch(jobs);
+
+        // --- ship + verify on the receiving peer ----------------------
+        let decoder = coord.decoder();
+        for (r, orig) in results.iter().zip(&originals) {
+            fabric.send(0, 1, r.frame.wire_bytes());
+            let back = decoder.decode(&r.frame)?;
+            assert_eq!(&back, orig, "lossless transport");
+            let e = per_kind.entry(keys[r.seq as usize]).or_insert((0, 0));
+            e.0 += r.raw_len as u64;
+            e.1 += r.frame.wire_bytes() as u64;
+        }
+
+        // --- rebuild codebooks off the critical path -------------------
+        if step % rebuild_every == rebuild_every - 1 {
+            let v = coord.rebuild_codebooks();
+            codebooks_live = true;
+            if step < 2 * rebuild_every {
+                println!("step {step}: published routing table v{v}");
+            }
+        }
+        if step % 20 == 0 || step == steps - 1 {
+            println!(
+                "step {step:4}  loss {:.4}  {}",
+                out.loss,
+                if codebooks_live { "compressed" } else { "raw (warming up)" }
+            );
+        }
+    }
+
+    println!("\nwall time: {:.1}s", t0.elapsed().as_secs_f64());
+    println!("\nloss curve (first 5 / last 5):");
+    let lc = &trainer.loss_curve;
+    for (i, l) in lc.iter().take(5).enumerate() {
+        println!("  step {i:4}  {l:.4}");
+    }
+    for (i, l) in lc.iter().enumerate().skip(lc.len().saturating_sub(5)) {
+        println!("  step {i:4}  {l:.4}");
+    }
+
+    println!("\nper-kind compression (raw -> wire bytes over the whole run):");
+    let mut rows: Vec<_> = per_kind.into_iter().collect();
+    rows.sort();
+    let mut table = sshuff::benchkit::Table::new(&["tensor", "raw MB", "wire MB", "saved%"]);
+    let (mut traw, mut twire) = (0u64, 0u64);
+    for (kind, (raw, wire)) in rows {
+        traw += raw;
+        twire += wire;
+        table.row(&[
+            kind.to_string(),
+            format!("{:.2}", raw as f64 / 1e6),
+            format!("{:.2}", wire as f64 / 1e6),
+            format!("{:.2}", 100.0 * (1.0 - wire as f64 / raw as f64)),
+        ]);
+    }
+    table.row(&[
+        "TOTAL".into(),
+        format!("{:.2}", traw as f64 / 1e6),
+        format!("{:.2}", twire as f64 / 1e6),
+        format!("{:.2}", 100.0 * (1.0 - twire as f64 / traw as f64)),
+    ]);
+    println!("{}", table.render());
+    println!("fabric link 0->1: {:?}", fabric.link_stats(0, 1));
+    println!("\ncoordinator metrics:\n{}", coord.metrics.render());
+    Ok(())
+}

@@ -1,0 +1,165 @@
+"""AOT lowering: jax/pallas -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (per model config ``cfg`` in {tiny, paper, 100m}):
+  train_step_<cfg>.hlo.txt   flat train step (params, momentum, tokens)
+  init_<cfg>.hlo.txt         param init from a u32 seed
+  manifest_<cfg>.txt         I/O contract: ordered dtype/shape per arg
+Plus the Pallas kernels at canonical sizes (shared by all configs):
+  histogram.hlo.txt, codebook_eval.hlo.txt, encode_index.hlo.txt
+  kernels_manifest.txt
+
+Manifest line format (hand-parsed by rust/src/runtime/manifest.rs):
+  ``<section> <role> <name> <dtype> <dim0,dim1,...|scalar>``
+where section ∈ {input, output}, role ∈ {p(aram), m(omentum), d(ata),
+s(calar), t(ap)}; plus ``field <key> <value>`` config lines.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import byte_histogram, codebook_eval, encode_index
+
+# Canonical sizes for the standalone kernel artifacts. The rust side
+# processes full KERNEL_N-symbol chunks through the PJRT path and mops up
+# remainders natively (runtime/kernels.rs).
+KERNEL_N = 65536
+KERNEL_BLOCK = 8192
+KERNEL_K = 8  # codebooks scored in parallel by codebook_eval
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {
+        jnp.float32.dtype: "f32",
+        jnp.int32.dtype: "i32",
+        jnp.uint32.dtype: "u32",
+        jnp.uint16.dtype: "u16",
+        jnp.uint8.dtype: "u8",
+    }[jnp.dtype(dt)]
+
+
+def _shape_tag(shape) -> str:
+    return ",".join(str(d) for d in shape) if len(shape) else "scalar"
+
+
+def _spec(shape, dt):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def lower_train_step(cfg_name: str, out_dir: str) -> None:
+    cfg = model.CONFIGS[cfg_name]
+    pshapes = model.param_shapes(cfg)
+    tshapes = model.tap_shapes(cfg)
+
+    specs = (
+        [_spec(pshapes[n], jnp.float32) for n in model.PARAM_NAMES] * 2
+        + [_spec((cfg.batch, cfg.seq_len + 1), jnp.int32)]
+    )
+    lowered = jax.jit(model.train_step_flat(cfg)).lower(*specs)
+    path = os.path.join(out_dir, f"train_step_{cfg_name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    init_lowered = jax.jit(model.init_flat(cfg)).lower(_spec((), jnp.uint32))
+    ipath = os.path.join(out_dir, f"init_{cfg_name}.hlo.txt")
+    with open(ipath, "w") as f:
+        f.write(to_hlo_text(init_lowered))
+
+    mpath = os.path.join(out_dir, f"manifest_{cfg_name}.txt")
+    with open(mpath, "w") as f:
+        f.write(f"field config {cfg_name}\n")
+        for k in (
+            "vocab", "d_model", "n_heads", "n_layers", "d_ff",
+            "seq_len", "batch", "lr", "momentum",
+        ):
+            f.write(f"field {k} {getattr(cfg, k)}\n")
+        f.write(f"field param_count {cfg.param_count()}\n")
+        for n in model.PARAM_NAMES:
+            f.write(f"input p {n} f32 {_shape_tag(pshapes[n])}\n")
+        for n in model.PARAM_NAMES:
+            f.write(f"input m {n} f32 {_shape_tag(pshapes[n])}\n")
+        f.write(f"input d tokens i32 {cfg.batch},{cfg.seq_len + 1}\n")
+        for n in model.PARAM_NAMES:
+            f.write(f"output p {n} f32 {_shape_tag(pshapes[n])}\n")
+        for n in model.PARAM_NAMES:
+            f.write(f"output m {n} f32 {_shape_tag(pshapes[n])}\n")
+        f.write("output s loss f32 scalar\n")
+        for n in model.TAP_NAMES:
+            f.write(f"output t {n} u16 {_shape_tag(tshapes[n])}\n")
+    print(f"lowered {cfg_name}: {path}, {ipath}, {mpath}")
+
+
+def lower_kernels(out_dir: str) -> None:
+    n, blk, k = KERNEL_N, KERNEL_BLOCK, KERNEL_K
+    u8 = _spec((n,), jnp.uint8)
+
+    jobs = {
+        "histogram": jax.jit(lambda x: byte_histogram(x, block=blk)).lower(u8),
+        "codebook_eval": jax.jit(
+            lambda x, lens: codebook_eval(x, lens, block=blk)
+        ).lower(u8, _spec((k, 256), jnp.int32)),
+        "encode_index": jax.jit(
+            lambda x, cw, lens: encode_index(x, cw, lens, block=blk)
+        ).lower(u8, _spec((256,), jnp.uint32), _spec((256,), jnp.int32)),
+    }
+    for name, lowered in jobs.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"lowered kernel: {path}")
+
+    with open(os.path.join(out_dir, "kernels_manifest.txt"), "w") as f:
+        f.write(f"field kernel_n {n}\n")
+        f.write(f"field kernel_block {blk}\n")
+        f.write(f"field kernel_k {k}\n")
+        f.write(f"input d histogram.x u8 {n}\n")
+        f.write(f"output d histogram.counts i32 256\n")
+        f.write(f"input d codebook_eval.x u8 {n}\n")
+        f.write(f"input d codebook_eval.lengths i32 {k},256\n")
+        f.write(f"output d codebook_eval.bits i32 {k}\n")
+        f.write(f"input d encode_index.x u8 {n}\n")
+        f.write(f"input d encode_index.codewords u32 256\n")
+        f.write(f"input d encode_index.lengths i32 256\n")
+        f.write(f"output d encode_index.codes u32 {n}\n")
+        f.write(f"output d encode_index.lens i32 {n}\n")
+        f.write(f"output d encode_index.offsets i32 {n}\n")
+        f.write(f"output d encode_index.total_bits i32 scalar\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs", default="tiny,paper",
+        help="comma-separated model configs to lower (tiny,paper,100m)",
+    )
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for cfg_name in [c for c in args.configs.split(",") if c]:
+        lower_train_step(cfg_name, args.out_dir)
+    if not args.skip_kernels:
+        lower_kernels(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Layer-1 Pallas kernels for the single-stage Huffman encoder.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls; real-TPU perf is estimated from
+BlockSpec/VMEM accounting in DESIGN.md §7.
+
+Kernels
+-------
+histogram        256-bin byte histogram (Huffman stage-1, run off the
+                 critical path to maintain the average PMF).
+codebook_eval    score K fixed codebooks on a symbol stream in parallel
+                 (the paper §4 "hardware implementation" of codebook
+                 selection), MXU-shaped as one-hot @ length-matrix.
+encode_index     symbol -> (codeword, length) gather plus exclusive
+                 prefix-sum of bit offsets — the data-parallel half of
+                 the single-stage encode; final bit-scatter happens in
+                 the rust ``bitio`` packer.
+"""
+
+from .histogram import byte_histogram
+from .codebook_eval import codebook_eval
+from .encode_index import encode_index
+
+__all__ = ["byte_histogram", "codebook_eval", "encode_index"]

@@ -1,0 +1,77 @@
+"""Parallel multi-codebook evaluation as a Pallas kernel.
+
+Paper §4: *"In a hardware implementation, multiple code books can be
+evaluated for compressibility in parallel. The code book which achieves
+the best compression is selected."*
+
+Given a symbol stream and the per-symbol **code length** tables of K
+fixed codebooks, compute the total encoded size in bits under each
+codebook. The selection (argmin) plus the escape/fallback policy lives
+in the rust ``singlestage`` module; this kernel is the bandwidth-heavy
+inner product.
+
+TPU mapping: instead of K comparator banks walking the stream, the block
+of symbols is one-hot expanded to a (block, 256) tile and contracted
+against the (256, K) length matrix on the MXU:
+
+    bits[k] = sum_i len[k, sym_i] = (onehot @ lengths.T)[i, k] summed over i
+            = hist_block . lengths[k, :]
+
+We fuse the histogram and the contraction per block so the symbol tile
+never leaves VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NUM_SYMBOLS = 256
+DEFAULT_BLOCK = 8192
+
+
+def _codebook_eval_kernel(x_ref, len_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)  # (block,)
+    ids = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], NUM_SYMBOLS), 1)
+    onehot = (x[:, None] == ids).astype(jnp.float32)  # (block, 256)
+    # Block-local histogram, then contract with the K length rows.
+    hist = jnp.sum(onehot, axis=0)  # (256,)
+    lens = len_ref[...].astype(jnp.float32)  # (K, 256)
+    o_ref[...] += (lens @ hist).astype(jnp.int64 if o_ref.dtype == jnp.int64 else jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def codebook_eval(x, lengths, block: int = DEFAULT_BLOCK):
+    """Total encoded bits of ``x`` under each of K codebooks.
+
+    Args:
+      x: (N,) uint8 symbol stream, N divisible by ``block``.
+      lengths: (K, 256) int32 code-length table per codebook. A length of
+        0 marks a symbol absent from the codebook — the rust side treats
+        any hit as "codebook inapplicable" via a separate escape count;
+        here 0-length symbols simply contribute 0 bits.
+
+    Returns: (K,) int32 total bits per codebook.
+    """
+    n = x.shape[0]
+    assert n % block == 0, f"input length {n} not a multiple of block {block}"
+    k = lengths.shape[0]
+    grid = (n // block,)
+    return pl.pallas_call(
+        _codebook_eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((k, NUM_SYMBOLS), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((k,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.int32),
+        interpret=True,
+    )(x, lengths)

@@ -1,0 +1,86 @@
+"""Data-parallel Huffman encode front half as a Pallas kernel.
+
+The sequential bottleneck of Huffman encoding is the bit-packing: symbol
+i's output position depends on the lengths of all previous symbols. The
+classic data-parallel formulation splits encode into
+
+  1. gather:  code_i  = codewords[sym_i],  len_i = lengths[sym_i]
+  2. scan:    off_i   = exclusive_prefix_sum(len)  (output bit offset)
+  3. scatter: pack code_i at bit offset off_i
+
+Steps 1-2 are embarrassingly vectorizable and run here; step 3 is a
+bit-granular scatter that is pathological for the VPU, so it stays in
+the rust ``bitio`` packer — which the offsets make branch-light and
+parallelizable across blocks.
+
+Grid handling: each block computes its local gather + inclusive cumsum;
+block-base offsets are the carry. Pallas grids on TPU execute
+sequentially, so the carry lives in the output ref: the kernel writes
+block-local *inclusive* sums and the thin jnp wrapper rebases blocks
+with the standard two-pass scan (block sums -> exclusive bases).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NUM_SYMBOLS = 256
+DEFAULT_BLOCK = 8192
+
+
+def _encode_index_kernel(x_ref, code_ref, len_ref, codes_out, lens_out, incl_out):
+    x = x_ref[...].astype(jnp.int32)  # (block,)
+    codes_out[...] = code_ref[...][x]
+    lens = len_ref[...][x]
+    lens_out[...] = lens
+    incl_out[...] = jnp.cumsum(lens)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def encode_index(x, codewords, lengths, block: int = DEFAULT_BLOCK):
+    """Vectorized encode front half.
+
+    Args:
+      x: (N,) uint8 symbols, N divisible by ``block``.
+      codewords: (256,) uint32 canonical codewords (right-aligned).
+      lengths: (256,) int32 code lengths in bits.
+
+    Returns (codes, lens, offsets, total_bits):
+      codes:   (N,) uint32 codeword per symbol
+      lens:    (N,) int32 bit length per symbol
+      offsets: (N,) int32 exclusive prefix sum — output bit offset
+      total_bits: () int32
+    """
+    n = x.shape[0]
+    assert n % block == 0, f"input length {n} not a multiple of block {block}"
+    nblocks = n // block
+    grid = (nblocks,)
+    codes, lens, incl = pl.pallas_call(
+        _encode_index_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((NUM_SYMBOLS,), lambda i: (0,)),
+            pl.BlockSpec((NUM_SYMBOLS,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(x, codewords, lengths)
+    # Rebase per-block inclusive sums into a global exclusive scan.
+    incl2 = incl.reshape(nblocks, block)
+    block_totals = incl2[:, -1]
+    bases = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(block_totals)[:-1]])
+    exclusive = (incl2 - lens.reshape(nblocks, block) + bases[:, None]).reshape(n)
+    total_bits = block_totals.sum()
+    return codes, lens, exclusive, total_bits

@@ -1,0 +1,59 @@
+"""256-bin byte histogram as a Pallas kernel.
+
+This is Huffman *stage 1* (frequency analysis). In the paper's
+single-stage design it runs **off the critical path**, maintaining the
+average PMF of previous batches from which fixed codebooks are derived.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the input byte stream is
+tiled HBM -> VMEM in ``block`` -sized chunks via the grid; inside the
+kernel the chunk is one-hot expanded against the 256 symbol ids and
+reduced with a sum — a VMEM-resident counter bank, accumulated across
+grid steps into the single (256,) output block. VMEM footprint is
+``block * 4B (i32 one-hot row) * 256 / lanes`` — with the default
+block of 8192 symbols the one-hot tile is 8192x256 i8-comparisons
+feeding an i32 reduction, well inside the ~16 MiB VMEM budget.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NUM_SYMBOLS = 256
+DEFAULT_BLOCK = 8192
+
+
+def _histogram_kernel(x_ref, o_ref):
+    """Accumulate the histogram of one block of symbols into o_ref."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)  # (block,)
+    # One-hot compare against the 256 symbol ids: (block, 256) i32.
+    ids = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], NUM_SYMBOLS), 1)
+    onehot = (x[:, None] == ids).astype(jnp.int32)
+    o_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def byte_histogram(x, block: int = DEFAULT_BLOCK):
+    """Histogram of a uint8 array ``x`` (length must divide by ``block``).
+
+    Returns an int32 array of shape (256,). Counts are exact for inputs
+    below 2**31 symbols.
+    """
+    n = x.shape[0]
+    assert n % block == 0, f"input length {n} not a multiple of block {block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _histogram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((NUM_SYMBOLS,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((NUM_SYMBOLS,), jnp.int32),
+        interpret=True,
+    )(x)

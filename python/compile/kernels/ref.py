@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package must match its oracle bit-exactly (integer
+outputs) under pytest + hypothesis sweeps in python/tests/.
+"""
+
+import jax.numpy as jnp
+
+NUM_SYMBOLS = 256
+
+
+def byte_histogram_ref(x):
+    """(N,) uint8 -> (256,) int32 exact histogram."""
+    return jnp.bincount(x.astype(jnp.int32), length=NUM_SYMBOLS).astype(jnp.int32)
+
+
+def codebook_eval_ref(x, lengths):
+    """(N,) uint8, (K, 256) int32 -> (K,) int32 total encoded bits."""
+    hist = byte_histogram_ref(x)
+    return (lengths.astype(jnp.int32) @ hist.astype(jnp.int32)).astype(jnp.int32)
+
+
+def encode_index_ref(x, codewords, lengths):
+    """Gather + exclusive scan oracle. Returns (codes, lens, offsets, total)."""
+    xi = x.astype(jnp.int32)
+    codes = codewords[xi]
+    lens = lengths[xi]
+    incl = jnp.cumsum(lens)
+    offsets = incl - lens
+    return codes, lens, offsets, incl[-1] if x.shape[0] else jnp.int32(0)
+
+
+def shannon_entropy_bits_ref(hist):
+    """Entropy in bits/symbol of an int histogram (float64 oracle)."""
+    h = hist.astype(jnp.float64)
+    n = h.sum()
+    p = h / n
+    nz = p > 0
+    return float(-(jnp.where(nz, p * jnp.log2(jnp.where(nz, p, 1.0)), 0.0)).sum())

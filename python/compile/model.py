@@ -1,0 +1,293 @@
+"""Layer-2: decoder-only transformer train step with FFN tensor taps.
+
+This is the paper's workload substrate. The paper analyzed the FFN1/FFN2
+weight, activation, weight-gradient and activation-gradient tensors of
+Gemma 2B during SFT (18 layers x 64-way sharding = 1152 shards per tensor
+kind). We reproduce the *measurement*, not the checkpoint: a decoder-only
+transformer trained by the rust runtime on a synthetic corpus, with the
+same tensor kinds tapped out of the real fwd/bwd pass as bf16 bit
+patterns (uint16 on the wire — the rust side consumes raw bytes).
+
+Everything here is build-time only: ``aot.py`` lowers ``train_step`` and
+``init_params`` to HLO text once; Python never runs on the request path.
+
+Activation gradients are captured with the zero-perturbation trick: a
+zeros tensor is added to each tapped activation; its gradient under
+``jax.grad`` *is* dL/d(activation), with no effect on the forward value.
+"""
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer geometry + training hyperparameters (baked at lowering)."""
+
+    vocab: int = 2048
+    d_model: int = 256
+    n_heads: int = 4
+    n_layers: int = 18
+    d_ff: int = 1024
+    seq_len: int = 128
+    batch: int = 4
+    lr: float = 3e-2
+    momentum: float = 0.9
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def tokens_per_step(self) -> int:
+        return self.batch * self.seq_len
+
+    def param_count(self) -> int:
+        per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff
+        per_layer += 2 * self.d_model  # norms
+        return (
+            self.vocab * self.d_model
+            + self.seq_len * self.d_model
+            + self.n_layers * per_layer
+            + self.d_model
+        )
+
+
+# Presets. "paper" matches the paper's 18-layer geometry so that
+# 18 layers x 64 model-dim shards = 1152 shards per tensor kind (§2).
+# d_ff=4096 gives 64 columns per 64-way shard — Gemma 2B's d_ff=16384
+# gives 256; below ~64 columns per shard the per-shard PMFs are
+# dominated by per-column scale variance and the paper's similarity
+# statistics cannot hold for *any* model (EXPERIMENTS.md §shard-width).
+# "tiny" keeps cargo tests fast on the 1-core CPU box. "100m" is the
+# e2e example's large preset (see DESIGN.md §8 on single-core budget).
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(
+        vocab=256, d_model=64, n_heads=2, n_layers=2, d_ff=128, seq_len=32, batch=2,
+        lr=0.1,
+    ),
+    "paper": ModelConfig(d_ff=4096, lr=0.05),
+    "100m": ModelConfig(
+        vocab=32768, d_model=768, n_heads=12, n_layers=12, d_ff=3072, seq_len=256, batch=4
+    ),
+}
+
+# Parameter ordering contract with the rust runtime (manifest order).
+PARAM_NAMES = (
+    "tok_emb",      # (V, D)
+    "pos_emb",      # (S, D)
+    "ln_f",         # (D,)
+    "attn_wqkv",    # (L, D, 3D)
+    "attn_wo",      # (L, D, D)
+    "ln1",          # (L, D)
+    "ln2",          # (L, D)
+    "ffn1_w",       # (L, D, F)
+    "ffn2_w",       # (L, F, D)
+)
+
+# Tapped tensor kinds, the paper's §2 inventory for FFN1/FFN2.
+TAP_NAMES = (
+    "ffn1_w", "ffn2_w",
+    "ffn1_act", "ffn2_act",
+    "ffn1_wgrad", "ffn2_wgrad",
+    "ffn1_agrad", "ffn2_agrad",
+)
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    l, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    return {
+        "tok_emb": (cfg.vocab, d),
+        "pos_emb": (cfg.seq_len, d),
+        "ln_f": (d,),
+        "attn_wqkv": (l, d, 3 * d),
+        "attn_wo": (l, d, d),
+        "ln1": (l, d),
+        "ln2": (l, d),
+        "ffn1_w": (l, d, f),
+        "ffn2_w": (l, f, d),
+    }
+
+
+def tap_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Tapped-tensor shapes. Every tap keeps the d_ff dimension LAST so
+    the rust side shards all of them 64-way along d_ff — Megatron tensor
+    parallelism: FFN1 is column-parallel (weights/activations split on
+    f), FFN2 is row-parallel (its weight rows and its *input*
+    activations split on f). ffn2_act is therefore the FFN2 input
+    (post-GELU), and ffn2_w/ffn2_wgrad are emitted transposed to
+    (l, d, f)."""
+    l, d, f, t = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.tokens_per_step
+    return {
+        "ffn1_w": (l, d, f),
+        "ffn2_w": (l, d, f),
+        "ffn1_act": (l, t, f),
+        "ffn2_act": (l, t, f),
+        "ffn1_wgrad": (l, d, f),
+        "ffn2_wgrad": (l, d, f),
+        "ffn1_agrad": (l, t, f),
+        "ffn2_agrad": (l, t, f),
+    }
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Scaled-normal init; ``seed`` is a scalar uint32 (runtime input)."""
+    key = jax.random.PRNGKey(seed)
+    shapes = param_shapes(cfg)
+    params = {}
+    for name in PARAM_NAMES:
+        key, sub = jax.random.split(key)
+        shape = shapes[name]
+        if name in ("ln_f", "ln1", "ln2"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            params[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def _rmsnorm(x, g):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def _attention(x, wqkv, wo, cfg: ModelConfig):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = x @ wqkv  # (B, S, 3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def _forward(params, zero_taps, tokens, cfg: ModelConfig):
+    """Forward pass; returns (logits, fwd_taps).
+
+    ``zero_taps`` is a dict of zeros added to the FFN activations so that
+    their gradients materialize the activation gradients.
+    """
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :s, :]
+
+    def layer(x, scanned):
+        wqkv, wo, ln1, ln2, w1, w2, z1, z2 = scanned
+        x = x + _attention(_rmsnorm(x, ln1), wqkv, wo, cfg)
+        h = _rmsnorm(x, ln2)
+        ffn1_act = h @ w1 + z1.reshape(b, s, -1)   # tap: FFN1 output (pre-GELU)
+        ffn2_in = jax.nn.gelu(ffn1_act) + z2.reshape(b, s, -1)  # tap: FFN2 input
+        x = x + ffn2_in @ w2
+        return x, (ffn1_act, ffn2_in)
+
+    scanned = (
+        params["attn_wqkv"], params["attn_wo"], params["ln1"], params["ln2"],
+        params["ffn1_w"], params["ffn2_w"],
+        zero_taps["ffn1_agrad"], zero_taps["ffn2_agrad"],
+    )
+    x, (ffn1_acts, ffn2_ins) = jax.lax.scan(layer, x, scanned)
+    x = _rmsnorm(x, params["ln_f"])
+    logits = x @ params["tok_emb"].T
+    t = cfg.tokens_per_step
+    fwd_taps = {
+        "ffn1_act": ffn1_acts.reshape(cfg.n_layers, t, cfg.d_ff),
+        "ffn2_act": ffn2_ins.reshape(cfg.n_layers, t, cfg.d_ff),
+    }
+    return logits, fwd_taps
+
+
+def _loss_fn(params, zero_taps, tokens, targets, cfg: ModelConfig):
+    logits, fwd_taps = _forward(params, zero_taps, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean(), fwd_taps
+
+
+def _to_bits(x):
+    """bf16 quantize then expose raw bits as uint16 for the rust side."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16), jnp.uint16)
+
+
+def train_step(params, momentum, token_batch, cfg: ModelConfig):
+    """One SGD-with-momentum step.
+
+    Args:
+      params / momentum: dicts keyed by PARAM_NAMES.
+      token_batch: (B, S+1) int32; inputs = [:, :-1], targets = [:, 1:].
+
+    Returns (new_params, new_momentum, loss, taps) with taps keyed by
+    TAP_NAMES, each a uint16 array of bf16 bit patterns.
+    """
+    tokens = token_batch[:, :-1]
+    targets = token_batch[:, 1:]
+    shapes = tap_shapes(cfg)
+    zero_taps = {
+        k: jnp.zeros(shapes[k], jnp.float32) for k in ("ffn1_agrad", "ffn2_agrad")
+    }
+    (loss, fwd_taps), grads = jax.value_and_grad(
+        _loss_fn, argnums=(0, 1), has_aux=True
+    )(params, zero_taps, tokens, targets, cfg)
+    pgrads, agrads = grads
+
+    new_params, new_mom = {}, {}
+    for name in PARAM_NAMES:
+        m = cfg.momentum * momentum[name] + pgrads[name]
+        new_mom[name] = m
+        new_params[name] = params[name] - cfg.lr * m
+
+    taps = {
+        "ffn1_w": _to_bits(params["ffn1_w"]),
+        # row-parallel FFN2: emit (l, d, f) so shards slice d_ff
+        "ffn2_w": _to_bits(params["ffn2_w"].transpose(0, 2, 1)),
+        "ffn1_act": _to_bits(fwd_taps["ffn1_act"]),
+        "ffn2_act": _to_bits(fwd_taps["ffn2_act"]),
+        "ffn1_wgrad": _to_bits(pgrads["ffn1_w"]),
+        "ffn2_wgrad": _to_bits(pgrads["ffn2_w"].transpose(0, 2, 1)),
+        "ffn1_agrad": _to_bits(agrads["ffn1_agrad"]),
+        "ffn2_agrad": _to_bits(agrads["ffn2_agrad"]),
+    }
+    return new_params, new_mom, loss, taps
+
+
+def train_step_flat(cfg: ModelConfig):
+    """Flat-signature train step for AOT lowering.
+
+    Signature: (p_0..p_8, m_0..m_8, token_batch) ->
+               (p'_0..p'_8, m'_0..m'_8, loss, tap_0..tap_7)
+    in PARAM_NAMES / TAP_NAMES order — the manifest contract.
+    """
+
+    def fn(*args):
+        n = len(PARAM_NAMES)
+        params = dict(zip(PARAM_NAMES, args[:n]))
+        momentum = dict(zip(PARAM_NAMES, args[n : 2 * n]))
+        token_batch = args[2 * n]
+        new_p, new_m, loss, taps = train_step(params, momentum, token_batch, cfg)
+        return tuple(
+            [new_p[k] for k in PARAM_NAMES]
+            + [new_m[k] for k in PARAM_NAMES]
+            + [loss]
+            + [taps[k] for k in TAP_NAMES]
+        )
+
+    return fn
+
+
+def init_flat(cfg: ModelConfig):
+    """Flat-signature init for AOT lowering: (seed:u32) -> (p_0..p_8)."""
+
+    def fn(seed):
+        params = init_params(cfg, seed)
+        return tuple(params[k] for k in PARAM_NAMES)
+
+    return fn

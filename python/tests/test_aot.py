@@ -1,0 +1,70 @@
+"""AOT pipeline: HLO text emission + manifest contract."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import byte_histogram
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_emits_parseable_module():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:40]
+    assert "ROOT" in text
+
+
+def test_kernel_lowering_includes_grid_loop():
+    """Multi-block grid must survive lowering (no silent single-block)."""
+    lowered = jax.jit(lambda x: byte_histogram(x, block=256)).lower(
+        jax.ShapeDtypeStruct((1024,), jnp.uint8)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest_tiny.txt")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_matches_model_contract():
+    cfg = model.CONFIGS["tiny"]
+    pshapes = model.param_shapes(cfg)
+    tshapes = model.tap_shapes(cfg)
+    lines = open(os.path.join(ART, "manifest_tiny.txt")).read().splitlines()
+    inputs = [l.split() for l in lines if l.startswith("input ")]
+    outputs = [l.split() for l in lines if l.startswith("output ")]
+    # inputs: params, momentum, tokens
+    n = len(model.PARAM_NAMES)
+    assert len(inputs) == 2 * n + 1
+    for i, name in enumerate(model.PARAM_NAMES):
+        assert inputs[i][2] == name
+        assert inputs[i][4] == ",".join(map(str, pshapes[name]))
+    assert inputs[2 * n][2] == "tokens"
+    # outputs: params, momentum, loss, taps
+    assert len(outputs) == 2 * n + 1 + len(model.TAP_NAMES)
+    assert outputs[2 * n][2] == "loss" and outputs[2 * n][4] == "scalar"
+    for i, name in enumerate(model.TAP_NAMES):
+        row = outputs[2 * n + 1 + i]
+        assert row[2] == name and row[3] == "u16"
+        assert row[4] == ",".join(map(str, tshapes[name]))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "kernels_manifest.txt")),
+    reason="run `make artifacts` first",
+)
+def test_kernel_artifacts_exist_and_are_hlo_text():
+    for name in ("histogram", "codebook_eval", "encode_index"):
+        path = os.path.join(ART, f"{name}.hlo.txt")
+        assert os.path.exists(path), path
+        head = open(path).read(64)
+        assert head.startswith("HloModule"), (name, head)

@@ -1,0 +1,178 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, dtypes-of-content (arbitrary byte streams,
+skewed streams) and codebook geometries; every integer output must match
+the oracle bit-exactly.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import byte_histogram, codebook_eval, encode_index
+from compile.kernels import ref
+
+BLOCK = 256  # small block so hypothesis can sweep multi-block grids fast
+
+
+def _u8(data, n):
+    return jnp.asarray(np.frombuffer(data, dtype=np.uint8)[:n])
+
+
+# ---------------------------------------------------------------- histogram
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nblocks=st.integers(1, 4),
+    seed=st.integers(0, 2**32 - 1),
+    skew=st.sampled_from(["uniform", "zipf", "constant", "gaussian-bytes"]),
+)
+def test_histogram_matches_ref(nblocks, seed, skew):
+    n = nblocks * BLOCK
+    rng = np.random.default_rng(seed)
+    if skew == "uniform":
+        x = rng.integers(0, 256, n, dtype=np.uint8)
+    elif skew == "zipf":
+        x = (rng.zipf(1.3, n) % 256).astype(np.uint8)
+    elif skew == "constant":
+        x = np.full(n, seed % 256, dtype=np.uint8)
+    else:
+        x = np.asarray(rng.normal(0, 1, n // 2), np.float16).view(np.uint8)
+    x = jnp.asarray(x)
+    got = byte_histogram(x, block=BLOCK)
+    want = ref.byte_histogram_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(np.asarray(got).sum()) == n
+
+
+def test_histogram_rejects_ragged():
+    with pytest.raises(AssertionError):
+        byte_histogram(jnp.zeros(BLOCK + 1, jnp.uint8), block=BLOCK)
+
+
+# ------------------------------------------------------------ codebook_eval
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nblocks=st.integers(1, 3),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_codebook_eval_matches_ref(nblocks, k, seed):
+    n = nblocks * BLOCK
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, n, dtype=np.uint8))
+    lengths = jnp.asarray(rng.integers(0, 33, (k, 256), dtype=np.int32))
+    got = codebook_eval(x, lengths, block=BLOCK)
+    want = ref.codebook_eval_ref(x, lengths)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_codebook_eval_uniform_codebook_is_exact():
+    """8-bit-everywhere codebook must cost exactly 8n bits."""
+    n = 4 * BLOCK
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 256, n, dtype=np.uint8))
+    lengths = jnp.full((2, 256), 8, jnp.int32)
+    got = np.asarray(codebook_eval(x, lengths, block=BLOCK))
+    assert (got == 8 * n).all()
+
+
+def test_codebook_eval_picks_matching_codebook():
+    """A codebook tuned to the stream must score strictly fewer bits."""
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 4, 4 * BLOCK, dtype=np.uint8)  # only symbols 0..3
+    tuned = np.full(256, 20, np.int32)
+    tuned[:4] = 2
+    uniform = np.full(256, 8, np.int32)
+    bits = np.asarray(
+        codebook_eval(jnp.asarray(x), jnp.asarray(np.stack([tuned, uniform])), block=BLOCK)
+    )
+    assert bits[0] < bits[1]
+
+
+# ------------------------------------------------------------- encode_index
+
+@settings(max_examples=30, deadline=None)
+@given(nblocks=st.integers(1, 3), seed=st.integers(0, 2**32 - 1))
+def test_encode_index_matches_ref(nblocks, seed):
+    n = nblocks * BLOCK
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, n, dtype=np.uint8))
+    codewords = jnp.asarray(rng.integers(0, 2**31, 256, dtype=np.uint32))
+    lengths = jnp.asarray(rng.integers(1, 33, 256, dtype=np.int32))
+    got = encode_index(x, codewords, lengths, block=BLOCK)
+    want = ref.encode_index_ref(x, codewords, lengths)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_encode_index_offsets_are_exclusive_scan():
+    n = 2 * BLOCK
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(0, 256, n, dtype=np.uint8))
+    cw = jnp.zeros(256, jnp.uint32)
+    lens = jnp.asarray(rng.integers(1, 17, 256, dtype=np.int32))
+    _, l, off, total = encode_index(x, cw, lens, block=BLOCK)
+    l, off = np.asarray(l), np.asarray(off)
+    assert off[0] == 0
+    np.testing.assert_array_equal(off[1:], np.cumsum(l)[:-1])
+    assert int(total) == int(l.sum())
+
+
+# ------------------------------------------------- block-size invariance
+
+@settings(max_examples=10, deadline=None)
+@given(
+    block_log2=st.integers(6, 10),
+    nblocks=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_histogram_invariant_to_block_size(block_log2, nblocks, seed):
+    """The grid tiling is an implementation detail: any (block, grid)
+    decomposition of the same stream must produce identical counts."""
+    block = 1 << block_log2
+    n = block * nblocks
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, n, dtype=np.uint8))
+    want = ref.byte_histogram_ref(x)
+    got = byte_histogram(x, block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # a different legal tiling of the same data agrees
+    if nblocks % 2 == 0 or nblocks == 1:
+        got2 = byte_histogram(x, block=n)
+        np.testing.assert_array_equal(np.asarray(got2), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_codebook_eval_zero_length_contributes_zero(k, seed):
+    """Symbols with length 0 (absent from a codebook) must contribute 0
+    bits — the rust escape policy depends on this contract."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, 512, dtype=np.uint8))
+    lengths = rng.integers(0, 13, (k, 256)).astype(np.int32)
+    lengths[:, ::2] = 0  # zero out half the table
+    got = codebook_eval(x, jnp.asarray(lengths), block=256)
+    want = ref.codebook_eval_ref(x, jnp.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_encode_index_offsets_are_packable(seed):
+    """offsets must be strictly increasing by lens — the exact contract
+    the rust bitio packer asserts when scattering the codes."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, 1024, dtype=np.uint8))
+    codewords = jnp.asarray(rng.integers(0, 2**12, 256, dtype=np.uint32))
+    lengths = jnp.asarray(rng.integers(1, 13, 256).astype(np.int32))
+    codes, lens, offsets, total = encode_index(x, codewords, lengths, block=256)
+    o = np.asarray(offsets)
+    l = np.asarray(lens)
+    assert o[0] == 0
+    np.testing.assert_array_equal(o[1:], o[:-1] + l[:-1])
+    assert int(total) == int(o[-1] + l[-1])

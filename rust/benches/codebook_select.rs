@@ -1,0 +1,123 @@
+//! §4 — "In a hardware implementation, multiple code books can be
+//! evaluated for compressibility in parallel. The code book which
+//! achieves the best compression is selected."
+//!
+//! K = 8 fixed codebooks scored on shard streams via (a) the rust
+//! scorer (`singlestage::score_codebooks`) and (b) the Pallas
+//! `codebook_eval` kernel through the PJRT runtime. Asserts they agree,
+//! reports timing for both paths and the selection quality vs always
+//! using one global book.
+
+use sshuff::benchkit::{black_box, Bench, Table};
+use sshuff::huffman::CodeBook;
+use sshuff::runtime::{artifacts_dir, Engine, KernelRunner};
+use sshuff::singlestage::{select_codebook, AvgPolicy, CodebookManager, SingleStageEncoder};
+use sshuff::stats::Histogram256;
+use sshuff::tensors::{shard_symbols, DtypeTag, TensorKey, TensorKind};
+use sshuff::trainer::synthetic::synthetic_tap;
+
+fn main() -> sshuff::Result<()> {
+    // K codebooks: one per tensor kind (the paper's "one for each
+    // tensor" inventory), trained on previous synthetic batches.
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    for &kind in &TensorKind::ALL {
+        let key = TensorKey::new(kind, DtypeTag::Bf16);
+        for b in 0..2 {
+            let tap = synthetic_tap(kind, 1, 128, 256, b);
+            mgr.observe_bytes(key, &shard_symbols(&tap, DtypeTag::Bf16));
+        }
+        mgr.build(key).unwrap();
+    }
+    let candidates: Vec<u8> = mgr.registry.ids().collect();
+    assert_eq!(candidates.len(), 8);
+
+    // test streams: unseen batches of each kind
+    let streams: Vec<(TensorKind, Vec<u8>)> = TensorKind::ALL
+        .iter()
+        .map(|&k| (k, shard_symbols(&synthetic_tap(k, 1, 128, 256, 50), DtypeTag::Bf16)))
+        .collect();
+
+    let bench = Bench::default();
+    let mut table = Table::new(&["stream", "selected", "own-book", "bits best", "bits own", "routing"]);
+    let mut selection_total = 0u64;
+    let mut own_total = 0u64;
+    for (kind, data) in &streams {
+        let hist = Histogram256::from_bytes(data);
+        let (best_id, best_bits) = select_codebook(&hist, &mgr.registry, &candidates);
+        let own_id = mgr.current_id(TensorKey::new(*kind, DtypeTag::Bf16)).unwrap();
+        let own_bits = mgr.registry.get(own_id).unwrap().book.encoded_bits_for(&hist).unwrap();
+        selection_total += best_bits;
+        own_total += own_bits;
+        table.row(&[
+            kind.name().to_string(),
+            format!("book {best_id}"),
+            format!("book {own_id}"),
+            best_bits.to_string(),
+            own_bits.to_string(),
+            if best_id == own_id { "matched own".into() } else { format!("cross ({best_id})") },
+        ]);
+    }
+    println!("K=8 parallel codebook evaluation (paper §4):\n{}", table.render());
+    println!(
+        "selection total {selection_total} bits vs fixed-own-book {own_total} ({:.3}% better)\n",
+        100.0 * (own_total as f64 - selection_total as f64) / own_total as f64
+    );
+
+    // timing: rust scorer vs Pallas kernel (needs artifacts)
+    let data = &streams[0].1;
+    let hist = Histogram256::from_bytes(data);
+    let m_rust = bench.run("rust score_codebooks", data.len() as u64, || {
+        black_box(sshuff::singlestage::score_codebooks(&hist, &mgr.registry, &candidates))
+    });
+    let m_hist = bench.run("rust histogram+score", data.len() as u64, || {
+        let h = Histogram256::from_bytes(black_box(data));
+        black_box(sshuff::singlestage::score_codebooks(&h, &mgr.registry, &candidates))
+    });
+    println!("{}", m_rust.report_line());
+    println!("{}", m_hist.report_line());
+
+    if artifacts_dir().join("kernels_manifest.txt").exists() {
+        let engine = Engine::cpu()?;
+        let kr = KernelRunner::load(&engine, None)?;
+        // kernel takes multiples of kernel_n; tile the stream
+        let mut padded = data.clone();
+        padded.resize(data.len().next_multiple_of(kr.kernel_n), 0);
+        let tables: Vec<[u8; 256]> = candidates
+            .iter()
+            .map(|&id| mgr.registry.get(id).unwrap().book.lengths)
+            .collect();
+        let kernel_bits = kr.codebook_eval(&padded, &tables)?;
+        // agreement with the rust scorer on the padded stream
+        let h = Histogram256::from_bytes(&padded);
+        for (k, &id) in candidates.iter().enumerate() {
+            let want = mgr.registry.get(id).unwrap().book.encoded_bits_for(&h).unwrap();
+            assert_eq!(kernel_bits[k], want, "kernel/rust disagree on book {id}");
+        }
+        println!("pallas kernel agrees with rust scorer on all {} books", candidates.len());
+        let m_kernel = bench.run("pallas codebook_eval (PJRT, interpret)", padded.len() as u64, || {
+            black_box(kr.codebook_eval(&padded, &tables).unwrap())
+        });
+        println!("{}", m_kernel.report_line());
+        println!("(interpret-mode wallclock is NOT a TPU proxy — see DESIGN.md §7)");
+    } else {
+        println!("kernel artifacts not built; skipping PJRT path (run `make artifacts`)");
+    }
+
+    // end-to-end: selection + encode vs plain fixed-id encode
+    let mut enc = SingleStageEncoder::new(mgr.registry.clone());
+    let m_sel = bench.run("encode_best (hist + K-score + encode)", data.len() as u64, || {
+        black_box(enc.encode_best(&candidates, data))
+    });
+    let own_id = mgr.current_id(TensorKey::new(streams[0].0, DtypeTag::Bf16)).unwrap();
+    let m_fix = bench.run("encode_with (fixed id)", data.len() as u64, || {
+        black_box(enc.encode_with(own_id, data))
+    });
+    println!("{}", m_sel.report_line());
+    println!("{}", m_fix.report_line());
+    println!("selection overhead: {:.2}x the fixed-id encode", m_sel.median_ns() / m_fix.median_ns());
+
+    // correctness sanity for CodeBook linkage used above
+    let any: &CodeBook = &mgr.registry.get(0).unwrap().book;
+    assert!(any.support() == 256);
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! §1 motivation — "Collective operations are typically bounded by
+//! network bandwidth. Lossless compression is an effective way to reduce
+//! the network traffic and improve collective performance."
+//!
+//! Ring all-reduce at the paper's scale (64 workers) across codecs:
+//! wire bytes, bandwidth gain, simulated completion time on die-to-die
+//! and datacenter links, plus encoder wall cost per hop.
+
+use sshuff::baselines::{Codec, DeflateCodec, RawCodec, SingleStageCodec, ThreeStage, ZstdCodec};
+use sshuff::benchkit::Table;
+use sshuff::collectives::all_reduce;
+use sshuff::fabric::{Fabric, LinkModel};
+use sshuff::prng::Pcg32;
+use sshuff::singlestage::{AvgPolicy, CodebookManager};
+use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
+
+/// Gradient-like values, quantized to bf16-representable f32s — what a
+/// bf16 training stack actually puts on the wire. Ring partial sums
+/// regrow f32 mantissas hop by hop, so all-reduce gains sit between the
+/// bf16 rate (~1.3x) and the f32 rate (~1.08x); all-gather (parameter /
+/// activation broadcast) stays bf16 end-to-end.
+fn gradient_like(rank: usize, elems: usize) -> Vec<f32> {
+    use sshuff::dtype::{bf16_from_f32, bf16_to_f32};
+    let mut rng = Pcg32::substream(77, rank as u64);
+    rng.normal_f32s(elems, 1e-3)
+        .into_iter()
+        .map(|v| bf16_to_f32(bf16_from_f32(v)))
+        .collect()
+}
+
+fn main() {
+    let elems = 1 << 15;
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1WGrad, DtypeTag::Bf16);
+    for b in 1000..1004 {
+        let bytes: Vec<u8> =
+            gradient_like(b, elems).iter().flat_map(|v| v.to_le_bytes()).collect();
+        mgr.observe_bytes(key, &bytes);
+    }
+    let id = mgr.build(key).unwrap();
+    let codecs: Vec<Box<dyn Codec>> = vec![
+        Box::new(RawCodec),
+        Box::new(ThreeStage),
+        Box::new(DeflateCodec::default()),
+        Box::new(ZstdCodec::default()),
+        Box::new(SingleStageCodec::with_fixed(mgr.registry.clone(), id)),
+    ];
+
+    for (link, lname) in [(LinkModel::DIE_TO_DIE, "die-to-die 25GB/s 1us"),
+                          (LinkModel::DATACENTER, "datacenter 12.5GB/s 5us")] {
+        for &workers in &[8usize, 64] {
+            let inputs: Vec<Vec<f32>> = (0..workers).map(|r| gradient_like(r, elems)).collect();
+            println!("\n=== {workers} workers x {elems} f32, {lname} ===");
+            let mut table =
+                Table::new(&["codec", "wire MB", "gain", "sim ms", "vs raw", "encode wall ms"]);
+            let mut raw_time = 0.0;
+            for codec in &codecs {
+                let mut fabric = Fabric::new(workers, link);
+                let t0 = std::time::Instant::now();
+                let (out, rep) = all_reduce(&mut fabric, codec.as_ref(), &inputs);
+                let wall = t0.elapsed().as_secs_f64() * 1e3;
+                assert!(out.windows(2).all(|w| w[0] == w[1]), "{}", codec.name());
+                if codec.name() == "raw" {
+                    raw_time = rep.sim_time_s;
+                }
+                table.row(&[
+                    codec.name().to_string(),
+                    format!("{:.3}", rep.wire_bytes as f64 / 1e6),
+                    format!("{:.2}x", rep.bandwidth_gain()),
+                    format!("{:.3}", rep.sim_time_s * 1e3),
+                    format!("{:.2}x", raw_time / rep.sim_time_s),
+                    format!("{wall:.1}"),
+                ]);
+            }
+            println!("{}", table.render());
+        }
+    }
+    // all-gather: bf16 parameters broadcast around the ring at 2 B/value
+    // — the lossless-bf16 case the paper's §2 analysis measures
+    println!("\n=== ring all-gather (bf16 params on the wire), 64 workers x {elems} values, die-to-die ===");
+    let workers = 64;
+    let inputs: Vec<Vec<f32>> = (0..workers).map(|r| gradient_like(200 + r, elems)).collect();
+    // retrain the codebook on the bf16 wire bytes (not f32 framing)
+    let mut mgr16 = CodebookManager::new(AvgPolicy::CumulativeMean);
+    for b in 2000..2004 {
+        let bytes: Vec<u8> = gradient_like(b, elems)
+            .iter()
+            .flat_map(|&v| sshuff::dtype::bf16_from_f32(v).to_le_bytes())
+            .collect();
+        mgr16.observe_bytes(key, &bytes);
+    }
+    let id16 = mgr16.build(key).unwrap();
+    let codecs16: Vec<Box<dyn Codec>> = vec![
+        Box::new(RawCodec),
+        Box::new(ThreeStage),
+        Box::new(DeflateCodec::default()),
+        Box::new(ZstdCodec::default()),
+        Box::new(SingleStageCodec::with_fixed(mgr16.registry.clone(), id16)),
+    ];
+    let mut table = Table::new(&["codec", "wire MB", "gain", "sim ms", "vs raw"]);
+    let mut raw_time = 0.0;
+    for codec in &codecs16 {
+        let mut fabric = Fabric::new(workers, LinkModel::DIE_TO_DIE);
+        let (out, rep) = sshuff::collectives::all_gather_wire(
+            &mut fabric,
+            codec.as_ref(),
+            &inputs,
+            sshuff::collectives::WireFormat::Bf16,
+        );
+        assert!(out.windows(2).all(|w| w[0] == w[1]), "{}", codec.name());
+        if codec.name() == "raw" {
+            raw_time = rep.sim_time_s;
+        }
+        table.row(&[
+            codec.name().to_string(),
+            format!("{:.3}", rep.wire_bytes as f64 / 1e6),
+            format!("{:.2}x", rep.bandwidth_gain()),
+            format!("{:.3}", rep.sim_time_s * 1e3),
+            format!("{:.2}x", raw_time / rep.sim_time_s),
+        ]);
+    }
+    println!("{}", table.render());
+
+    println!("\nReading: all-gather moves bf16-grade bytes losslessly -> entropy-coder");
+    println!("gains match the paper's ~22% shard compressibility. All-reduce partial");
+    println!("sums regrow f32 mantissas after the first hop, diluting the gain — the");
+    println!("1-stage codec matches 3-stage wire bytes in both while removing the");
+    println!("histogram/build stages per hop (see encoder_latency).");
+}

@@ -1,0 +1,17 @@
+//! Fig. 2 — distribution of per-shard ideal and per-shard-Huffman
+//! compressibility over all (layers × shards) FFN1-activation shards.
+//! Paper: 1152 shards, most at ~21–23%, Huffman close to ideal.
+
+use sshuff::experiments::{bench_spec, capture_cached, figures, measure_shards};
+use sshuff::runtime::Engine;
+use sshuff::tensors::{DtypeTag, TensorKind};
+
+fn main() -> sshuff::Result<()> {
+    let spec = bench_spec();
+    let engine = Engine::cpu()?;
+    let cap = capture_cached(&engine, &spec)?;
+    let kc = cap.kind(TensorKind::Ffn1Act);
+    let m = measure_shards(kc, DtypeTag::Bf16, &kc.prev_hist);
+    println!("{}", figures::fig2(&m));
+    Ok(())
+}

@@ -1,0 +1,217 @@
+//! Micro/macro benchmark harness (criterion is not in the offline crate
+//! set). Warmup + timed iterations, median/p95 reporting, and throughput
+//! accounting — every `rust/benches/*.rs` main is built on this.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Nanoseconds per iteration, one entry per timed iteration.
+    pub samples_ns: Vec<f64>,
+    /// Bytes processed per iteration (0 = don't report throughput).
+    pub bytes_per_iter: u64,
+}
+
+impl Measurement {
+    pub fn median_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 0.5)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 0.95)
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// MB/s at the median (1 MB = 1e6 bytes).
+    pub fn throughput_mbps(&self) -> f64 {
+        if self.bytes_per_iter == 0 {
+            return 0.0;
+        }
+        self.bytes_per_iter as f64 / (self.median_ns() * 1e-9) / 1e6
+    }
+
+    /// ns per input byte at the median.
+    pub fn ns_per_byte(&self) -> f64 {
+        if self.bytes_per_iter == 0 {
+            return 0.0;
+        }
+        self.median_ns() / self.bytes_per_iter as f64
+    }
+
+    pub fn report_line(&self) -> String {
+        let mut s = format!(
+            "{:<44} median {:>12.1} ns   p95 {:>12.1} ns",
+            self.name,
+            self.median_ns(),
+            self.p95_ns()
+        );
+        if self.bytes_per_iter > 0 {
+            s.push_str(&format!(
+                "   {:>9.1} MB/s   {:>7.3} ns/B",
+                self.throughput_mbps(),
+                self.ns_per_byte()
+            ));
+        }
+        s
+    }
+}
+
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[(((v.len() - 1) as f64) * q).round() as usize]
+}
+
+/// Bench runner: fixed warmup then either `iters` iterations or as many
+/// as fit in `max_time`.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub max_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1_000,
+            max_time: Duration::from_secs(2),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { warmup_iters: 1, min_iters: 3, max_iters: 50, max_time: Duration::from_millis(500) }
+    }
+
+    /// Time `f`, which must consume/produce observable work (return value
+    /// is black-boxed).
+    pub fn run<T>(&self, name: &str, bytes_per_iter: u64, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.min_iters);
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && start.elapsed() < self.max_time)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        Measurement { name: name.to_string(), samples_ns: samples, bytes_per_iter }
+    }
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Simple fixed-width table printer for bench outputs that mirror the
+/// paper's tables/figures.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement {
+            name: "x".into(),
+            samples_ns: vec![100.0, 200.0, 300.0, 400.0, 1000.0],
+            bytes_per_iter: 300,
+        };
+        assert_eq!(m.median_ns(), 300.0);
+        assert_eq!(m.min_ns(), 100.0);
+        assert!(m.p95_ns() >= 400.0);
+        // 300 bytes / 300ns = 1 B/ns = 1000 MB/s
+        assert!((m.throughput_mbps() - 1000.0).abs() < 1e-9);
+        assert!((m.ns_per_byte() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_minimum_iterations() {
+        let b = Bench { warmup_iters: 0, min_iters: 5, max_iters: 5, max_time: Duration::ZERO };
+        let mut count = 0u64;
+        let m = b.run("count", 0, || {
+            count += 1;
+            count
+        });
+        assert_eq!(m.samples_ns.len(), 5);
+        assert_eq!(count, 5);
+    }
+
+    #[test]
+    fn report_line_contains_throughput_only_with_bytes() {
+        let b = Bench::quick();
+        let with = b.run("w", 1024, || 1 + 1);
+        let without = b.run("wo", 0, || 1 + 1);
+        assert!(with.report_line().contains("MB/s"));
+        assert!(!without.report_line().contains("MB/s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "22".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1].chars().all(|c| c == '-'), true);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+}

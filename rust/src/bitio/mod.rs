@@ -1,0 +1,220 @@
+//! MSB-first bit-level I/O — the encoder/decoder substrate.
+//!
+//! Codewords are written most-significant-bit first (network order),
+//! matching canonical Huffman convention. The writer keeps a 64-bit
+//! accumulator and spills whole bytes; the hot path (`put_bits`) is
+//! branch-light: one shift, one or, one conditional spill.
+
+/// MSB-first bit writer over a growable byte buffer.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bit accumulator; bits are packed from the MSB end downward.
+    acc: u64,
+    /// Number of valid bits currently in `acc` (0..=63).
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self { buf: Vec::with_capacity(bytes), acc: 0, nbits: 0 }
+    }
+
+    /// Append the low `len` bits of `code` (MSB of the field first).
+    /// `len` must be `<= 57` so a single spill keeps `nbits < 8` slack;
+    /// Huffman codes here are always `<= 32`.
+    #[inline]
+    pub fn put_bits(&mut self, code: u64, len: u32) {
+        debug_assert!(len <= 57);
+        debug_assert!(len == 64 || code < (1u64 << len));
+        self.acc |= code << (64 - self.nbits - len);
+        self.nbits += len;
+        while self.nbits >= 8 {
+            self.buf.push((self.acc >> 56) as u8);
+            self.acc <<= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Total bits written so far.
+    #[inline]
+    pub fn bit_len(&self) -> u64 {
+        self.buf.len() as u64 * 8 + self.nbits as u64
+    }
+
+    /// Flush (zero-padding the last partial byte) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push((self.acc >> 56) as u8);
+        }
+        self.buf
+    }
+
+    /// Current byte length if finished now.
+    pub fn byte_len(&self) -> usize {
+        self.buf.len() + usize::from(self.nbits > 0)
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next unread byte index.
+    pos: usize,
+    /// Accumulator holding up-next bits left-aligned.
+    acc: u64,
+    /// Valid bits in `acc`.
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        let mut r = Self { buf, pos: 0, acc: 0, nbits: 0 };
+        r.refill();
+        r
+    }
+
+    /// Top up the accumulator to >= 57 bits (or end of input).
+    #[inline]
+    fn refill(&mut self) {
+        while self.nbits <= 56 && self.pos < self.buf.len() {
+            self.acc |= (self.buf[self.pos] as u64) << (56 - self.nbits);
+            self.pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Peek the next `len` (<= 32) bits without consuming; zero-padded
+    /// past end of stream.
+    #[inline]
+    pub fn peek_bits(&self, len: u32) -> u32 {
+        debug_assert!(len <= 32);
+        if len == 0 {
+            return 0;
+        }
+        (self.acc >> (64 - len)) as u32
+    }
+
+    /// Consume `len` bits.
+    #[inline]
+    pub fn consume(&mut self, len: u32) {
+        debug_assert!(len <= self.nbits, "consumed past refill window");
+        self.acc <<= len;
+        self.nbits -= len;
+        self.refill();
+    }
+
+    /// Read and consume `len` (<= 32) bits.
+    #[inline]
+    pub fn read_bits(&mut self, len: u32) -> u32 {
+        let v = self.peek_bits(len);
+        self.consume(len);
+        v
+    }
+
+    /// Bits still available (including zero-padding already in acc? no —
+    /// only real input bits).
+    #[inline]
+    pub fn bits_remaining(&self) -> u64 {
+        self.nbits as u64 + (self.buf.len() - self.pos) as u64 * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+
+    #[test]
+    fn roundtrip_fixed_width() {
+        let mut w = BitWriter::new();
+        for v in 0..256u64 {
+            w.put_bits(v, 8);
+        }
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), 256);
+        let mut r = BitReader::new(&bytes);
+        for v in 0..256u32 {
+            assert_eq!(r.read_bits(8), v);
+        }
+    }
+
+    #[test]
+    fn roundtrip_variable_width() {
+        let mut rng = Pcg32::new(1);
+        let items: Vec<(u64, u32)> = (0..10_000)
+            .map(|_| {
+                let len = 1 + rng.gen_range(32);
+                let code = (rng.next_u64() >> 32) & ((1u64 << len) - 1).max(1);
+                (code & ((1u64 << len) - 1), len)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(c, l) in &items {
+            w.put_bits(c, l);
+        }
+        let total_bits: u64 = items.iter().map(|&(_, l)| l as u64).sum();
+        assert_eq!(w.bit_len(), total_bits);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), ((total_bits + 7) / 8) as usize);
+        let mut r = BitReader::new(&bytes);
+        for &(c, l) in &items {
+            assert_eq!(r.read_bits(l) as u64, c, "len {l}");
+        }
+    }
+
+    #[test]
+    fn msb_first_layout() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b1, 1);
+        w.put_bits(0b01, 2);
+        w.put_bits(0b10101, 5);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0b1011_0101]);
+    }
+
+    #[test]
+    fn zero_length_put_is_noop() {
+        let mut w = BitWriter::new();
+        w.put_bits(0, 0);
+        w.put_bits(0b11, 2);
+        w.put_bits(0, 0);
+        assert_eq!(w.bit_len(), 2);
+        assert_eq!(w.finish(), vec![0b1100_0000]);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let bytes = [0xAB, 0xCD];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.peek_bits(8), 0xAB);
+        assert_eq!(r.peek_bits(16), 0xABCD);
+        assert_eq!(r.read_bits(8), 0xAB);
+        assert_eq!(r.read_bits(8), 0xCD);
+    }
+
+    #[test]
+    fn peek_past_end_zero_pads() {
+        let bytes = [0xFF];
+        let r = BitReader::new(&bytes);
+        assert_eq!(r.peek_bits(16), 0xFF00);
+        assert_eq!(r.bits_remaining(), 8);
+    }
+
+    #[test]
+    fn byte_len_tracks_partial() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.byte_len(), 0);
+        w.put_bits(1, 1);
+        assert_eq!(w.byte_len(), 1);
+        w.put_bits(0x7F, 7);
+        assert_eq!(w.byte_len(), 1);
+        w.put_bits(1, 1);
+        assert_eq!(w.byte_len(), 2);
+    }
+}

@@ -1,0 +1,189 @@
+//! Hand-rolled CLI argument parser (clap is not in the offline crate
+//! set): subcommand + `--key value` / `--flag` options + positionals.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Option/flag specification used for validation + help text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Declarative command spec.
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// A tiny multi-command CLI.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl Cli {
+    /// Parse argv (excluding argv[0]). Returns Err with a usage message on
+    /// unknown command/option or missing option value.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        // subcommand = first non-flag token
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        let spec = match &args.subcommand {
+            Some(sub) => Some(
+                self.commands
+                    .iter()
+                    .find(|c| c.name == sub.as_str())
+                    .ok_or_else(|| format!("unknown command '{sub}'\n\n{}", self.usage()))?,
+            ),
+            None => None,
+        };
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name == "help" {
+                    return Err(self.usage());
+                }
+                let opt = spec.and_then(|s| s.opts.iter().find(|o| o.name == name));
+                match opt {
+                    Some(o) if o.takes_value => {
+                        let v = it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} needs a value"))?;
+                        args.options.insert(name.to_string(), v.clone());
+                    }
+                    Some(_) => args.flags.push(name.to_string()),
+                    None => {
+                        return Err(format!(
+                            "unknown option '--{name}'{}\n\n{}",
+                            spec.map_or(String::new(), |s| format!(" for '{}'", s.name)),
+                            self.usage()
+                        ))
+                    }
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE: {} <command> [options]\n\nCOMMANDS:\n", self.bin, self.about, self.bin);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+            for o in &c.opts {
+                let v = if o.takes_value { " <v>" } else { "" };
+                s.push_str(&format!("      --{:<16} {}\n", format!("{}{v}", o.name), o.help));
+            }
+        }
+        s
+    }
+}
+
+impl Args {
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| format!("--{name} '{s}': {e}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "repro",
+            about: "test",
+            commands: vec![CommandSpec {
+                name: "train",
+                about: "train things",
+                opts: vec![
+                    OptSpec { name: "steps", takes_value: true, help: "steps" },
+                    OptSpec { name: "verbose", takes_value: false, help: "chatty" },
+                ],
+            }],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = cli().parse(&argv(&["train", "--steps", "50", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.opt("steps"), Some("50"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.opt_parse("steps", 0usize).unwrap(), 50);
+    }
+
+    #[test]
+    fn unknown_command_and_option_fail() {
+        assert!(cli().parse(&argv(&["fly"])).is_err());
+        assert!(cli().parse(&argv(&["train", "--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_fails() {
+        assert!(cli().parse(&argv(&["train", "--steps"])).is_err());
+    }
+
+    #[test]
+    fn defaults_and_bad_parse() {
+        let a = cli().parse(&argv(&["train"])).unwrap();
+        assert_eq!(a.opt_or("steps", "7"), "7");
+        assert_eq!(a.opt_parse("steps", 7usize).unwrap(), 7);
+        let b = cli().parse(&argv(&["train", "--steps", "xyz"])).unwrap();
+        assert!(b.opt_parse("steps", 0usize).is_err());
+    }
+
+    #[test]
+    fn help_is_an_err_with_usage() {
+        let e = cli().parse(&argv(&["train", "--help"])).unwrap_err();
+        assert!(e.contains("USAGE"));
+        assert!(e.contains("train"));
+    }
+
+    #[test]
+    fn empty_argv_is_ok_no_subcommand() {
+        let a = cli().parse(&[]).unwrap();
+        assert_eq!(a.subcommand, None);
+    }
+}

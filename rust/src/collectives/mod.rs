@@ -1,0 +1,543 @@
+//! Ring collectives over the simulated [`Fabric`] with a pluggable,
+//! lossless per-hop [`Codec`] — the paper's §1 setting: "Collective
+//! operations are typically bounded by network bandwidth. Lossless
+//! compression is an effective way to reduce the network traffic."
+//!
+//! Implemented (ring algorithms, NCCL-style):
+//! * [`all_reduce`] — reduce-scatter then all-gather, 2(n−1) steps;
+//! * [`reduce_scatter`] / [`all_gather`] — the two halves standalone;
+//! * [`all_to_all`] — n−1 rounds of direct pairwise exchange.
+//!
+//! Every hop serializes its f32 chunk to little-endian bytes, runs it
+//! through the codec, and accounts the *encoded* size on the fabric.
+//! Decoding is exact (codecs are lossless), so the collective result is
+//! bit-identical to the uncompressed run — asserted by tests.
+
+use crate::baselines::Codec;
+use crate::fabric::Fabric;
+
+pub mod hierarchical;
+pub use hierarchical::{hierarchical_all_reduce, Hierarchy};
+
+/// Outcome accounting for one collective invocation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CollectiveReport {
+    /// Bytes actually placed on the wire (post-codec).
+    pub wire_bytes: u64,
+    /// Bytes the same schedule would move uncompressed.
+    pub raw_bytes: u64,
+    /// Simulated wall time: per step, slowest link; steps are serial.
+    pub sim_time_s: f64,
+    /// Ring steps executed.
+    pub steps: u32,
+}
+
+impl CollectiveReport {
+    /// Effective bandwidth multiplier from compression (raw / wire).
+    pub fn bandwidth_gain(&self) -> f64 {
+        if self.wire_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.wire_bytes as f64
+        }
+    }
+}
+
+/// On-the-wire element encoding for non-reducing collectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFormat {
+    /// 4 bytes/value, exact for any f32 (the reducing collectives'
+    /// format — partial sums need full mantissas).
+    F32,
+    /// 2 bytes/value; exact iff every value is bf16-representable (what
+    /// a bf16 training stack ships for params/activations). Asserted at
+    /// the sender.
+    Bf16,
+}
+
+impl WireFormat {
+    fn serialize(&self, xs: &[f32]) -> Vec<u8> {
+        match self {
+            WireFormat::F32 => f32s_to_bytes(xs),
+            WireFormat::Bf16 => {
+                let mut out = Vec::with_capacity(xs.len() * 2);
+                for &x in xs {
+                    let b = crate::dtype::bf16_from_f32(x);
+                    debug_assert!(
+                        crate::dtype::bf16_to_f32(b) == x || x.is_nan(),
+                        "bf16 wire requires bf16-representable values"
+                    );
+                    out.extend_from_slice(&b.to_le_bytes());
+                }
+                out
+            }
+        }
+    }
+
+    fn deserialize(&self, bytes: &[u8]) -> Vec<f32> {
+        match self {
+            WireFormat::F32 => bytes_to_f32s(bytes),
+            WireFormat::Bf16 => bytes
+                .chunks_exact(2)
+                .map(|c| crate::dtype::bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                .collect(),
+        }
+    }
+}
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0);
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+/// Contiguous chunk boundaries splitting `len` into `n` nearly-equal
+/// parts (first `len % n` chunks get one extra element).
+pub fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let sz = base + usize::from(i < extra);
+        out.push((start, start + sz));
+        start += sz;
+    }
+    out
+}
+
+/// One compressed hop: encode, account on the fabric, decode at the
+/// receiver. Returns (decoded chunk, link transfer time).
+fn hop(
+    fabric: &mut Fabric,
+    codec: &dyn Codec,
+    report: &mut CollectiveReport,
+    from: usize,
+    to: usize,
+    chunk: &[f32],
+) -> (Vec<f32>, f64) {
+    hop_wire(fabric, codec, report, from, to, chunk, WireFormat::F32)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn hop_wire(
+    fabric: &mut Fabric,
+    codec: &dyn Codec,
+    report: &mut CollectiveReport,
+    from: usize,
+    to: usize,
+    chunk: &[f32],
+    fmt: WireFormat,
+) -> (Vec<f32>, f64) {
+    let raw = fmt.serialize(chunk);
+    let wire = codec.encode(&raw);
+    let t = fabric.send(from, to, wire.len());
+    report.wire_bytes += wire.len() as u64;
+    report.raw_bytes += raw.len() as u64;
+    let decoded = codec.decode(&wire).expect("lossless codec must decode its own output");
+    debug_assert_eq!(decoded, raw);
+    (fmt.deserialize(&decoded), t)
+}
+
+/// Ring all-reduce (sum). `inputs[r]` is rank r's local vector; all
+/// vectors must be equal length. Returns the reduced vector per rank
+/// plus the report.
+pub fn all_reduce(
+    fabric: &mut Fabric,
+    codec: &dyn Codec,
+    inputs: &[Vec<f32>],
+) -> (Vec<Vec<f32>>, CollectiveReport) {
+    let n = fabric.n_nodes();
+    assert_eq!(inputs.len(), n);
+    let len = inputs[0].len();
+    assert!(inputs.iter().all(|v| v.len() == len), "ragged all_reduce inputs");
+    if n == 1 {
+        return (inputs.to_vec(), CollectiveReport::default());
+    }
+    let bounds = chunk_bounds(len, n);
+    let mut data: Vec<Vec<f32>> = inputs.to_vec();
+    let mut report = CollectiveReport::default();
+
+    // Phase 1 — reduce-scatter: chunk c starts at rank c+1 (step 0) and
+    // accumulates around the ring, completing at rank c after n−1 steps.
+    for step in 0..n - 1 {
+        let mut step_time = 0.0f64;
+        let mut incoming: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(n);
+        for r in 0..n {
+            let to = fabric.next(r);
+            let c = (r + 2 * n - 1 - step) % n; // chunk this rank forwards
+            let (lo, hi) = bounds[c];
+            let chunk = data[r][lo..hi].to_vec();
+            let (decoded, t) = hop(fabric, codec, &mut report, r, to, &chunk);
+            step_time = step_time.max(t);
+            incoming.push((to, c, decoded));
+        }
+        for (to, c, chunk) in incoming {
+            let (lo, hi) = bounds[c];
+            for (dst, src) in data[to][lo..hi].iter_mut().zip(chunk) {
+                *dst += src;
+            }
+        }
+        report.sim_time_s += step_time;
+        report.steps += 1;
+    }
+
+    // Phase 2 — all-gather the reduced chunks around the ring.
+    for step in 0..n - 1 {
+        let mut step_time = 0.0f64;
+        let mut incoming: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(n);
+        for r in 0..n {
+            let to = fabric.next(r);
+            let c = (r + n - step) % n; // step 0: broadcast own final chunk
+            let (lo, hi) = bounds[c];
+            let chunk = data[r][lo..hi].to_vec();
+            let (decoded, t) = hop(fabric, codec, &mut report, r, to, &chunk);
+            step_time = step_time.max(t);
+            incoming.push((to, c, decoded));
+        }
+        for (to, c, chunk) in incoming {
+            let (lo, hi) = bounds[c];
+            data[to][lo..hi].copy_from_slice(&chunk);
+        }
+        report.sim_time_s += step_time;
+        report.steps += 1;
+    }
+    (data, report)
+}
+
+/// Reference all-reduce result in the exact summation order the ring
+/// produces (chunk c is accumulated starting at rank c+1 around the
+/// ring) — used by tests to assert bit-exactness.
+pub fn all_reduce_reference(inputs: &[Vec<f32>]) -> Vec<f32> {
+    let n = inputs.len();
+    let len = inputs[0].len();
+    let bounds = chunk_bounds(len, n);
+    let mut out = vec![0f32; len];
+    for (c, &(lo, hi)) in bounds.iter().enumerate() {
+        // ring order: acc starts at rank (c+1)%n, then +(c+2)%n, ... +c
+        let mut acc = inputs[(c + 1) % n][lo..hi].to_vec();
+        for k in 2..=n {
+            let r = (c + k) % n;
+            for (a, b) in acc.iter_mut().zip(&inputs[r][lo..hi]) {
+                *a += b;
+            }
+        }
+        out[lo..hi].copy_from_slice(&acc);
+    }
+    out
+}
+
+/// Ring reduce-scatter (sum): rank r returns chunk r of the global sum.
+pub fn reduce_scatter(
+    fabric: &mut Fabric,
+    codec: &dyn Codec,
+    inputs: &[Vec<f32>],
+) -> (Vec<Vec<f32>>, CollectiveReport) {
+    let n = fabric.n_nodes();
+    assert_eq!(inputs.len(), n);
+    let len = inputs[0].len();
+    let bounds = chunk_bounds(len, n);
+    if n == 1 {
+        return (vec![inputs[0].clone()], CollectiveReport::default());
+    }
+    let mut data: Vec<Vec<f32>> = inputs.to_vec();
+    let mut report = CollectiveReport::default();
+    for step in 0..n - 1 {
+        let mut step_time = 0.0f64;
+        let mut incoming: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(n);
+        for r in 0..n {
+            let to = fabric.next(r);
+            let c = (r + 2 * n - 1 - step) % n;
+            let (lo, hi) = bounds[c];
+            let chunk = data[r][lo..hi].to_vec();
+            let (decoded, t) = hop(fabric, codec, &mut report, r, to, &chunk);
+            step_time = step_time.max(t);
+            incoming.push((to, c, decoded));
+        }
+        for (to, c, chunk) in incoming {
+            let (lo, hi) = bounds[c];
+            for (dst, src) in data[to][lo..hi].iter_mut().zip(chunk) {
+                *dst += src;
+            }
+        }
+        report.sim_time_s += step_time;
+        report.steps += 1;
+    }
+    let out = (0..n)
+        .map(|r| {
+            let (lo, hi) = bounds[r];
+            data[r][lo..hi].to_vec()
+        })
+        .collect();
+    (out, report)
+}
+
+/// Ring all-gather: rank r contributes `inputs[r]`; everyone returns the
+/// concatenation in rank order. F32 wire format.
+pub fn all_gather(
+    fabric: &mut Fabric,
+    codec: &dyn Codec,
+    inputs: &[Vec<f32>],
+) -> (Vec<Vec<f32>>, CollectiveReport) {
+    all_gather_wire(fabric, codec, inputs, WireFormat::F32)
+}
+
+/// [`all_gather`] with an explicit wire format. `WireFormat::Bf16` is
+/// the paper's setting — bf16 parameters/activations broadcast
+/// losslessly at 2 bytes/value before entropy coding.
+pub fn all_gather_wire(
+    fabric: &mut Fabric,
+    codec: &dyn Codec,
+    inputs: &[Vec<f32>],
+    wire: WireFormat,
+) -> (Vec<Vec<f32>>, CollectiveReport) {
+    let n = fabric.n_nodes();
+    assert_eq!(inputs.len(), n);
+    let mut report = CollectiveReport::default();
+    // slots[r][c] = chunk c as known to rank r
+    let mut slots: Vec<Vec<Option<Vec<f32>>>> = (0..n)
+        .map(|r| (0..n).map(|c| if c == r { Some(inputs[r].clone()) } else { None }).collect())
+        .collect();
+    for step in 0..n.saturating_sub(1) {
+        let mut step_time = 0.0f64;
+        let mut incoming: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(n);
+        for r in 0..n {
+            let to = fabric.next(r);
+            let c = (r + n - step) % n;
+            let chunk = slots[r][c].clone().expect("ring schedule invariant");
+            let (decoded, t) = hop_wire(fabric, codec, &mut report, r, to, &chunk, wire);
+            step_time = step_time.max(t);
+            incoming.push((to, c, decoded));
+        }
+        for (to, c, chunk) in incoming {
+            slots[to][c] = Some(chunk);
+        }
+        report.sim_time_s += step_time;
+        report.steps += 1;
+    }
+    let out = slots
+        .into_iter()
+        .map(|row| row.into_iter().flat_map(|c| c.expect("gather complete")).collect())
+        .collect();
+    (out, report)
+}
+
+/// All-to-all: `inputs[r][d]` is the chunk rank r sends to rank d.
+/// Direct pairwise exchange in n−1 rounds (round k: r -> (r+k) % n).
+pub fn all_to_all(
+    fabric: &mut Fabric,
+    codec: &dyn Codec,
+    inputs: &[Vec<Vec<f32>>],
+) -> (Vec<Vec<Vec<f32>>>, CollectiveReport) {
+    let n = fabric.n_nodes();
+    assert_eq!(inputs.len(), n);
+    assert!(inputs.iter().all(|row| row.len() == n), "all_to_all needs n chunks per rank");
+    let mut report = CollectiveReport::default();
+    let mut out: Vec<Vec<Vec<f32>>> = (0..n)
+        .map(|_| (0..n).map(|_| Vec::new()).collect::<Vec<_>>())
+        .collect();
+    // local chunk stays put
+    for r in 0..n {
+        out[r][r] = inputs[r][r].clone();
+    }
+    for round in 1..n {
+        let mut step_time = 0.0f64;
+        for r in 0..n {
+            let d = (r + round) % n;
+            let chunk = &inputs[r][d];
+            let (decoded, t) = hop(fabric, codec, &mut report, r, d, chunk);
+            out[d][r] = decoded;
+            step_time = step_time.max(t);
+        }
+        report.sim_time_s += step_time;
+        report.steps += 1;
+    }
+    (out, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{DeflateCodec, RawCodec, SingleStageCodec, ThreeStage};
+    use crate::fabric::LinkModel;
+    use crate::prng::Pcg32;
+    use crate::singlestage::{AvgPolicy, CodebookManager};
+    use crate::tensors::{DtypeTag, TensorKey, TensorKind};
+
+    fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|r| {
+                let mut rng = Pcg32::substream(seed, r as u64);
+                rng.normal_f32s(len, 1.0)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chunk_bounds_cover_exactly() {
+        for (len, n) in [(10, 3), (7, 7), (5, 8), (0, 4), (64, 4)] {
+            let b = chunk_bounds(len, n);
+            assert_eq!(b.len(), n);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b[n - 1].1, len);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_matches_ring_order_reference_exactly() {
+        for n in [2usize, 3, 4, 8] {
+            let xs = inputs(n, 101, 5);
+            let mut fabric = Fabric::new(n, LinkModel::DIE_TO_DIE);
+            let (out, report) = all_reduce(&mut fabric, &RawCodec, &xs);
+            let want = all_reduce_reference(&xs);
+            for r in 0..n {
+                assert_eq!(out[r], want, "rank {r} of {n}");
+            }
+            assert_eq!(report.steps as usize, 2 * (n - 1));
+        }
+    }
+
+    #[test]
+    fn all_reduce_compressed_bit_identical_to_uncompressed() {
+        let n = 4;
+        let xs = inputs(n, 256, 9);
+        let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (plain, _) = all_reduce(&mut f1, &RawCodec, &xs);
+        for codec in [&ThreeStage as &dyn Codec, &DeflateCodec::default()] {
+            let mut f2 = Fabric::new(n, LinkModel::DIE_TO_DIE);
+            let (compressed, rep) = all_reduce(&mut f2, codec, &xs);
+            assert_eq!(compressed, plain, "{}", codec.name());
+            assert!(rep.raw_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn all_reduce_single_stage_codec_bit_identical() {
+        let n = 4;
+        let xs = inputs(n, 512, 11);
+        // train the fixed codebook on representative gradient bytes
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        let key = TensorKey::new(TensorKind::Ffn1WGrad, DtypeTag::Bf16);
+        for x in &xs {
+            let bytes: Vec<u8> = x.iter().flat_map(|v| v.to_le_bytes()).collect();
+            m.observe_bytes(key, &bytes);
+        }
+        let id = m.build(key).unwrap();
+        let ss = SingleStageCodec::with_fixed(m.registry, id);
+        let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (plain, _) = all_reduce(&mut f1, &RawCodec, &xs);
+        let mut f2 = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (compressed, rep) = all_reduce(&mut f2, &ss, &xs);
+        assert_eq!(compressed, plain);
+        assert!(rep.wire_bytes > 0);
+    }
+
+    #[test]
+    fn reduce_scatter_chunks_match_all_reduce() {
+        let n = 4;
+        let xs = inputs(n, 99, 3); // non-divisible length exercises ragged chunks
+        let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (rs, _) = reduce_scatter(&mut f1, &RawCodec, &xs);
+        let want = all_reduce_reference(&xs);
+        let bounds = chunk_bounds(99, n);
+        for r in 0..n {
+            let (lo, hi) = bounds[r];
+            assert_eq!(rs[r], want[lo..hi].to_vec(), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_rank_order() {
+        let n = 5;
+        let xs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 3]).collect();
+        let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (out, report) = all_gather(&mut f, &RawCodec, &xs);
+        let want: Vec<f32> = (0..n).flat_map(|r| vec![r as f32; 3]).collect();
+        for r in 0..n {
+            assert_eq!(out[r], want);
+        }
+        assert_eq!(report.steps as usize, n - 1);
+        // ring all-gather raw bytes: each rank receives (n-1)/n of total
+        assert_eq!(report.raw_bytes, (n * (n - 1) * 3 * 4) as u64);
+    }
+
+    #[test]
+    fn all_to_all_transpose() {
+        let n = 3;
+        let inputs: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|r| (0..n).map(|d| vec![(r * 10 + d) as f32]).collect())
+            .collect();
+        let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (out, _) = all_to_all(&mut f, &RawCodec, &inputs);
+        for d in 0..n {
+            for r in 0..n {
+                assert_eq!(out[d][r], vec![(r * 10 + d) as f32], "out[{d}][{r}]");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_bf16_wire_exact_for_representable_values() {
+        use crate::dtype::{bf16_from_f32, bf16_to_f32};
+        let n = 4;
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut rng = Pcg32::substream(13, r as u64);
+                rng.normal_f32s(64, 0.1)
+                    .into_iter()
+                    .map(|v| bf16_to_f32(bf16_from_f32(v)))
+                    .collect()
+            })
+            .collect();
+        let mut f16 = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (out16, rep16) =
+            all_gather_wire(&mut f16, &RawCodec, &inputs, WireFormat::Bf16);
+        let mut f32f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (out32, rep32) = all_gather(&mut f32f, &RawCodec, &inputs);
+        assert_eq!(out16, out32, "bf16 wire must be lossless for bf16 values");
+        assert_eq!(rep16.raw_bytes * 2, rep32.raw_bytes, "half the bytes on the wire");
+    }
+
+    #[test]
+    fn compression_reduces_wire_bytes_on_compressible_payloads() {
+        let n = 4;
+        // highly compressible: constant vectors
+        let xs: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0f32; 4096]).collect();
+        let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (_, plain) = all_reduce(&mut f1, &RawCodec, &xs);
+        let mut f2 = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (_, comp) = all_reduce(&mut f2, &ThreeStage, &xs);
+        assert!(comp.wire_bytes < plain.wire_bytes / 2);
+        assert!(comp.bandwidth_gain() > 2.0);
+        assert!(comp.sim_time_s < plain.sim_time_s);
+    }
+
+    #[test]
+    fn report_accounts_fabric_consistently() {
+        let n = 3;
+        let xs = inputs(n, 300, 1);
+        let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (_, rep) = all_reduce(&mut f, &RawCodec, &xs);
+        assert_eq!(rep.wire_bytes, f.total_bytes());
+        assert_eq!(rep.bandwidth_gain(), 1.0);
+    }
+
+    #[test]
+    fn single_node_collectives_are_noops() {
+        let xs = inputs(1, 10, 2);
+        let mut f = Fabric::new(1, LinkModel::DIE_TO_DIE);
+        let (out, rep) = all_reduce(&mut f, &RawCodec, &xs);
+        assert_eq!(out[0], xs[0]);
+        assert_eq!(rep, CollectiveReport::default());
+    }
+}

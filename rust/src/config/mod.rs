@@ -1,0 +1,217 @@
+//! Experiment configuration: a hand-rolled INI-subset parser (serde is
+//! not in the offline crate set) plus the typed configs the trainer,
+//! fabric and benches consume.
+//!
+//! Format: `key = value` lines, `[section]` headers flatten to
+//! `section.key`, `#`/`;` comments, blank lines ignored.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed key-value config with typed accessors.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn parse(text: &str) -> crate::Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected 'key = value'", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> crate::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("config key '{key}' = '{s}': {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> crate::Result<usize> {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> crate::Result<u64> {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> crate::Result<f64> {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> crate::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(s) => anyhow::bail!("config key '{key}': '{s}' is not a bool"),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+/// Typed experiment config: the knobs every driver/bench shares.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Model preset lowered by aot.py: tiny | paper | 100m.
+    pub model: String,
+    /// Training steps to run/capture.
+    pub steps: usize,
+    /// Warmup steps before tensors are tapped for statistics.
+    pub warmup_steps: usize,
+    /// Shard geometry (defaults to the paper's 18x64 when the model is
+    /// "paper"; otherwise layers come from the model manifest).
+    pub n_shards: usize,
+    /// PRNG seed for data generation.
+    pub seed: u64,
+    /// Simulated workers for the collectives experiments.
+    pub workers: usize,
+    /// Simulated link bandwidth (bytes/s) and latency (s).
+    pub link_bandwidth: f64,
+    pub link_latency: f64,
+    /// Directory containing artifacts/*.hlo.txt.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            model: "tiny".into(),
+            steps: 20,
+            warmup_steps: 2,
+            n_shards: 64,
+            seed: 42,
+            workers: 8,
+            link_bandwidth: 25e9, // 25 GB/s — die-to-die-ish
+            link_latency: 1e-6,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_config(c: &Config) -> crate::Result<ExperimentConfig> {
+        let d = ExperimentConfig::default();
+        Ok(ExperimentConfig {
+            model: c.get_or("experiment.model", &d.model).to_string(),
+            steps: c.get_usize("experiment.steps", d.steps)?,
+            warmup_steps: c.get_usize("experiment.warmup_steps", d.warmup_steps)?,
+            n_shards: c.get_usize("experiment.n_shards", d.n_shards)?,
+            seed: c.get_u64("experiment.seed", d.seed)?,
+            workers: c.get_usize("fabric.workers", d.workers)?,
+            link_bandwidth: c.get_f64("fabric.link_bandwidth", d.link_bandwidth)?,
+            link_latency: c.get_f64("fabric.link_latency", d.link_latency)?,
+            artifacts_dir: c.get_or("experiment.artifacts_dir", &d.artifacts_dir).to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_and_types() {
+        let text = r#"
+# top comment
+plain = hello
+[experiment]
+steps = 50
+seed = 7
+; another comment
+[fabric]
+workers = 16
+link_bandwidth = 1e9
+"#;
+        let c = Config::parse(text).unwrap();
+        assert_eq!(c.get("plain"), Some("hello"));
+        assert_eq!(c.get_usize("experiment.steps", 0).unwrap(), 50);
+        assert_eq!(c.get_u64("experiment.seed", 0).unwrap(), 7);
+        assert_eq!(c.get_f64("fabric.link_bandwidth", 0.0).unwrap(), 1e9);
+        assert_eq!(c.get("missing"), None);
+        assert_eq!(c.get_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("no equals sign here").is_err());
+        let c = Config::parse("x = notanumber").unwrap();
+        assert!(c.get_usize("x", 0).is_err());
+    }
+
+    #[test]
+    fn bool_parsing() {
+        let c = Config::parse("a = true\nb = 0\nc = maybe").unwrap();
+        assert!(c.get_bool("a", false).unwrap());
+        assert!(!c.get_bool("b", true).unwrap());
+        assert!(c.get_bool("c", false).is_err());
+        assert!(c.get_bool("missing", true).unwrap());
+    }
+
+    #[test]
+    fn experiment_config_defaults_and_overrides() {
+        let d = ExperimentConfig::from_config(&Config::new()).unwrap();
+        assert_eq!(d, ExperimentConfig::default());
+        let c = Config::parse("[experiment]\nmodel = paper\nsteps = 100").unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.model, "paper");
+        assert_eq!(e.steps, 100);
+        assert_eq!(e.workers, ExperimentConfig::default().workers);
+    }
+
+    #[test]
+    fn set_then_get() {
+        let mut c = Config::new();
+        c.set("experiment.steps", 9);
+        assert_eq!(c.get_usize("experiment.steps", 0).unwrap(), 9);
+    }
+}

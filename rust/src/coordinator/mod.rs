@@ -1,0 +1,422 @@
+//! Leader/worker coordinator: the compression service that sits between
+//! the trainer (producing tensor shards) and the fabric (shipping
+//! frames).
+//!
+//! * the **leader** owns the [`CodebookManager`] — it folds observed
+//!   batches into the per-(tensor,dtype) average PMFs and rebuilds
+//!   codebooks **off the critical path**, publishing an immutable
+//!   [`RoutingTable`] snapshot (registry + key→id map) to the workers;
+//! * **workers** (std::thread, no tokio in the offline crate set) pull
+//!   [`CompressJob`]s from a bounded channel (backpressure), route each
+//!   job's key through the snapshot, run the single-stage encode, and
+//!   push [`CompressResult`]s back;
+//! * per-job latency, frame counts and byte counters land in a
+//!   [`MetricsRegistry`].
+
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::metrics::{Counter, HistogramMetric, MetricsRegistry};
+use crate::singlestage::{
+    AvgPolicy, CodebookManager, DriftConfig, DriftMonitor, Frame, SingleStageDecoder,
+    SingleStageEncoder,
+};
+use crate::stats::Histogram256;
+use crate::tensors::TensorKey;
+
+/// Immutable snapshot workers route against. Swapped atomically by the
+/// leader when codebooks are rebuilt.
+#[derive(Clone, Default)]
+pub struct RoutingTable {
+    pub registry: crate::singlestage::Registry,
+    pub ids: HashMap<TensorKey, u8>,
+    pub version: u64,
+}
+
+impl RoutingTable {
+    pub fn id_for(&self, key: TensorKey) -> Option<u8> {
+        self.ids.get(&key).copied()
+    }
+}
+
+/// A unit of encode work.
+#[derive(Debug, Clone)]
+pub struct CompressJob {
+    /// Caller-assigned sequence number (results carry it back).
+    pub seq: u64,
+    pub key: TensorKey,
+    pub data: Vec<u8>,
+}
+
+/// The encoded outcome.
+pub struct CompressResult {
+    pub seq: u64,
+    pub key: TensorKey,
+    pub frame: Frame,
+    pub raw_len: usize,
+    pub encode_ns: u64,
+    pub worker: usize,
+}
+
+enum WorkerMsg {
+    Job(CompressJob),
+    Stop,
+}
+
+/// The coordinator service.
+pub struct Coordinator {
+    manager: Mutex<CodebookManager>,
+    drift: Mutex<DriftMonitor>,
+    table: Arc<RwLock<Arc<RoutingTable>>>,
+    job_tx: SyncSender<WorkerMsg>,
+    result_rx: Mutex<Receiver<CompressResult>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: MetricsRegistry,
+    in_flight: Counter,
+}
+
+/// Bounded job queue depth per worker — the backpressure knob.
+pub const QUEUE_DEPTH_PER_WORKER: usize = 4;
+
+impl Coordinator {
+    pub fn new(n_workers: usize, policy: AvgPolicy) -> Coordinator {
+        assert!(n_workers >= 1);
+        let metrics = MetricsRegistry::new();
+        let table: Arc<RwLock<Arc<RoutingTable>>> =
+            Arc::new(RwLock::new(Arc::new(RoutingTable::default())));
+        let (job_tx, job_rx) = sync_channel::<WorkerMsg>(n_workers * QUEUE_DEPTH_PER_WORKER);
+        let (result_tx, result_rx) =
+            sync_channel::<CompressResult>(n_workers * QUEUE_DEPTH_PER_WORKER * 4);
+        let job_rx = Arc::new(Mutex::new(job_rx));
+
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let job_rx = Arc::clone(&job_rx);
+            let result_tx = result_tx.clone();
+            let table = Arc::clone(&table);
+            let frames = metrics.counter("coordinator_frames");
+            let raw_frames = metrics.counter("coordinator_raw_frames");
+            let bytes_in = metrics.counter("coordinator_bytes_in");
+            let bytes_out = metrics.counter("coordinator_bytes_out");
+            let latency = metrics.histogram(
+                "coordinator_encode_us",
+                &[1.0, 5.0, 10.0, 50.0, 100.0, 500.0, 1_000.0, 5_000.0, 20_000.0],
+            );
+            workers.push(std::thread::spawn(move || {
+                worker_loop(
+                    w, job_rx, result_tx, table, frames, raw_frames, bytes_in, bytes_out, latency,
+                )
+            }));
+        }
+
+        Coordinator {
+            manager: Mutex::new(CodebookManager::new(policy)),
+            drift: Mutex::new(DriftMonitor::new(DriftConfig::default())),
+            table,
+            job_tx,
+            result_rx: Mutex::new(result_rx),
+            workers,
+            in_flight: metrics.counter("coordinator_in_flight_submitted"),
+            metrics,
+        }
+    }
+
+    /// Leader-side: fold an observed histogram into `key`'s average PMF.
+    /// Off the critical path by construction — callers batch this.
+    pub fn observe(&self, key: TensorKey, hist: &Histogram256) {
+        self.manager.lock().unwrap().observe(key, hist);
+    }
+
+    pub fn observe_bytes(&self, key: TensorKey, data: &[u8]) {
+        self.manager.lock().unwrap().observe_bytes(key, data);
+    }
+
+    /// Leader-side: rebuild codebooks for every observed key and publish
+    /// a new routing snapshot. Returns the new table version.
+    pub fn rebuild_codebooks(&self) -> u64 {
+        let mut mgr = self.manager.lock().unwrap();
+        mgr.build_all();
+        let mut ids = HashMap::new();
+        for key in crate::tensors::TensorKind::ALL.iter().flat_map(|&k| {
+            crate::tensors::DtypeTag::ALL.iter().map(move |&d| TensorKey::new(k, d))
+        }) {
+            if let Some(id) = mgr.current_id(key) {
+                ids.insert(key, id);
+            }
+        }
+        let mut guard = self.table.write().unwrap();
+        let version = guard.version + 1;
+        *guard = Arc::new(RoutingTable { registry: mgr.registry.clone(), ids, version });
+        version
+    }
+
+    /// Adaptive observe: fold the batch into the average AND feed the
+    /// drift monitor against the key's live codebook. When drift is
+    /// flagged, rebuild + republish automatically (off the critical
+    /// path) and re-baseline. Returns `true` when a rebuild happened.
+    pub fn observe_adaptive(&self, key: TensorKey, hist: &Histogram256) -> bool {
+        self.observe(key, hist);
+        let table = self.routing_table();
+        let Some(id) = table.id_for(key) else { return false };
+        let Some(fixed) = table.registry.get(id) else { return false };
+        let flagged = self.drift.lock().unwrap().observe(key, hist, &fixed.book);
+        if flagged {
+            self.rebuild_codebooks();
+            self.drift.lock().unwrap().rebaseline(key);
+            self.metrics.counter("coordinator_drift_rebuilds").inc();
+        }
+        flagged
+    }
+
+    /// Current snapshot (what workers are encoding with).
+    pub fn routing_table(&self) -> Arc<RoutingTable> {
+        self.table.read().unwrap().clone()
+    }
+
+    /// A decoder bound to the current snapshot (receiver side).
+    pub fn decoder(&self) -> SingleStageDecoder {
+        SingleStageDecoder::new(self.routing_table().registry.clone())
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure).
+    pub fn submit(&self, job: CompressJob) {
+        self.in_flight.inc();
+        self.job_tx.send(WorkerMsg::Job(job)).expect("workers alive");
+    }
+
+    /// Receive one result (blocking).
+    pub fn recv(&self) -> CompressResult {
+        self.result_rx.lock().unwrap().recv().expect("workers alive")
+    }
+
+    /// Encode a batch and return results ordered by `seq` (0..n).
+    pub fn encode_batch(&self, jobs: Vec<CompressJob>) -> Vec<CompressResult> {
+        let n = jobs.len();
+        // interleave submit + drain so the bounded job queue can never
+        // deadlock against an unread result channel
+        let mut results: Vec<Option<CompressResult>> = (0..n).map(|_| None).collect();
+        let mut submitted = 0usize;
+        let mut received = 0usize;
+        let mut jobs = jobs.into_iter();
+        let window = self.workers.len() * QUEUE_DEPTH_PER_WORKER;
+        while received < n {
+            while submitted < n && submitted - received < window {
+                self.submit(jobs.next().unwrap());
+                submitted += 1;
+            }
+            let r = self.recv();
+            let seq = r.seq as usize;
+            assert!(seq < n && results[seq].is_none(), "bad seq {seq}");
+            results[seq] = Some(r);
+            received += 1;
+        }
+        results.into_iter().map(|r| r.unwrap()).collect()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.job_tx.send(WorkerMsg::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    worker: usize,
+    job_rx: Arc<Mutex<Receiver<WorkerMsg>>>,
+    result_tx: SyncSender<CompressResult>,
+    table: Arc<RwLock<Arc<RoutingTable>>>,
+    frames: Counter,
+    raw_frames: Counter,
+    bytes_in: Counter,
+    bytes_out: Counter,
+    latency: HistogramMetric,
+) {
+    loop {
+        let msg = {
+            let rx = job_rx.lock().unwrap();
+            rx.recv()
+        };
+        let job = match msg {
+            Ok(WorkerMsg::Job(j)) => j,
+            Ok(WorkerMsg::Stop) | Err(_) => return,
+        };
+        let snapshot = table.read().unwrap().clone();
+        let t0 = Instant::now();
+        let mut enc = SingleStageEncoder::new(snapshot.registry.clone());
+        let frame = match snapshot.id_for(job.key) {
+            Some(id) => enc.encode_with(id, &job.data),
+            None => Frame::raw(&job.data),
+        };
+        let encode_ns = t0.elapsed().as_nanos() as u64;
+        frames.inc();
+        if frame.header.id == crate::singlestage::RAW_ID {
+            raw_frames.inc();
+        }
+        bytes_in.add(job.data.len() as u64);
+        bytes_out.add(frame.wire_bytes() as u64);
+        latency.observe(encode_ns as f64 / 1_000.0);
+        let res = CompressResult {
+            seq: job.seq,
+            key: job.key,
+            frame,
+            raw_len: job.data.len(),
+            encode_ns,
+            worker,
+        };
+        if result_tx.send(res).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Pcg32, Zipf};
+    use crate::tensors::{DtypeTag, TensorKind};
+
+    fn key() -> TensorKey {
+        TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16)
+    }
+
+    fn skewed(seed: u64, n: usize) -> Vec<u8> {
+        let z = Zipf::new(256, 1.3);
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| z.sample(&mut rng) as u8).collect()
+    }
+
+    #[test]
+    fn jobs_without_codebooks_go_raw() {
+        let c = Coordinator::new(2, AvgPolicy::CumulativeMean);
+        let results = c.encode_batch(
+            (0..8).map(|seq| CompressJob { seq, key: key(), data: skewed(seq, 1024) }).collect(),
+        );
+        assert_eq!(results.len(), 8);
+        assert!(results.iter().all(|r| r.frame.header.id == crate::singlestage::RAW_ID));
+    }
+
+    #[test]
+    fn observe_rebuild_then_compress_and_decode() {
+        let c = Coordinator::new(3, AvgPolicy::CumulativeMean);
+        for s in 0..4 {
+            c.observe_bytes(key(), &skewed(s, 1 << 14));
+        }
+        let v = c.rebuild_codebooks();
+        assert_eq!(v, 1);
+        assert_eq!(c.routing_table().ids.len(), 1);
+
+        let jobs: Vec<CompressJob> = (0..32)
+            .map(|seq| CompressJob { seq, key: key(), data: skewed(100 + seq, 4096) })
+            .collect();
+        let originals: Vec<Vec<u8>> = jobs.iter().map(|j| j.data.clone()).collect();
+        let results = c.encode_batch(jobs);
+        let dec = c.decoder();
+        let mut compressed_total = 0usize;
+        for (r, orig) in results.iter().zip(&originals) {
+            assert_ne!(r.frame.header.id, crate::singlestage::RAW_ID);
+            assert_eq!(dec.decode(&r.frame).unwrap(), *orig, "seq {}", r.seq);
+            compressed_total += r.frame.wire_bytes();
+        }
+        let raw_total: usize = originals.iter().map(|o| o.len()).sum();
+        assert!(compressed_total < raw_total, "{compressed_total} vs {raw_total}");
+        // metrics landed
+        assert_eq!(c.metrics.counter("coordinator_frames").get(), 32);
+        assert!(c.metrics.render().contains("coordinator_encode_us_count"));
+    }
+
+    #[test]
+    fn rebuild_bumps_version_and_reroutes() {
+        let c = Coordinator::new(1, AvgPolicy::CumulativeMean);
+        c.observe_bytes(key(), &skewed(1, 8192));
+        let v1 = c.rebuild_codebooks();
+        let id1 = c.routing_table().id_for(key()).unwrap();
+        c.observe_bytes(key(), &skewed(2, 8192));
+        let v2 = c.rebuild_codebooks();
+        let id2 = c.routing_table().id_for(key()).unwrap();
+        assert!(v2 > v1);
+        assert_ne!(id1, id2, "rebuilt codebook gets a fresh id");
+    }
+
+    #[test]
+    fn work_distributes_across_workers() {
+        let c = Coordinator::new(4, AvgPolicy::CumulativeMean);
+        c.observe_bytes(key(), &skewed(3, 1 << 14));
+        c.rebuild_codebooks();
+        let results = c.encode_batch(
+            (0..64).map(|seq| CompressJob { seq, key: key(), data: skewed(seq, 16384) }).collect(),
+        );
+        let mut seen = [false; 4];
+        for r in &results {
+            seen[r.worker] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 2, "work stuck on one worker: {seen:?}");
+    }
+
+    #[test]
+    fn results_preserve_sequence_order() {
+        let c = Coordinator::new(3, AvgPolicy::CumulativeMean);
+        let results = c.encode_batch(
+            (0..50)
+                .map(|seq| CompressJob { seq, key: key(), data: skewed(seq, 100 + seq as usize) })
+                .collect(),
+        );
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+            assert_eq!(r.raw_len, 100 + i);
+        }
+    }
+
+    #[test]
+    fn adaptive_observe_rebuilds_on_drift() {
+        let c = Coordinator::new(1, AvgPolicy::Ema(0.5));
+        // deploy a book on the low-alphabet distribution
+        c.observe_bytes(key(), &skewed(1, 1 << 14));
+        c.rebuild_codebooks();
+        let v0 = c.routing_table().version;
+        // matched batches: no rebuild
+        for s in 0..4 {
+            let data = skewed(10 + s, 1 << 13);
+            assert!(!c.observe_adaptive(key(), &Histogram256::from_bytes(&data)));
+        }
+        assert_eq!(c.routing_table().version, v0);
+        // drifted batches (inverted alphabet): rebuild fires
+        let mut rebuilt = false;
+        for s in 0..8 {
+            let data: Vec<u8> = skewed(20 + s, 1 << 13).iter().map(|&b| 255 - b).collect();
+            rebuilt |= c.observe_adaptive(key(), &Histogram256::from_bytes(&data));
+        }
+        assert!(rebuilt, "drift must trigger a rebuild");
+        assert!(c.routing_table().version > v0);
+        assert_eq!(c.metrics.counter("coordinator_drift_rebuilds").get() >= 1, true);
+        // and the new book codes the drifted stream well again
+        let probe: Vec<u8> = skewed(99, 1 << 13).iter().map(|&b| 255 - b).collect();
+        let id = c.routing_table().id_for(key()).unwrap();
+        let h = Histogram256::from_bytes(&probe);
+        let bits =
+            c.routing_table().registry.get(id).unwrap().book.encoded_bits_for(&h).unwrap();
+        assert!((bits as f64) < 0.9 * 8.0 * probe.len() as f64);
+    }
+
+    use crate::stats::Histogram256;
+
+    #[test]
+    fn drop_joins_workers() {
+        let c = Coordinator::new(2, AvgPolicy::CumulativeMean);
+        c.submit(CompressJob { seq: 0, key: key(), data: vec![1, 2, 3] });
+        let _ = c.recv();
+        drop(c); // must not hang
+    }
+}

@@ -1,0 +1,456 @@
+//! ML datatypes: bfloat16 + OCP MX micro-floats (e4m3, e3m2, e2m3, e2m1)
+//! and the symbol-extraction policies that turn tensors into the 8-bit
+//! symbol streams the paper analyzes (§2: "compressibility at different
+//! data types, namely, bfloat16, e4m3, e3m2, e2m3 and e2m1").
+//!
+//! Micro-float codecs are table-based: each format has <= 256 code
+//! points, so we materialize the exact decode table once and encode by
+//! nearest-value search with round-to-nearest-even tie-breaking — bit
+//! exact by construction, no edge-case drift. Scaling follows MX
+//! practice: a power-of-two per-tensor scale mapping the max |x| into
+//! the representable range.
+
+use once_cell::sync::Lazy;
+
+// ------------------------------------------------------------- bfloat16
+
+/// f32 -> bf16 bits with round-to-nearest-even (the hardware rule).
+#[inline]
+pub fn bf16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // quiet the NaN, keep the payload's top bit set
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x0000_7FFF + lsb) >> 16) as u16
+}
+
+/// bf16 bits -> f32 (exact).
+#[inline]
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// Quantize a slice of f32s to bf16 bit patterns.
+pub fn bf16_bits_from_f32s(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| bf16_from_f32(x)).collect()
+}
+
+// --------------------------------------------------------- micro-floats
+
+/// A micro-float element format (<= 8 bits per value).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MiniFormat {
+    E4M3,
+    E3M2,
+    E2M3,
+    E2M1,
+}
+
+impl MiniFormat {
+    pub const ALL: [MiniFormat; 4] =
+        [MiniFormat::E4M3, MiniFormat::E3M2, MiniFormat::E2M3, MiniFormat::E2M1];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MiniFormat::E4M3 => "e4m3",
+            MiniFormat::E3M2 => "e3m2",
+            MiniFormat::E2M3 => "e2m3",
+            MiniFormat::E2M1 => "e2m1",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MiniFormat> {
+        Self::ALL.into_iter().find(|f| f.name() == s)
+    }
+
+    /// (exponent bits, mantissa bits, bias)
+    pub fn geometry(&self) -> (u32, u32, i32) {
+        match self {
+            MiniFormat::E4M3 => (4, 3, 7),
+            MiniFormat::E3M2 => (3, 2, 3),
+            MiniFormat::E2M3 => (2, 3, 1),
+            MiniFormat::E2M1 => (2, 1, 1),
+        }
+    }
+
+    /// Total bits per value (incl. sign).
+    pub fn bits(&self) -> u32 {
+        let (e, m, _) = self.geometry();
+        1 + e + m
+    }
+
+    /// Number of code points.
+    pub fn code_points(&self) -> usize {
+        1usize << self.bits()
+    }
+
+    /// OCP MX: only e4m3 reserves a NaN encoding (S.1111.111); the 6- and
+    /// 4-bit formats use every code as a finite value. None have inf.
+    pub fn nan_code(&self) -> Option<u8> {
+        match self {
+            MiniFormat::E4M3 => Some(0x7F),
+            _ => None,
+        }
+    }
+
+    /// Largest finite magnitude.
+    pub fn max_value(&self) -> f32 {
+        let (_, _, _) = self.geometry();
+        let tbl = decode_table(*self);
+        tbl.iter().cloned().filter(|v| v.is_finite()).fold(0.0, f32::max)
+    }
+
+    /// Decode a code point to f32 (sign | exp | mantissa, LSB-aligned).
+    pub fn decode(&self, code: u8) -> f32 {
+        let (eb, mb, bias) = self.geometry();
+        let total = 1 + eb + mb;
+        debug_assert!((code as u32) < (1u32 << total));
+        // e4m3 reserves S.1111.111 (0x7F / 0xFF) as NaN
+        if self.nan_code() == Some(code & !sign_mask(total)) {
+            return f32::NAN;
+        }
+        let sign = if code & sign_mask(total) != 0 { -1.0f32 } else { 1.0 };
+        let e = ((code >> mb) & ((1 << eb) - 1) as u8) as i32;
+        let m = (code & ((1 << mb) - 1) as u8) as f32;
+        let frac_scale = (1u32 << mb) as f32;
+        if e == 0 {
+            // subnormal: m/2^mb * 2^(1-bias)
+            sign * (m / frac_scale) * pow2(1 - bias)
+        } else {
+            sign * (1.0 + m / frac_scale) * pow2(e - bias)
+        }
+    }
+
+    /// Encode an f32 to the nearest code point (RNE ties, saturating).
+    pub fn encode(&self, x: f32) -> u8 {
+        let total = self.bits();
+        if x.is_nan() {
+            return self.nan_code().unwrap_or(0);
+        }
+        let table = sorted_codes(*self);
+        let mag = x.abs();
+        // binary search over the sorted magnitude table
+        let vals: &[(f32, u8)] = table;
+        let mut lo = 0usize;
+        let mut hi = vals.len() - 1;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if vals[mid].0 < mag {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        // candidates: lo and lo-1
+        let cand = if lo == 0 {
+            vals[0]
+        } else {
+            let (av, ac) = vals[lo - 1];
+            let (bv, bc) = vals[lo];
+            let da = mag - av;
+            let db = bv - mag;
+            if da < db {
+                (av, ac)
+            } else if db < da {
+                (bv, bc)
+            } else {
+                // exact midpoint: round to even code
+                if ac % 2 == 0 { (av, ac) } else { (bv, bc) }
+            }
+        };
+        let mut code = cand.1;
+        // -0.0 maps to +0; any strictly negative value carries the sign
+        if x < 0.0 {
+            code |= sign_mask(total);
+        }
+        code
+    }
+
+    /// Quantize a stream with a power-of-two scale; returns (symbols,
+    /// log2_scale). Values are divided by `2^log2_scale` before encoding
+    /// so max |x| lands at the format max (MX-style shared scale).
+    pub fn quantize(&self, xs: &[f32]) -> (Vec<u8>, i32) {
+        let log2_scale = self.auto_log2_scale(xs);
+        let s = pow2(-log2_scale);
+        (xs.iter().map(|&x| self.encode(x * s)).collect(), log2_scale)
+    }
+
+    /// Power-of-two scale exponent mapping max|x| into range.
+    pub fn auto_log2_scale(&self, xs: &[f32]) -> i32 {
+        let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        if amax == 0.0 || !amax.is_finite() {
+            return 0;
+        }
+        let target = self.max_value();
+        (amax / target).log2().ceil() as i32
+    }
+
+    /// Dequantize symbols back to f32 with the given scale exponent.
+    pub fn dequantize(&self, codes: &[u8], log2_scale: i32) -> Vec<f32> {
+        let s = pow2(log2_scale);
+        codes.iter().map(|&c| self.decode(c) * s).collect()
+    }
+}
+
+#[inline]
+fn sign_mask(total_bits: u32) -> u8 {
+    1u8 << (total_bits - 1)
+}
+
+#[inline]
+fn pow2(e: i32) -> f32 {
+    (2.0f64).powi(e) as f32
+}
+
+fn build_decode_table(fmt: MiniFormat) -> Vec<f32> {
+    (0..fmt.code_points()).map(|c| fmt.decode(c as u8)).collect()
+}
+
+fn build_sorted_codes(fmt: MiniFormat) -> Vec<(f32, u8)> {
+    // nonnegative codes only (sign handled separately), finite values
+    let (eb, mb, _) = fmt.geometry();
+    let npos = 1usize << (eb + mb);
+    let mut v: Vec<(f32, u8)> = (0..npos)
+        .map(|c| (fmt.decode(c as u8), c as u8))
+        .filter(|(val, _)| val.is_finite())
+        .collect();
+    v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    v
+}
+
+static E4M3_DEC: Lazy<Vec<f32>> = Lazy::new(|| build_decode_table(MiniFormat::E4M3));
+static E3M2_DEC: Lazy<Vec<f32>> = Lazy::new(|| build_decode_table(MiniFormat::E3M2));
+static E2M3_DEC: Lazy<Vec<f32>> = Lazy::new(|| build_decode_table(MiniFormat::E2M3));
+static E2M1_DEC: Lazy<Vec<f32>> = Lazy::new(|| build_decode_table(MiniFormat::E2M1));
+
+static E4M3_SORT: Lazy<Vec<(f32, u8)>> = Lazy::new(|| build_sorted_codes(MiniFormat::E4M3));
+static E3M2_SORT: Lazy<Vec<(f32, u8)>> = Lazy::new(|| build_sorted_codes(MiniFormat::E3M2));
+static E2M3_SORT: Lazy<Vec<(f32, u8)>> = Lazy::new(|| build_sorted_codes(MiniFormat::E2M3));
+static E2M1_SORT: Lazy<Vec<(f32, u8)>> = Lazy::new(|| build_sorted_codes(MiniFormat::E2M1));
+
+fn decode_table(fmt: MiniFormat) -> &'static [f32] {
+    match fmt {
+        MiniFormat::E4M3 => &E4M3_DEC,
+        MiniFormat::E3M2 => &E3M2_DEC,
+        MiniFormat::E2M3 => &E2M3_DEC,
+        MiniFormat::E2M1 => &E2M1_DEC,
+    }
+}
+
+fn sorted_codes(fmt: MiniFormat) -> &'static [(f32, u8)] {
+    match fmt {
+        MiniFormat::E4M3 => &E4M3_SORT,
+        MiniFormat::E3M2 => &E3M2_SORT,
+        MiniFormat::E2M3 => &E2M3_SORT,
+        MiniFormat::E2M1 => &E2M1_SORT,
+    }
+}
+
+// ----------------------------------------------------- symbol extraction
+
+/// How a tensor's raw representation becomes an 8-bit symbol stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SymbolMode {
+    /// bf16 values as little-endian byte pairs, interleaved (the paper's
+    /// default: 8-bit symbols over the raw tensor bytes).
+    Bf16Interleaved,
+    /// bf16 split into planes: all high (sign/exp) bytes then all low
+    /// (mantissa) bytes — exposes the compressible plane separately.
+    Bf16Planes,
+    /// One symbol per micro-float value, zero-extended to a byte.
+    PerValue,
+}
+
+/// Turn a bf16 bit buffer into the byte-symbol stream under `mode`.
+pub fn bf16_symbols(bits: &[u16], mode: SymbolMode) -> Vec<u8> {
+    match mode {
+        SymbolMode::Bf16Interleaved => {
+            let mut out = Vec::with_capacity(bits.len() * 2);
+            for &b in bits {
+                out.push((b & 0xFF) as u8);
+                out.push((b >> 8) as u8);
+            }
+            out
+        }
+        SymbolMode::Bf16Planes => {
+            let mut out = Vec::with_capacity(bits.len() * 2);
+            out.extend(bits.iter().map(|&b| (b >> 8) as u8));
+            out.extend(bits.iter().map(|&b| (b & 0xFF) as u8));
+            out
+        }
+        SymbolMode::PerValue => panic!("PerValue applies to micro-float streams"),
+    }
+}
+
+/// Just the high (sign+exponent+m1) plane of a bf16 stream.
+pub fn bf16_high_plane(bits: &[u16]) -> Vec<u8> {
+    bits.iter().map(|&b| (b >> 8) as u8).collect()
+}
+
+/// Just the low (mantissa) plane of a bf16 stream.
+pub fn bf16_low_plane(bits: &[u16]) -> Vec<u8> {
+    bits.iter().map(|&b| (b & 0xFF) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+
+    #[test]
+    fn bf16_roundtrip_exact_values() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1.5] {
+            let b = bf16_from_f32(x);
+            assert_eq!(bf16_to_f32(b), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn bf16_rne_ties() {
+        // 1.0 + 2^-8 is exactly halfway between bf16(1.0) and the next
+        // bf16 up; RNE keeps the even mantissa (1.0).
+        let x = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16_from_f32(x), 0x3F80);
+        // 1.0 + 3*2^-8 halfway again; rounds up to even.
+        let y = f32::from_bits(0x3F81_8000);
+        assert_eq!(bf16_from_f32(y), 0x3F82);
+    }
+
+    #[test]
+    fn bf16_nan_and_inf() {
+        assert!(bf16_to_f32(bf16_from_f32(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(bf16_from_f32(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(bf16_from_f32(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn bf16_error_bound_random() {
+        let mut rng = Pcg32::new(8);
+        for _ in 0..10_000 {
+            let x = (rng.next_f32() - 0.5) * 100.0;
+            let y = bf16_to_f32(bf16_from_f32(x));
+            let rel = ((x - y) / x).abs();
+            assert!(rel <= 1.0 / 128.0, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn mini_format_maxima_match_ocp_spec() {
+        assert_eq!(MiniFormat::E4M3.max_value(), 448.0);
+        assert_eq!(MiniFormat::E3M2.max_value(), 28.0);
+        assert_eq!(MiniFormat::E2M3.max_value(), 7.5);
+        assert_eq!(MiniFormat::E2M1.max_value(), 6.0);
+    }
+
+    #[test]
+    fn e4m3_nan_encoding() {
+        assert!(MiniFormat::E4M3.decode(0x7F).is_nan());
+        assert!(MiniFormat::E4M3.decode(0xFF).is_nan());
+        assert_eq!(MiniFormat::E4M3.encode(f32::NAN), 0x7F);
+    }
+
+    #[test]
+    fn decode_zero_codes() {
+        for fmt in MiniFormat::ALL {
+            assert_eq!(fmt.decode(0), 0.0, "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_fixed_point_for_representables() {
+        // every finite code point must encode back to itself (up to sign
+        // of zero)
+        for fmt in MiniFormat::ALL {
+            for c in 0..fmt.code_points() as u16 {
+                let v = fmt.decode(c as u8);
+                if !v.is_finite() {
+                    continue;
+                }
+                let rt = fmt.decode(fmt.encode(v));
+                assert_eq!(rt, v, "{fmt:?} code {c:#x} -> {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_saturates() {
+        for fmt in MiniFormat::ALL {
+            let m = fmt.max_value();
+            let c = fmt.encode(m * 10.0);
+            assert_eq!(fmt.decode(c), m, "{fmt:?}");
+            let cneg = fmt.encode(-m * 10.0);
+            assert_eq!(fmt.decode(cneg), -m, "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn encode_nearest_midpoints_rne() {
+        // e2m1 code points: 0, .5, 1, 1.5, 2, 3, 4, 6; midpoint 2.5
+        // between 2 (code 0b100, even) and 3 (code 0b101, odd) -> 2.
+        let f = MiniFormat::E2M1;
+        assert_eq!(f.decode(f.encode(2.5)), 2.0);
+        // 1.25 between 1.0 (0b010) and 1.5 (0b011) -> 1.0 (even code)
+        assert_eq!(f.decode(f.encode(1.25)), 1.0);
+        // non-midpoints go to nearest
+        assert_eq!(f.decode(f.encode(2.9)), 3.0);
+        assert_eq!(f.decode(f.encode(2.1)), 2.0);
+    }
+
+    #[test]
+    fn quantize_scales_into_range() {
+        let mut rng = Pcg32::new(10);
+        let xs = rng.normal_f32s(4096, 123.0);
+        for fmt in MiniFormat::ALL {
+            let (codes, log2_scale) = fmt.quantize(&xs);
+            assert_eq!(codes.len(), xs.len());
+            let back = fmt.dequantize(&codes, log2_scale);
+            // error bounded by half an ulp at the top of the range
+            let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            for (&x, &y) in xs.iter().zip(&back) {
+                assert!(
+                    (x - y).abs() <= amax / 2.0,
+                    "{fmt:?}: {x} -> {y} (amax {amax})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_all_zero() {
+        for fmt in MiniFormat::ALL {
+            let (codes, s) = fmt.quantize(&[0.0, 0.0]);
+            assert_eq!(s, 0);
+            assert!(codes.iter().all(|&c| fmt.decode(c) == 0.0));
+        }
+    }
+
+    #[test]
+    fn symbol_extraction_modes() {
+        let bits = [0x1234u16, 0xABCD];
+        assert_eq!(bf16_symbols(&bits, SymbolMode::Bf16Interleaved), vec![0x34, 0x12, 0xCD, 0xAB]);
+        assert_eq!(bf16_symbols(&bits, SymbolMode::Bf16Planes), vec![0x12, 0xAB, 0x34, 0xCD]);
+        assert_eq!(bf16_high_plane(&bits), vec![0x12, 0xAB]);
+        assert_eq!(bf16_low_plane(&bits), vec![0x34, 0xCD]);
+    }
+
+    #[test]
+    fn format_parse_names() {
+        for fmt in MiniFormat::ALL {
+            assert_eq!(MiniFormat::parse(fmt.name()), Some(fmt));
+        }
+        assert_eq!(MiniFormat::parse("fp64"), None);
+    }
+
+    #[test]
+    fn subnormal_decode() {
+        // e2m3: e=0 -> m/8 * 2^0 ; code 0b00001 = 0.125
+        assert_eq!(MiniFormat::E2M3.decode(0b0_00_001), 0.125);
+        // e2m1: code 0b001 = 0.5
+        assert_eq!(MiniFormat::E2M1.decode(0b0_00_1), 0.5);
+        // e4m3: smallest subnormal = 2^-9
+        let v = MiniFormat::E4M3.decode(0b0_0000_001);
+        assert!((v - 2.0f32.powi(-9)).abs() < 1e-12);
+    }
+}

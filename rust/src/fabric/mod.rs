@@ -1,0 +1,143 @@
+//! Simulated network fabric: an N-node topology with a bandwidth+latency
+//! link model and per-link byte accounting.
+//!
+//! The paper's motivation is that collectives are **bounded by network
+//! bandwidth** and its latency argument is analytic (stage-1/2 compute +
+//! codebook bytes on the wire). The fabric measures exactly those
+//! quantities: every `send` is accounted in bytes and messages per
+//! directed link, and transfer time follows the alpha-beta model
+//! `t = latency + bytes / bandwidth`.
+
+/// Alpha-beta link model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+    /// Per-message latency in seconds.
+    pub latency_s: f64,
+}
+
+impl LinkModel {
+    /// Die-to-die-ish default: 25 GB/s, 1 µs.
+    pub const DIE_TO_DIE: LinkModel = LinkModel { bandwidth_bps: 25e9, latency_s: 1e-6 };
+    /// Datacenter NIC-ish: 12.5 GB/s (100 Gb), 5 µs.
+    pub const DATACENTER: LinkModel = LinkModel { bandwidth_bps: 12.5e9, latency_s: 5e-6 };
+
+    /// Time to move `bytes` over this link.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// Per-link traffic counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    pub bytes: u64,
+    pub messages: u64,
+}
+
+/// N-node fabric with directed-link accounting. Topology-agnostic at the
+/// accounting level; ring neighbors are a convenience.
+pub struct Fabric {
+    n: usize,
+    pub link: LinkModel,
+    /// Row-major (from * n + to) directed-link stats.
+    stats: Vec<LinkStats>,
+}
+
+impl Fabric {
+    pub fn new(n: usize, link: LinkModel) -> Self {
+        assert!(n >= 1);
+        Self { n, link, stats: vec![LinkStats::default(); n * n] }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Ring successor of `rank`.
+    pub fn next(&self, rank: usize) -> usize {
+        (rank + 1) % self.n
+    }
+
+    /// Ring predecessor of `rank`.
+    pub fn prev(&self, rank: usize) -> usize {
+        (rank + self.n - 1) % self.n
+    }
+
+    /// Account one message of `bytes` from `from` to `to`; returns the
+    /// link transfer time.
+    pub fn send(&mut self, from: usize, to: usize, bytes: usize) -> f64 {
+        assert!(from < self.n && to < self.n && from != to, "bad link {from}->{to}");
+        let s = &mut self.stats[from * self.n + to];
+        s.bytes += bytes as u64;
+        s.messages += 1;
+        self.link.transfer_time(bytes)
+    }
+
+    pub fn link_stats(&self, from: usize, to: usize) -> LinkStats {
+        self.stats[from * self.n + to]
+    }
+
+    /// Total bytes over all links.
+    pub fn total_bytes(&self) -> u64 {
+        self.stats.iter().map(|s| s.bytes).sum()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.stats.iter().map(|s| s.messages).sum()
+    }
+
+    /// Peak bytes over any single directed link (the bandwidth
+    /// bottleneck under uniform links).
+    pub fn max_link_bytes(&self) -> u64 {
+        self.stats.iter().map(|s| s.bytes).max().unwrap_or(0)
+    }
+
+    pub fn reset(&mut self) {
+        self.stats.fill(LinkStats::default());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_alpha_beta() {
+        let l = LinkModel { bandwidth_bps: 1e9, latency_s: 1e-6 };
+        assert!((l.transfer_time(0) - 1e-6).abs() < 1e-15);
+        // 1 MB at 1 GB/s = 1 ms (+ 1 us)
+        assert!((l.transfer_time(1_000_000) - 1.001e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_neighbors() {
+        let f = Fabric::new(4, LinkModel::DIE_TO_DIE);
+        assert_eq!(f.next(3), 0);
+        assert_eq!(f.prev(0), 3);
+        assert_eq!(f.next(1), 2);
+    }
+
+    #[test]
+    fn accounting_accumulates_per_link() {
+        let mut f = Fabric::new(3, LinkModel::DIE_TO_DIE);
+        f.send(0, 1, 100);
+        f.send(0, 1, 50);
+        f.send(1, 2, 10);
+        assert_eq!(f.link_stats(0, 1), LinkStats { bytes: 150, messages: 2 });
+        assert_eq!(f.link_stats(1, 2), LinkStats { bytes: 10, messages: 1 });
+        assert_eq!(f.link_stats(2, 0), LinkStats::default());
+        assert_eq!(f.total_bytes(), 160);
+        assert_eq!(f.total_messages(), 3);
+        assert_eq!(f.max_link_bytes(), 150);
+        f.reset();
+        assert_eq!(f.total_bytes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad link")]
+    fn self_send_rejected() {
+        Fabric::new(2, LinkModel::DIE_TO_DIE).send(1, 1, 1);
+    }
+}

@@ -1,0 +1,683 @@
+//! Canonical Huffman codes over the 256 byte symbols.
+//!
+//! The substrate under both the paper's single-stage engine and the
+//! three-stage baseline:
+//! * O(n log n) two-queue tree construction from a frequency table;
+//! * package-merge length-limiting (codes capped at [`MAX_CODE_LEN`] so
+//!   the decoder is a single 2^L-entry LUT and the encoder fits u32);
+//! * canonical code assignment (sorted by (length, symbol)) so a codebook
+//!   is fully described by its 256 code *lengths* — 128 bytes packed on
+//!   the wire for the three-stage baseline;
+//! * a table-driven decoder (one peek + one LUT hit per symbol).
+
+use crate::bitio::BitReader;
+use crate::stats::{Histogram256, Pmf, NUM_SYMBOLS};
+
+/// Maximum code length. 12 bits keeps the decode LUT at 4096 entries
+/// (8 KiB of u16) — L1-resident — while costing < 0.1% compression vs
+/// unlimited depth on 256-symbol alphabets (2^12 = 4096 >> 256 leaves).
+pub const MAX_CODE_LEN: u32 = 12;
+
+/// A canonical Huffman codebook: per-symbol code lengths + codewords.
+///
+/// Lengths of 0 mark symbols absent from the codebook (they cannot be
+/// encoded; the single-stage engine avoids this via PMF smoothing).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodeBook {
+    /// Code length in bits per symbol (0 = absent).
+    pub lengths: [u8; NUM_SYMBOLS],
+    /// Right-aligned canonical codeword per symbol.
+    pub codes: [u32; NUM_SYMBOLS],
+}
+
+impl CodeBook {
+    /// Build from a frequency table. Returns `None` for an all-zero
+    /// histogram (nothing to code).
+    pub fn from_counts(counts: &[u64; NUM_SYMBOLS]) -> Option<CodeBook> {
+        Self::from_counts_limited(counts, MAX_CODE_LEN)
+    }
+
+    /// Build with an explicit length cap (`2^max_len` must cover the
+    /// support size).
+    pub fn from_counts_limited(counts: &[u64; NUM_SYMBOLS], max_len: u32) -> Option<CodeBook> {
+        let support: Vec<(u64, u8)> = counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(s, &c)| (c, s as u8))
+            .collect();
+        if support.is_empty() {
+            return None;
+        }
+        assert!(
+            (1u64 << max_len) >= support.len() as u64,
+            "max_len {max_len} cannot hold {} symbols",
+            support.len()
+        );
+        let mut lengths = [0u8; NUM_SYMBOLS];
+        if support.len() == 1 {
+            // Degenerate alphabet: one symbol still needs 1 bit so the
+            // stream length encodes the count unambiguously.
+            lengths[support[0].1 as usize] = 1;
+        } else {
+            let unlimited = tree_code_lengths(&support);
+            let too_deep = unlimited.iter().any(|&(l, _)| l as u32 > max_len);
+            let pairs = if too_deep { package_merge(&support, max_len) } else { unlimited };
+            for (l, s) in pairs {
+                lengths[s as usize] = l;
+            }
+        }
+        Some(Self::from_lengths(lengths))
+    }
+
+    /// Build from a PMF (the single-stage path: codebook from the average
+    /// distribution). Probabilities are scaled to integer pseudo-counts;
+    /// any strictly positive probability gets a code.
+    pub fn from_pmf(pmf: &Pmf) -> Option<CodeBook> {
+        const SCALE: f64 = 1e12;
+        let mut counts = [0u64; NUM_SYMBOLS];
+        for i in 0..NUM_SYMBOLS {
+            if pmf.p[i] > 0.0 {
+                counts[i] = ((pmf.p[i] * SCALE) as u64).max(1);
+            }
+        }
+        Self::from_counts(&counts)
+    }
+
+    /// Reconstruct codewords canonically from a length table.
+    pub fn from_lengths(lengths: [u8; NUM_SYMBOLS]) -> CodeBook {
+        let mut order: Vec<u8> = (0..NUM_SYMBOLS as u16).map(|s| s as u8).collect();
+        order.sort_by_key(|&s| (lengths[s as usize], s));
+        let mut codes = [0u32; NUM_SYMBOLS];
+        let mut code: u32 = 0;
+        let mut prev_len: u8 = 0;
+        for &s in order.iter().filter(|&&s| lengths[s as usize] > 0) {
+            let len = lengths[s as usize];
+            code <<= len - prev_len;
+            codes[s as usize] = code;
+            code += 1;
+            prev_len = len;
+        }
+        CodeBook { lengths, codes }
+    }
+
+    /// Number of symbols with a code.
+    pub fn support(&self) -> usize {
+        self.lengths.iter().filter(|&&l| l > 0).count()
+    }
+
+    /// Longest code length in bits.
+    pub fn max_len(&self) -> u32 {
+        self.lengths.iter().copied().max().unwrap_or(0) as u32
+    }
+
+    /// Kraft sum scaled by `2^max_len`: equals `1 << max_len` for a
+    /// complete prefix code (a proper Huffman codebook; single-symbol
+    /// books are intentionally incomplete).
+    pub fn kraft_scaled(&self) -> u64 {
+        let ml = self.max_len();
+        self.lengths
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 1u64 << (ml - l as u32))
+            .sum()
+    }
+
+    /// Can `data` be encoded (every occurring symbol has a code)?
+    pub fn covers(&self, data: &[u8]) -> bool {
+        data.iter().all(|&b| self.lengths[b as usize] > 0)
+    }
+
+    /// Exact encoded size in bits of a stream with this histogram, or
+    /// `None` if some populated symbol lacks a code.
+    pub fn encoded_bits_for(&self, hist: &Histogram256) -> Option<u64> {
+        let mut bits = 0u64;
+        for i in 0..NUM_SYMBOLS {
+            let c = hist.counts[i];
+            if c > 0 {
+                let l = self.lengths[i];
+                if l == 0 {
+                    return None;
+                }
+                bits += c * l as u64;
+            }
+        }
+        Some(bits)
+    }
+
+    /// Expected code length in bits/symbol under `pmf` (∞ if uncovered).
+    pub fn expected_bits(&self, pmf: &Pmf) -> f64 {
+        let mut e = 0.0;
+        for i in 0..NUM_SYMBOLS {
+            if pmf.p[i] > 0.0 {
+                if self.lengths[i] == 0 {
+                    return f64::INFINITY;
+                }
+                e += pmf.p[i] * self.lengths[i] as f64;
+            }
+        }
+        e
+    }
+
+    /// Pack the length table to 4-bit nibbles (128 bytes) — the bytes the
+    /// three-stage encoder must put on the wire. Requires max_len <= 15.
+    pub fn pack_lengths(&self) -> [u8; NUM_SYMBOLS / 2] {
+        assert!(self.max_len() <= 15);
+        let mut out = [0u8; NUM_SYMBOLS / 2];
+        for i in 0..NUM_SYMBOLS / 2 {
+            out[i] = self.lengths[2 * i] | (self.lengths[2 * i + 1] << 4);
+        }
+        out
+    }
+
+    /// Inverse of [`pack_lengths`]: rebuild the canonical book.
+    pub fn unpack_lengths(packed: &[u8; NUM_SYMBOLS / 2]) -> CodeBook {
+        let mut lengths = [0u8; NUM_SYMBOLS];
+        for i in 0..NUM_SYMBOLS / 2 {
+            lengths[2 * i] = packed[i] & 0x0F;
+            lengths[2 * i + 1] = packed[i] >> 4;
+        }
+        CodeBook::from_lengths(lengths)
+    }
+
+    /// Encode `data`; returns the bit-packed payload and its exact bit
+    /// length. Panics in debug if a symbol is uncovered (callers check
+    /// [`covers`] / use the singlestage escape policy).
+    ///
+    /// Hot path (§Perf): symbols are looked up in a packed
+    /// `(code << 8) | len` table (one load instead of two) and folded
+    /// into a 64-bit accumulator four at a time — with
+    /// [`MAX_CODE_LEN`] = 12 four codes are ≤ 48 bits, so one whole-byte
+    /// flush per 4 symbols suffices.
+    pub fn encode(&self, data: &[u8]) -> (Vec<u8>, u64) {
+        // packed lookup: code ≤ 12 bits fits (code << 8) | len in u32
+        let mut packed = [0u32; NUM_SYMBOLS];
+        for s in 0..NUM_SYMBOLS {
+            packed[s] = (self.codes[s] << 8) | self.lengths[s] as u32;
+        }
+        // worst case: MAX_CODE_LEN/8 bytes per symbol, +8 write-ahead slack
+        let cap = data.len() * (MAX_CODE_LEN as usize).div_ceil(8).max(2) + 16;
+        let mut buf = vec![0u8; cap];
+        let mut at = 0usize; // bytes committed
+        let mut acc = 0u64; // bits packed from the MSB end downward
+        let mut nbits = 0u32;
+        let mut chunks = data.chunks_exact(4);
+        for c in &mut chunks {
+            for &b in c {
+                let e = packed[b as usize];
+                let len = e & 0xFF;
+                debug_assert!(len > 0, "symbol {b:#x} has no code");
+                nbits += len;
+                acc |= ((e >> 8) as u64) << (64 - nbits);
+            }
+            // write-ahead 8 bytes, commit only the whole ones
+            buf[at..at + 8].copy_from_slice(&acc.to_be_bytes());
+            let k = (nbits / 8) as usize;
+            at += k;
+            acc <<= 8 * k;
+            nbits -= 8 * k as u32;
+        }
+        for &b in chunks.remainder() {
+            let e = packed[b as usize];
+            let len = e & 0xFF;
+            debug_assert!(len > 0, "symbol {b:#x} has no code");
+            nbits += len;
+            acc |= ((e >> 8) as u64) << (64 - nbits);
+            buf[at..at + 8].copy_from_slice(&acc.to_be_bytes());
+            let k = (nbits / 8) as usize;
+            at += k;
+            acc <<= 8 * k;
+            nbits -= 8 * k as u32;
+        }
+        let total_bits = at as u64 * 8 + nbits as u64;
+        if nbits > 0 {
+            buf[at] = (acc >> 56) as u8;
+            at += 1;
+        }
+        buf.truncate(at);
+        (buf, total_bits)
+    }
+
+    /// Build the table-driven decoder for this book.
+    pub fn decoder(&self) -> Decoder {
+        Decoder::new(self)
+    }
+}
+
+/// Unlimited-depth Huffman code lengths via the two-queue method.
+/// `support` must be nonempty with len >= 2; returns (length, symbol).
+fn tree_code_lengths(support: &[(u64, u8)]) -> Vec<(u8, u8)> {
+    let n = support.len();
+    debug_assert!(n >= 2);
+    let mut leaves: Vec<(u64, u8)> = support.to_vec();
+    leaves.sort();
+    // Node arena: first n entries are leaves, merges appended after.
+    let mut weight: Vec<u64> = leaves.iter().map(|&(w, _)| w).collect();
+    let mut parent: Vec<u32> = vec![u32::MAX; n];
+    let mut q1 = 0usize; // next unconsumed leaf
+    let mut q2 = n; // next unconsumed merged node
+    let total_nodes = 2 * n - 1;
+    while weight.len() < total_nodes {
+        // take the two smallest among fronts of the leaf and merge queues
+        let mut take = || {
+            let from_leaf = q1 < n
+                && (q2 >= weight.len() || weight[q1] <= weight[q2]);
+            if from_leaf {
+                q1 += 1;
+                q1 - 1
+            } else {
+                q2 += 1;
+                q2 - 1
+            }
+        };
+        let a = take();
+        let b = take();
+        let idx = weight.len() as u32;
+        weight.push(weight[a] + weight[b]);
+        parent.push(u32::MAX);
+        parent[a] = idx;
+        parent[b] = idx;
+    }
+    // depth of each leaf = chain length to the root
+    let mut out = Vec::with_capacity(n);
+    for (i, &(_, sym)) in leaves.iter().enumerate() {
+        let mut d = 0u8;
+        let mut p = parent[i];
+        while p != u32::MAX {
+            d += 1;
+            p = parent[p as usize];
+        }
+        out.push((d, sym));
+    }
+    out
+}
+
+/// Package-merge: optimal length-limited code lengths (Larmore–Hirschberg).
+/// Offline path only — runs when the unlimited tree exceeds `max_len`.
+fn package_merge(support: &[(u64, u8)], max_len: u32) -> Vec<(u8, u8)> {
+    let n = support.len();
+    debug_assert!(n >= 2 && (1u64 << max_len) >= n as u64);
+    let mut leaves: Vec<(u64, u8)> = support.to_vec();
+    leaves.sort();
+    // A package is (weight, contained leaf indices).
+    type Pkg = (u128, Vec<u16>);
+    let leaf_pkgs: Vec<Pkg> =
+        leaves.iter().enumerate().map(|(i, &(w, _))| (w as u128, vec![i as u16])).collect();
+    let mut list = leaf_pkgs.clone();
+    for _ in 1..max_len {
+        // pair up the current list into packages
+        let mut packaged: Vec<Pkg> = Vec::with_capacity(list.len() / 2);
+        for pair in list.chunks_exact(2) {
+            let mut leaves_in = pair[0].1.clone();
+            leaves_in.extend_from_slice(&pair[1].1);
+            packaged.push((pair[0].0 + pair[1].0, leaves_in));
+        }
+        // merge with a fresh copy of the leaves (both sorted)
+        let mut merged = Vec::with_capacity(leaf_pkgs.len() + packaged.len());
+        let (mut i, mut j) = (0, 0);
+        while i < leaf_pkgs.len() || j < packaged.len() {
+            let from_leaf =
+                j >= packaged.len() || (i < leaf_pkgs.len() && leaf_pkgs[i].0 <= packaged[j].0);
+            if from_leaf {
+                merged.push(leaf_pkgs[i].clone());
+                i += 1;
+            } else {
+                merged.push(std::mem::take(&mut packaged[j]));
+                j += 1;
+            }
+        }
+        list = merged;
+    }
+    // count leaf occurrences among the 2n-2 cheapest items
+    let mut occur = vec![0u8; n];
+    for item in list.iter().take(2 * n - 2) {
+        for &li in &item.1 {
+            occur[li as usize] += 1;
+        }
+    }
+    leaves.iter().zip(occur).map(|(&(_, sym), l)| (l, sym)).collect()
+}
+
+/// Table-driven canonical Huffman decoder.
+///
+/// One `2^max_len`-entry LUT: index = next `max_len` bits of the stream,
+/// entry = (symbol, consumed length) packed in a u16. With
+/// [`MAX_CODE_LEN`] = 12 the table is 8 KiB — L1-resident.
+pub struct Decoder {
+    /// `(len << 8) | symbol`; len = 0 marks an invalid prefix.
+    table: Vec<u16>,
+    max_len: u32,
+}
+
+impl Decoder {
+    pub fn new(book: &CodeBook) -> Decoder {
+        let ml = book.max_len().max(1);
+        let mut table = vec![0u16; 1 << ml];
+        for s in 0..NUM_SYMBOLS {
+            let len = book.lengths[s] as u32;
+            if len == 0 {
+                continue;
+            }
+            let lo = (book.codes[s] as usize) << (ml - len);
+            let hi = ((book.codes[s] as usize) + 1) << (ml - len);
+            let entry = ((len as u16) << 8) | s as u16;
+            for e in &mut table[lo..hi] {
+                *e = entry;
+            }
+        }
+        Decoder { table, max_len: ml }
+    }
+
+    /// Decode exactly `n_symbols` symbols from the bit-packed payload.
+    ///
+    /// Hot path (§Perf): one unaligned big-endian u64 refill per FOUR
+    /// symbols (4 × [`MAX_CODE_LEN`] = 48 ≤ the ≥ 57 bits a refill
+    /// guarantees), each symbol then a shift + LUT hit. Overlapping
+    /// refill bits are identical stream bits, so the OR is idempotent.
+    /// The stream tail falls back to the general [`BitReader`].
+    pub fn decode(&self, payload: &[u8], n_symbols: usize) -> Vec<u8> {
+        let ml = self.max_len;
+        let mut out = vec![0u8; n_symbols];
+        let mut i = 0usize; // symbols decoded
+        let mut acc: u64 = 0; // stream bits, left-aligned
+        let mut nbits: u32 = 0; // bits of acc backed by consumed bytes
+        let mut pos: usize = 0; // next unread payload byte
+        while n_symbols - i >= 4 && pos + 8 <= payload.len() {
+            let w = u64::from_be_bytes(payload[pos..pos + 8].try_into().unwrap());
+            acc |= w >> nbits;
+            let adv = ((64 - nbits) / 8) as usize;
+            pos += adv;
+            nbits += adv as u32 * 8; // now >= 57
+            for slot in &mut out[i..i + 4] {
+                let entry = self.table[(acc >> (64 - ml)) as usize];
+                let len = (entry >> 8) as u32;
+                debug_assert!(len > 0, "invalid prefix in stream");
+                *slot = entry as u8;
+                acc <<= len;
+                nbits -= len;
+            }
+            i += 4;
+        }
+        if i < n_symbols {
+            // tail: general bit reader picking up at the absolute bit pos
+            let bitpos = pos * 8 - nbits as usize;
+            let start = bitpos >> 3;
+            let mut r = BitReader::new(&payload[start..]);
+            r.consume((bitpos & 7) as u32);
+            for slot in &mut out[i..] {
+                let entry = self.table[r.peek_bits(ml) as usize];
+                let len = (entry >> 8) as u32;
+                debug_assert!(len > 0, "invalid prefix in stream");
+                r.consume(len);
+                *slot = entry as u8;
+            }
+        }
+        out
+    }
+
+    /// Table bytes (for perf accounting).
+    pub fn table_bytes(&self) -> usize {
+        self.table.len() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+    use crate::proptest_lite::{gens, shrinks, Runner};
+
+    fn hist_of(data: &[u8]) -> Histogram256 {
+        Histogram256::from_bytes(data)
+    }
+
+    #[test]
+    fn known_small_example() {
+        // counts: a=5, b=2, c=1, d=1 -> lengths a:1, b:2, c:3, d:3
+        let mut counts = [0u64; 256];
+        counts[b'a' as usize] = 5;
+        counts[b'b' as usize] = 2;
+        counts[b'c' as usize] = 1;
+        counts[b'd' as usize] = 1;
+        let cb = CodeBook::from_counts(&counts).unwrap();
+        assert_eq!(cb.lengths[b'a' as usize], 1);
+        assert_eq!(cb.lengths[b'b' as usize], 2);
+        assert_eq!(cb.lengths[b'c' as usize], 3);
+        assert_eq!(cb.lengths[b'd' as usize], 3);
+        // canonical: a=0, b=10, c=110, d=111
+        assert_eq!(cb.codes[b'a' as usize], 0b0);
+        assert_eq!(cb.codes[b'b' as usize], 0b10);
+        assert_eq!(cb.codes[b'c' as usize], 0b110);
+        assert_eq!(cb.codes[b'd' as usize], 0b111);
+    }
+
+    #[test]
+    fn empty_histogram_yields_none() {
+        assert!(CodeBook::from_counts(&[0u64; 256]).is_none());
+    }
+
+    #[test]
+    fn single_symbol_gets_one_bit() {
+        let cb = CodeBook::from_counts(&hist_of(&[9u8; 100]).counts).unwrap();
+        assert_eq!(cb.lengths[9], 1);
+        assert_eq!(cb.support(), 1);
+        let (payload, bits) = cb.encode(&[9u8; 100]);
+        assert_eq!(bits, 100);
+        assert_eq!(cb.decoder().decode(&payload, 100), vec![9u8; 100]);
+    }
+
+    #[test]
+    fn two_equal_symbols() {
+        let data: Vec<u8> = (0..100).map(|i| (i % 2) as u8).collect();
+        let cb = CodeBook::from_counts(&hist_of(&data).counts).unwrap();
+        assert_eq!(cb.lengths[0], 1);
+        assert_eq!(cb.lengths[1], 1);
+        assert_eq!(cb.kraft_scaled(), 1 << cb.max_len());
+    }
+
+    #[test]
+    fn kraft_equality_random_histograms() {
+        Runner::new("kraft", 200).run(
+            |rng| gens::histogram(rng, 10_000),
+            shrinks::histogram,
+            |h| {
+                let cb = CodeBook::from_counts(h).unwrap();
+                if cb.support() == 1 {
+                    return Ok(()); // intentionally incomplete
+                }
+                let (got, want) = (cb.kraft_scaled(), 1u64 << cb.max_len());
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("kraft {got} != {want}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prefix_freeness_random_histograms() {
+        Runner::new("prefix-free", 100).run(
+            |rng| gens::histogram(rng, 1_000),
+            shrinks::histogram,
+            |h| {
+                let cb = CodeBook::from_counts(h).unwrap();
+                let coded: Vec<(u32, u8)> = (0..256)
+                    .filter(|&s| cb.lengths[s] > 0)
+                    .map(|s| (cb.codes[s], cb.lengths[s]))
+                    .collect();
+                for (i, &(ca, la)) in coded.iter().enumerate() {
+                    for &(cb2, lb) in &coded[i + 1..] {
+                        let l = la.min(lb) as u32;
+                        if (ca >> (la as u32 - l)) == (cb2 >> (lb as u32 - l)) {
+                            return Err(format!("prefix clash {ca:b}/{la} {cb2:b}/{lb}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn roundtrip_random_skewed_streams() {
+        Runner::new("huff-roundtrip", 60).run(
+            |rng| gens::bytes_skewed(rng, 1 << 14),
+            shrinks::vec_u8,
+            |data| {
+                if data.is_empty() {
+                    return Ok(());
+                }
+                let cb = CodeBook::from_counts(&hist_of(data).counts).unwrap();
+                let (payload, bits) = cb.encode(data);
+                if payload.len() as u64 != (bits + 7) / 8 {
+                    return Err("payload/bits mismatch".into());
+                }
+                let back = cb.decoder().decode(&payload, data.len());
+                if &back != data {
+                    return Err("decode != original".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn optimality_entropy_bounds() {
+        // H(p)*n <= huffman bits < (H(p)+1)*n  for complete codes
+        Runner::new("huff-optimal", 40).run(
+            |rng| gens::bytes_skewed(rng, 1 << 14),
+            shrinks::vec_u8,
+            |data| {
+                if data.len() < 2 {
+                    return Ok(());
+                }
+                let h = hist_of(data);
+                if h.support() < 2 {
+                    return Ok(());
+                }
+                let cb = CodeBook::from_counts(&h.counts).unwrap();
+                let bits = cb.encoded_bits_for(&h).unwrap() as f64;
+                let n = data.len() as f64;
+                let ent = h.entropy_bits() * n;
+                if bits + 1e-6 < ent {
+                    return Err(format!("beat entropy: {bits} < {ent}"));
+                }
+                if bits >= ent + n {
+                    return Err(format!("worse than H+1: {bits} vs {ent} + {n}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn encoded_bits_for_matches_actual_encode() {
+        let mut rng = Pcg32::new(21);
+        let data = gens::bytes_skewed(&mut rng, 1 << 15);
+        let h = hist_of(&data);
+        if let Some(cb) = CodeBook::from_counts(&h.counts) {
+            let (_, bits) = cb.encode(&data);
+            assert_eq!(cb.encoded_bits_for(&h), Some(bits));
+        }
+    }
+
+    #[test]
+    fn length_cap_respected_on_pathological_counts() {
+        // Fibonacci-ish counts force deep unlimited trees.
+        let mut counts = [0u64; 256];
+        let (mut a, mut b) = (1u64, 1u64);
+        for i in 0..40 {
+            counts[i] = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let cb = CodeBook::from_counts(&counts).unwrap();
+        assert!(cb.max_len() <= MAX_CODE_LEN, "max {}", cb.max_len());
+        assert_eq!(cb.kraft_scaled(), 1 << cb.max_len());
+        // package-merge must remain decodable
+        let data: Vec<u8> = (0..40u8).flat_map(|s| std::iter::repeat(s).take(3)).collect();
+        let (payload, _) = cb.encode(&data);
+        assert_eq!(cb.decoder().decode(&payload, data.len()), data);
+    }
+
+    #[test]
+    fn package_merge_no_worse_than_5pct_vs_unlimited() {
+        let mut counts = [0u64; 256];
+        let (mut a, mut b) = (1u64, 2u64);
+        for i in 0..50 {
+            counts[i] = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let h = Histogram256 { counts };
+        let limited = CodeBook::from_counts_limited(&counts, 12).unwrap();
+        let wide = CodeBook::from_counts_limited(&counts, 32).unwrap();
+        let lb = limited.encoded_bits_for(&h).unwrap() as f64;
+        let wb = wide.encoded_bits_for(&h).unwrap() as f64;
+        assert!(lb >= wb);
+        assert!(lb <= wb * 1.05, "limited {lb} vs unlimited {wb}");
+    }
+
+    #[test]
+    fn pack_unpack_lengths_roundtrip() {
+        Runner::new("pack-lengths", 60).run(
+            |rng| gens::histogram(rng, 500),
+            shrinks::histogram,
+            |h| {
+                let cb = CodeBook::from_counts(h).unwrap();
+                let packed = cb.pack_lengths();
+                let back = CodeBook::unpack_lengths(&packed);
+                if back == cb {
+                    Ok(())
+                } else {
+                    Err("canonical reconstruction differs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn from_pmf_matches_counts_on_exact_ratios() {
+        let mut counts = [0u64; 256];
+        counts[0] = 4;
+        counts[1] = 2;
+        counts[2] = 1;
+        counts[3] = 1;
+        let from_counts = CodeBook::from_counts(&counts).unwrap();
+        let pmf = Histogram256 { counts }.to_pmf();
+        let from_pmf = CodeBook::from_pmf(&pmf).unwrap();
+        assert_eq!(from_counts.lengths, from_pmf.lengths);
+    }
+
+    #[test]
+    fn expected_bits_matches_empirical_rate() {
+        let mut rng = Pcg32::new(33);
+        let data = gens::bytes_skewed(&mut rng, 1 << 16);
+        let h = hist_of(&data);
+        let cb = CodeBook::from_counts(&h.counts).unwrap();
+        let pmf = h.to_pmf();
+        let expected = cb.expected_bits(&pmf);
+        let actual = cb.encoded_bits_for(&h).unwrap() as f64 / data.len() as f64;
+        assert!((expected - actual).abs() < 1e-9);
+    }
+
+    #[test]
+    fn covers_and_uncovered_cost() {
+        let cb = CodeBook::from_counts(&hist_of(&[1, 1, 2, 2]).counts).unwrap();
+        assert!(cb.covers(&[1, 2, 1]));
+        assert!(!cb.covers(&[1, 3]));
+        assert_eq!(cb.encoded_bits_for(&hist_of(&[3])), None);
+        assert_eq!(cb.expected_bits(&hist_of(&[3]).to_pmf()), f64::INFINITY);
+    }
+
+    #[test]
+    fn decoder_table_size() {
+        let cb = CodeBook::from_counts(&hist_of(&[0, 1, 2, 3, 0, 0, 1]).counts).unwrap();
+        let d = cb.decoder();
+        assert_eq!(d.table_bytes(), 2usize << cb.max_len());
+        assert!(d.table_bytes() <= 2 << MAX_CODE_LEN);
+    }
+}

@@ -1,0 +1,46 @@
+//! # sshuff — Single-Stage Huffman Encoder for ML Compression
+//!
+//! Production-shaped reproduction of *"Single-Stage Huffman Encoder for
+//! ML Compression"* (Agrawal et al., Google, 2026).
+//!
+//! The paper's observation: tensor shards produced during LLM training
+//! (weights, activations, gradients) are **statistically similar across
+//! layers and shards**, so a *fixed* Huffman codebook derived from the
+//! average PMF of previous batches compresses within 0.5% of per-shard
+//! Huffman coding and within 1% of the Shannon bound — while removing the
+//! frequency-analysis and codebook-build stages (and the codebook bytes
+//! on the wire) from the critical path.
+//!
+//! ## Layers
+//! * **L3 (this crate)** — the single-stage engine ([`singlestage`]),
+//!   canonical Huffman substrate ([`huffman`]), baselines
+//!   ([`baselines`]), simulated multi-worker fabric + collectives
+//!   ([`fabric`], [`collectives`]), the data-parallel trainer
+//!   ([`trainer`]) and the leader/worker coordinator ([`coordinator`]).
+//! * **L2/L1 (build-time python)** — a transformer train step with FFN
+//!   tensor taps and Pallas kernels, AOT-lowered to HLO text and executed
+//!   through [`runtime`] (PJRT CPU client via the `xla` crate). Python is
+//!   never on the request path.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod bitio;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod dtype;
+pub mod experiments;
+pub mod fabric;
+pub mod huffman;
+pub mod metrics;
+pub mod prng;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod singlestage;
+pub mod stats;
+pub mod tensors;
+pub mod trainer;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

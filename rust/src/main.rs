@@ -1,0 +1,288 @@
+//! `repro` — the leader CLI for the sshuff reproduction.
+//!
+//! ```text
+//! repro train      [--model tiny|paper] [--steps N] [--seed S]
+//! repro figures    [--model ...] [--steps N] [--shards N] [--fig 1|2|3|4|all]
+//! repro sweep      [--model ...] [--dtypes bf16,e4m3,...]
+//! repro compress   [--file PATH] [--codec huffman-1stage|huffman-3stage|deflate|zstd]
+//! repro collective [--workers N] [--elems N] [--codec ...]
+//! repro stats      (coordinator metrics demo over a synthetic stream)
+//! ```
+
+use sshuff::baselines::{baseline_codecs, Codec, SingleStageCodec};
+use sshuff::cli::{Args, Cli, CommandSpec, OptSpec};
+use sshuff::collectives::all_reduce;
+use sshuff::coordinator::{CompressJob, Coordinator};
+use sshuff::experiments::{capture_cached, figures, measure_shards, CaptureSpec};
+use sshuff::fabric::{Fabric, LinkModel};
+use sshuff::prng::Pcg32;
+use sshuff::runtime::Engine;
+use sshuff::singlestage::{AvgPolicy, CodebookManager};
+use sshuff::stats::Histogram256;
+use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
+use sshuff::trainer::Trainer;
+
+fn main() {
+    let cli = build_cli();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("compress") => cmd_compress(&args),
+        Some("collective") => cmd_collective(&args),
+        Some("stats") => cmd_stats(&args),
+        _ => {
+            eprintln!("{}", cli.usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_cli() -> Cli {
+    let model = OptSpec { name: "model", takes_value: true, help: "model preset: tiny|paper|100m" };
+    let steps = OptSpec { name: "steps", takes_value: true, help: "training steps" };
+    let seed = OptSpec { name: "seed", takes_value: true, help: "PRNG seed" };
+    let shards = OptSpec { name: "shards", takes_value: true, help: "column shards per layer" };
+    let codec = OptSpec {
+        name: "codec",
+        takes_value: true,
+        help: "raw|huffman-1stage|huffman-3stage|deflate|zstd",
+    };
+    Cli {
+        bin: "repro",
+        about: "Single-Stage Huffman Encoder for ML Compression — reproduction driver",
+        commands: vec![
+            CommandSpec {
+                name: "train",
+                about: "train the AOT-lowered transformer, print the loss curve",
+                opts: vec![model.clone(), steps.clone(), seed.clone()],
+            },
+            CommandSpec {
+                name: "figures",
+                about: "reproduce paper figures 1-4 from a (cached) capture",
+                opts: vec![
+                    model.clone(),
+                    steps.clone(),
+                    seed.clone(),
+                    shards.clone(),
+                    OptSpec { name: "fig", takes_value: true, help: "1|2|3|4|all" },
+                ],
+            },
+            CommandSpec {
+                name: "sweep",
+                about: "§2 sweep: compressibility per tensor kind x dtype",
+                opts: vec![
+                    model.clone(),
+                    steps.clone(),
+                    seed.clone(),
+                    shards.clone(),
+                    OptSpec { name: "dtypes", takes_value: true, help: "comma list, default all" },
+                ],
+            },
+            CommandSpec {
+                name: "compress",
+                about: "compress a file (or synthetic data) with each codec",
+                opts: vec![
+                    OptSpec { name: "file", takes_value: true, help: "input file (default: synthetic)" },
+                    codec.clone(),
+                ],
+            },
+            CommandSpec {
+                name: "collective",
+                about: "ring all-reduce over the simulated fabric, with compression",
+                opts: vec![
+                    OptSpec { name: "workers", takes_value: true, help: "ring size (default 8)" },
+                    OptSpec { name: "elems", takes_value: true, help: "f32 elements per rank (default 1<<16)" },
+                    codec,
+                ],
+            },
+            CommandSpec {
+                name: "stats",
+                about: "run the coordinator on a synthetic shard stream, dump metrics",
+                opts: vec![
+                    OptSpec { name: "workers", takes_value: true, help: "worker threads (default 4)" },
+                    OptSpec { name: "jobs", takes_value: true, help: "encode jobs (default 256)" },
+                ],
+            },
+        ],
+    }
+}
+
+fn spec_from(args: &Args) -> Result<CaptureSpec, String> {
+    let model = args.opt_or("model", "tiny").to_string();
+    let mut spec = if model == "paper" { CaptureSpec::paper() } else { CaptureSpec::tiny() };
+    spec.model = model;
+    spec.steps = args.opt_parse("steps", spec.steps)?;
+    spec.observe_from = (spec.steps / 4).min(spec.steps - 1);
+    spec.seed = args.opt_parse("seed", spec.seed)?;
+    spec.n_shards = args.opt_parse("shards", spec.n_shards)?;
+    Ok(spec)
+}
+
+fn cmd_train(args: &Args) -> sshuff::Result<()> {
+    let model = args.opt_or("model", "tiny");
+    let steps: usize = args.opt_parse("steps", 20).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.opt_parse("seed", 42u64).map_err(anyhow::Error::msg)?;
+    let engine = Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+    let mut t = Trainer::new(&engine, model, seed)?;
+    t.run_with(steps, |i, out| println!("step {i:4}  loss {:.4}", out.loss))?;
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> sshuff::Result<()> {
+    let spec = spec_from(args).map_err(anyhow::Error::msg)?;
+    let which = args.opt_or("fig", "all");
+    let engine = Engine::cpu()?;
+    let cap = capture_cached(&engine, &spec)?;
+    let kc = cap.kind(TensorKind::Ffn1Act);
+    let m = measure_shards(kc, DtypeTag::Bf16, &kc.prev_hist);
+    if matches!(which, "1" | "all") {
+        println!("{}", figures::fig1(&cap, 0, 0).text);
+    }
+    if matches!(which, "2" | "all") {
+        println!("{}", figures::fig2(&m));
+    }
+    if matches!(which, "3" | "all") {
+        println!("{}", figures::fig3(&m).text);
+    }
+    if matches!(which, "4" | "all") {
+        println!("{}", figures::fig4(&m).text);
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> sshuff::Result<()> {
+    let spec = spec_from(args).map_err(anyhow::Error::msg)?;
+    let dtypes: Vec<DtypeTag> = match args.opt("dtypes") {
+        None => DtypeTag::ALL.to_vec(),
+        Some(s) => s
+            .split(',')
+            .map(|d| DtypeTag::parse(d).ok_or_else(|| anyhow::anyhow!("unknown dtype '{d}'")))
+            .collect::<sshuff::Result<_>>()?,
+    };
+    let engine = Engine::cpu()?;
+    let cap = capture_cached(&engine, &spec)?;
+    println!("{}", figures::sweep(&cap, &dtypes));
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> sshuff::Result<()> {
+    let data = match args.opt("file") {
+        Some(path) => std::fs::read(path)?,
+        None => {
+            // synthetic bf16-activation-like bytes
+            let tap = sshuff::trainer::synthetic::synthetic_tap(TensorKind::Ffn1Act, 1, 256, 256, 1);
+            sshuff::tensors::shard_symbols(&tap, DtypeTag::Bf16)
+        }
+    };
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+    mgr.observe_bytes(key, &data);
+    let id = mgr.build(key).unwrap();
+    let mut codecs: Vec<Box<dyn Codec>> = baseline_codecs();
+    codecs.push(Box::new(SingleStageCodec::with_fixed(mgr.registry.clone(), id)));
+    let only = args.opt("codec");
+    let mut table = sshuff::benchkit::Table::new(&["codec", "in", "out", "ratio", "saved%"]);
+    for c in &codecs {
+        if let Some(name) = only {
+            if c.name() != name {
+                continue;
+            }
+        }
+        let wire = c.encode(&data);
+        assert_eq!(c.decode(&wire)?, data, "{} roundtrip", c.name());
+        table.row(&[
+            c.name().to_string(),
+            data.len().to_string(),
+            wire.len().to_string(),
+            format!("{:.3}", data.len() as f64 / wire.len() as f64),
+            format!("{:.2}", 100.0 * (1.0 - wire.len() as f64 / data.len() as f64)),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_collective(args: &Args) -> sshuff::Result<()> {
+    let workers: usize = args.opt_parse("workers", 8).map_err(anyhow::Error::msg)?;
+    let elems: usize = args.opt_parse("elems", 1 << 16).map_err(anyhow::Error::msg)?;
+    let inputs: Vec<Vec<f32>> = (0..workers)
+        .map(|r| {
+            let mut rng = Pcg32::substream(7, r as u64);
+            rng.normal_f32s(elems, 1e-3) // gradient-like
+        })
+        .collect();
+    // fixed codebook trained on rank-0's bytes
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1WGrad, DtypeTag::Bf16);
+    let bytes0: Vec<u8> = inputs[0].iter().flat_map(|v| v.to_le_bytes()).collect();
+    mgr.observe_bytes(key, &bytes0);
+    let id = mgr.build(key).unwrap();
+    let mut codecs: Vec<Box<dyn Codec>> = baseline_codecs();
+    codecs.push(Box::new(SingleStageCodec::with_fixed(mgr.registry.clone(), id)));
+    let only = args.opt("codec");
+    let mut table = sshuff::benchkit::Table::new(&[
+        "codec", "wire MB", "raw MB", "gain", "sim ms", "wall ms",
+    ]);
+    for c in &codecs {
+        if let Some(name) = only {
+            if c.name() != name {
+                continue;
+            }
+        }
+        let mut fabric = Fabric::new(workers, LinkModel::DIE_TO_DIE);
+        let t0 = std::time::Instant::now();
+        let (_, rep) = all_reduce(&mut fabric, c.as_ref(), &inputs);
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        table.row(&[
+            c.name().to_string(),
+            format!("{:.3}", rep.wire_bytes as f64 / 1e6),
+            format!("{:.3}", rep.raw_bytes as f64 / 1e6),
+            format!("{:.2}x", rep.bandwidth_gain()),
+            format!("{:.3}", rep.sim_time_s * 1e3),
+            format!("{wall:.1}"),
+        ]);
+    }
+    println!("ring all-reduce: {workers} workers x {elems} f32");
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> sshuff::Result<()> {
+    let workers: usize = args.opt_parse("workers", 4).map_err(anyhow::Error::msg)?;
+    let jobs: usize = args.opt_parse("jobs", 256).map_err(anyhow::Error::msg)?;
+    let coord = Coordinator::new(workers, AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+    // observe a few batches, then compress a stream
+    for s in 0..4 {
+        let tap = sshuff::trainer::synthetic::synthetic_tap(TensorKind::Ffn1Act, 1, 64, 256, s);
+        coord.observe(key, &Histogram256::from_bytes(&sshuff::tensors::shard_symbols(&tap, DtypeTag::Bf16)));
+    }
+    coord.rebuild_codebooks();
+    let batch: Vec<CompressJob> = (0..jobs as u64)
+        .map(|seq| {
+            let tap =
+                sshuff::trainer::synthetic::synthetic_tap(TensorKind::Ffn1Act, 1, 16, 256, 100 + seq);
+            CompressJob { seq, key, data: sshuff::tensors::shard_symbols(&tap, DtypeTag::Bf16) }
+        })
+        .collect();
+    let results = coord.encode_batch(batch);
+    let (raw, wire): (usize, usize) =
+        results.iter().fold((0, 0), |(r, w), x| (r + x.raw_len, w + x.frame.wire_bytes()));
+    println!("{jobs} jobs over {workers} workers: {raw} -> {wire} bytes ({:.2}x)", raw as f64 / wire as f64);
+    println!("{}", coord.metrics.render());
+    Ok(())
+}

@@ -1,0 +1,258 @@
+//! Lightweight metrics for the coordinator: counters, gauges and
+//! fixed-bucket histograms with a text exposition format (one
+//! `name{labels} value` per line, prometheus-flavored).
+//!
+//! All metric handles are cheap to clone and thread-safe — workers update
+//! them lock-free via atomics while the leader scrapes.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone counter.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (f64 stored as bits).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Histogram over fixed bucket upper bounds (+inf implicit).
+#[derive(Clone)]
+pub struct HistogramMetric {
+    bounds: Arc<Vec<f64>>,
+    buckets: Arc<Vec<AtomicU64>>,
+    sum_micro: Arc<AtomicU64>, // sum stored in micro-units for atomicity
+    count: Arc<AtomicU64>,
+}
+
+impl HistogramMetric {
+    pub fn new(bounds: &[f64]) -> Self {
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must increase");
+        Self {
+            bounds: Arc::new(bounds.to_vec()),
+            buckets: Arc::new((0..=bounds.len()).map(|_| AtomicU64::new(0)).collect()),
+            sum_micro: Arc::new(AtomicU64::new(0)),
+            count: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Exponential bounds `start * factor^i`, `n` buckets.
+    pub fn exponential(start: f64, factor: f64, n: usize) -> Self {
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = start;
+        for _ in 0..n {
+            bounds.push(b);
+            b *= factor;
+        }
+        Self::new(&bounds)
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_micro.fetch_add((v * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_micro.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() / c as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket holding quantile `q`).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { f64::INFINITY };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(HistogramMetric),
+}
+
+/// Named metric registry with text exposition.
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<BTreeMap<String, Metric>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.inner.lock().unwrap();
+        match m.entry(name.to_string()).or_insert_with(|| Metric::Counter(Counter::default())) {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric '{name}' registered with a different type"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.inner.lock().unwrap();
+        match m.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Gauge::default())) {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric '{name}' registered with a different type"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> HistogramMetric {
+        let mut m = self.inner.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(HistogramMetric::new(bounds)))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric '{name}' registered with a different type"),
+        }
+    }
+
+    /// Text exposition, sorted by metric name.
+    pub fn render(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => out.push_str(&format!("{name} {}\n", c.get())),
+                Metric::Gauge(g) => out.push_str(&format!("{name} {}\n", g.get())),
+                Metric::Histogram(h) => {
+                    out.push_str(&format!("{name}_count {}\n", h.count()));
+                    out.push_str(&format!("{name}_sum {:.6}\n", h.sum()));
+                    out.push_str(&format!("{name}_p50 {:.6}\n", h.quantile(0.5)));
+                    out.push_str(&format!("{name}_p95 {:.6}\n", h.quantile(0.95)));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("frames");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name returns the same underlying counter
+        assert_eq!(r.counter("frames").get(), 5);
+        let g = r.gauge("compress_ratio");
+        g.set(0.22);
+        assert_eq!(r.gauge("compress_ratio").get(), 0.22);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = HistogramMetric::new(&[1.0, 10.0, 100.0]);
+        for v in [0.5, 0.6, 5.0, 50.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 56.1).abs() < 1e-3);
+        assert_eq!(h.quantile(0.5), 1.0); // 2/4 in first bucket
+        assert_eq!(h.quantile(1.0), 100.0);
+        let big = HistogramMetric::new(&[1.0]);
+        big.observe(99.0);
+        assert_eq!(big.quantile(0.9), f64::INFINITY);
+    }
+
+    #[test]
+    fn exponential_bounds() {
+        let h = HistogramMetric::exponential(1.0, 2.0, 4);
+        assert_eq!(*h.bounds, vec![1.0, 2.0, 4.0, 8.0]);
+    }
+
+    #[test]
+    fn render_exposition() {
+        let r = MetricsRegistry::new();
+        r.counter("a_count").add(3);
+        r.gauge("b_gauge").set(1.5);
+        r.histogram("c_lat", &[1.0, 2.0]).observe(0.5);
+        let text = r.render();
+        assert!(text.contains("a_count 3"));
+        assert!(text.contains("b_gauge 1.5"));
+        assert!(text.contains("c_lat_count 1"));
+        assert!(text.contains("c_lat_p50 1"));
+    }
+
+    #[test]
+    fn threads_update_shared_counter() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("x");
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    #[should_panic(expected = "different type")]
+    fn type_mismatch_panics() {
+        let r = MetricsRegistry::new();
+        r.counter("m");
+        r.gauge("m");
+    }
+}

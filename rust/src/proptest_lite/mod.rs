@@ -1,0 +1,294 @@
+//! Minimal property-testing harness with shrinking.
+//!
+//! The offline crate set has no `proptest`/`quickcheck`; this provides the
+//! subset the test-suite needs: seeded generators over [`Pcg32`], a runner
+//! that replays failures through a greedy shrinker, and stock
+//! generators/shrinkers for byte streams, float tensors and PMFs.
+//!
+//! ```ignore
+//! use sshuff::proptest_lite::{Runner, gens, shrinks};
+//! Runner::new("roundtrip", 100).run(
+//!     |rng| gens::bytes(rng, 4096),
+//!     shrinks::vec_u8,
+//!     |data| { /* return Err(msg) to fail */ Ok(()) },
+//! );
+//! ```
+
+use crate::prng::Pcg32;
+
+/// Property runner: generates `cases` inputs, shrinks any failure.
+pub struct Runner {
+    name: &'static str,
+    cases: usize,
+    seed: u64,
+    max_shrink_steps: usize,
+}
+
+impl Runner {
+    pub fn new(name: &'static str, cases: usize) -> Self {
+        // Stable per-property seed: tests are reproducible run to run.
+        let seed = name
+            .bytes()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3));
+        Self { name, cases, seed, max_shrink_steps: 2_000 }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run the property. `gen` draws a case, `shrink` proposes smaller
+    /// variants (tried in order), `prop` returns `Err(reason)` on failure.
+    /// Panics with the minimal counterexample found.
+    pub fn run<T, G, S, P>(&self, gen: G, shrink: S, prop: P)
+    where
+        T: std::fmt::Debug + Clone,
+        G: Fn(&mut Pcg32) -> T,
+        S: Fn(&T) -> Vec<T>,
+        P: Fn(&T) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let mut rng = Pcg32::substream(self.seed, case as u64);
+            let input = gen(&mut rng);
+            if let Err(first_msg) = prop(&input) {
+                let (min, msg, steps) = self.shrink_failure(input, first_msg, &shrink, &prop);
+                panic!(
+                    "property '{}' failed (case {case}, {steps} shrink steps)\n  reason: {}\n  minimal counterexample: {:?}",
+                    self.name, msg, min
+                );
+            }
+        }
+    }
+
+    fn shrink_failure<T, S, P>(
+        &self,
+        mut cur: T,
+        mut msg: String,
+        shrink: &S,
+        prop: &P,
+    ) -> (T, String, usize)
+    where
+        T: Clone,
+        S: Fn(&T) -> Vec<T>,
+        P: Fn(&T) -> Result<(), String>,
+    {
+        let mut steps = 0;
+        'outer: loop {
+            if steps >= self.max_shrink_steps {
+                break;
+            }
+            for cand in shrink(&cur) {
+                steps += 1;
+                if let Err(m) = prop(&cand) {
+                    cur = cand;
+                    msg = m;
+                    continue 'outer; // restart from the smaller case
+                }
+                if steps >= self.max_shrink_steps {
+                    break 'outer;
+                }
+            }
+            break; // no candidate still fails: minimal
+        }
+        (cur, msg, steps)
+    }
+}
+
+/// Stock generators.
+pub mod gens {
+    use crate::prng::{Pcg32, Zipf};
+
+    /// Uniform random bytes, length in `[0, max_len]`.
+    pub fn bytes(rng: &mut Pcg32, max_len: usize) -> Vec<u8> {
+        let n = rng.gen_range(max_len as u32 + 1) as usize;
+        let mut v = vec![0u8; n];
+        rng.fill_bytes(&mut v);
+        v
+    }
+
+    /// Zipf-skewed bytes (entropy well below 8 bits — Huffman-friendly),
+    /// with a random symbol permutation so hot symbols vary per case.
+    pub fn bytes_skewed(rng: &mut Pcg32, max_len: usize) -> Vec<u8> {
+        let n = rng.gen_range(max_len as u32 + 1) as usize;
+        let s = 0.5 + rng.next_f64() * 1.5;
+        let z = Zipf::new(256, s);
+        let mut perm: Vec<u8> = (0..=255).collect();
+        // Fisher–Yates
+        for i in (1..256).rev() {
+            let j = rng.gen_range(i as u32 + 1) as usize;
+            perm.swap(i, j);
+        }
+        (0..n).map(|_| perm[z.sample(rng)]).collect()
+    }
+
+    /// Bytes drawn from a small alphabet of `k` symbols.
+    pub fn bytes_small_alphabet(rng: &mut Pcg32, max_len: usize, k: u32) -> Vec<u8> {
+        let n = rng.gen_range(max_len as u32 + 1) as usize;
+        (0..n).map(|_| rng.gen_range(k.max(1)) as u8).collect()
+    }
+
+    /// A random histogram (counts), support size in `[1, 256]`.
+    pub fn histogram(rng: &mut Pcg32, max_count: u32) -> [u64; 256] {
+        let support = 1 + rng.gen_range(256) as usize;
+        let mut h = [0u64; 256];
+        for _ in 0..support {
+            let sym = rng.gen_range(256) as usize;
+            h[sym] += 1 + rng.gen_range(max_count) as u64;
+        }
+        h
+    }
+
+    /// Normal-ish f32 tensor values.
+    pub fn f32s(rng: &mut Pcg32, max_len: usize, std: f32) -> Vec<f32> {
+        let n = rng.gen_range(max_len as u32 + 1) as usize;
+        rng.normal_f32s(n, std)
+    }
+}
+
+/// Stock shrinkers.
+pub mod shrinks {
+    /// Shrink a byte vector: empty, halves, remove-chunk, zero elements.
+    pub fn vec_u8(v: &Vec<u8>) -> Vec<Vec<u8>> {
+        shrink_vec(v, |b| if *b == 0 { None } else { Some(0) })
+    }
+
+    /// Shrink an f32 vector likewise (elements shrink toward 0.0).
+    pub fn vec_f32(v: &Vec<f32>) -> Vec<Vec<f32>> {
+        shrink_vec(v, |x| if *x == 0.0 { None } else { Some(0.0) })
+    }
+
+    /// Histogram shrinker: halve counts, zero bins.
+    pub fn histogram(h: &[u64; 256]) -> Vec<[u64; 256]> {
+        let mut out = Vec::new();
+        // halve all counts (keeping at least one nonzero bin)
+        let mut halved = *h;
+        let mut changed = false;
+        for c in halved.iter_mut() {
+            if *c > 1 {
+                *c /= 2;
+                changed = true;
+            }
+        }
+        if changed && halved.iter().any(|&c| c > 0) {
+            out.push(halved);
+        }
+        // zero one bin at a time (if >1 bins are populated)
+        let populated = h.iter().filter(|&&c| c > 0).count();
+        if populated > 1 {
+            for i in 0..256 {
+                if h[i] > 0 {
+                    let mut z = *h;
+                    z[i] = 0;
+                    out.push(z);
+                    if out.len() > 40 {
+                        break;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn shrink_vec<T: Clone>(v: &Vec<T>, elem: impl Fn(&T) -> Option<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        let n = v.len();
+        if n == 0 {
+            return out;
+        }
+        out.push(Vec::new());
+        if n > 1 {
+            out.push(v[..n / 2].to_vec());
+            out.push(v[n / 2..].to_vec());
+            // drop quarters
+            if n >= 4 {
+                let q = n / 4;
+                for i in 0..4 {
+                    let mut w = v.clone();
+                    w.drain(i * q..(i + 1) * q);
+                    out.push(w);
+                }
+            }
+        }
+        // element-wise simplification on a few positions
+        for i in (0..n).step_by((n / 8).max(1)) {
+            if let Some(e) = elem(&v[i]) {
+                let mut w = v.clone();
+                w[i] = e;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        Runner::new("always-true", 50).run(
+            |rng| gens::bytes(rng, 64),
+            shrinks::vec_u8,
+            |_| Ok(()),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        Runner::new("always-false", 10).run(
+            |rng| gens::bytes(rng, 64),
+            shrinks::vec_u8,
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrinks_to_minimal_length() {
+        // Property "len < 10" fails for long inputs; shrinker should find
+        // something of length exactly 10.
+        let result = std::panic::catch_unwind(|| {
+            Runner::new("len-bound", 50).run(
+                |rng| {
+                    let mut v = gens::bytes(rng, 64);
+                    v.resize(40, 7);
+                    v
+                },
+                shrinks::vec_u8,
+                |v| if v.len() < 10 { Ok(()) } else { Err(format!("len {}", v.len())) },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // minimal failing length is 10: the printed vec has exactly 10 elems
+        assert!(msg.contains("len 10"), "{msg}");
+    }
+
+    #[test]
+    fn generators_deterministic_per_name() {
+        let mut a = Pcg32::substream(Runner::new("x", 1).seed, 0);
+        let mut b = Pcg32::substream(Runner::new("x", 1).seed, 0);
+        assert_eq!(gens::bytes(&mut a, 128), gens::bytes(&mut b, 128));
+    }
+
+    #[test]
+    fn skewed_bytes_are_skewed() {
+        let mut rng = Pcg32::new(77);
+        let mut data = Vec::new();
+        while data.len() < 10_000 {
+            data.extend(gens::bytes_skewed(&mut rng, 4096));
+        }
+        let h = crate::stats::Histogram256::from_bytes(&data);
+        assert!(h.entropy_bits() < 7.5, "H={}", h.entropy_bits());
+    }
+
+    #[test]
+    fn histogram_gen_nonempty() {
+        let mut rng = Pcg32::new(3);
+        for _ in 0..20 {
+            let h = gens::histogram(&mut rng, 1000);
+            assert!(h.iter().any(|&c| c > 0));
+        }
+    }
+}

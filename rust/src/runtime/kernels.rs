@@ -1,0 +1,191 @@
+//! Runners for the standalone Pallas kernel artifacts (Layer 1).
+//!
+//! The kernels are lowered at a canonical chunk size `KERNEL_N`
+//! (see aot.py): full chunks run through the PJRT executable; the
+//! remainder is handled natively in rust with the exact same semantics —
+//! correctness of the native twin vs the kernel is asserted in tests.
+
+use super::manifest::Manifest;
+use super::{artifacts_dir, literal_from, Engine, Executable};
+use crate::huffman::CodeBook;
+use crate::stats::{Histogram256, NUM_SYMBOLS};
+use std::path::PathBuf;
+
+/// Loads and drives the three kernel executables.
+pub struct KernelRunner {
+    histogram: Executable,
+    codebook_eval: Executable,
+    encode_index: Executable,
+    /// Canonical chunk length the kernels were lowered at.
+    pub kernel_n: usize,
+    /// Number of codebooks `codebook_eval` scores per call.
+    pub kernel_k: usize,
+}
+
+impl KernelRunner {
+    pub fn load(engine: &Engine, dir: Option<PathBuf>) -> crate::Result<KernelRunner> {
+        let dir = dir.unwrap_or_else(artifacts_dir);
+        let manifest = Manifest::load(dir.join("kernels_manifest.txt"))?;
+        Ok(KernelRunner {
+            histogram: engine.load_hlo_text(dir.join("histogram.hlo.txt"))?,
+            codebook_eval: engine.load_hlo_text(dir.join("codebook_eval.hlo.txt"))?,
+            encode_index: engine.load_hlo_text(dir.join("encode_index.hlo.txt"))?,
+            kernel_n: manifest.field_usize("kernel_n")?,
+            kernel_k: manifest.field_usize("kernel_k")?,
+        })
+    }
+
+    /// 256-bin histogram via the Pallas kernel; remainder accumulated
+    /// natively. Exact for inputs below 2^31 per symbol.
+    pub fn histogram(&self, data: &[u8]) -> crate::Result<Histogram256> {
+        let mut h = Histogram256::new();
+        let mut chunks = data.chunks_exact(self.kernel_n);
+        for chunk in &mut chunks {
+            let lit = literal_from(chunk, &[self.kernel_n])?;
+            let out = self.histogram.run(&[lit])?;
+            let counts = out[0].to_vec::<i32>()?;
+            for (i, c) in counts.into_iter().enumerate() {
+                h.counts[i] += c as u64;
+            }
+        }
+        h.accumulate(chunks.remainder());
+        Ok(h)
+    }
+
+    /// Score `K = kernel_k` codebooks (given per-symbol code lengths) on
+    /// `data`: total encoded bits per codebook. Kernel scores full
+    /// chunks; remainder is scored natively.
+    pub fn codebook_eval(&self, data: &[u8], lengths: &[[u8; NUM_SYMBOLS]]) -> crate::Result<Vec<u64>> {
+        anyhow::ensure!(
+            lengths.len() == self.kernel_k,
+            "codebook_eval lowered for K={}, got {}",
+            self.kernel_k,
+            lengths.len()
+        );
+        let flat: Vec<i32> = lengths.iter().flat_map(|l| l.iter().map(|&x| x as i32)).collect();
+        let len_lit = literal_from(&flat, &[self.kernel_k, NUM_SYMBOLS])?;
+        let mut bits = vec![0u64; self.kernel_k];
+        let mut chunks = data.chunks_exact(self.kernel_n);
+        for chunk in &mut chunks {
+            let lit = literal_from(chunk, &[self.kernel_n])?;
+            let out = self.codebook_eval.run(&[lit, len_lit.clone()])?;
+            for (b, v) in bits.iter_mut().zip(out[0].to_vec::<i32>()?) {
+                *b += v as u64;
+            }
+        }
+        // native remainder (same 0-length-contributes-0 semantics)
+        let rem = Histogram256::from_bytes(chunks.remainder());
+        for (k, table) in lengths.iter().enumerate() {
+            for s in 0..NUM_SYMBOLS {
+                bits[k] += rem.counts[s] * table[s] as u64;
+            }
+        }
+        Ok(bits)
+    }
+
+    /// Data-parallel encode front half for one full `kernel_n` chunk:
+    /// per-symbol (codeword, length, exclusive bit offset) + total bits.
+    pub fn encode_index(
+        &self,
+        data: &[u8],
+        book: &CodeBook,
+    ) -> crate::Result<(Vec<u32>, Vec<i32>, Vec<i32>, i32)> {
+        anyhow::ensure!(
+            data.len() == self.kernel_n,
+            "encode_index takes exactly one {}-symbol chunk",
+            self.kernel_n
+        );
+        let x = literal_from(data, &[self.kernel_n])?;
+        let cw = literal_from(&book.codes, &[NUM_SYMBOLS])?;
+        let lens: Vec<i32> = book.lengths.iter().map(|&l| l as i32).collect();
+        let ln = literal_from(&lens, &[NUM_SYMBOLS])?;
+        let out = self.encode_index.run(&[x, cw, ln])?;
+        anyhow::ensure!(out.len() == 4, "encode_index returns 4 outputs, got {}", out.len());
+        Ok((
+            out[0].to_vec::<u32>()?,
+            out[1].to_vec::<i32>()?,
+            out[2].to_vec::<i32>()?,
+            out[3].to_vec::<i32>()?[0],
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Pcg32, Zipf};
+
+    fn runner() -> Option<(Engine, KernelRunner)> {
+        if !artifacts_dir().join("kernels_manifest.txt").exists() {
+            eprintln!("skipping: kernel artifacts not built");
+            return None;
+        }
+        let engine = Engine::cpu().unwrap();
+        let kr = KernelRunner::load(&engine, None).unwrap();
+        Some((engine, kr))
+    }
+
+    fn skewed(n: usize, seed: u64) -> Vec<u8> {
+        let z = Zipf::new(256, 1.2);
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| z.sample(&mut rng) as u8).collect()
+    }
+
+    #[test]
+    fn kernel_histogram_matches_native() {
+        let Some((_e, kr)) = runner() else { return };
+        // one full chunk + remainder
+        let data = skewed(kr.kernel_n + 1234, 5);
+        let kernel = kr.histogram(&data).unwrap();
+        let native = Histogram256::from_bytes(&data);
+        assert_eq!(kernel.counts, native.counts);
+    }
+
+    #[test]
+    fn kernel_codebook_eval_matches_native_scoring() {
+        let Some((_e, kr)) = runner() else { return };
+        let data = skewed(kr.kernel_n, 6);
+        let h = Histogram256::from_bytes(&data);
+        // K codebooks: trained on increasingly mismatched distributions
+        let mut tables = Vec::new();
+        for k in 0..kr.kernel_k {
+            let train = skewed(1 << 14, 100 + k as u64);
+            let mut counts = Histogram256::from_bytes(&train).counts;
+            // full support so every table covers the data
+            for c in counts.iter_mut() {
+                *c += 1;
+            }
+            tables.push(CodeBook::from_counts(&counts).unwrap().lengths);
+        }
+        let kernel_bits = kr.codebook_eval(&data, &tables).unwrap();
+        for (k, table) in tables.iter().enumerate() {
+            let native: u64 =
+                (0..NUM_SYMBOLS).map(|s| h.counts[s] * table[s] as u64).sum();
+            assert_eq!(kernel_bits[k], native, "codebook {k}");
+        }
+    }
+
+    #[test]
+    fn kernel_encode_index_matches_scalar_encode() {
+        let Some((_e, kr)) = runner() else { return };
+        let data = skewed(kr.kernel_n, 7);
+        let mut counts = Histogram256::from_bytes(&data).counts;
+        for c in counts.iter_mut() {
+            *c += 1;
+        }
+        let book = CodeBook::from_counts(&counts).unwrap();
+        let (codes, lens, offsets, total) = kr.encode_index(&data, &book).unwrap();
+        // per-symbol gather is exact
+        let mut acc = 0i32;
+        for (i, &sym) in data.iter().enumerate() {
+            assert_eq!(codes[i], book.codes[sym as usize], "code at {i}");
+            assert_eq!(lens[i], book.lengths[sym as usize] as i32, "len at {i}");
+            assert_eq!(offsets[i], acc, "offset at {i}");
+            acc += lens[i];
+        }
+        assert_eq!(total, acc);
+        // total equals the scalar encoder's bit count
+        let (_, bits) = book.encode(&data);
+        assert_eq!(total as u64, bits);
+    }
+}

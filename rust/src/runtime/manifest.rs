@@ -1,0 +1,260 @@
+//! Parser for the artifact manifests emitted by `python/compile/aot.py`.
+//!
+//! Line format (see aot.py docstring):
+//! ```text
+//! field <key> <value>
+//! <input|output> <role> <name> <dtype> <dim0,dim1,...|scalar>
+//! ```
+//! role ∈ {p(aram), m(omentum), d(ata), s(calar), t(ap)}.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Element dtype of a manifest tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+    U16,
+    U8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> crate::Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            "u16" => DType::U16,
+            "u8" => DType::U8,
+            _ => anyhow::bail!("unknown dtype '{s}'"),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::U16 => 2,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+            DType::U16 => xla::ElementType::U16,
+            DType::U8 => xla::ElementType::U8,
+        }
+    }
+}
+
+/// Role tag of a manifest tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Param,
+    Momentum,
+    Data,
+    Scalar,
+    Tap,
+}
+
+impl Role {
+    fn parse(s: &str) -> crate::Result<Role> {
+        Ok(match s {
+            "p" => Role::Param,
+            "m" => Role::Momentum,
+            "d" => Role::Data,
+            "s" => Role::Scalar,
+            "t" => Role::Tap,
+            _ => anyhow::bail!("unknown role '{s}'"),
+        })
+    }
+}
+
+/// One input or output tensor declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub role: Role,
+    pub name: String,
+    pub dtype: DType,
+    /// Empty for scalars.
+    pub dims: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+}
+
+/// A parsed manifest: config fields + ordered I/O contract.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Manifest {
+    pub fields: BTreeMap<String, String>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> crate::Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let bad = || anyhow::anyhow!("manifest line {}: '{}'", lineno + 1, raw);
+            match toks[0] {
+                "field" => {
+                    if toks.len() != 3 {
+                        return Err(bad());
+                    }
+                    m.fields.insert(toks[1].to_string(), toks[2].to_string());
+                }
+                section @ ("input" | "output") => {
+                    if toks.len() != 5 {
+                        return Err(bad());
+                    }
+                    let dims = if toks[4] == "scalar" {
+                        Vec::new()
+                    } else {
+                        toks[4]
+                            .split(',')
+                            .map(|d| d.parse::<usize>().map_err(|_| bad()))
+                            .collect::<Result<Vec<_>, _>>()?
+                    };
+                    let spec = IoSpec {
+                        role: Role::parse(toks[1])?,
+                        name: toks[2].to_string(),
+                        dtype: DType::parse(toks[3])?,
+                        dims,
+                    };
+                    if section == "input" {
+                        m.inputs.push(spec);
+                    } else {
+                        m.outputs.push(spec);
+                    }
+                }
+                _ => return Err(bad()),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Manifest> {
+        let path = path.as_ref();
+        Self::parse(
+            &std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?,
+        )
+    }
+
+    pub fn field(&self, key: &str) -> crate::Result<&str> {
+        self.fields
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing field '{key}'"))
+    }
+
+    pub fn field_usize(&self, key: &str) -> crate::Result<usize> {
+        Ok(self.field(key)?.parse()?)
+    }
+
+    pub fn inputs_with_role(&self, role: Role) -> impl Iterator<Item = (usize, &IoSpec)> {
+        self.inputs.iter().enumerate().filter(move |(_, s)| s.role == role)
+    }
+
+    pub fn outputs_with_role(&self, role: Role) -> impl Iterator<Item = (usize, &IoSpec)> {
+        self.outputs.iter().enumerate().filter(move |(_, s)| s.role == role)
+    }
+
+    pub fn output_index(&self, name: &str) -> crate::Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("manifest has no output '{name}'"))
+    }
+
+    pub fn input_index(&self, name: &str) -> crate::Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("manifest has no input '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+field config tiny
+field n_layers 2
+input p tok_emb f32 256,64
+input d tokens i32 2,33
+output s loss f32 scalar
+output t ffn1_act u16 2,64,128
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.field("config").unwrap(), "tiny");
+        assert_eq!(m.field_usize("n_layers").unwrap(), 2);
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.outputs.len(), 2);
+        let tok = &m.inputs[0];
+        assert_eq!(tok.role, Role::Param);
+        assert_eq!(tok.dims, vec![256, 64]);
+        assert_eq!(tok.element_count(), 256 * 64);
+        assert_eq!(tok.byte_len(), 256 * 64 * 4);
+        let loss = &m.outputs[0];
+        assert_eq!(loss.dims, Vec::<usize>::new());
+        assert_eq!(loss.element_count(), 1);
+        let tap = &m.outputs[1];
+        assert_eq!(tap.role, Role::Tap);
+        assert_eq!(tap.dtype, DType::U16);
+        assert_eq!(tap.byte_len(), 2 * 64 * 128 * 2);
+    }
+
+    #[test]
+    fn role_filters_and_indexing() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.inputs_with_role(Role::Param).count(), 1);
+        assert_eq!(m.outputs_with_role(Role::Tap).count(), 1);
+        assert_eq!(m.output_index("ffn1_act").unwrap(), 1);
+        assert_eq!(m.input_index("tokens").unwrap(), 1);
+        assert!(m.output_index("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("field only").is_err());
+        assert!(Manifest::parse("input p x f32").is_err());
+        assert!(Manifest::parse("bogus p x f32 1").is_err());
+        assert!(Manifest::parse("input q x f32 1").is_err());
+        assert!(Manifest::parse("input p x f99 1").is_err());
+        assert!(Manifest::parse("input p x f32 1,a").is_err());
+    }
+
+    #[test]
+    fn parses_real_artifacts_if_present() {
+        let path = crate::runtime::artifacts_dir().join("manifest_tiny.txt");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert_eq!(m.field("config").unwrap(), "tiny");
+            // 9 params + 9 momentum + tokens
+            assert_eq!(m.inputs.len(), 19);
+            // 9 + 9 + loss + 8 taps
+            assert_eq!(m.outputs.len(), 27);
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them on the `xla` crate's CPU client. Python never runs here — the
+//! artifacts were lowered once by `make artifacts`.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and aot_recipe).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+pub mod kernels;
+pub mod manifest;
+pub mod train;
+
+pub use kernels::KernelRunner;
+pub use manifest::{DType, IoSpec, Manifest, Role};
+pub use train::{StepOutput, TrainRunner};
+
+/// Locate the artifacts directory: `$SSHUFF_ARTIFACTS`, else `artifacts/`
+/// relative to the workspace root (walking up from cwd), else cwd.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SSHUFF_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Shared PJRT CPU client + executable cache. Compiling an HLO module is
+/// expensive (hundreds of ms); every caller shares one `Engine`.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> crate::Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> crate::Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled computation. All our artifacts are lowered with
+/// `return_tuple=True`, so the single output literal is a tuple that
+/// [`Executable::run`] decomposes into per-output literals.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching output of {}: {e}", self.name))?;
+        Ok(tuple.decompose_tuple()?)
+    }
+}
+
+/// Build a typed literal from a flat slice + dims. Goes through the
+/// untyped-data constructor because the crate's `NativeType` (vec1 path)
+/// lacks u8/u16, which our tap tensors need.
+pub fn literal_from<T: xla::ArrayElement>(
+    data: &[T],
+    dims: &[usize],
+) -> crate::Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal size mismatch: {} vs dims {:?}", data.len(), dims);
+    // Safety: plain-old-data element types; length derived from the slice.
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(T::TY, dims, bytes)?)
+}
+
+/// Zero-filled f32 literal of the given dims.
+pub fn zeros_f32(dims: &[usize]) -> crate::Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    literal_from(&vec![0f32; n], dims)
+}
+
+/// Shared handle used across trainer / coordinator / benches.
+pub type SharedEngine = Arc<Engine>;
+
+pub fn shared_engine() -> crate::Result<SharedEngine> {
+    Ok(Arc::new(Engine::cpu()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest_tiny.txt").exists()
+    }
+
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts"), "{d:?}");
+    }
+
+    #[test]
+    fn literal_roundtrip_shapes() {
+        let l = literal_from(&[1f32, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let s = literal_from(&[7u32], &[]).unwrap();
+        assert_eq!(s.element_count(), 1);
+        assert!(literal_from(&[1f32; 5], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn zeros_literal() {
+        let z = zeros_f32(&[4, 4]).unwrap();
+        assert_eq!(z.to_vec::<f32>().unwrap(), vec![0f32; 16]);
+    }
+
+    #[test]
+    fn engine_loads_and_runs_init_tiny() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        let exe = engine.load_hlo_text(artifacts_dir().join("init_tiny.hlo.txt")).unwrap();
+        let out = exe.run(&[xla::Literal::scalar(42u32)]).unwrap();
+        // 9 params, deterministic in the seed
+        assert_eq!(out.len(), 9);
+        let tok_emb = out[0].to_vec::<f32>().unwrap();
+        assert!(tok_emb.iter().any(|&v| v != 0.0));
+        let out2 = exe.run(&[xla::Literal::scalar(42u32)]).unwrap();
+        assert_eq!(out2[0].to_vec::<f32>().unwrap(), tok_emb);
+        let out3 = exe.run(&[xla::Literal::scalar(43u32)]).unwrap();
+        assert_ne!(out3[0].to_vec::<f32>().unwrap(), tok_emb);
+    }
+}

@@ -1,0 +1,248 @@
+//! Distribution-drift detection for the codebook lifecycle.
+//!
+//! The paper derives codebooks "from the average probability
+//! distribution of previous data batches" — during training the
+//! distributions move (early-training tensors drift fastest; see
+//! EXPERIMENTS.md). The [`DriftMonitor`] answers the operational
+//! question the paper leaves to the deployment: *when* should the
+//! off-critical-path rebuild run? It tracks, per key, the excess code
+//! length (in bits/symbol) of recent batches under the live codebook vs
+//! their own entropy, and flags a rebuild when the moving excess
+//! crosses a threshold.
+//!
+//! Excess = cross-entropy(batch, book) − H(batch) ≈ KL(batch ‖ book
+//! implied distribution) — measured directly from the histogram and the
+//! book's length table, no extra pass over the data.
+
+use std::collections::HashMap;
+
+use crate::huffman::CodeBook;
+use crate::stats::Histogram256;
+use crate::tensors::TensorKey;
+
+/// Rebuild policy knobs. Drift is measured **relative to the excess
+/// right after deployment** of the current codebook — the absolute
+/// excess has a distribution-dependent sampling-noise floor (heavy-tail
+/// alphabets sit at 0.05–0.1 bits/symbol even perfectly matched), so an
+/// absolute threshold cannot be tuned globally.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftConfig {
+    /// Flag when the smoothed excess rises this many bits/symbol above
+    /// the post-deployment baseline. 0.05 bits ≈ 0.6% compressibility.
+    pub excess_delta_bits: f64,
+    /// EMA weight on the newest batch's excess.
+    pub alpha: f64,
+    /// Minimum batches between rebuild flags (hysteresis).
+    pub min_batches_between: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        Self { excess_delta_bits: 0.05, alpha: 0.3, min_batches_between: 4 }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct KeyDrift {
+    ema_excess: f64,
+    /// Excess observed on the first batch after (re)deployment.
+    baseline: Option<f64>,
+    batches: u64,
+    last_flag: Option<u64>,
+}
+
+/// Per-key drift tracker.
+#[derive(Debug, Default)]
+pub struct DriftMonitor {
+    cfg: DriftConfig,
+    keys: HashMap<TensorKey, KeyDrift>,
+}
+
+impl DriftMonitor {
+    pub fn new(cfg: DriftConfig) -> Self {
+        Self { cfg, keys: HashMap::new() }
+    }
+
+    /// Observe one batch under the live `book`. Returns `true` when a
+    /// rebuild should be scheduled for this key.
+    pub fn observe(&mut self, key: TensorKey, hist: &Histogram256, book: &CodeBook) -> bool {
+        let n = hist.total();
+        if n == 0 {
+            return false;
+        }
+        let cfg = self.cfg;
+        let st = self.keys.entry(key).or_default();
+        st.batches += 1;
+        let excess = match book.encoded_bits_for(hist) {
+            // uncovered symbols: infinite drift, rebuild immediately
+            None => {
+                st.last_flag = Some(st.batches);
+                return true;
+            }
+            Some(bits) => bits as f64 / n as f64 - hist.entropy_bits(),
+        };
+        st.ema_excess = if st.baseline.is_none() {
+            excess
+        } else {
+            (1.0 - cfg.alpha) * st.ema_excess + cfg.alpha * excess
+        };
+        let baseline = *st.baseline.get_or_insert(excess);
+        let over = st.ema_excess > baseline + cfg.excess_delta_bits;
+        let cooled = st
+            .last_flag
+            .map_or(true, |at| st.batches - at >= cfg.min_batches_between);
+        if over && cooled {
+            st.last_flag = Some(st.batches);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Re-baseline a key after its codebook was rebuilt/redeployed.
+    pub fn rebaseline(&mut self, key: TensorKey) {
+        if let Some(st) = self.keys.get_mut(&key) {
+            st.baseline = None;
+        }
+    }
+
+    /// Current smoothed excess (bits/symbol) for a key.
+    pub fn excess(&self, key: TensorKey) -> Option<f64> {
+        self.keys.get(&key).map(|s| s.ema_excess)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Pcg32, Zipf};
+    use crate::tensors::{DtypeTag, TensorKind};
+
+    fn key() -> TensorKey {
+        TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16)
+    }
+
+    fn skewed(seed: u64, n: usize, invert: bool) -> Histogram256 {
+        let z = Zipf::new(256, 1.4);
+        let mut rng = Pcg32::new(seed);
+        let data: Vec<u8> = (0..n)
+            .map(|_| {
+                let s = z.sample(&mut rng) as u8;
+                if invert {
+                    255 - s
+                } else {
+                    s
+                }
+            })
+            .collect();
+        Histogram256::from_bytes(&data)
+    }
+
+    fn book_for(h: &Histogram256) -> CodeBook {
+        CodeBook::from_pmf(&h.to_pmf().smoothed(1e-7)).unwrap()
+    }
+
+    #[test]
+    fn matched_distribution_never_flags() {
+        let train = skewed(1, 1 << 15, false);
+        let book = book_for(&train);
+        let mut mon = DriftMonitor::new(DriftConfig::default());
+        for s in 0..20 {
+            let batch = skewed(100 + s, 1 << 13, false);
+            assert!(!mon.observe(key(), &batch, &book), "batch {s} flagged");
+        }
+        // stays near the baseline noise floor (heavy-tail alphabets sit
+        // around 0.07-0.1 bits even when matched)
+        let base = mon.excess(key()).unwrap();
+        assert!(base < 0.15, "{base}");
+    }
+
+    #[test]
+    fn drifted_distribution_flags_after_smoothing_window() {
+        let train = skewed(2, 1 << 15, false);
+        let book = book_for(&train);
+        let mut mon = DriftMonitor::new(DriftConfig::default());
+        // warm: matched
+        for s in 0..4 {
+            assert!(!mon.observe(key(), &skewed(200 + s, 1 << 13, false), &book));
+        }
+        // drift: inverted alphabet — excess explodes
+        let mut flagged_at = None;
+        for s in 0..6 {
+            if mon.observe(key(), &skewed(300 + s, 1 << 13, true), &book) {
+                flagged_at = Some(s);
+                break;
+            }
+        }
+        let at = flagged_at.expect("drift must be flagged");
+        assert!(at <= 3, "flagged at {at}");
+        assert!(mon.excess(key()).unwrap() > 0.05);
+    }
+
+    #[test]
+    fn hysteresis_spaces_flags() {
+        let train = skewed(3, 1 << 14, false);
+        let book = book_for(&train);
+        let mut mon = DriftMonitor::new(DriftConfig {
+            excess_delta_bits: 0.01,
+            alpha: 1.0,
+            min_batches_between: 5,
+        });
+        // baseline on one matched batch so the inverted ones are drift
+        assert!(!mon.observe(key(), &skewed(399, 1 << 12, false), &book));
+        let mut flags = Vec::new();
+        for s in 0..15 {
+            if mon.observe(key(), &skewed(400 + s, 1 << 12, true), &book) {
+                flags.push(s);
+            }
+        }
+        assert!(!flags.is_empty());
+        for w in flags.windows(2) {
+            assert!(w[1] - w[0] >= 5, "{flags:?}");
+        }
+    }
+
+    #[test]
+    fn uncovered_symbols_flag_immediately() {
+        // book trained on symbols 0..16 only, no smoothing
+        let mut counts = [0u64; 256];
+        for (i, bin) in counts.iter_mut().enumerate().take(16) {
+            *bin = 16 - i as u64;
+        }
+        let book = CodeBook::from_counts(&counts).unwrap();
+        let mut mon = DriftMonitor::new(DriftConfig::default());
+        let batch = Histogram256::from_bytes(&[200u8; 1000]);
+        assert!(mon.observe(key(), &batch, &book));
+    }
+
+    #[test]
+    fn rebaseline_accepts_new_normal() {
+        let train = skewed(5, 1 << 15, false);
+        let book_old = book_for(&train);
+        let mut mon = DriftMonitor::new(DriftConfig::default());
+        assert!(!mon.observe(key(), &skewed(500, 1 << 13, false), &book_old));
+        // drift to inverted; flags
+        let mut flagged = false;
+        for s in 0..6 {
+            flagged |= mon.observe(key(), &skewed(510 + s, 1 << 13, true), &book_old);
+        }
+        assert!(flagged);
+        // rebuild on the new distribution + rebaseline: quiet again
+        let book_new = book_for(&skewed(520, 1 << 15, true));
+        mon.rebaseline(key());
+        for s in 0..8 {
+            assert!(
+                !mon.observe(key(), &skewed(530 + s, 1 << 13, true), &book_new),
+                "batch {s} flagged after rebaseline"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_batches_ignored() {
+        let book = book_for(&skewed(4, 1 << 12, false));
+        let mut mon = DriftMonitor::new(DriftConfig::default());
+        assert!(!mon.observe(key(), &Histogram256::new(), &book));
+        assert_eq!(mon.excess(key()), None);
+    }
+}

@@ -1,0 +1,128 @@
+//! Single-stage wire frame.
+//!
+//! The whole point of the paper: because codebooks are pre-shared, the
+//! encoder sends **only the encoded values and the code book id**. The
+//! header is 5 bytes:
+//!
+//! ```text
+//! [ id: u8 ][ n_symbols: u32 LE ][ payload ... ]
+//! ```
+//!
+//! versus the three-stage baseline's 128-byte packed length table per
+//! message (see `baselines::ThreeStage`). Id [`RAW_ID`] marks an
+//! uncompressed escape frame whose payload is the original bytes.
+
+use byteorder::{ByteOrder, LittleEndian};
+
+/// Reserved id for raw (uncompressed) escape frames.
+pub const RAW_ID: u8 = 255;
+
+/// Wire header size in bytes.
+pub const HEADER_BYTES: usize = 5;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Codebook id (shared registry), or [`RAW_ID`].
+    pub id: u8,
+    /// Number of original symbols (bytes) in this frame.
+    pub n_symbols: u32,
+}
+
+/// A single-stage frame: header + bit-packed (or raw) payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub header: FrameHeader,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn coded(id: u8, n_symbols: u32, payload: Vec<u8>) -> Frame {
+        debug_assert_ne!(id, RAW_ID);
+        Frame { header: FrameHeader { id, n_symbols }, payload }
+    }
+
+    pub fn raw(data: &[u8]) -> Frame {
+        Frame {
+            header: FrameHeader { id: RAW_ID, n_symbols: data.len() as u32 },
+            payload: data.to_vec(),
+        }
+    }
+
+    /// Total bytes this frame occupies on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        HEADER_BYTES + self.payload.len()
+    }
+
+    /// Serialize to wire bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        out.push(self.header.id);
+        let mut n = [0u8; 4];
+        LittleEndian::write_u32(&mut n, self.header.n_symbols);
+        out.extend_from_slice(&n);
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse wire bytes (the payload is everything after the header).
+    pub fn parse(wire: &[u8]) -> crate::Result<Frame> {
+        if wire.len() < HEADER_BYTES {
+            anyhow::bail!("frame too short: {} bytes", wire.len());
+        }
+        let id = wire[0];
+        let n_symbols = LittleEndian::read_u32(&wire[1..5]);
+        let payload = wire[HEADER_BYTES..].to_vec();
+        if id == RAW_ID && payload.len() != n_symbols as usize {
+            anyhow::bail!(
+                "raw frame length mismatch: {} payload vs {} symbols",
+                payload.len(),
+                n_symbols
+            );
+        }
+        Ok(Frame { header: FrameHeader { id, n_symbols }, payload })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_is_five_bytes() {
+        let f = Frame::coded(3, 10, vec![0xAA]);
+        assert_eq!(f.to_bytes().len(), 6);
+        assert_eq!(f.wire_bytes(), 6);
+    }
+
+    #[test]
+    fn roundtrip_coded() {
+        let f = Frame::coded(7, 123456, vec![1, 2, 3, 4]);
+        let back = Frame::parse(&f.to_bytes()).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn roundtrip_raw() {
+        let f = Frame::raw(&[9, 8, 7]);
+        let back = Frame::parse(&f.to_bytes()).unwrap();
+        assert_eq!(back, f);
+        assert_eq!(back.header.id, RAW_ID);
+    }
+
+    #[test]
+    fn rejects_short_and_corrupt() {
+        assert!(Frame::parse(&[1, 2]).is_err());
+        // raw frame claiming 5 symbols with 2 payload bytes
+        let mut wire = Frame::raw(&[1, 2]).to_bytes();
+        wire[1] = 5;
+        assert!(Frame::parse(&wire).is_err());
+    }
+
+    #[test]
+    fn empty_frames() {
+        let raw = Frame::raw(&[]);
+        assert_eq!(Frame::parse(&raw.to_bytes()).unwrap(), raw);
+        let coded = Frame::coded(0, 0, vec![]);
+        assert_eq!(Frame::parse(&coded.to_bytes()).unwrap(), coded);
+    }
+}

@@ -1,0 +1,551 @@
+//! The paper's contribution: a **single-stage Huffman encoder** driven by
+//! fixed codebooks derived from the average PMF of previous data batches.
+//!
+//! Three-stage Huffman (scan → frequency table, Huffman algorithm →
+//! codebook, scan → encode) puts two extra passes plus a codebook
+//! transmission on the critical path. This engine removes all of it:
+//!
+//! * [`CodebookManager`] maintains, **off the critical path**, the average
+//!   PMF per (tensor, dtype) key from observed batches (cumulative mean or
+//!   EMA), and builds smoothed fixed codebooks from it;
+//! * [`Registry`] assigns each built codebook a 1-byte id shared by all
+//!   participating nodes — only the id travels with the data;
+//! * [`SingleStageEncoder`] encodes in **one streaming pass** (symbol →
+//!   LUT → bit-pack), optionally preceded by the paper-§4 parallel
+//!   multi-codebook evaluation ([`select_codebook`]) that scores K
+//!   candidate books on the block histogram and picks the cheapest;
+//! * a raw-escape frame guarantees progress on pathological blocks
+//!   (incompressible or uncovered symbols) at 5 bytes overhead.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::huffman::{CodeBook, Decoder};
+use crate::stats::{compressibility, Histogram256, Pmf, NUM_SYMBOLS};
+use crate::tensors::TensorKey;
+
+pub mod drift;
+pub mod frame;
+pub mod persist;
+pub mod planes;
+pub mod stream;
+pub use drift::{DriftConfig, DriftMonitor};
+pub use frame::{Frame, FrameHeader, RAW_ID};
+pub use persist::{load_registry, save_registry};
+pub use stream::{decode_stream, encode_stream, StreamStats};
+
+/// How the "average distribution of previous batches" is maintained.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AvgPolicy {
+    /// Equal-weight mean of every batch PMF seen so far (the paper's
+    /// default formulation).
+    CumulativeMean,
+    /// Exponential moving average with weight `alpha` on the newest
+    /// batch — tracks distribution drift during training.
+    Ema(f64),
+}
+
+/// Smoothing epsilon applied before codebook construction so every
+/// symbol has a finite code (no escape on the hot path).
+pub const SMOOTHING_EPS: f64 = 1e-7;
+
+/// Per-key running average distribution + built codebook version.
+#[derive(Debug, Clone)]
+struct KeyState {
+    avg: Pmf,
+    batches: u64,
+    /// Registry id of the latest built codebook for this key.
+    current_id: Option<u8>,
+    version: u32,
+}
+
+/// A built fixed codebook with its decode table, shared via `Arc` so the
+/// hot path never copies tables.
+pub struct FixedCodebook {
+    pub book: CodeBook,
+    pub decoder: Decoder,
+    /// Cached `book.support() == 256` — smoothed codebooks always cover,
+    /// letting the hot path skip the per-frame coverage scan.
+    pub covers_all: bool,
+    /// (key, version) provenance for debugging/metrics.
+    pub key: Option<TensorKey>,
+    pub version: u32,
+}
+
+impl FixedCodebook {
+    pub fn new(book: CodeBook, key: Option<TensorKey>, version: u32) -> Self {
+        let decoder = book.decoder();
+        let covers_all = book.support() == crate::stats::NUM_SYMBOLS;
+        Self { book, decoder, covers_all, key, version }
+    }
+}
+
+/// Codebook registry: id (u8) → codebook. Shared between the encoder and
+/// every decoder node — the paper's "code books are shared between the
+/// participating nodes". Id [`RAW_ID`] (255) is reserved for raw frames.
+#[derive(Default, Clone)]
+pub struct Registry {
+    books: Vec<Arc<FixedCodebook>>,
+}
+
+impl Registry {
+    pub const MAX_BOOKS: usize = 255; // 255 = RAW_ID
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a codebook, returning its wire id.
+    pub fn add(&mut self, book: Arc<FixedCodebook>) -> u8 {
+        assert!(self.books.len() < Self::MAX_BOOKS, "registry full");
+        self.books.push(book);
+        (self.books.len() - 1) as u8
+    }
+
+    pub fn get(&self, id: u8) -> Option<&Arc<FixedCodebook>> {
+        self.books.get(id as usize)
+    }
+
+    pub fn len(&self) -> usize {
+        self.books.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.books.is_empty()
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = u8> + '_ {
+        (0..self.books.len()).map(|i| i as u8)
+    }
+}
+
+/// Off-critical-path manager for average PMFs and codebook lifecycle.
+pub struct CodebookManager {
+    policy: AvgPolicy,
+    states: HashMap<TensorKey, KeyState>,
+    pub registry: Registry,
+}
+
+impl CodebookManager {
+    pub fn new(policy: AvgPolicy) -> Self {
+        Self { policy, states: HashMap::new(), registry: Registry::new() }
+    }
+
+    /// Fold one observed batch (as a histogram) into the key's average
+    /// distribution. Runs off the critical path (paper §4: "The average
+    /// distribution can be obtained from previous batches").
+    pub fn observe(&mut self, key: TensorKey, hist: &Histogram256) {
+        if hist.is_empty() {
+            return;
+        }
+        let batch = hist.to_pmf();
+        let policy = self.policy;
+        let st = self.states.entry(key).or_insert_with(|| KeyState {
+            avg: batch.clone(),
+            batches: 0,
+            current_id: None,
+            version: 0,
+        });
+        if st.batches > 0 {
+            match policy {
+                AvgPolicy::CumulativeMean => {
+                    let n = st.batches as f64;
+                    for i in 0..NUM_SYMBOLS {
+                        st.avg.p[i] = (st.avg.p[i] * n + batch.p[i]) / (n + 1.0);
+                    }
+                }
+                AvgPolicy::Ema(alpha) => {
+                    for i in 0..NUM_SYMBOLS {
+                        st.avg.p[i] = (1.0 - alpha) * st.avg.p[i] + alpha * batch.p[i];
+                    }
+                }
+            }
+        }
+        st.batches += 1;
+    }
+
+    /// Convenience: observe raw bytes.
+    pub fn observe_bytes(&mut self, key: TensorKey, data: &[u8]) {
+        self.observe(key, &Histogram256::from_bytes(data));
+    }
+
+    /// The current average PMF for a key.
+    pub fn average_pmf(&self, key: TensorKey) -> Option<&Pmf> {
+        self.states.get(&key).map(|s| &s.avg)
+    }
+
+    pub fn batches_seen(&self, key: TensorKey) -> u64 {
+        self.states.get(&key).map_or(0, |s| s.batches)
+    }
+
+    /// Build (or rebuild) the fixed codebook for `key` from its smoothed
+    /// average PMF, register it, and return its wire id.
+    pub fn build(&mut self, key: TensorKey) -> Option<u8> {
+        let st = self.states.get_mut(&key)?;
+        if st.batches == 0 {
+            return None;
+        }
+        let smoothed = st.avg.smoothed(SMOOTHING_EPS);
+        let book = CodeBook::from_pmf(&smoothed)?;
+        st.version += 1;
+        let fixed = Arc::new(FixedCodebook::new(book, Some(key), st.version));
+        let id = self.registry.add(fixed);
+        st.current_id = Some(id);
+        Some(id)
+    }
+
+    /// Build codebooks for every observed key (deterministic key order).
+    pub fn build_all(&mut self) -> Vec<(TensorKey, u8)> {
+        let mut keys: Vec<TensorKey> = self.states.keys().copied().collect();
+        keys.sort_by_key(|k| (k.kind.tap_index(), k.dtype.name()));
+        keys.into_iter().filter_map(|k| self.build(k).map(|id| (k, id))).collect()
+    }
+
+    /// Latest built codebook id for a key.
+    pub fn current_id(&self, key: TensorKey) -> Option<u8> {
+        self.states.get(&key).and_then(|s| s.current_id)
+    }
+
+    pub fn version(&self, key: TensorKey) -> u32 {
+        self.states.get(&key).map_or(0, |s| s.version)
+    }
+}
+
+/// Score `candidates` on a block histogram: exact encoded bits under each
+/// candidate codebook, `None` where the book does not cover the block.
+/// This is the rust twin of the Pallas `codebook_eval` kernel (§4's
+/// "multiple code books evaluated for compressibility in parallel").
+pub fn score_codebooks(hist: &Histogram256, registry: &Registry, candidates: &[u8]) -> Vec<Option<u64>> {
+    candidates
+        .iter()
+        .map(|&id| registry.get(id).and_then(|b| b.book.encoded_bits_for(hist)))
+        .collect()
+}
+
+/// Pick the candidate with the fewest encoded bits; falls back to raw
+/// (`RAW_ID`) when nothing covers the block or raw is strictly smaller.
+pub fn select_codebook(hist: &Histogram256, registry: &Registry, candidates: &[u8]) -> (u8, u64) {
+    let raw_bits = hist.total() * 8;
+    let mut best = (RAW_ID, raw_bits);
+    for (i, bits) in score_codebooks(hist, registry, candidates).into_iter().enumerate() {
+        if let Some(b) = bits {
+            if b < best.1 {
+                best = (candidates[i], b);
+            }
+        }
+    }
+    best
+}
+
+/// Encoder statistics (per encoder instance).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EncoderStats {
+    pub frames: u64,
+    pub raw_frames: u64,
+    pub symbols_in: u64,
+    pub bytes_out: u64,
+}
+
+impl EncoderStats {
+    /// Achieved compressibility incl. frame overhead.
+    pub fn compressibility(&self) -> f64 {
+        compressibility(self.symbols_in, self.bytes_out * 8)
+    }
+}
+
+/// The single-stage encoder: one streaming pass over the symbols.
+pub struct SingleStageEncoder {
+    registry: Registry,
+    stats: EncoderStats,
+}
+
+impl SingleStageEncoder {
+    pub fn new(registry: Registry) -> Self {
+        Self { registry, stats: EncoderStats::default() }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn stats(&self) -> EncoderStats {
+        self.stats
+    }
+
+    /// Encode with a fixed codebook id — THE critical-path operation.
+    /// Exactly one pass: per symbol, one LUT load and one bit-pack.
+    /// Returns a raw frame if the book does not cover `data`.
+    pub fn encode_with(&mut self, id: u8, data: &[u8]) -> Frame {
+        let frame = match self.registry.get(id) {
+            Some(fixed) if fixed.covers_all || fixed.book.covers(data) => {
+                let (payload, _) = fixed.book.encode(data);
+                Frame::coded(id, data.len() as u32, payload)
+            }
+            _ => Frame::raw(data),
+        };
+        self.account(&frame, data.len());
+        frame
+    }
+
+    /// Encode with on-the-fly codebook selection (paper §4 hardware mode):
+    /// one histogram pass + K dot products pick the best candidate, then
+    /// the single encode pass runs. Still no codebook build or transmit.
+    pub fn encode_best(&mut self, candidates: &[u8], data: &[u8]) -> Frame {
+        let hist = Histogram256::from_bytes(data);
+        let (id, _) = select_codebook(&hist, &self.registry, candidates);
+        self.encode_with(id, data)
+    }
+
+    fn account(&mut self, frame: &Frame, n_symbols: usize) {
+        self.stats.frames += 1;
+        if frame.header.id == RAW_ID {
+            self.stats.raw_frames += 1;
+        }
+        self.stats.symbols_in += n_symbols as u64;
+        self.stats.bytes_out += frame.wire_bytes() as u64;
+    }
+}
+
+/// The matching decoder: id → shared decode table, one LUT hit/symbol.
+pub struct SingleStageDecoder {
+    registry: Registry,
+}
+
+impl SingleStageDecoder {
+    pub fn new(registry: Registry) -> Self {
+        Self { registry }
+    }
+
+    /// Decode a frame back to the original symbol stream.
+    pub fn decode(&self, frame: &Frame) -> crate::Result<Vec<u8>> {
+        if frame.header.id == RAW_ID {
+            return Ok(frame.payload.clone());
+        }
+        let book = self
+            .registry
+            .get(frame.header.id)
+            .ok_or_else(|| anyhow::anyhow!("unknown codebook id {}", frame.header.id))?;
+        Ok(book.decoder.decode(&frame.payload, frame.header.n_symbols as usize))
+    }
+
+    /// Decode from wire bytes.
+    pub fn decode_bytes(&self, wire: &[u8]) -> crate::Result<Vec<u8>> {
+        let frame = Frame::parse(wire)?;
+        self.decode(&frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Pcg32, Zipf};
+    use crate::proptest_lite::{gens, shrinks, Runner};
+    use crate::tensors::{DtypeTag, TensorKind};
+
+    fn key() -> TensorKey {
+        TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16)
+    }
+
+    fn skewed(seed: u64, n: usize, s: f64) -> Vec<u8> {
+        let z = Zipf::new(256, s);
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| z.sample(&mut rng) as u8).collect()
+    }
+
+    #[test]
+    fn manager_average_is_batch_mean() {
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        m.observe_bytes(key(), &[0u8; 100]); // pmf: all mass on 0
+        m.observe_bytes(key(), &[1u8; 100]); // all mass on 1
+        let avg = m.average_pmf(key()).unwrap();
+        assert!((avg.p[0] - 0.5).abs() < 1e-12);
+        assert!((avg.p[1] - 0.5).abs() < 1e-12);
+        assert_eq!(m.batches_seen(key()), 2);
+    }
+
+    #[test]
+    fn ema_tracks_recent_batches_harder() {
+        let mut cum = CodebookManager::new(AvgPolicy::CumulativeMean);
+        let mut ema = CodebookManager::new(AvgPolicy::Ema(0.5));
+        for _ in 0..9 {
+            cum.observe_bytes(key(), &[0u8; 10]);
+            ema.observe_bytes(key(), &[0u8; 10]);
+        }
+        cum.observe_bytes(key(), &[1u8; 10]);
+        ema.observe_bytes(key(), &[1u8; 10]);
+        let pc = cum.average_pmf(key()).unwrap().p[1];
+        let pe = ema.average_pmf(key()).unwrap().p[1];
+        assert!((pc - 0.1).abs() < 1e-12);
+        assert!((pe - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn build_registers_and_versions() {
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        assert_eq!(m.build(key()), None); // nothing observed
+        m.observe_bytes(key(), &skewed(1, 4096, 1.2));
+        let id1 = m.build(key()).unwrap();
+        assert_eq!(m.current_id(key()), Some(id1));
+        assert_eq!(m.version(key()), 1);
+        m.observe_bytes(key(), &skewed(2, 4096, 1.2));
+        let id2 = m.build(key()).unwrap();
+        assert_ne!(id1, id2);
+        assert_eq!(m.version(key()), 2);
+        assert_eq!(m.registry.len(), 2);
+    }
+
+    #[test]
+    fn smoothed_codebook_covers_all_symbols() {
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        m.observe_bytes(key(), &[7u8; 1000]); // support = 1 symbol
+        let id = m.build(key()).unwrap();
+        let book = &m.registry.get(id).unwrap().book;
+        assert_eq!(book.support(), 256, "smoothing must give full support");
+        // so any stream is encodable with the fixed book
+        assert!(book.covers(&(0..=255u8).collect::<Vec<_>>()));
+    }
+
+    #[test]
+    fn roundtrip_under_distribution_mismatch() {
+        // Codebook trained on one skew, data from another: decode must
+        // still be exact (compression suffers, correctness never).
+        Runner::new("ss-mismatch-roundtrip", 40).run(
+            |rng| gens::bytes(rng, 8192),
+            shrinks::vec_u8,
+            |data| {
+                let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+                m.observe_bytes(key(), &skewed(9, 1 << 14, 1.5));
+                let id = m.build(key()).unwrap();
+                let mut enc = SingleStageEncoder::new(m.registry.clone());
+                let dec = SingleStageDecoder::new(m.registry.clone());
+                let frame = enc.encode_with(id, data);
+                let back = dec.decode(&frame).map_err(|e| e.to_string())?;
+                if &back != data {
+                    return Err("roundtrip mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let data = skewed(4, 4096, 1.3);
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        m.observe_bytes(key(), &data);
+        let id = m.build(key()).unwrap();
+        let mut enc = SingleStageEncoder::new(m.registry.clone());
+        let dec = SingleStageDecoder::new(m.registry.clone());
+        let wire = enc.encode_with(id, &data).to_bytes();
+        assert_eq!(dec.decode_bytes(&wire).unwrap(), data);
+    }
+
+    #[test]
+    fn matched_distribution_compresses_near_shannon() {
+        let data = skewed(5, 1 << 16, 1.3);
+        let h = Histogram256::from_bytes(&data);
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        m.observe(key(), &h);
+        let id = m.build(key()).unwrap();
+        let mut enc = SingleStageEncoder::new(m.registry.clone());
+        let frame = enc.encode_with(id, &data);
+        let got = compressibility(data.len() as u64, frame.wire_bytes() as u64 * 8);
+        let ideal = h.ideal_compressibility();
+        assert!(got > 0.0);
+        assert!(ideal - got < 0.01, "got {got}, ideal {ideal}"); // within 1% of Shannon
+    }
+
+    #[test]
+    fn raw_fallback_on_unknown_id_and_uniform_data() {
+        let mut rng = Pcg32::new(6);
+        let mut data = vec![0u8; 4096];
+        rng.fill_bytes(&mut data);
+        let mut enc = SingleStageEncoder::new(Registry::new());
+        let frame = enc.encode_with(0, &data); // id 0 not registered
+        assert_eq!(frame.header.id, RAW_ID);
+        let dec = SingleStageDecoder::new(Registry::new());
+        assert_eq!(dec.decode(&frame).unwrap(), data);
+        assert_eq!(enc.stats().raw_frames, 1);
+    }
+
+    #[test]
+    fn selection_picks_matching_codebook() {
+        // two books trained on disjoint alphabets; selection must route
+        // each stream to its own book.
+        let lo: Vec<u8> = skewed(7, 1 << 14, 1.4); // symbols 0..
+        let hi: Vec<u8> = lo.iter().map(|&b| 255 - b).collect();
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        let klo = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+        let khi = TensorKey::new(TensorKind::Ffn2Act, DtypeTag::Bf16);
+        m.observe_bytes(klo, &lo);
+        m.observe_bytes(khi, &hi);
+        let ids = m.build_all();
+        assert_eq!(ids.len(), 2);
+        let cands: Vec<u8> = m.registry.ids().collect();
+        let id_lo = m.current_id(klo).unwrap();
+        let id_hi = m.current_id(khi).unwrap();
+        let (sel_lo, _) = select_codebook(&Histogram256::from_bytes(&lo), &m.registry, &cands);
+        let (sel_hi, _) = select_codebook(&Histogram256::from_bytes(&hi), &m.registry, &cands);
+        assert_eq!(sel_lo, id_lo);
+        assert_eq!(sel_hi, id_hi);
+    }
+
+    #[test]
+    fn encode_best_never_worse_than_raw() {
+        Runner::new("ss-best-bounded", 30).run(
+            |rng| gens::bytes(rng, 4096),
+            shrinks::vec_u8,
+            |data| {
+                let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+                m.observe_bytes(key(), &skewed(11, 8192, 2.0));
+                m.build(key()).unwrap();
+                let cands: Vec<u8> = m.registry.ids().collect();
+                let mut enc = SingleStageEncoder::new(m.registry.clone());
+                let frame = enc.encode_best(&cands, data);
+                let overhead = frame::HEADER_BYTES;
+                if frame.wire_bytes() > data.len() + overhead {
+                    return Err(format!(
+                        "wire {} > raw {} + {overhead}",
+                        frame.wire_bytes(),
+                        data.len()
+                    ));
+                }
+                let dec = SingleStageDecoder::new(m.registry.clone());
+                let back = dec.decode(&frame).map_err(|e| e.to_string())?;
+                if &back != data {
+                    return Err("roundtrip".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn score_matches_encode_bits() {
+        let data = skewed(13, 1 << 14, 1.1);
+        let h = Histogram256::from_bytes(&data);
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        m.observe(key(), &h);
+        let id = m.build(key()).unwrap();
+        let scores = score_codebooks(&h, &m.registry, &[id]);
+        let book = &m.registry.get(id).unwrap().book;
+        let (_, bits) = book.encode(&data);
+        assert_eq!(scores[0], Some(bits));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let data = skewed(15, 8192, 1.5);
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        m.observe_bytes(key(), &data);
+        let id = m.build(key()).unwrap();
+        let mut enc = SingleStageEncoder::new(m.registry.clone());
+        for _ in 0..4 {
+            enc.encode_with(id, &data);
+        }
+        let st = enc.stats();
+        assert_eq!(st.frames, 4);
+        assert_eq!(st.symbols_in, 4 * data.len() as u64);
+        assert!(st.compressibility() > 0.0);
+    }
+}

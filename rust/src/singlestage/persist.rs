@@ -1,0 +1,221 @@
+//! Codebook registry persistence — "The code books are shared between
+//! the participating nodes" (§4). The leader serializes its registry to
+//! a versioned file; every node loads it and the 1-byte wire ids line up
+//! by construction.
+//!
+//! File format (little-endian):
+//! ```text
+//! [ magic 'S''S''H''F' ][ version u16 ][ n_books u16 ]
+//! per book:
+//!   [ has_key u8 ][ kind u8 ][ dtype u8 ][ book_version u32 ]
+//!   [ packed lengths: 128 bytes ]
+//! [ crc32 of everything above, u32 ]
+//! ```
+//! Canonical codes are fully determined by the 4-bit packed length
+//! table (128 B/book) — the same property the three-stage baseline uses
+//! on the wire.
+
+use super::{FixedCodebook, Registry};
+use crate::huffman::CodeBook;
+use crate::tensors::{DtypeTag, TensorKey, TensorKind};
+use byteorder::{ByteOrder, LittleEndian};
+use std::path::Path;
+use std::sync::Arc;
+
+const MAGIC: [u8; 4] = *b"SSHF";
+const FORMAT_VERSION: u16 = 1;
+
+fn dtype_code(d: DtypeTag) -> u8 {
+    DtypeTag::ALL.iter().position(|&x| x == d).unwrap() as u8
+}
+
+fn dtype_from(code: u8) -> crate::Result<DtypeTag> {
+    DtypeTag::ALL
+        .get(code as usize)
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("bad dtype code {code}"))
+}
+
+/// Serialize a registry to bytes.
+pub fn registry_to_bytes(reg: &Registry) -> Vec<u8> {
+    let n = reg.len() as u16;
+    let mut out = Vec::with_capacity(8 + n as usize * 136 + 4);
+    out.extend_from_slice(&MAGIC);
+    let mut b2 = [0u8; 2];
+    LittleEndian::write_u16(&mut b2, FORMAT_VERSION);
+    out.extend_from_slice(&b2);
+    LittleEndian::write_u16(&mut b2, n);
+    out.extend_from_slice(&b2);
+    for id in reg.ids() {
+        let fixed = reg.get(id).unwrap();
+        match fixed.key {
+            Some(k) => {
+                out.push(1);
+                out.push(k.kind.tap_index() as u8);
+                out.push(dtype_code(k.dtype));
+            }
+            None => out.extend_from_slice(&[0, 0, 0]),
+        }
+        let mut b4 = [0u8; 4];
+        LittleEndian::write_u32(&mut b4, fixed.version);
+        out.extend_from_slice(&b4);
+        out.extend_from_slice(&fixed.book.pack_lengths());
+    }
+    let crc = crc32(&out);
+    let mut b4 = [0u8; 4];
+    LittleEndian::write_u32(&mut b4, crc);
+    out.extend_from_slice(&b4);
+    out
+}
+
+/// Deserialize a registry (ids preserved in order).
+pub fn registry_from_bytes(bytes: &[u8]) -> crate::Result<Registry> {
+    anyhow::ensure!(bytes.len() >= 12, "registry file too short");
+    anyhow::ensure!(bytes[0..4] == MAGIC, "bad registry magic");
+    let version = LittleEndian::read_u16(&bytes[4..6]);
+    anyhow::ensure!(version == FORMAT_VERSION, "unsupported registry version {version}");
+    let n = LittleEndian::read_u16(&bytes[6..8]) as usize;
+    let body_len = 8 + n * 135;
+    anyhow::ensure!(bytes.len() == body_len + 4, "registry size mismatch");
+    let want_crc = LittleEndian::read_u32(&bytes[body_len..]);
+    anyhow::ensure!(crc32(&bytes[..body_len]) == want_crc, "registry crc mismatch");
+
+    let mut reg = Registry::new();
+    let mut at = 8;
+    for _ in 0..n {
+        let has_key = bytes[at] == 1;
+        let kind_idx = bytes[at + 1] as usize;
+        let dtype_code_v = bytes[at + 2];
+        let book_version = LittleEndian::read_u32(&bytes[at + 3..at + 7]);
+        at += 7;
+        let mut packed = [0u8; 128];
+        packed.copy_from_slice(&bytes[at..at + 128]);
+        at += 128;
+        let book = CodeBook::unpack_lengths(&packed);
+        let key = if has_key {
+            let kind = *TensorKind::ALL
+                .get(kind_idx)
+                .ok_or_else(|| anyhow::anyhow!("bad kind index {kind_idx}"))?;
+            Some(TensorKey::new(kind, dtype_from(dtype_code_v)?))
+        } else {
+            None
+        };
+        reg.add(Arc::new(FixedCodebook::new(book, key, book_version)));
+    }
+    Ok(reg)
+}
+
+/// Write a registry file (atomically: temp + rename).
+pub fn save_registry(reg: &Registry, path: impl AsRef<Path>) -> crate::Result<()> {
+    let path = path.as_ref();
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, registry_to_bytes(reg))?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a registry file.
+pub fn load_registry(path: impl AsRef<Path>) -> crate::Result<Registry> {
+    registry_from_bytes(&std::fs::read(path.as_ref())?)
+}
+
+/// Plain CRC-32 (IEEE), bytewise — integrity only, not security.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Pcg32, Zipf};
+    use crate::singlestage::{AvgPolicy, CodebookManager, SingleStageDecoder, SingleStageEncoder};
+
+    fn build_registry() -> (CodebookManager, Vec<u8>) {
+        let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+        let z = Zipf::new(256, 1.4);
+        let mut rng = Pcg32::new(42);
+        let data: Vec<u8> = (0..1 << 14).map(|_| z.sample(&mut rng) as u8).collect();
+        for kind in [TensorKind::Ffn1Act, TensorKind::Ffn2WGrad] {
+            for dtype in [DtypeTag::Bf16, DtypeTag::ALL[1]] {
+                mgr.observe_bytes(TensorKey::new(kind, dtype), &data);
+            }
+        }
+        mgr.build_all();
+        (mgr, data)
+    }
+
+    #[test]
+    fn bytes_roundtrip_preserves_ids_keys_and_codes() {
+        let (mgr, _) = build_registry();
+        let bytes = registry_to_bytes(&mgr.registry);
+        let back = registry_from_bytes(&bytes).unwrap();
+        assert_eq!(back.len(), mgr.registry.len());
+        for id in mgr.registry.ids() {
+            let a = mgr.registry.get(id).unwrap();
+            let b = back.get(id).unwrap();
+            assert_eq!(a.book, b.book, "book {id}");
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.version, b.version);
+        }
+    }
+
+    #[test]
+    fn leader_encodes_follower_decodes_via_file() {
+        let (mgr, data) = build_registry();
+        let path = std::env::temp_dir().join(format!("sshuff_reg_{}.bin", std::process::id()));
+        save_registry(&mgr.registry, &path).unwrap();
+        let follower = load_registry(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let id = mgr.current_id(TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16)).unwrap();
+        let mut enc = SingleStageEncoder::new(mgr.registry.clone());
+        let frame = enc.encode_with(id, &data);
+        // the follower node decodes with the loaded registry
+        let dec = SingleStageDecoder::new(follower);
+        assert_eq!(dec.decode(&frame).unwrap(), data);
+    }
+
+    #[test]
+    fn corruption_detected_by_crc() {
+        let (mgr, _) = build_registry();
+        let mut bytes = registry_to_bytes(&mgr.registry);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        let err = match registry_from_bytes(&bytes) {
+            Ok(_) => panic!("corruption must be detected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("crc"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_magic_version_size() {
+        assert!(registry_from_bytes(b"NOPE").is_err());
+        let (mgr, _) = build_registry();
+        let mut bytes = registry_to_bytes(&mgr.registry);
+        bytes[4] = 99; // version
+        assert!(registry_from_bytes(&bytes).is_err());
+        let good = registry_to_bytes(&mgr.registry);
+        assert!(registry_from_bytes(&good[..good.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn empty_registry_roundtrips() {
+        let reg = Registry::new();
+        let back = registry_from_bytes(&registry_to_bytes(&reg)).unwrap();
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC-32("123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

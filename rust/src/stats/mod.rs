@@ -1,0 +1,433 @@
+//! Symbol statistics: histograms, PMFs, entropy, KL divergence,
+//! compressibility — the measurement substrate behind Figs. 1–4.
+//!
+//! Definitions follow the paper:
+//! * symbols are bytes (8-bit, 256 symbols);
+//! * *ideal (Shannon) compressibility* of a shard with entropy `H` bits
+//!   is `(8 - H) / 8`;
+//! * *achieved compressibility* of an encoder producing `b` bits for `n`
+//!   symbols is `(8 - b/n) / 8 = 1 - b / (8 n)`.
+
+pub const NUM_SYMBOLS: usize = 256;
+
+/// Exact 256-bin histogram of a byte stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram256 {
+    pub counts: [u64; NUM_SYMBOLS],
+}
+
+impl Default for Histogram256 {
+    fn default() -> Self {
+        Self { counts: [0; NUM_SYMBOLS] }
+    }
+}
+
+impl Histogram256 {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Self {
+        let mut h = Self::new();
+        h.accumulate(data);
+        h
+    }
+
+    /// Add the bytes of `data` to the histogram.
+    ///
+    /// Hot path for the offline PMF maintenance: 4-way unrolled with
+    /// independent sub-tables to break the store-to-load dependency on
+    /// repeated symbols (classic histogram optimization).
+    pub fn accumulate(&mut self, data: &[u8]) {
+        let mut t0 = [0u32; NUM_SYMBOLS];
+        let mut t1 = [0u32; NUM_SYMBOLS];
+        let mut t2 = [0u32; NUM_SYMBOLS];
+        let mut t3 = [0u32; NUM_SYMBOLS];
+        let mut chunks = data.chunks_exact(4);
+        for c in &mut chunks {
+            t0[c[0] as usize] += 1;
+            t1[c[1] as usize] += 1;
+            t2[c[2] as usize] += 1;
+            t3[c[3] as usize] += 1;
+            // flush sub-tables well before u32 overflow
+        }
+        for &b in chunks.remainder() {
+            t0[b as usize] += 1;
+        }
+        for i in 0..NUM_SYMBOLS {
+            self.counts[i] +=
+                t0[i] as u64 + t1[i] as u64 + t2[i] as u64 + t3[i] as u64;
+        }
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram256) {
+        for i in 0..NUM_SYMBOLS {
+            self.counts[i] += other.counts[i];
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    /// Number of symbols with nonzero count.
+    pub fn support(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    pub fn to_pmf(&self) -> Pmf {
+        Pmf::from_histogram(self)
+    }
+
+    /// Shannon entropy in bits/symbol.
+    pub fn entropy_bits(&self) -> f64 {
+        let n = self.total();
+        if n == 0 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        let mut h = 0.0;
+        for &c in &self.counts {
+            if c > 0 {
+                let p = c as f64 / nf;
+                h -= p * p.log2();
+            }
+        }
+        h
+    }
+
+    /// Ideal (Shannon) compressibility `(8 - H) / 8`.
+    pub fn ideal_compressibility(&self) -> f64 {
+        (8.0 - self.entropy_bits()) / 8.0
+    }
+}
+
+/// Probability mass function over the 256 byte symbols.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pmf {
+    pub p: [f64; NUM_SYMBOLS],
+}
+
+impl Pmf {
+    pub fn uniform() -> Self {
+        Self { p: [1.0 / NUM_SYMBOLS as f64; NUM_SYMBOLS] }
+    }
+
+    pub fn from_histogram(h: &Histogram256) -> Self {
+        let n = h.total().max(1) as f64;
+        let mut p = [0.0; NUM_SYMBOLS];
+        for i in 0..NUM_SYMBOLS {
+            p[i] = h.counts[i] as f64 / n;
+        }
+        Self { p }
+    }
+
+    /// Additive (Laplace) smoothing: every symbol gets probability mass
+    /// `>= eps / (1 + 256*eps)`. Used before building fixed codebooks so
+    /// every symbol has a finite code (no escape path needed — DESIGN.md).
+    pub fn smoothed(&self, eps: f64) -> Self {
+        let z = 1.0 + NUM_SYMBOLS as f64 * eps;
+        let mut p = [0.0; NUM_SYMBOLS];
+        for i in 0..NUM_SYMBOLS {
+            p[i] = (self.p[i] + eps) / z;
+        }
+        Self { p }
+    }
+
+    pub fn entropy_bits(&self) -> f64 {
+        let mut h = 0.0;
+        for &p in &self.p {
+            if p > 0.0 {
+                h -= p * p.log2();
+            }
+        }
+        h
+    }
+
+    /// `KL(self ‖ q)` in bits. Requires `q[i] > 0` wherever `self[i] > 0`
+    /// (returns `f64::INFINITY` otherwise, like the true divergence).
+    pub fn kl_divergence(&self, q: &Pmf) -> f64 {
+        let mut d = 0.0;
+        for i in 0..NUM_SYMBOLS {
+            let p = self.p[i];
+            if p > 0.0 {
+                if q.p[i] <= 0.0 {
+                    return f64::INFINITY;
+                }
+                d += p * (p / q.p[i]).log2();
+            }
+        }
+        d.max(0.0)
+    }
+
+    /// Cross entropy `H(self, q)` in bits — the expected code length when
+    /// data from `self` is coded with an ideal code for `q`.
+    pub fn cross_entropy_bits(&self, q: &Pmf) -> f64 {
+        let mut h = 0.0;
+        for i in 0..NUM_SYMBOLS {
+            let p = self.p[i];
+            if p > 0.0 {
+                if q.p[i] <= 0.0 {
+                    return f64::INFINITY;
+                }
+                h -= p * q.p[i].log2();
+            }
+        }
+        h
+    }
+
+    /// Average several PMFs with equal weight (the paper's "average
+    /// probability distribution of previous data batches").
+    pub fn average(pmfs: &[Pmf]) -> Pmf {
+        assert!(!pmfs.is_empty());
+        let mut p = [0.0; NUM_SYMBOLS];
+        for pmf in pmfs {
+            for i in 0..NUM_SYMBOLS {
+                p[i] += pmf.p[i];
+            }
+        }
+        let n = pmfs.len() as f64;
+        for v in &mut p {
+            *v /= n;
+        }
+        Pmf { p }
+    }
+}
+
+/// Compressibility of an encoding: `1 - compressed_bits / (8 * n_symbols)`.
+pub fn compressibility(n_symbols: u64, compressed_bits: u64) -> f64 {
+    if n_symbols == 0 {
+        return 0.0;
+    }
+    1.0 - compressed_bits as f64 / (8.0 * n_symbols as f64)
+}
+
+/// Simple descriptive statistics over a series (for bench reporting).
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Summary {
+        assert!(!values.is_empty());
+        let mut v: Vec<f64> = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let q = |f: f64| v[((n - 1) as f64 * f).round() as usize];
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            p25: q(0.25),
+            median: q(0.5),
+            p75: q(0.75),
+            max: v[n - 1],
+        }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.4} std={:.4} min={:.4} p25={:.4} med={:.4} p75={:.4} max={:.4}",
+            self.n, self.mean, self.std, self.min, self.p25, self.median, self.p75, self.max
+        )
+    }
+}
+
+/// Fixed-bin histogram of f64 values for figure-style distribution output
+/// (Figs. 2–4 are histograms of per-shard compressibility / KL).
+pub struct SeriesHistogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+}
+
+impl SeriesHistogram {
+    pub fn build(values: &[f64], lo: f64, hi: f64, nbins: usize) -> Self {
+        let mut bins = vec![0u64; nbins];
+        for &v in values {
+            let t = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+            let idx = ((t * nbins as f64) as usize).min(nbins - 1);
+            bins[idx] += 1;
+        }
+        Self { lo, hi, bins }
+    }
+
+    /// Render as rows "bin_lo bin_hi count bar" — what the benches print.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let nbins = self.bins.len();
+        let max = *self.bins.iter().max().unwrap_or(&1) as f64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            let a = self.lo + (self.hi - self.lo) * i as f64 / nbins as f64;
+            let b = self.lo + (self.hi - self.lo) * (i + 1) as f64 / nbins as f64;
+            let bar = "#".repeat(((c as f64 / max.max(1.0)) * 50.0).round() as usize);
+            out.push_str(&format!("{a:10.4} {b:10.4} {c:8} {bar}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+
+    #[test]
+    fn histogram_counts_exact() {
+        let data = [0u8, 0, 1, 2, 255, 255, 255];
+        let h = Histogram256::from_bytes(&data);
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[1], 1);
+        assert_eq!(h.counts[2], 1);
+        assert_eq!(h.counts[255], 3);
+        assert_eq!(h.total(), 7);
+        assert_eq!(h.support(), 4);
+    }
+
+    #[test]
+    fn histogram_matches_naive_on_random_data() {
+        let mut rng = Pcg32::new(2);
+        let mut data = vec![0u8; 100_003]; // odd length exercises remainder
+        rng.fill_bytes(&mut data);
+        let h = Histogram256::from_bytes(&data);
+        let mut naive = [0u64; NUM_SYMBOLS];
+        for &b in &data {
+            naive[b as usize] += 1;
+        }
+        assert_eq!(h.counts, naive);
+    }
+
+    #[test]
+    fn entropy_uniform_is_8_bits() {
+        let mut h = Histogram256::new();
+        for i in 0..NUM_SYMBOLS {
+            h.counts[i] = 10;
+        }
+        assert!((h.entropy_bits() - 8.0).abs() < 1e-12);
+        assert!(h.ideal_compressibility().abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_constant_is_zero() {
+        let h = Histogram256::from_bytes(&[7u8; 100]);
+        assert_eq!(h.entropy_bits(), 0.0);
+        assert!((h.ideal_compressibility() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_two_symbols_is_one_bit() {
+        let mut h = Histogram256::new();
+        h.counts[0] = 500;
+        h.counts[1] = 500;
+        assert!((h.entropy_bits() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_zero_iff_equal() {
+        let mut h = Histogram256::new();
+        for i in 0..NUM_SYMBOLS {
+            h.counts[i] = (i as u64 % 17) + 1;
+        }
+        let p = h.to_pmf();
+        assert!(p.kl_divergence(&p).abs() < 1e-12);
+        let q = Pmf::uniform();
+        assert!(p.kl_divergence(&q) > 0.0);
+    }
+
+    #[test]
+    fn kl_infinite_on_support_mismatch() {
+        let mut a = Histogram256::new();
+        a.counts[0] = 1;
+        a.counts[1] = 1;
+        let mut b = Histogram256::new();
+        b.counts[0] = 2;
+        assert_eq!(a.to_pmf().kl_divergence(&b.to_pmf()), f64::INFINITY);
+    }
+
+    #[test]
+    fn cross_entropy_decomposition() {
+        // H(p, q) = H(p) + KL(p || q)
+        let mut rng = Pcg32::new(4);
+        let mut ha = Histogram256::new();
+        let mut hb = Histogram256::new();
+        for i in 0..NUM_SYMBOLS {
+            ha.counts[i] = rng.gen_range(100) as u64 + 1;
+            hb.counts[i] = rng.gen_range(100) as u64 + 1;
+        }
+        let (p, q) = (ha.to_pmf(), hb.to_pmf());
+        let lhs = p.cross_entropy_bits(&q);
+        let rhs = p.entropy_bits() + p.kl_divergence(&q);
+        assert!((lhs - rhs).abs() < 1e-9, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn smoothing_gives_full_support_and_normalizes() {
+        let h = Histogram256::from_bytes(&[3u8; 50]);
+        let s = h.to_pmf().smoothed(1e-6);
+        assert!(s.p.iter().all(|&p| p > 0.0));
+        let sum: f64 = s.p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn average_pmf_is_mean() {
+        let a = Histogram256::from_bytes(&[0u8; 10]).to_pmf();
+        let b = Histogram256::from_bytes(&[1u8; 10]).to_pmf();
+        let avg = Pmf::average(&[a, b]);
+        assert!((avg.p[0] - 0.5).abs() < 1e-12);
+        assert!((avg.p[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compressibility_bounds() {
+        assert_eq!(compressibility(100, 800), 0.0);
+        assert!((compressibility(100, 400) - 0.5).abs() < 1e-12);
+        assert_eq!(compressibility(0, 0), 0.0);
+    }
+
+    #[test]
+    fn summary_quartiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&v);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.median - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn series_histogram_bins_and_clamps() {
+        let sh = SeriesHistogram::build(&[-1.0, 0.0, 0.49, 0.51, 2.0], 0.0, 1.0, 2);
+        assert_eq!(sh.bins, vec![3, 2]);
+        assert!(sh.render().lines().count() == 2);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Histogram256::from_bytes(&[1, 1]);
+        let b = Histogram256::from_bytes(&[1, 2]);
+        a.merge(&b);
+        assert_eq!(a.counts[1], 3);
+        assert_eq!(a.counts[2], 1);
+    }
+}

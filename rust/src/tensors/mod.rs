@@ -1,0 +1,314 @@
+//! Tensor taxonomy + shard partitioning — the paper's §2 geometry.
+//!
+//! The paper analyzes 8 tensor kinds (FFN1/FFN2 × weight, activation,
+//! weight-gradient, activation-gradient) of an 18-layer model sharded
+//! over 64 accelerators: 18 × 64 = 1152 shards per kind. Here a *shard*
+//! is a contiguous model-dimension column slice of the tapped global
+//! tensor — tensor-parallel sharding is exactly such a partition, and
+//! byte statistics do not depend on which die holds the slice
+//! (DESIGN.md §8).
+
+use crate::dtype::{bf16_symbols, bf16_to_f32, MiniFormat, SymbolMode};
+
+/// The 8 tapped tensor kinds, in the L2 manifest (TAP_NAMES) order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TensorKind {
+    Ffn1Weight,
+    Ffn2Weight,
+    Ffn1Act,
+    Ffn2Act,
+    Ffn1WGrad,
+    Ffn2WGrad,
+    Ffn1AGrad,
+    Ffn2AGrad,
+}
+
+impl TensorKind {
+    pub const ALL: [TensorKind; 8] = [
+        TensorKind::Ffn1Weight,
+        TensorKind::Ffn2Weight,
+        TensorKind::Ffn1Act,
+        TensorKind::Ffn2Act,
+        TensorKind::Ffn1WGrad,
+        TensorKind::Ffn2WGrad,
+        TensorKind::Ffn1AGrad,
+        TensorKind::Ffn2AGrad,
+    ];
+
+    /// Manifest name (matches python `model.TAP_NAMES`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TensorKind::Ffn1Weight => "ffn1_w",
+            TensorKind::Ffn2Weight => "ffn2_w",
+            TensorKind::Ffn1Act => "ffn1_act",
+            TensorKind::Ffn2Act => "ffn2_act",
+            TensorKind::Ffn1WGrad => "ffn1_wgrad",
+            TensorKind::Ffn2WGrad => "ffn2_wgrad",
+            TensorKind::Ffn1AGrad => "ffn1_agrad",
+            TensorKind::Ffn2AGrad => "ffn2_agrad",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TensorKind> {
+        Self::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// Index in manifest tap order.
+    pub fn tap_index(&self) -> usize {
+        Self::ALL.iter().position(|k| k == self).unwrap()
+    }
+}
+
+/// Symbol datatype of a shard stream (paper §2 dtype sweep).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DtypeTag {
+    Bf16,
+    Mini(MiniFormat),
+}
+
+impl DtypeTag {
+    pub const ALL: [DtypeTag; 5] = [
+        DtypeTag::Bf16,
+        DtypeTag::Mini(MiniFormat::E4M3),
+        DtypeTag::Mini(MiniFormat::E3M2),
+        DtypeTag::Mini(MiniFormat::E2M3),
+        DtypeTag::Mini(MiniFormat::E2M1),
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DtypeTag::Bf16 => "bf16",
+            DtypeTag::Mini(f) => f.name(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DtypeTag> {
+        Self::ALL.into_iter().find(|d| d.name() == s)
+    }
+
+    /// Bits per tensor element at this dtype (pre-compression).
+    pub fn bits_per_value(&self) -> u32 {
+        match self {
+            DtypeTag::Bf16 => 16,
+            DtypeTag::Mini(f) => f.bits(),
+        }
+    }
+}
+
+/// Codebook registry key: one codebook per (tensor kind, dtype), exactly
+/// the paper's "multiple code books, one for each tensor e.g., FFN1
+/// activation, FFN2 weight gradient etc.".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TensorKey {
+    pub kind: TensorKind,
+    pub dtype: DtypeTag,
+}
+
+impl TensorKey {
+    pub fn new(kind: TensorKind, dtype: DtypeTag) -> Self {
+        Self { kind, dtype }
+    }
+}
+
+impl std::fmt::Display for TensorKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.kind.name(), self.dtype.name())
+    }
+}
+
+/// Shard geometry: `n_layers` × `n_shards` per tensor kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub n_layers: usize,
+    pub n_shards: usize,
+}
+
+impl ShardSpec {
+    /// The paper's Gemma-2B geometry: 18 layers × 64-way sharding.
+    pub const PAPER: ShardSpec = ShardSpec { n_layers: 18, n_shards: 64 };
+
+    pub fn total(&self) -> usize {
+        self.n_layers * self.n_shards
+    }
+}
+
+/// Identifies one shard of one tapped tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShardId {
+    pub layer: usize,
+    pub shard: usize,
+}
+
+/// Split one layer's (rows × cols) matrix into `n_shards` contiguous
+/// column groups (tensor-parallel partition). `cols % n_shards == 0`.
+pub fn shard_columns<T: Copy>(data: &[T], rows: usize, cols: usize, n_shards: usize) -> Vec<Vec<T>> {
+    assert_eq!(data.len(), rows * cols, "matrix size mismatch");
+    assert!(n_shards > 0 && cols % n_shards == 0, "cols {cols} !% n_shards {n_shards}");
+    let w = cols / n_shards;
+    let mut out: Vec<Vec<T>> = (0..n_shards).map(|_| Vec::with_capacity(rows * w)).collect();
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        for (s, shard) in out.iter_mut().enumerate() {
+            shard.extend_from_slice(&row[s * w..(s + 1) * w]);
+        }
+    }
+    out
+}
+
+/// Partition a tapped tensor of shape (n_layers, rows, cols) into
+/// layer-major shards: result[layer * n_shards + shard].
+pub fn shard_tap<T: Copy>(
+    tap: &[T],
+    n_layers: usize,
+    rows: usize,
+    cols: usize,
+    n_shards: usize,
+) -> Vec<Vec<T>> {
+    assert_eq!(tap.len(), n_layers * rows * cols, "tap size mismatch");
+    let per_layer = rows * cols;
+    let mut out = Vec::with_capacity(n_layers * n_shards);
+    for l in 0..n_layers {
+        out.extend(shard_columns(&tap[l * per_layer..(l + 1) * per_layer], rows, cols, n_shards));
+    }
+    out
+}
+
+/// Turn a bf16-bits shard into its 8-bit symbol stream at `dtype`.
+///
+/// * `Bf16` — raw little-endian bytes (the paper's default 8-bit symbols
+///   over the 16-bit values);
+/// * `Mini(f)` — decode to f32, MX-quantize with a per-shard
+///   power-of-two scale, one symbol per value (zero-extended to a byte).
+///
+/// For cross-shard statistics prefer [`shard_symbols_with_scale`] with a
+/// *tensor-wide* scale ([`tensor_log2_scale`]): per-shard auto scales
+/// flip ±1 near power-of-two boundaries, which shifts the whole code
+/// distribution of the affected shards and manufactures KL divergence
+/// that has nothing to do with the underlying value statistics.
+pub fn shard_symbols(bits: &[u16], dtype: DtypeTag) -> Vec<u8> {
+    shard_symbols_with_scale(bits, dtype, None)
+}
+
+/// [`shard_symbols`] with an explicit shared `log2_scale` for the
+/// mini-float dtypes (ignored for bf16).
+pub fn shard_symbols_with_scale(bits: &[u16], dtype: DtypeTag, log2_scale: Option<i32>) -> Vec<u8> {
+    match dtype {
+        DtypeTag::Bf16 => bf16_symbols(bits, SymbolMode::Bf16Interleaved),
+        DtypeTag::Mini(f) => {
+            let xs: Vec<f32> = bits.iter().map(|&b| {
+                let v = bf16_to_f32(b);
+                if v.is_finite() { v } else { 0.0 }
+            }).collect();
+            match log2_scale {
+                None => f.quantize(&xs).0,
+                Some(s) => {
+                    let inv = (2.0f64).powi(-s) as f32;
+                    xs.iter().map(|&x| f.encode(x * inv)).collect()
+                }
+            }
+        }
+    }
+}
+
+/// Tensor-wide MX scale exponent: max |value| over every shard of the
+/// tap, mapped into the format's representable range.
+pub fn tensor_log2_scale(shards: &[Vec<u16>], fmt: MiniFormat) -> i32 {
+    let mut amax = 0.0f32;
+    for shard in shards {
+        for &b in shard {
+            let v = bf16_to_f32(b);
+            if v.is_finite() {
+                amax = amax.max(v.abs());
+            }
+        }
+    }
+    if amax == 0.0 {
+        return 0;
+    }
+    (amax / fmt.max_value()).log2().ceil() as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::bf16_from_f32;
+
+    #[test]
+    fn paper_geometry_is_1152() {
+        assert_eq!(ShardSpec::PAPER.total(), 1152);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for k in TensorKind::ALL {
+            assert_eq!(TensorKind::parse(k.name()), Some(k));
+        }
+        for d in DtypeTag::ALL {
+            assert_eq!(DtypeTag::parse(d.name()), Some(d));
+        }
+        assert_eq!(TensorKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn tap_index_matches_manifest_order() {
+        assert_eq!(TensorKind::Ffn1Weight.tap_index(), 0);
+        assert_eq!(TensorKind::Ffn2AGrad.tap_index(), 7);
+    }
+
+    #[test]
+    fn shard_columns_partitions_exactly() {
+        // 2x6 matrix, 3 shards -> each shard is 2x2 column block
+        let m: Vec<u16> = (0..12).collect();
+        let shards = shard_columns(&m, 2, 6, 3);
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards[0], vec![0, 1, 6, 7]);
+        assert_eq!(shards[1], vec![2, 3, 8, 9]);
+        assert_eq!(shards[2], vec![4, 5, 10, 11]);
+        // nothing lost
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 12);
+    }
+
+    #[test]
+    fn shard_tap_layer_major() {
+        // 2 layers of 1x4, 2 shards
+        let tap: Vec<u16> = (0..8).collect();
+        let shards = shard_tap(&tap, 2, 1, 4, 2);
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[0], vec![0, 1]); // layer 0 shard 0
+        assert_eq!(shards[1], vec![2, 3]); // layer 0 shard 1
+        assert_eq!(shards[2], vec![4, 5]); // layer 1 shard 0
+        assert_eq!(shards[3], vec![6, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "n_shards")]
+    fn shard_columns_requires_divisibility() {
+        let m = [0u16; 10];
+        shard_columns(&m, 2, 5, 2);
+    }
+
+    #[test]
+    fn bf16_symbols_are_two_per_value() {
+        let bits = vec![bf16_from_f32(1.5); 10];
+        let syms = shard_symbols(&bits, DtypeTag::Bf16);
+        assert_eq!(syms.len(), 20);
+    }
+
+    #[test]
+    fn mini_symbols_one_per_value_in_range() {
+        let bits: Vec<u16> = (0..64).map(|i| bf16_from_f32(i as f32 / 8.0 - 4.0)).collect();
+        for fmt in MiniFormat::ALL {
+            let syms = shard_symbols(&bits, DtypeTag::Mini(fmt));
+            assert_eq!(syms.len(), 64);
+            let max_code = (1u16 << fmt.bits()) as u16;
+            assert!(syms.iter().all(|&s| (s as u16) < max_code), "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn key_display() {
+        let k = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+        assert_eq!(k.to_string(), "ffn1_act/bf16");
+    }
+}

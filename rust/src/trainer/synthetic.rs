@@ -1,0 +1,108 @@
+//! Synthetic tap generation — a fast, XLA-free stand-in for the trainer
+//! used by unit tests and micro-benches that exercise the compression
+//! pipeline in isolation. Statistics mimic what real FFN taps look like:
+//! roughly normal values with per-kind scale (activations wider than
+//! gradients), quantized to bf16 bit patterns.
+
+use crate::dtype::bf16_from_f32;
+use crate::prng::Pcg32;
+use crate::runtime::StepOutput;
+use crate::tensors::TensorKind;
+
+/// Per-kind value scale: activations O(1), weights O(0.1),
+/// gradients O(1e-3) — matching the broad strokes of real training.
+pub fn kind_scale(kind: TensorKind) -> f32 {
+    match kind {
+        TensorKind::Ffn1Act | TensorKind::Ffn2Act => 1.0,
+        TensorKind::Ffn1Weight | TensorKind::Ffn2Weight => 0.1,
+        TensorKind::Ffn1WGrad | TensorKind::Ffn2WGrad => 1e-3,
+        TensorKind::Ffn1AGrad | TensorKind::Ffn2AGrad => 1e-3,
+    }
+}
+
+/// Generate one bf16 tap of shape (n_layers, rows, cols). Layers share a
+/// distribution up to a small per-layer scale drift — the statistical
+/// similarity the paper measures arises the same way.
+pub fn synthetic_tap(
+    kind: TensorKind,
+    n_layers: usize,
+    rows: usize,
+    cols: usize,
+    seed: u64,
+) -> Vec<u16> {
+    let base = kind_scale(kind);
+    let mut out = Vec::with_capacity(n_layers * rows * cols);
+    for layer in 0..n_layers {
+        let mut rng = Pcg32::substream(seed ^ (kind.tap_index() as u64) << 32, layer as u64);
+        // ±10% per-layer scale drift
+        let scale = base * (1.0 + 0.1 * (rng.next_f32() - 0.5));
+        for _ in 0..rows * cols {
+            out.push(bf16_from_f32(rng.next_normal() as f32 * scale));
+        }
+    }
+    out
+}
+
+/// A full synthetic step: all 8 tap kinds at the given geometry
+/// (activation taps get `rows` rows; weight-shaped taps reuse rows too —
+/// the compression pipeline only sees (L, rows, cols) byte streams).
+pub fn synthetic_step(n_layers: usize, rows: usize, cols: usize, seed: u64) -> StepOutput {
+    let taps = TensorKind::ALL
+        .iter()
+        .map(|&kind| {
+            (
+                kind.name().to_string(),
+                synthetic_tap(kind, n_layers, rows, cols, seed),
+                vec![n_layers, rows, cols],
+            )
+        })
+        .collect();
+    StepOutput { loss: f32::NAN, taps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::bf16_to_f32;
+    use crate::stats::Histogram256;
+    use crate::tensors::{shard_symbols, DtypeTag};
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let a = synthetic_tap(TensorKind::Ffn1Act, 2, 8, 16, 3);
+        let b = synthetic_tap(TensorKind::Ffn1Act, 2, 8, 16, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2 * 8 * 16);
+        let c = synthetic_tap(TensorKind::Ffn1Act, 2, 8, 16, 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn kinds_have_distinct_scales() {
+        let act = synthetic_tap(TensorKind::Ffn1Act, 1, 64, 64, 1);
+        let grad = synthetic_tap(TensorKind::Ffn1WGrad, 1, 64, 64, 1);
+        let mean_abs = |bits: &[u16]| {
+            bits.iter().map(|&b| bf16_to_f32(b).abs() as f64).sum::<f64>() / bits.len() as f64
+        };
+        assert!(mean_abs(&act) > 100.0 * mean_abs(&grad));
+    }
+
+    #[test]
+    fn symbol_stream_is_compressible() {
+        // bf16 normals: exponent byte is highly skewed -> entropy << 8
+        let tap = synthetic_tap(TensorKind::Ffn1Act, 1, 128, 128, 9);
+        let syms = shard_symbols(&tap, DtypeTag::Bf16);
+        let h = Histogram256::from_bytes(&syms);
+        assert!(h.entropy_bits() < 7.0, "H = {}", h.entropy_bits());
+    }
+
+    #[test]
+    fn full_step_has_all_kinds() {
+        let s = synthetic_step(2, 4, 8, 7);
+        assert_eq!(s.taps.len(), 8);
+        let names: Vec<&str> = s.taps.iter().map(|(n, _, _)| n.as_str()).collect();
+        for k in TensorKind::ALL {
+            assert!(names.contains(&k.name()));
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Edge cases and failure injection across the public API surface.
+
+use sshuff::baselines::{Codec, ThreeStage};
+use sshuff::huffman::CodeBook;
+use sshuff::singlestage::{
+    AvgPolicy, CodebookManager, Frame, Registry, SingleStageDecoder, SingleStageEncoder, RAW_ID,
+};
+use sshuff::stats::Histogram256;
+use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
+
+#[test]
+fn empty_input_through_every_path() {
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+    mgr.observe_bytes(key, b"some previous batch");
+    let id = mgr.build(key).unwrap();
+    let mut enc = SingleStageEncoder::new(mgr.registry.clone());
+    let dec = SingleStageDecoder::new(mgr.registry.clone());
+
+    let frame = enc.encode_with(id, &[]);
+    assert_eq!(frame.header.n_symbols, 0);
+    assert_eq!(dec.decode(&frame).unwrap(), Vec::<u8>::new());
+    assert_eq!(dec.decode_bytes(&frame.to_bytes()).unwrap(), Vec::<u8>::new());
+
+    // observing an empty batch must not poison the average
+    mgr.observe_bytes(key, &[]);
+    assert_eq!(mgr.batches_seen(key), 1);
+}
+
+#[test]
+fn single_symbol_stream_all_codecs() {
+    let data = vec![42u8; 10_000];
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+    mgr.observe_bytes(key, &data);
+    let id = mgr.build(key).unwrap();
+    let ss = sshuff::baselines::SingleStageCodec::with_fixed(mgr.registry.clone(), id);
+    for c in [&ThreeStage as &dyn Codec, &ss] {
+        let wire = c.encode(&data);
+        assert!(wire.len() < data.len() / 4, "{}: {}", c.name(), wire.len());
+        assert_eq!(c.decode(&wire).unwrap(), data);
+    }
+}
+
+#[test]
+fn decoder_does_not_panic_on_truncated_payload() {
+    let data: Vec<u8> = (0..255u8).cycle().take(4096).collect();
+    let book = CodeBook::from_counts(&Histogram256::from_bytes(&data).counts).unwrap();
+    let (payload, _) = book.encode(&data);
+    let decoder = book.decoder();
+    // truncate to half: decoder must return n symbols without panicking
+    // (tail symbols are garbage from zero-padding, but bounded)
+    let half = &payload[..payload.len() / 2];
+    let out = decoder.decode(half, 100);
+    assert_eq!(out.len(), 100);
+}
+
+#[test]
+fn registry_capacity_and_raw_id_reservation() {
+    let mut reg = Registry::new();
+    let book = CodeBook::from_counts(&Histogram256::from_bytes(&[1, 2, 3]).counts).unwrap();
+    for i in 0..Registry::MAX_BOOKS {
+        let id = reg.add(std::sync::Arc::new(sshuff::singlestage::FixedCodebook::new(
+            book.clone(),
+            None,
+            i as u32,
+        )));
+        assert_ne!(id, RAW_ID, "RAW_ID must never be allocated");
+    }
+    assert_eq!(reg.len(), 255);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        reg.add(std::sync::Arc::new(sshuff::singlestage::FixedCodebook::new(book, None, 0)))
+    }));
+    assert!(result.is_err(), "registry must reject book 256");
+}
+
+#[test]
+fn forty_keys_build_distinct_codebooks() {
+    // 8 kinds x 5 dtypes — the paper's "multiple code books, one for
+    // each tensor" inventory at full width
+    let mut mgr = CodebookManager::new(AvgPolicy::Ema(0.3));
+    for (i, &kind) in TensorKind::ALL.iter().enumerate() {
+        for (j, &dt) in DtypeTag::ALL.iter().enumerate() {
+            let key = TensorKey::new(kind, dt);
+            let data: Vec<u8> = (0..2048).map(|x| ((x * (i * 5 + j + 1)) % 251) as u8).collect();
+            mgr.observe_bytes(key, &data);
+        }
+    }
+    let built = mgr.build_all();
+    assert_eq!(built.len(), 40);
+    let mut ids: Vec<u8> = built.iter().map(|&(_, id)| id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 40, "each key gets its own id");
+}
+
+#[test]
+fn frame_with_unknown_id_fails_decode_cleanly() {
+    let frame = Frame::coded(200, 3, vec![0xFF]);
+    let dec = SingleStageDecoder::new(Registry::new());
+    let err = dec.decode(&frame).unwrap_err();
+    assert!(err.to_string().contains("unknown codebook id"));
+}
+
+#[test]
+fn three_stage_rejects_garbage() {
+    assert!(ThreeStage.decode(&[]).is_err());
+    assert!(ThreeStage.decode(&[9, 0, 0, 0, 0]).is_err()); // unknown flag
+    assert!(ThreeStage.decode(&[1, 10, 0, 0, 0, 1, 2]).is_err()); // short raw
+    assert!(ThreeStage.decode(&[0, 1, 0, 0, 0, 7]).is_err()); // missing codebook
+}
+
+#[test]
+fn nonfinite_values_quantize_safely() {
+    use sshuff::dtype::bf16_from_f32;
+    use sshuff::tensors::shard_symbols;
+    let bits: Vec<u16> = [f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 1.0, -2.0]
+        .iter()
+        .map(|&v| bf16_from_f32(v))
+        .collect();
+    for &dt in &DtypeTag::ALL {
+        let syms = shard_symbols(&bits, dt);
+        assert!(!syms.is_empty(), "{dt:?}");
+    }
+}
+
+#[test]
+fn config_file_roundtrip_on_disk() {
+    use sshuff::config::{Config, ExperimentConfig};
+    let path = std::env::temp_dir().join(format!("sshuff_cfg_{}.ini", std::process::id()));
+    std::fs::write(&path, "[experiment]\nmodel = paper\nsteps = 3\n[fabric]\nworkers = 64\n")
+        .unwrap();
+    let c = Config::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let e = ExperimentConfig::from_config(&c).unwrap();
+    assert_eq!(e.model, "paper");
+    assert_eq!(e.steps, 3);
+    assert_eq!(e.workers, 64);
+}
+
+#[test]
+fn coordinator_survives_oversized_and_zero_jobs() {
+    use sshuff::coordinator::{CompressJob, Coordinator};
+    let coord = Coordinator::new(2, AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn2WGrad, DtypeTag::Bf16);
+    coord.observe_bytes(key, &vec![7u8; 1 << 16]);
+    coord.rebuild_codebooks();
+    let jobs = vec![
+        CompressJob { seq: 0, key, data: vec![] },
+        CompressJob { seq: 1, key, data: vec![7u8; 1 << 20] }, // 1 MiB
+        CompressJob { seq: 2, key, data: vec![255u8; 3] },
+    ];
+    let originals: Vec<Vec<u8>> = jobs.iter().map(|j| j.data.clone()).collect();
+    let results = coord.encode_batch(jobs);
+    let dec = coord.decoder();
+    for (r, o) in results.iter().zip(&originals) {
+        assert_eq!(&dec.decode(&r.frame).unwrap(), o);
+    }
+    // empty batch is a no-op
+    assert!(coord.encode_batch(Vec::new()).is_empty());
+}
+
+#[test]
+fn collectives_handle_tiny_and_ragged_sizes() {
+    use sshuff::baselines::RawCodec;
+    use sshuff::collectives::{all_gather, all_reduce, all_to_all, reduce_scatter};
+    use sshuff::fabric::{Fabric, LinkModel};
+    // length < n workers: some chunks are empty
+    let n = 5;
+    let inputs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 3]).collect();
+    let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+    let (out, _) = all_reduce(&mut f, &RawCodec, &inputs);
+    let want: f32 = (0..n).map(|r| r as f32).sum();
+    for r in 0..n {
+        assert_eq!(out[r], vec![want; 3]);
+    }
+    let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+    let (rs, _) = reduce_scatter(&mut f, &RawCodec, &inputs);
+    assert_eq!(rs.iter().map(|c| c.len()).sum::<usize>(), 3);
+    let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+    let (ag, _) = all_gather(&mut f, &RawCodec, &inputs);
+    assert_eq!(ag[0].len(), 15);
+    // all_to_all with empty chunks
+    let a2a_in: Vec<Vec<Vec<f32>>> =
+        (0..n).map(|r| (0..n).map(|d| if d == 0 { vec![] } else { vec![(r + d) as f32] }).collect()).collect();
+    let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+    let (a2a, _) = all_to_all(&mut f, &RawCodec, &a2a_in);
+    assert!(a2a[0].iter().all(|c| c.is_empty()));
+}
+
+#[test]
+fn ema_policy_rebuild_changes_codebook_after_drift() {
+    // distribution drift: EMA manager's codebook tracks it
+    let mut mgr = CodebookManager::new(AvgPolicy::Ema(0.5));
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+    let early: Vec<u8> = (0..4096).map(|i| (i % 16) as u8).collect();
+    mgr.observe_bytes(key, &early);
+    let id1 = mgr.build(key).unwrap();
+    // drift to a different alphabet
+    let late: Vec<u8> = (0..4096).map(|i| 128 + (i % 16) as u8).collect();
+    for _ in 0..6 {
+        mgr.observe_bytes(key, &late);
+    }
+    let id2 = mgr.build(key).unwrap();
+    let h_late = Histogram256::from_bytes(&late);
+    let bits1 = mgr.registry.get(id1).unwrap().book.encoded_bits_for(&h_late).unwrap();
+    let bits2 = mgr.registry.get(id2).unwrap().book.encoded_bits_for(&h_late).unwrap();
+    assert!(bits2 < bits1, "rebuilt book must code the drifted stream better: {bits2} vs {bits1}");
+}

@@ -1,0 +1,147 @@
+//! Integration: the full L3 pipeline without XLA — synthetic taps →
+//! sharding → coordinator (leader/worker) → frames → simulated fabric →
+//! decode → bit-exact verification, plus the paper's headline deltas on
+//! the synthetic stream.
+
+use sshuff::coordinator::{CompressJob, Coordinator};
+use sshuff::experiments::{measure_shards, mean, KindCapture};
+use sshuff::fabric::{Fabric, LinkModel};
+use sshuff::singlestage::AvgPolicy;
+use sshuff::stats::Histogram256;
+use sshuff::tensors::{shard_symbols, shard_tap, DtypeTag, TensorKey, TensorKind};
+use sshuff::trainer::synthetic::{synthetic_step, synthetic_tap};
+use sshuff::trainer::shard_step;
+
+#[test]
+fn taps_to_frames_to_decode_bit_exact() {
+    let coord = Coordinator::new(3, AvgPolicy::CumulativeMean);
+    let mut fabric = Fabric::new(2, LinkModel::DIE_TO_DIE);
+
+    // warm-up batches feed the average distributions
+    for b in 0..3 {
+        let step = synthetic_step(2, 32, 64, b);
+        for set in shard_step(&step, 4) {
+            let key = TensorKey::new(set.kind, DtypeTag::Bf16);
+            for shard in &set.shards {
+                coord.observe_bytes(key, &shard_symbols(shard, DtypeTag::Bf16));
+            }
+        }
+    }
+    coord.rebuild_codebooks();
+    assert_eq!(coord.routing_table().ids.len(), 8, "one codebook per tensor kind");
+
+    // a fresh step goes through the full pipeline
+    let step = synthetic_step(2, 32, 64, 100);
+    let mut jobs = Vec::new();
+    for set in shard_step(&step, 4) {
+        let key = TensorKey::new(set.kind, DtypeTag::Bf16);
+        for shard in &set.shards {
+            jobs.push(CompressJob {
+                seq: jobs.len() as u64,
+                key,
+                data: shard_symbols(shard, DtypeTag::Bf16),
+            });
+        }
+    }
+    let originals: Vec<Vec<u8>> = jobs.iter().map(|j| j.data.clone()).collect();
+    let results = coord.encode_batch(jobs);
+    let decoder = coord.decoder();
+    let mut wire = 0usize;
+    let mut raw = 0usize;
+    for (r, orig) in results.iter().zip(&originals) {
+        fabric.send(0, 1, r.frame.wire_bytes());
+        assert_eq!(&decoder.decode(&r.frame).unwrap(), orig);
+        wire += r.frame.wire_bytes();
+        raw += orig.len();
+    }
+    assert_eq!(fabric.link_stats(0, 1).bytes as usize, wire);
+    assert!(wire < raw, "activations must compress: {wire} vs {raw}");
+    // gradients (tight normal around 0 in bf16) compress very well;
+    // whole-step compressibility should be solidly positive
+    assert!((raw - wire) as f64 / raw as f64 > 0.10, "{wire}/{raw}");
+}
+
+#[test]
+fn headline_deltas_hold_on_synthetic_ffn1_act() {
+    // the paper's Fig-4 structure on the synthetic generator at a
+    // realistic shard size
+    let (l, rows, cols, n_shards) = (4, 128, 512, 16);
+    let tap = synthetic_tap(TensorKind::Ffn1Act, l, rows, cols, 3);
+    let prev = synthetic_tap(TensorKind::Ffn1Act, l, rows, cols, 2);
+    let mut prev_hist = Histogram256::new();
+    prev_hist.accumulate(&shard_symbols(&prev, DtypeTag::Bf16));
+    let cap = KindCapture {
+        kind: TensorKind::Ffn1Act,
+        n_layers: l,
+        n_shards,
+        shards: shard_tap(&tap, l, rows, cols, n_shards),
+        prev_hist: prev_hist.clone(),
+    };
+    let m = measure_shards(&cap, DtypeTag::Bf16, &prev_hist);
+    assert_eq!(m.ideal.len(), l * n_shards);
+    let d_huffman = mean(&m.per_shard_huffman) - mean(&m.avg_codebook);
+    let d_ideal = mean(&m.ideal) - mean(&m.avg_codebook);
+    let d_prev = mean(&m.per_shard_huffman) - mean(&m.prev_codebook);
+    // paper: 0.5% / 1%; synthetic normals with layer drift stay inside
+    assert!(d_huffman < 0.005, "avg-book {d_huffman} vs per-shard");
+    assert!(d_ideal < 0.01, "avg-book {d_ideal} vs ideal");
+    assert!(d_prev < 0.01, "prev-batches book {d_prev} vs per-shard");
+    // Fig 3: statistical similarity
+    let max_kl = m.kl_from_avg.iter().cloned().fold(0.0, f64::max);
+    assert!(max_kl < 0.06, "max KL {max_kl} (paper: < 0.06)");
+}
+
+#[test]
+fn compressed_all_reduce_equals_uncompressed_through_coordinator_books() {
+    use sshuff::baselines::{RawCodec, SingleStageCodec};
+    use sshuff::collectives::all_reduce;
+    use sshuff::prng::Pcg32;
+    use sshuff::singlestage::CodebookManager;
+
+    let n = 8;
+    let elems = 1000;
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|r| Pcg32::substream(5, r as u64).normal_f32s(elems, 1e-3))
+        .collect();
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1WGrad, DtypeTag::Bf16);
+    let bytes: Vec<u8> = inputs[0].iter().flat_map(|v| v.to_le_bytes()).collect();
+    mgr.observe_bytes(key, &bytes);
+    let id = mgr.build(key).unwrap();
+    let ss = SingleStageCodec::with_fixed(mgr.registry.clone(), id);
+
+    let mut f1 = Fabric::new(n, LinkModel::DATACENTER);
+    let (plain, rep_raw) = all_reduce(&mut f1, &RawCodec, &inputs);
+    let mut f2 = Fabric::new(n, LinkModel::DATACENTER);
+    let (compressed, rep_ss) = all_reduce(&mut f2, &ss, &inputs);
+    assert_eq!(plain, compressed, "compression must not change the reduction");
+    assert!(rep_ss.wire_bytes < rep_raw.wire_bytes);
+    assert!(rep_ss.sim_time_s < rep_raw.sim_time_s);
+}
+
+#[test]
+fn multi_dtype_pipeline_roundtrips() {
+    // quantized (mini-float) symbol streams through the coordinator
+    let coord = Coordinator::new(2, AvgPolicy::CumulativeMean);
+    for &dt in &DtypeTag::ALL {
+        let key = TensorKey::new(TensorKind::Ffn2Act, dt);
+        for b in 0..2 {
+            let tap = synthetic_tap(TensorKind::Ffn2Act, 1, 64, 64, b);
+            coord.observe_bytes(key, &shard_symbols(&tap, dt));
+        }
+    }
+    coord.rebuild_codebooks();
+    let decoder = coord.decoder();
+    let mut jobs = Vec::new();
+    let mut expect = Vec::new();
+    for (i, &dt) in DtypeTag::ALL.iter().enumerate() {
+        let tap = synthetic_tap(TensorKind::Ffn2Act, 1, 64, 64, 50 + i as u64);
+        let data = shard_symbols(&tap, dt);
+        expect.push(data.clone());
+        jobs.push(CompressJob { seq: i as u64, key: TensorKey::new(TensorKind::Ffn2Act, dt), data });
+    }
+    for (r, want) in coord.encode_batch(jobs).iter().zip(&expect) {
+        assert_eq!(&decoder.decode(&r.frame).unwrap(), want);
+        assert_ne!(r.frame.header.id, sshuff::singlestage::RAW_ID);
+    }
+}

@@ -1,0 +1,134 @@
+//! Integration: the three layers composed through real artifacts.
+//! Every test self-skips when `make artifacts` has not run.
+
+use sshuff::experiments::{capture, measure_shards, CaptureSpec};
+use sshuff::huffman::CodeBook;
+use sshuff::runtime::{artifacts_dir, Engine, KernelRunner};
+use sshuff::stats::Histogram256;
+use sshuff::tensors::{DtypeTag, TensorKind};
+
+fn engine_or_skip() -> Option<Engine> {
+    if !artifacts_dir().join("manifest_tiny.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::cpu().expect("PJRT CPU client"))
+}
+
+#[test]
+fn capture_tiny_and_measure_all_figures() {
+    let Some(engine) = engine_or_skip() else { return };
+    let spec = CaptureSpec::tiny();
+    let cap = capture(&engine, &spec).unwrap();
+    assert_eq!(cap.kinds.len(), 8);
+    assert_eq!(cap.loss_curve.len(), spec.steps);
+    for kc in &cap.kinds {
+        assert_eq!(kc.shards.len(), kc.n_layers * spec.n_shards);
+        assert!(!kc.prev_hist.is_empty(), "{:?} observed previous batches", kc.kind);
+        let m = measure_shards(kc, DtypeTag::Bf16, &kc.prev_hist);
+        for i in 0..m.ideal.len() {
+            assert!(m.per_shard_huffman[i] <= m.ideal[i] + 1e-12);
+            assert!(m.avg_codebook[i] <= m.per_shard_huffman[i] + 1e-12);
+            assert!(m.kl_from_avg[i].is_finite() && m.kl_from_avg[i] >= 0.0);
+        }
+        // real bf16 training tensors are meaningfully compressible
+        let mean_ideal = m.ideal.iter().sum::<f64>() / m.ideal.len() as f64;
+        assert!(mean_ideal > 0.05, "{:?}: ideal {mean_ideal}", kc.kind);
+    }
+}
+
+#[test]
+fn kernel_histogram_agrees_with_stats_on_real_taps() {
+    let Some(engine) = engine_or_skip() else { return };
+    if !artifacts_dir().join("kernels_manifest.txt").exists() {
+        return;
+    }
+    let kr = KernelRunner::load(&engine, None).unwrap();
+    let spec = CaptureSpec { steps: 2, observe_from: 0, ..CaptureSpec::tiny() };
+    let cap = capture(&engine, &spec).unwrap();
+    let kc = cap.kind(TensorKind::Ffn1Act);
+    // concatenate shard streams into one buffer spanning chunks
+    let mut data = Vec::new();
+    for s in &kc.shards {
+        data.extend(sshuff::tensors::shard_symbols(s, DtypeTag::Bf16));
+    }
+    let via_kernel = kr.histogram(&data).unwrap();
+    let native = Histogram256::from_bytes(&data);
+    assert_eq!(via_kernel.counts, native.counts);
+}
+
+#[test]
+fn kernel_encode_index_drives_bit_exact_pack() {
+    // encode one full kernel chunk using the Pallas offsets + rust bitio
+    // pack, compare against the scalar encoder output bit for bit.
+    let Some(engine) = engine_or_skip() else { return };
+    if !artifacts_dir().join("kernels_manifest.txt").exists() {
+        return;
+    }
+    let kr = KernelRunner::load(&engine, None).unwrap();
+    let tap = sshuff::trainer::synthetic::synthetic_tap(TensorKind::Ffn1Act, 1, 128, kr.kernel_n / 256, 9);
+    let mut data = sshuff::tensors::shard_symbols(&tap, DtypeTag::Bf16);
+    data.truncate(kr.kernel_n);
+    assert_eq!(data.len(), kr.kernel_n);
+    let mut counts = Histogram256::from_bytes(&data).counts;
+    for c in counts.iter_mut() {
+        *c += 1; // full support
+    }
+    let book = CodeBook::from_counts(&counts).unwrap();
+    let (codes, lens, offsets, total) = kr.encode_index(&data, &book).unwrap();
+
+    // rust-side scatter using the kernel's offsets
+    let mut w = sshuff::bitio::BitWriter::with_capacity((total as usize + 7) / 8);
+    for i in 0..data.len() {
+        debug_assert_eq!(offsets[i] as u64, w.bit_len());
+        w.put_bits(codes[i] as u64, lens[i] as u32);
+    }
+    let via_kernel = w.finish();
+    let (via_scalar, bits) = book.encode(&data);
+    assert_eq!(total as u64, bits);
+    assert_eq!(via_kernel, via_scalar, "kernel-offset pack == scalar encode");
+}
+
+#[test]
+fn codebook_eval_kernel_selects_same_book_as_rust() {
+    let Some(engine) = engine_or_skip() else { return };
+    if !artifacts_dir().join("kernels_manifest.txt").exists() {
+        return;
+    }
+    let kr = KernelRunner::load(&engine, None).unwrap();
+    use sshuff::singlestage::{select_codebook, AvgPolicy, CodebookManager};
+    use sshuff::tensors::TensorKey;
+
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let kinds = [TensorKind::Ffn1Act, TensorKind::Ffn1WGrad];
+    for (i, &k) in kinds.iter().enumerate() {
+        let key = TensorKey::new(k, DtypeTag::Bf16);
+        let tap = sshuff::trainer::synthetic::synthetic_tap(k, 1, 64, 256, i as u64);
+        mgr.observe_bytes(key, &sshuff::tensors::shard_symbols(&tap, DtypeTag::Bf16));
+        mgr.build(key).unwrap();
+    }
+    // pad candidate set to kernel K with copies of book 0
+    let mut tables: Vec<[u8; 256]> = Vec::new();
+    let mut cands: Vec<u8> = Vec::new();
+    for id in mgr.registry.ids() {
+        cands.push(id);
+        tables.push(mgr.registry.get(id).unwrap().book.lengths);
+    }
+    while tables.len() < kr.kernel_k {
+        tables.push(tables[0]);
+    }
+
+    let tap = sshuff::trainer::synthetic::synthetic_tap(TensorKind::Ffn1WGrad, 1, 256, 256, 77);
+    let mut data = sshuff::tensors::shard_symbols(&tap, DtypeTag::Bf16);
+    data.truncate((data.len() / kr.kernel_n) * kr.kernel_n);
+    let bits = kr.codebook_eval(&data, &tables).unwrap();
+    let kernel_best = cands[bits[..cands.len()]
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, &b)| b)
+        .unwrap()
+        .0];
+    let hist = Histogram256::from_bytes(&data);
+    let (rust_best, _) = select_codebook(&hist, &mgr.registry, &cands);
+    assert_eq!(kernel_best, rust_best, "kernel and rust pick the same codebook");
+}

@@ -1,0 +1,196 @@
+//! Cross-module property tests (proptest_lite): the invariants DESIGN.md
+//! §6 calls out, exercised end-to-end rather than per module.
+
+use sshuff::baselines::{Codec, DeflateCodec, RawCodec, SingleStageCodec, ThreeStage, ZstdCodec};
+use sshuff::huffman::{CodeBook, MAX_CODE_LEN};
+use sshuff::proptest_lite::{gens, shrinks, Runner};
+use sshuff::singlestage::{AvgPolicy, CodebookManager, Frame, SingleStageDecoder, SingleStageEncoder};
+use sshuff::stats::Histogram256;
+use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
+
+fn trained_registry(seed: u64) -> (sshuff::singlestage::Registry, u8) {
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+    let mut rng = sshuff::prng::Pcg32::new(seed);
+    mgr.observe_bytes(key, &gens::bytes_skewed(&mut rng, 1 << 15));
+    let id = mgr.build(key).unwrap();
+    (mgr.registry, id)
+}
+
+#[test]
+fn prop_every_codec_is_lossless_on_adversarial_streams() {
+    let (reg, id) = trained_registry(1);
+    let codecs: Vec<Box<dyn Codec>> = vec![
+        Box::new(RawCodec),
+        Box::new(ThreeStage),
+        Box::new(DeflateCodec::default()),
+        Box::new(ZstdCodec::default()),
+        Box::new(SingleStageCodec::with_fixed(reg, id)),
+    ];
+    // adversarial: tiny alphabets, repeated runs, empty, full-range
+    Runner::new("xcodec-lossless-smallalpha", 40).run(
+        |rng| {
+            let k = 1 + rng.gen_range(4);
+            gens::bytes_small_alphabet(rng, 4096, k)
+        },
+        shrinks::vec_u8,
+        |data| {
+            for c in &codecs {
+                let back = c.decode(&c.encode(data)).map_err(|e| format!("{}: {e}", c.name()))?;
+                if &back != data {
+                    return Err(format!("{} not lossless", c.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_single_stage_bounded_overhead_and_lossless() {
+    // For ANY input (arbitrary distribution mismatch), wire size is
+    // bounded by raw + header, and decode is exact.
+    let (reg, id) = trained_registry(2);
+    Runner::new("ss-bounded", 80).run(
+        |rng| gens::bytes(rng, 1 << 13),
+        shrinks::vec_u8,
+        |data| {
+            let mut enc = SingleStageEncoder::new(reg.clone());
+            let dec = SingleStageDecoder::new(reg.clone());
+            let frame = enc.encode_best(&[id], data);
+            if frame.wire_bytes() > data.len() + sshuff::singlestage::frame::HEADER_BYTES {
+                return Err(format!("overhead: {} vs {}", frame.wire_bytes(), data.len()));
+            }
+            let back = dec.decode(&frame).map_err(|e| e.to_string())?;
+            if &back != data {
+                return Err("not lossless".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_huffman_beats_or_ties_fixed_codebook_everywhere() {
+    // per-shard Huffman is optimal for the shard; any fixed codebook can
+    // only match it (equality iff distributions align)
+    let (reg, id) = trained_registry(3);
+    Runner::new("huffman-optimal-vs-fixed", 60).run(
+        |rng| gens::bytes_skewed(rng, 1 << 13),
+        shrinks::vec_u8,
+        |data| {
+            if data.is_empty() {
+                return Ok(());
+            }
+            let h = Histogram256::from_bytes(data);
+            let own = CodeBook::from_counts(&h.counts).unwrap();
+            let own_bits = own.encoded_bits_for(&h).unwrap();
+            let fixed = &reg.get(id).unwrap().book;
+            if let Some(fixed_bits) = fixed.encoded_bits_for(&h) {
+                if fixed_bits < own_bits {
+                    return Err(format!("fixed {fixed_bits} beat per-shard {own_bits}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_package_merge_kraft_and_cap_on_adversarial_histograms() {
+    Runner::new("pm-kraft", 120).run(
+        |rng| {
+            // heavy-tail counts force the length limiter to engage
+            let mut h = [0u64; 256];
+            let n = 2 + rng.gen_range(255) as usize;
+            let mut w = 1u64;
+            for bin in h.iter_mut().take(n) {
+                *bin = w;
+                w = w.saturating_mul(1 + rng.gen_range(3) as u64).max(1);
+            }
+            h
+        },
+        shrinks::histogram,
+        |h| {
+            let Some(cb) = CodeBook::from_counts(h) else { return Ok(()) };
+            if cb.max_len() > MAX_CODE_LEN {
+                return Err(format!("cap violated: {}", cb.max_len()));
+            }
+            if cb.support() >= 2 && cb.kraft_scaled() != (1u64 << cb.max_len()) {
+                return Err("kraft inequality strict".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_frame_parse_never_panics_on_corruption() {
+    let (reg, id) = trained_registry(4);
+    Runner::new("frame-fuzz", 100).run(
+        |rng| {
+            let mut enc = SingleStageEncoder::new(reg.clone());
+            let data = gens::bytes_skewed(rng, 2048);
+            let mut wire = enc.encode_with(id, &data).to_bytes();
+            // corrupt up to 4 random bytes (possibly the header)
+            for _ in 0..=rng.gen_range(4) {
+                if wire.is_empty() {
+                    break;
+                }
+                let i = rng.gen_range(wire.len() as u32) as usize;
+                wire[i] ^= 1 << rng.gen_range(8);
+            }
+            wire
+        },
+        shrinks::vec_u8,
+        |wire| {
+            // must never panic; errors are fine, successes must be
+            // internally consistent
+            match Frame::parse(wire) {
+                Err(_) => Ok(()),
+                Ok(frame) => {
+                    let dec = SingleStageDecoder::new(reg.clone());
+                    // decode of a corrupted-but-parseable frame may fail
+                    // (unknown id) or succeed with garbage — either is
+                    // acceptable; panics are not. Symbol count guards the
+                    // read loop, and the decoder LUT is total.
+                    let _ = dec.decode(&frame);
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_collectives_sum_preserved_under_compression() {
+    use sshuff::collectives::{all_reduce, all_reduce_reference};
+    use sshuff::fabric::{Fabric, LinkModel};
+    Runner::new("allreduce-exact", 25).run(
+        |rng| {
+            let n = 2 + rng.gen_range(6) as usize;
+            let len = 1 + rng.gen_range(500) as usize;
+            (0..n)
+                .map(|r| {
+                    let mut sub = sshuff::prng::Pcg32::substream(rng.next_u64(), r as u64);
+                    sub.normal_f32s(len, 1.0)
+                })
+                .collect::<Vec<Vec<f32>>>()
+        },
+        |_v| Vec::new(), // shrinking whole worker sets isn't meaningful
+        |inputs| {
+            let n = inputs.len();
+            let want = all_reduce_reference(inputs);
+            for codec in [&RawCodec as &dyn Codec, &ThreeStage] {
+                let mut fabric = Fabric::new(n, LinkModel::DIE_TO_DIE);
+                let (out, _) = all_reduce(&mut fabric, codec, inputs);
+                for (r, got) in out.iter().enumerate() {
+                    if got != &want {
+                        return Err(format!("{} rank {r} mismatch", codec.name()));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
