@@ -8,7 +8,7 @@
 //! cargo run --release --example collective_compression -- [--elems N]
 //! ```
 
-use sshuff::baselines::{Codec, DeflateCodec, RawCodec, SingleStageCodec, ThreeStage, ZstdCodec};
+use sshuff::baselines::{Codec, Lz77Codec, RawCodec, SingleStageCodec, ThreeStage};
 use sshuff::collectives::all_reduce;
 use sshuff::fabric::{Fabric, LinkModel};
 use sshuff::prng::Pcg32;
@@ -45,8 +45,7 @@ fn main() -> sshuff::Result<()> {
     let codecs: Vec<Box<dyn Codec>> = vec![
         Box::new(RawCodec),
         Box::new(ThreeStage),
-        Box::new(DeflateCodec::default()),
-        Box::new(ZstdCodec::default()),
+        Box::new(Lz77Codec),
         Box::new(SingleStageCodec::with_fixed(mgr.registry.clone(), id)),
     ];
 

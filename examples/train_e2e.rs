@@ -52,13 +52,13 @@ fn main() -> sshuff::Result<()> {
     if argv.first().map(|s| s.as_str()) != Some("run") {
         argv.insert(0, "run".to_string());
     }
-    let args = cli.parse(&argv).map_err(anyhow::Error::msg)?;
+    let args = cli.parse(&argv).map_err(sshuff::error::Error::msg)?;
     let model = args.opt_or("model", "tiny").to_string();
-    let steps: usize = args.opt_parse("steps", 300).map_err(anyhow::Error::msg)?;
-    let workers: usize = args.opt_parse("workers", 4).map_err(anyhow::Error::msg)?;
-    let n_shards: usize = args.opt_parse("shards", 8).map_err(anyhow::Error::msg)?;
-    let rebuild_every: usize = args.opt_parse("rebuild-every", 25).map_err(anyhow::Error::msg)?;
-    let seed: u64 = args.opt_parse("seed", 42).map_err(anyhow::Error::msg)?;
+    let steps: usize = args.opt_parse("steps", 300).map_err(sshuff::error::Error::msg)?;
+    let workers: usize = args.opt_parse("workers", 4).map_err(sshuff::error::Error::msg)?;
+    let n_shards: usize = args.opt_parse("shards", 8).map_err(sshuff::error::Error::msg)?;
+    let rebuild_every: usize = args.opt_parse("rebuild-every", 25).map_err(sshuff::error::Error::msg)?;
+    let seed: u64 = args.opt_parse("seed", 42).map_err(sshuff::error::Error::msg)?;
 
     let engine = Engine::cpu()?;
     println!("platform {} | model {model} | {steps} steps | {workers} workers | {n_shards} shards", engine.platform());

@@ -6,7 +6,7 @@
 //! wire bytes, bandwidth gain, simulated completion time on die-to-die
 //! and datacenter links, plus encoder wall cost per hop.
 
-use sshuff::baselines::{Codec, DeflateCodec, RawCodec, SingleStageCodec, ThreeStage, ZstdCodec};
+use sshuff::baselines::{Codec, Lz77Codec, RawCodec, SingleStageCodec, ThreeStage};
 use sshuff::benchkit::Table;
 use sshuff::collectives::all_reduce;
 use sshuff::fabric::{Fabric, LinkModel};
@@ -41,8 +41,7 @@ fn main() {
     let codecs: Vec<Box<dyn Codec>> = vec![
         Box::new(RawCodec),
         Box::new(ThreeStage),
-        Box::new(DeflateCodec::default()),
-        Box::new(ZstdCodec::default()),
+        Box::new(Lz77Codec),
         Box::new(SingleStageCodec::with_fixed(mgr.registry.clone(), id)),
     ];
 
@@ -93,8 +92,7 @@ fn main() {
     let codecs16: Vec<Box<dyn Codec>> = vec![
         Box::new(RawCodec),
         Box::new(ThreeStage),
-        Box::new(DeflateCodec::default()),
-        Box::new(ZstdCodec::default()),
+        Box::new(Lz77Codec),
         Box::new(SingleStageCodec::with_fixed(mgr16.registry.clone(), id16)),
     ];
     let mut table = Table::new(&["codec", "wire MB", "gain", "sim ms", "vs raw"]);

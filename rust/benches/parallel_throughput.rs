@@ -1,0 +1,112 @@
+//! Tentpole bench: parallel chunked encode/decode throughput vs the
+//! serial hot loop.
+//!
+//! A single-stage encode of a large shard is one sequential bit-packing
+//! pass; `parallel::EncoderPool` splits the shard into 64 KiB chunks and
+//! encodes them concurrently into a `MultiFrame`. This bench measures
+//! GB/s at 1/2/4/8 threads against the serial `CodeBook::encode`
+//! baseline on a synthetic bf16 FFN1-activation stream (the acceptance
+//! target is >= 3x serial at 8 threads on an 8-core box).
+//!
+//! ```bash
+//! cargo bench --bench parallel_throughput            # 32 MiB stream
+//! SSHUFF_BENCH_MB=128 cargo bench --bench parallel_throughput
+//! ```
+
+use sshuff::benchkit::{black_box, Bench, Table};
+use sshuff::parallel::{EncoderPool, DEFAULT_CHUNK_LEN};
+use sshuff::singlestage::{AvgPolicy, CodebookManager};
+use sshuff::tensors::{shard_symbols, DtypeTag, TensorKey, TensorKind};
+use sshuff::trainer::synthetic::synthetic_tap;
+
+fn main() {
+    let mb: usize = std::env::var("SSHUFF_BENCH_MB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+
+    // fixed codebook from "previous batches"
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    for b in 0..4 {
+        let tap = synthetic_tap(TensorKind::Ffn1Act, 1, 256, 256, b);
+        mgr.observe_bytes(key, &shard_symbols(&tap, DtypeTag::Bf16));
+    }
+    let id = mgr.build(key).unwrap();
+    let registry = mgr.registry.clone();
+    let book = &registry.get(id).unwrap().book;
+
+    // one big activation stream (2 symbol bytes per bf16 value)
+    let n_vals = mb * 1_000_000 / 2;
+    let rows = 1024;
+    let tap = synthetic_tap(TensorKind::Ffn1Act, 1, rows, n_vals / rows, 99);
+    let data = shard_symbols(&tap, DtypeTag::Bf16);
+    let nbytes = data.len() as u64;
+    println!(
+        "parallel chunked encode vs serial — {:.1} MB stream, {} B chunks, {} cores available\n",
+        nbytes as f64 / 1e6,
+        DEFAULT_CHUNK_LEN,
+        EncoderPool::auto().threads()
+    );
+
+    let bench = Bench::quick();
+
+    // serial baseline: the raw single-pass encoder (no framing at all)
+    let m_serial = bench.run("serial CodeBook::encode", nbytes, || black_box(book.encode(&data)));
+    let (payload, _) = book.encode(&data);
+
+    let mut table = Table::new(&[
+        "path", "threads", "enc GB/s", "enc speedup", "dec GB/s", "dec speedup", "wire MB",
+    ]);
+    table.row(&[
+        "serial encode".into(),
+        "1".into(),
+        format!("{:.3}", m_serial.throughput_mbps() / 1e3),
+        "1.00x".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.3}", (payload.len() + 5) as f64 / 1e6),
+    ]);
+
+    // serial decode baseline
+    let decoder = &registry.get(id).unwrap().decoder;
+    let m_sdec =
+        bench.run("serial decode", nbytes, || black_box(decoder.decode(&payload, data.len())));
+
+    let mut enc1 = 0.0f64;
+    let mut dec1 = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let pool = EncoderPool::new(threads);
+        let m_enc = bench.run(&format!("pool encode x{threads}"), nbytes, || {
+            black_box(pool.encode(&registry, id, &data, DEFAULT_CHUNK_LEN))
+        });
+        let mf = pool.encode(&registry, id, &data, DEFAULT_CHUNK_LEN);
+        assert_eq!(pool.decode(&registry, &mf).unwrap(), data, "lossless at {threads} threads");
+        let m_dec = bench.run(&format!("pool decode x{threads}"), nbytes, || {
+            black_box(pool.decode(&registry, &mf).unwrap())
+        });
+        let enc_gbps = m_enc.throughput_mbps() / 1e3;
+        let dec_gbps = m_dec.throughput_mbps() / 1e3;
+        if threads == 1 {
+            enc1 = enc_gbps;
+            dec1 = dec_gbps;
+        }
+        table.row(&[
+            "chunked pool".into(),
+            threads.to_string(),
+            format!("{enc_gbps:.3}"),
+            format!("{:.2}x", enc_gbps / (m_serial.throughput_mbps() / 1e3)),
+            format!("{dec_gbps:.3}"),
+            format!("{:.2}x", dec_gbps / (m_sdec.throughput_mbps() / 1e3)),
+            format!("{:.3}", mf.wire_bytes() as f64 / 1e6),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "1-thread chunked vs serial shows the framing overhead (should be ~1x: {enc1:.3} vs \
+         {:.3} GB/s enc, {dec1:.3} vs {:.3} GB/s dec);",
+        m_serial.throughput_mbps() / 1e3,
+        m_sdec.throughput_mbps() / 1e3,
+    );
+    println!("the 8-thread row is the acceptance line: >= 3x serial encode on an 8-core box.");
+}

@@ -2,17 +2,18 @@
 //!
 //! The paper's comparator is the classic **three-stage Huffman encoder**
 //! (scan → frequency table, Huffman algorithm → codebook, scan → encode,
-//! codebook transmitted with the data). Deflate [paper ref 2] and
-//! Zstandard [ref 11] are included as the general-purpose entropy-coder
-//! baselines the paper cites. All of them — and the single-stage engine —
+//! codebook transmitted with the data). [`Lz77Codec`] is the
+//! general-purpose dictionary-coder arm standing in for the deflate /
+//! zstd comparators the paper cites (neither links in the
+//! zero-dependency build). All of them — and the single-stage engine —
 //! implement [`Codec`], the pluggable compression hook used by the
 //! collectives and the coordinator.
 
 use crate::huffman::CodeBook;
-use crate::singlestage::{Registry, SingleStageDecoder, SingleStageEncoder};
+use crate::parallel::EncoderPool;
+use crate::singlestage::{MultiFrame, Registry};
 use crate::stats::{Histogram256, NUM_SYMBOLS};
-use byteorder::{ByteOrder, LittleEndian};
-use std::io::{Read, Write};
+use std::collections::HashMap;
 
 /// A lossless byte-stream compressor. `decode(encode(x)) == x` for all x.
 pub trait Codec: Send + Sync {
@@ -85,9 +86,7 @@ impl Codec for ThreeStage {
             if coded_len < 5 + data.len() {
                 let mut out = Vec::with_capacity(coded_len);
                 out.push(0u8);
-                let mut n = [0u8; 4];
-                LittleEndian::write_u32(&mut n, data.len() as u32);
-                out.extend_from_slice(&n);
+                out.extend_from_slice(&(data.len() as u32).to_le_bytes());
                 out.extend_from_slice(&book.pack_lengths());
                 out.extend_from_slice(&payload);
                 return out;
@@ -96,92 +95,158 @@ impl Codec for ThreeStage {
         // raw escape (empty or incompressible input)
         let mut out = Vec::with_capacity(5 + data.len());
         out.push(1u8);
-        let mut n = [0u8; 4];
-        LittleEndian::write_u32(&mut n, data.len() as u32);
-        out.extend_from_slice(&n);
+        out.extend_from_slice(&(data.len() as u32).to_le_bytes());
         out.extend_from_slice(data);
         out
     }
 
     fn decode(&self, wire: &[u8]) -> crate::Result<Vec<u8>> {
         if wire.len() < 5 {
-            anyhow::bail!("three-stage frame too short");
+            crate::error::bail!("three-stage frame too short");
         }
         let flag = wire[0];
-        let n_symbols = LittleEndian::read_u32(&wire[1..5]) as usize;
+        let n_symbols = u32::from_le_bytes(wire[1..5].try_into().unwrap()) as usize;
         match flag {
             1 => {
                 let payload = &wire[5..];
                 if payload.len() != n_symbols {
-                    anyhow::bail!("raw escape length mismatch");
+                    crate::error::bail!("raw escape length mismatch");
                 }
                 Ok(payload.to_vec())
             }
             0 => {
                 if wire.len() < THREE_STAGE_HEADER_BYTES {
-                    anyhow::bail!("coded frame missing codebook");
+                    crate::error::bail!("coded frame missing codebook");
                 }
+                let payload = &wire[THREE_STAGE_HEADER_BYTES..];
+                // >= 1 bit per symbol bounds any valid frame
+                crate::error::ensure!(
+                    n_symbols as u64 <= payload.len() as u64 * 8,
+                    "coded frame claims {n_symbols} symbols in {} payload bytes",
+                    payload.len()
+                );
                 let mut packed = [0u8; NUM_SYMBOLS / 2];
                 packed.copy_from_slice(&wire[5..THREE_STAGE_HEADER_BYTES]);
                 let book = CodeBook::unpack_lengths(&packed);
-                Ok(book.decoder().decode(&wire[THREE_STAGE_HEADER_BYTES..], n_symbols))
+                Ok(book.decoder().decode(payload, n_symbols))
             }
-            f => anyhow::bail!("unknown three-stage flag {f}"),
+            f => crate::error::bail!("unknown three-stage flag {f}"),
         }
     }
 }
 
-// ----------------------------------------------------- deflate/zstd refs
+// ------------------------------------------------------ lz77 reference
 
-/// DEFLATE via flate2 (paper ref [2]).
-pub struct DeflateCodec {
-    pub level: u32,
-}
+/// Minimum back-reference length the LZ77 baseline emits.
+const LZ_MIN_MATCH: usize = 4;
+/// Per-token length/distance cap (u16 fields on the wire).
+const LZ_MAX_LEN: usize = u16::MAX as usize;
+const LZ_MAX_DIST: usize = u16::MAX as usize;
 
-impl Default for DeflateCodec {
-    fn default() -> Self {
-        Self { level: 6 }
+/// Pure-rust LZ77 dictionary coder — the general-purpose baseline arm
+/// standing in for the deflate/zstd comparators the paper cites (the
+/// zero-dependency build links neither; an in-crate LZ keeps the
+/// "dictionary coder vs entropy coder" comparison available offline).
+///
+/// Wire format, a sequence of ops:
+/// ```text
+/// [0x00][len u16 LE][len literal bytes]      literal run
+/// [0x01][len u16 LE][dist u16 LE]            back-reference (len >= 4)
+/// ```
+/// Greedy matching over a 4-byte-prefix hash table; decode copies
+/// byte-by-byte so overlapping matches (RLE-style) work.
+#[derive(Default)]
+pub struct Lz77Codec;
+
+impl Lz77Codec {
+    fn flush_literals(out: &mut Vec<u8>, lits: &[u8]) {
+        for run in lits.chunks(LZ_MAX_LEN) {
+            out.push(0);
+            out.extend_from_slice(&(run.len() as u16).to_le_bytes());
+            out.extend_from_slice(run);
+        }
     }
 }
 
-impl Codec for DeflateCodec {
+impl Codec for Lz77Codec {
     fn name(&self) -> &'static str {
-        "deflate"
+        "lz77"
     }
+
     fn encode(&self, data: &[u8]) -> Vec<u8> {
-        let mut enc =
-            flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::new(self.level));
-        enc.write_all(data).expect("in-memory deflate");
-        enc.finish().expect("in-memory deflate finish")
+        let mut out = Vec::with_capacity(data.len() / 2 + 16);
+        let mut table: HashMap<[u8; 4], usize> = HashMap::new();
+        let mut lit_start = 0usize;
+        let mut pos = 0usize;
+        while pos + LZ_MIN_MATCH <= data.len() {
+            let key: [u8; 4] = data[pos..pos + 4].try_into().unwrap();
+            let prev = table.insert(key, pos);
+            match prev {
+                Some(p) if pos - p <= LZ_MAX_DIST => {
+                    let dist = pos - p;
+                    let max = (data.len() - pos).min(LZ_MAX_LEN);
+                    let mut len = LZ_MIN_MATCH;
+                    while len < max && data[p + len] == data[pos + len] {
+                        len += 1;
+                    }
+                    Self::flush_literals(&mut out, &data[lit_start..pos]);
+                    out.push(1);
+                    out.extend_from_slice(&(len as u16).to_le_bytes());
+                    out.extend_from_slice(&(dist as u16).to_le_bytes());
+                    // index the covered positions so later matches see them
+                    let end = pos + len;
+                    pos += 1;
+                    while pos < end && pos + 4 <= data.len() {
+                        let k: [u8; 4] = data[pos..pos + 4].try_into().unwrap();
+                        table.insert(k, pos);
+                        pos += 1;
+                    }
+                    pos = end;
+                    lit_start = end;
+                }
+                _ => pos += 1,
+            }
+        }
+        Self::flush_literals(&mut out, &data[lit_start..]);
+        out
     }
+
     fn decode(&self, wire: &[u8]) -> crate::Result<Vec<u8>> {
-        let mut out = Vec::new();
-        flate2::read::DeflateDecoder::new(wire).read_to_end(&mut out)?;
+        let mut out = Vec::with_capacity(wire.len() * 2);
+        let mut at = 0usize;
+        while at < wire.len() {
+            let op = wire[at];
+            at += 1;
+            crate::error::ensure!(wire.len() - at >= 2, "lz77: truncated length");
+            let len = u16::from_le_bytes(wire[at..at + 2].try_into().unwrap()) as usize;
+            at += 2;
+            match op {
+                0 => {
+                    crate::error::ensure!(len >= 1, "lz77: empty literal run");
+                    crate::error::ensure!(wire.len() - at >= len, "lz77: truncated literals");
+                    out.extend_from_slice(&wire[at..at + len]);
+                    at += len;
+                }
+                1 => {
+                    crate::error::ensure!(wire.len() - at >= 2, "lz77: truncated distance");
+                    let dist = u16::from_le_bytes(wire[at..at + 2].try_into().unwrap()) as usize;
+                    at += 2;
+                    crate::error::ensure!(
+                        dist >= 1 && dist <= out.len(),
+                        "lz77: bad distance {dist} at output {}",
+                        out.len()
+                    );
+                    crate::error::ensure!(len >= LZ_MIN_MATCH, "lz77: short match {len}");
+                    let start = out.len() - dist;
+                    for i in 0..len {
+                        let b = out[start + i];
+                        out.push(b);
+                    }
+                }
+                f => crate::error::bail!("lz77: unknown op {f}"),
+            }
+        }
         Ok(out)
-    }
-}
-
-/// Zstandard (paper ref [11]).
-pub struct ZstdCodec {
-    pub level: i32,
-}
-
-impl Default for ZstdCodec {
-    fn default() -> Self {
-        Self { level: 3 }
-    }
-}
-
-impl Codec for ZstdCodec {
-    fn name(&self) -> &'static str {
-        "zstd"
-    }
-    fn encode(&self, data: &[u8]) -> Vec<u8> {
-        zstd::bulk::compress(data, self.level).expect("in-memory zstd")
-    }
-    fn decode(&self, wire: &[u8]) -> crate::Result<Vec<u8>> {
-        // capacity hint: compressed collective chunks stay < 256 MiB
-        Ok(zstd::bulk::decompress(wire, 1 << 28)?)
     }
 }
 
@@ -190,22 +255,52 @@ impl Codec for ZstdCodec {
 /// The paper's engine behind the same [`Codec`] interface, for drop-in
 /// comparison in the collectives and benches. Stateless per call: the
 /// registry is pre-shared, exactly like deployed nodes.
+///
+/// Encoding is the **parallel chunked path by default**: a payload is
+/// split into `ceil(len / chunk_len)` near-equal chunks (`chunk_len`
+/// defaults to 64 KiB and acts as the chunk-size ceiling — see
+/// `collectives::chunk_bounds`), encoded concurrently on an
+/// [`EncoderPool`] scoped thread pool, and stitched into a
+/// [`MultiFrame`] container. The wire bytes depend only on the
+/// chunking, never on the thread count.
 pub struct SingleStageCodec {
     registry: Registry,
     /// Candidate codebook ids; 1 candidate = pure single-pass encode,
-    /// >1 = paper-§4 parallel evaluation + best-id selection.
+    /// >1 = paper-§4 parallel evaluation + best-id selection per chunk.
     candidates: Vec<u8>,
+    pool: EncoderPool,
+    chunk_len: usize,
 }
 
 impl SingleStageCodec {
     pub fn new(registry: Registry, candidates: Vec<u8>) -> Self {
         assert!(!candidates.is_empty());
-        Self { registry, candidates }
+        Self {
+            registry,
+            candidates,
+            pool: EncoderPool::auto(),
+            chunk_len: crate::parallel::DEFAULT_CHUNK_LEN,
+        }
     }
 
     /// Single fixed codebook (the latency-optimal configuration).
     pub fn with_fixed(registry: Registry, id: u8) -> Self {
         Self::new(registry, vec![id])
+    }
+
+    /// Override the encoder thread count (default: all cores).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.pool = EncoderPool::new(threads);
+        self
+    }
+
+    /// Override the chunk length (default 64 KiB; must fit u32 symbol
+    /// counts). Changes the wire bytes (chunking is part of the
+    /// format), unlike the thread count.
+    pub fn with_chunk_len(mut self, chunk_len: usize) -> Self {
+        assert!(chunk_len > 0 && chunk_len <= u32::MAX as usize);
+        self.chunk_len = chunk_len;
+        self
     }
 }
 
@@ -214,27 +309,21 @@ impl Codec for SingleStageCodec {
         "huffman-1stage"
     }
     fn encode(&self, data: &[u8]) -> Vec<u8> {
-        let mut enc = SingleStageEncoder::new(self.registry.clone());
-        let frame = if self.candidates.len() == 1 {
-            enc.encode_with(self.candidates[0], data)
+        let mf: MultiFrame = if self.candidates.len() == 1 {
+            self.pool.encode(&self.registry, self.candidates[0], data, self.chunk_len)
         } else {
-            enc.encode_best(&self.candidates, data)
+            self.pool.encode_best(&self.registry, &self.candidates, data, self.chunk_len)
         };
-        frame.to_bytes()
+        mf.to_bytes()
     }
     fn decode(&self, wire: &[u8]) -> crate::Result<Vec<u8>> {
-        SingleStageDecoder::new(self.registry.clone()).decode_bytes(wire)
+        self.pool.decode_bytes(&self.registry, wire)
     }
 }
 
 /// All baseline codecs (for sweep benches), boxed.
 pub fn baseline_codecs() -> Vec<Box<dyn Codec>> {
-    vec![
-        Box::new(RawCodec),
-        Box::new(ThreeStage),
-        Box::new(DeflateCodec::default()),
-        Box::new(ZstdCodec::default()),
-    ]
+    vec![Box::new(RawCodec), Box::new(ThreeStage), Box::new(Lz77Codec)]
 }
 
 #[cfg(test)]
@@ -349,9 +438,9 @@ mod tests {
     }
 
     #[test]
-    fn deflate_zstd_sanity() {
+    fn lz77_sanity() {
         let data = vec![7u8; 10_000];
-        for c in [&DeflateCodec::default() as &dyn Codec, &ZstdCodec::default()] {
+        for c in [&Lz77Codec as &dyn Codec] {
             let wire = c.encode(&data);
             assert!(wire.len() < 200, "{}: {}", c.name(), wire.len());
             assert_eq!(c.decode(&wire).unwrap(), data);

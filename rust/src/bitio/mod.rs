@@ -100,12 +100,14 @@ impl<'a> BitReader<'a> {
         (self.acc >> (64 - len)) as u32
     }
 
-    /// Consume `len` bits.
+    /// Consume `len` bits. Consuming past the end of the stream is
+    /// allowed and consumes the zero padding (matching
+    /// [`peek_bits`](BitReader::peek_bits)) — corrupt inputs decode to
+    /// garbage rather than panicking.
     #[inline]
     pub fn consume(&mut self, len: u32) {
-        debug_assert!(len <= self.nbits, "consumed past refill window");
         self.acc <<= len;
-        self.nbits -= len;
+        self.nbits = self.nbits.saturating_sub(len);
         self.refill();
     }
 

@@ -10,7 +10,7 @@
 //!   3. intra-node ring all-gather.
 //!
 //! Each level takes its own [`Codec`] so the two compression points can
-//! be configured independently (e.g. single-stage on die-to-die, zstd
+//! be configured independently (e.g. single-stage on die-to-die, LZ77
 //! on the datacenter links).
 
 use super::{all_gather, all_reduce, reduce_scatter, CollectiveReport};

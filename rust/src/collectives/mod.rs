@@ -12,6 +12,12 @@
 //! through the codec, and accounts the *encoded* size on the fabric.
 //! Decoding is exact (codecs are lossless), so the collective result is
 //! bit-identical to the uncompressed run — asserted by tests.
+//!
+//! The default single-stage arm (`baselines::SingleStageCodec`) is the
+//! **parallel chunked engine**: each hop's payload is split with
+//! [`chunk_bounds`] — the same splitter that partitions the ring — and
+//! encoded across cores by `crate::parallel::EncoderPool`, so large
+//! shards no longer serialize through one `CodeBook::encode` pass.
 
 use crate::baselines::Codec;
 use crate::fabric::Fabric;
@@ -365,7 +371,7 @@ pub fn all_to_all(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::{DeflateCodec, RawCodec, SingleStageCodec, ThreeStage};
+    use crate::baselines::{Lz77Codec, RawCodec, SingleStageCodec, ThreeStage};
     use crate::fabric::LinkModel;
     use crate::prng::Pcg32;
     use crate::singlestage::{AvgPolicy, CodebookManager};
@@ -413,7 +419,7 @@ mod tests {
         let xs = inputs(n, 256, 9);
         let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
         let (plain, _) = all_reduce(&mut f1, &RawCodec, &xs);
-        for codec in [&ThreeStage as &dyn Codec, &DeflateCodec::default()] {
+        for codec in [&ThreeStage as &dyn Codec, &Lz77Codec] {
             let mut f2 = Fabric::new(n, LinkModel::DIE_TO_DIE);
             let (compressed, rep) = all_reduce(&mut f2, codec, &xs);
             assert_eq!(compressed, plain, "{}", codec.name());

@@ -33,7 +33,7 @@ impl Config {
             }
             let (k, v) = line
                 .split_once('=')
-                .ok_or_else(|| anyhow::anyhow!("line {}: expected 'key = value'", lineno + 1))?;
+                .ok_or_else(|| crate::error::anyhow!("line {}: expected 'key = value'", lineno + 1))?;
             let key = if section.is_empty() {
                 k.trim().to_string()
             } else {
@@ -69,7 +69,7 @@ impl Config {
             Some(s) => s
                 .parse::<T>()
                 .map(Some)
-                .map_err(|e| anyhow::anyhow!("config key '{key}' = '{s}': {e}")),
+                .map_err(|e| crate::error::anyhow!("config key '{key}' = '{s}': {e}")),
         }
     }
 
@@ -90,7 +90,7 @@ impl Config {
             None => Ok(default),
             Some("true") | Some("1") | Some("yes") => Ok(true),
             Some("false") | Some("0") | Some("no") => Ok(false),
-            Some(s) => anyhow::bail!("config key '{key}': '{s}' is not a bool"),
+            Some(s) => crate::error::bail!("config key '{key}': '{s}' is not a bool"),
         }
     }
 

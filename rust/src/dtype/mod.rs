@@ -10,7 +10,7 @@
 //! practice: a power-of-two per-tensor scale mapping the max |x| into
 //! the representable range.
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 // ------------------------------------------------------------- bfloat16
 
@@ -220,32 +220,34 @@ fn build_sorted_codes(fmt: MiniFormat) -> Vec<(f32, u8)> {
     v
 }
 
-static E4M3_DEC: Lazy<Vec<f32>> = Lazy::new(|| build_decode_table(MiniFormat::E4M3));
-static E3M2_DEC: Lazy<Vec<f32>> = Lazy::new(|| build_decode_table(MiniFormat::E3M2));
-static E2M3_DEC: Lazy<Vec<f32>> = Lazy::new(|| build_decode_table(MiniFormat::E2M3));
-static E2M1_DEC: Lazy<Vec<f32>> = Lazy::new(|| build_decode_table(MiniFormat::E2M1));
+static E4M3_DEC: OnceLock<Vec<f32>> = OnceLock::new();
+static E3M2_DEC: OnceLock<Vec<f32>> = OnceLock::new();
+static E2M3_DEC: OnceLock<Vec<f32>> = OnceLock::new();
+static E2M1_DEC: OnceLock<Vec<f32>> = OnceLock::new();
 
-static E4M3_SORT: Lazy<Vec<(f32, u8)>> = Lazy::new(|| build_sorted_codes(MiniFormat::E4M3));
-static E3M2_SORT: Lazy<Vec<(f32, u8)>> = Lazy::new(|| build_sorted_codes(MiniFormat::E3M2));
-static E2M3_SORT: Lazy<Vec<(f32, u8)>> = Lazy::new(|| build_sorted_codes(MiniFormat::E2M3));
-static E2M1_SORT: Lazy<Vec<(f32, u8)>> = Lazy::new(|| build_sorted_codes(MiniFormat::E2M1));
+static E4M3_SORT: OnceLock<Vec<(f32, u8)>> = OnceLock::new();
+static E3M2_SORT: OnceLock<Vec<(f32, u8)>> = OnceLock::new();
+static E2M3_SORT: OnceLock<Vec<(f32, u8)>> = OnceLock::new();
+static E2M1_SORT: OnceLock<Vec<(f32, u8)>> = OnceLock::new();
 
 fn decode_table(fmt: MiniFormat) -> &'static [f32] {
-    match fmt {
+    let cell = match fmt {
         MiniFormat::E4M3 => &E4M3_DEC,
         MiniFormat::E3M2 => &E3M2_DEC,
         MiniFormat::E2M3 => &E2M3_DEC,
         MiniFormat::E2M1 => &E2M1_DEC,
-    }
+    };
+    cell.get_or_init(|| build_decode_table(fmt))
 }
 
 fn sorted_codes(fmt: MiniFormat) -> &'static [(f32, u8)] {
-    match fmt {
+    let cell = match fmt {
         MiniFormat::E4M3 => &E4M3_SORT,
         MiniFormat::E3M2 => &E3M2_SORT,
         MiniFormat::E2M3 => &E2M3_SORT,
         MiniFormat::E2M1 => &E2M1_SORT,
-    }
+    };
+    cell.get_or_init(|| build_sorted_codes(fmt))
 }
 
 // ----------------------------------------------------- symbol extraction

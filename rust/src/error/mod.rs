@@ -1,0 +1,105 @@
+//! Minimal in-crate error type — the offline, zero-dependency build has
+//! no `anyhow`, so this module provides the exact subset the crate uses:
+//! a message-carrying [`Error`], the crate-wide `Result` alias (see
+//! `crate::Result`), and the `anyhow!` / `bail!` / `ensure!` macros,
+//! invoked crate-internally as `crate::error::anyhow!(..)` etc.
+
+/// A string-message error.
+///
+/// Deliberately does **not** implement `std::error::Error`: that keeps
+/// the blanket `From<E: std::error::Error>` conversion below from
+/// overlapping the reflexive `From<Error> for Error` impl (the same
+/// trick `anyhow::Error` uses).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (strings included).
+    pub fn msg(m: impl std::fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// Any standard error converts via its `Display` form, so `?` works on
+/// `std::io::Error`, parse errors, and the stubbed runtime's errors.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Construct an [`Error`] from a format string: `anyhow!("bad {x}")`.
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err` built from a format string.
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::error::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return an `Err` unless the condition holds.
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::error::bail!($($arg)*);
+        }
+    };
+}
+
+pub(crate) use {anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> crate::Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn display_and_debug_carry_the_message() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+    }
+
+    #[test]
+    fn macros_format_and_return() {
+        assert_eq!(anyhow!("x = {}", 3).to_string(), "x = 3");
+        assert_eq!(fails(false).unwrap(), 7);
+        assert_eq!(fails(true).unwrap_err().to_string(), "flag was true");
+        fn bails() -> crate::Result<()> {
+            bail!("stop {}", "now");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop now");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn parse(s: &str) -> crate::Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").unwrap_err().to_string().contains("invalid digit"));
+    }
+}

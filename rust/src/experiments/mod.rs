@@ -16,7 +16,6 @@ use crate::singlestage::{frame::HEADER_BYTES, SMOOTHING_EPS};
 use crate::stats::{compressibility, Histogram256, Pmf};
 use crate::tensors::{shard_symbols, DtypeTag, TensorKind};
 use crate::trainer::{shard_step, Trainer};
-use byteorder::{ByteOrder, LittleEndian};
 
 pub mod figures;
 
@@ -111,7 +110,7 @@ impl Capture {
 /// Train per `spec` and capture. See [`capture_cached`] for the cached
 /// variant every bench uses.
 pub fn capture(engine: &Engine, spec: &CaptureSpec) -> crate::Result<Capture> {
-    anyhow::ensure!(spec.steps >= 1 && spec.observe_from < spec.steps, "bad capture spec");
+    crate::error::ensure!(spec.steps >= 1 && spec.observe_from < spec.steps, "bad capture spec");
     let mut trainer = Trainer::new(engine, &spec.model, spec.seed)?;
     let mut prev_hists: HashMap<TensorKind, Histogram256> = HashMap::new();
     let mut final_sets = None;
@@ -170,10 +169,8 @@ fn save_capture(path: &PathBuf, c: &Capture) -> crate::Result<()> {
     std::fs::create_dir_all(path.parent().unwrap())?;
     let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
     w.write_all(CAPTURE_MAGIC)?;
-    let mut b8 = [0u8; 8];
-    let mut wr64 = |w: &mut dyn Write, v: u64| -> crate::Result<()> {
-        LittleEndian::write_u64(&mut b8, v);
-        w.write_all(&b8)?;
+    let wr64 = |w: &mut dyn Write, v: u64| -> crate::Result<()> {
+        w.write_all(&v.to_le_bytes())?;
         Ok(())
     };
     wr64(&mut w, c.loss_curve.len() as u64)?;
@@ -205,11 +202,11 @@ fn load_capture(path: &PathBuf, spec: &CaptureSpec) -> crate::Result<Capture> {
     let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == CAPTURE_MAGIC, "bad capture magic");
-    let mut b8 = [0u8; 8];
-    let mut rd64 = |r: &mut dyn Read| -> crate::Result<u64> {
+    crate::error::ensure!(&magic == CAPTURE_MAGIC, "bad capture magic");
+    let rd64 = |r: &mut dyn Read| -> crate::Result<u64> {
+        let mut b8 = [0u8; 8];
         r.read_exact(&mut b8)?;
-        Ok(LittleEndian::read_u64(&b8))
+        Ok(u64::from_le_bytes(b8))
     };
     let n_loss = rd64(&mut r)? as usize;
     let mut loss_curve = Vec::with_capacity(n_loss);

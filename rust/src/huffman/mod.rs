@@ -33,6 +33,20 @@ pub struct CodeBook {
 impl CodeBook {
     /// Build from a frequency table. Returns `None` for an all-zero
     /// histogram (nothing to code).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use sshuff::huffman::CodeBook;
+    /// use sshuff::stats::Histogram256;
+    ///
+    /// let data = b"abracadabra";
+    /// let hist = Histogram256::from_bytes(data);
+    /// let book = CodeBook::from_counts(&hist.counts).unwrap();
+    /// let (payload, bits) = book.encode(data);
+    /// assert_eq!(payload.len() as u64, (bits + 7) / 8);
+    /// assert_eq!(book.decoder().decode(&payload, data.len()), data.to_vec());
+    /// ```
     pub fn from_counts(counts: &[u64; NUM_SYMBOLS]) -> Option<CodeBook> {
         Self::from_counts_limited(counts, MAX_CODE_LEN)
     }
@@ -369,15 +383,24 @@ impl Decoder {
     }
 
     /// Decode exactly `n_symbols` symbols from the bit-packed payload.
+    pub fn decode(&self, payload: &[u8], n_symbols: usize) -> Vec<u8> {
+        let mut out = vec![0u8; n_symbols];
+        self.decode_into(payload, &mut out);
+        out
+    }
+
+    /// [`decode`](Decoder::decode) into a caller-provided slice — the
+    /// allocation-free form the parallel chunk decoder uses to write
+    /// each chunk straight into its slot of the output tensor.
     ///
     /// Hot path (§Perf): one unaligned big-endian u64 refill per FOUR
     /// symbols (4 × [`MAX_CODE_LEN`] = 48 ≤ the ≥ 57 bits a refill
     /// guarantees), each symbol then a shift + LUT hit. Overlapping
     /// refill bits are identical stream bits, so the OR is idempotent.
     /// The stream tail falls back to the general [`BitReader`].
-    pub fn decode(&self, payload: &[u8], n_symbols: usize) -> Vec<u8> {
+    pub fn decode_into(&self, payload: &[u8], out: &mut [u8]) {
         let ml = self.max_len;
-        let mut out = vec![0u8; n_symbols];
+        let n_symbols = out.len();
         let mut i = 0usize; // symbols decoded
         let mut acc: u64 = 0; // stream bits, left-aligned
         let mut nbits: u32 = 0; // bits of acc backed by consumed bytes
@@ -412,7 +435,6 @@ impl Decoder {
                 *slot = entry as u8;
             }
         }
-        out
     }
 
     /// Table bytes (for perf accounting).

@@ -19,8 +19,14 @@
 //!   ([`trainer`]) and the leader/worker coordinator ([`coordinator`]).
 //! * **L2/L1 (build-time python)** — a transformer train step with FFN
 //!   tensor taps and Pallas kernels, AOT-lowered to HLO text and executed
-//!   through [`runtime`] (PJRT CPU client via the `xla` crate). Python is
-//!   never on the request path.
+//!   through [`runtime`]. The PJRT client is stubbed in this offline,
+//!   zero-dependency build (see `runtime::xla_stub`); Python is never on
+//!   the request path.
+//!
+//! The hot path scales across cores via [`parallel`]: the chunked
+//! [`parallel::EncoderPool`] encodes/decodes fixed-size chunks of a
+//! tensor concurrently and stitches them into a
+//! [`singlestage::MultiFrame`] container.
 
 pub mod baselines;
 pub mod benchkit;
@@ -30,10 +36,12 @@ pub mod collectives;
 pub mod config;
 pub mod coordinator;
 pub mod dtype;
+pub mod error;
 pub mod experiments;
 pub mod fabric;
 pub mod huffman;
 pub mod metrics;
+pub mod parallel;
 pub mod prng;
 pub mod proptest_lite;
 pub mod runtime;
@@ -42,5 +50,5 @@ pub mod stats;
 pub mod tensors;
 pub mod trainer;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result type (see [`error`]).
+pub type Result<T> = std::result::Result<T, error::Error>;

@@ -4,8 +4,8 @@
 //! repro train      [--model tiny|paper] [--steps N] [--seed S]
 //! repro figures    [--model ...] [--steps N] [--shards N] [--fig 1|2|3|4|all]
 //! repro sweep      [--model ...] [--dtypes bf16,e4m3,...]
-//! repro compress   [--file PATH] [--codec huffman-1stage|huffman-3stage|deflate|zstd]
-//! repro collective [--workers N] [--elems N] [--codec ...]
+//! repro compress   [--file PATH] [--codec huffman-1stage|huffman-3stage|lz77] [--threads N]
+//! repro collective [--workers N] [--elems N] [--codec ...] [--threads N]
 //! repro stats      (coordinator metrics demo over a synthetic stream)
 //! ```
 
@@ -15,6 +15,7 @@ use sshuff::collectives::all_reduce;
 use sshuff::coordinator::{CompressJob, Coordinator};
 use sshuff::experiments::{capture_cached, figures, measure_shards, CaptureSpec};
 use sshuff::fabric::{Fabric, LinkModel};
+use sshuff::parallel::EncoderPool;
 use sshuff::prng::Pcg32;
 use sshuff::runtime::Engine;
 use sshuff::singlestage::{AvgPolicy, CodebookManager};
@@ -58,7 +59,12 @@ fn build_cli() -> Cli {
     let codec = OptSpec {
         name: "codec",
         takes_value: true,
-        help: "raw|huffman-1stage|huffman-3stage|deflate|zstd",
+        help: "raw|huffman-1stage|huffman-3stage|lz77",
+    };
+    let threads = OptSpec {
+        name: "threads",
+        takes_value: true,
+        help: "encoder threads for huffman-1stage (default: all cores)",
     };
     Cli {
         bin: "repro",
@@ -97,6 +103,7 @@ fn build_cli() -> Cli {
                 opts: vec![
                     OptSpec { name: "file", takes_value: true, help: "input file (default: synthetic)" },
                     codec.clone(),
+                    threads.clone(),
                 ],
             },
             CommandSpec {
@@ -106,6 +113,7 @@ fn build_cli() -> Cli {
                     OptSpec { name: "workers", takes_value: true, help: "ring size (default 8)" },
                     OptSpec { name: "elems", takes_value: true, help: "f32 elements per rank (default 1<<16)" },
                     codec,
+                    threads,
                 ],
             },
             CommandSpec {
@@ -133,8 +141,8 @@ fn spec_from(args: &Args) -> Result<CaptureSpec, String> {
 
 fn cmd_train(args: &Args) -> sshuff::Result<()> {
     let model = args.opt_or("model", "tiny");
-    let steps: usize = args.opt_parse("steps", 20).map_err(anyhow::Error::msg)?;
-    let seed: u64 = args.opt_parse("seed", 42u64).map_err(anyhow::Error::msg)?;
+    let steps: usize = args.opt_parse("steps", 20).map_err(sshuff::error::Error::msg)?;
+    let seed: u64 = args.opt_parse("seed", 42u64).map_err(sshuff::error::Error::msg)?;
     let engine = Engine::cpu()?;
     println!("platform: {}", engine.platform());
     let mut t = Trainer::new(&engine, model, seed)?;
@@ -143,7 +151,7 @@ fn cmd_train(args: &Args) -> sshuff::Result<()> {
 }
 
 fn cmd_figures(args: &Args) -> sshuff::Result<()> {
-    let spec = spec_from(args).map_err(anyhow::Error::msg)?;
+    let spec = spec_from(args).map_err(sshuff::error::Error::msg)?;
     let which = args.opt_or("fig", "all");
     let engine = Engine::cpu()?;
     let cap = capture_cached(&engine, &spec)?;
@@ -165,12 +173,15 @@ fn cmd_figures(args: &Args) -> sshuff::Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> sshuff::Result<()> {
-    let spec = spec_from(args).map_err(anyhow::Error::msg)?;
+    let spec = spec_from(args).map_err(sshuff::error::Error::msg)?;
     let dtypes: Vec<DtypeTag> = match args.opt("dtypes") {
         None => DtypeTag::ALL.to_vec(),
         Some(s) => s
             .split(',')
-            .map(|d| DtypeTag::parse(d).ok_or_else(|| anyhow::anyhow!("unknown dtype '{d}'")))
+            .map(|d| {
+                DtypeTag::parse(d)
+                    .ok_or_else(|| sshuff::error::Error::msg(format!("unknown dtype '{d}'")))
+            })
             .collect::<sshuff::Result<_>>()?,
     };
     let engine = Engine::cpu()?;
@@ -188,12 +199,16 @@ fn cmd_compress(args: &Args) -> sshuff::Result<()> {
             sshuff::tensors::shard_symbols(&tap, DtypeTag::Bf16)
         }
     };
+    let threads: usize =
+        args.opt_parse("threads", EncoderPool::auto().threads()).map_err(sshuff::error::Error::msg)?;
     let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
     let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
     mgr.observe_bytes(key, &data);
     let id = mgr.build(key).unwrap();
     let mut codecs: Vec<Box<dyn Codec>> = baseline_codecs();
-    codecs.push(Box::new(SingleStageCodec::with_fixed(mgr.registry.clone(), id)));
+    codecs.push(Box::new(
+        SingleStageCodec::with_fixed(mgr.registry.clone(), id).with_threads(threads),
+    ));
     let only = args.opt("codec");
     let mut table = sshuff::benchkit::Table::new(&["codec", "in", "out", "ratio", "saved%"]);
     for c in &codecs {
@@ -217,8 +232,8 @@ fn cmd_compress(args: &Args) -> sshuff::Result<()> {
 }
 
 fn cmd_collective(args: &Args) -> sshuff::Result<()> {
-    let workers: usize = args.opt_parse("workers", 8).map_err(anyhow::Error::msg)?;
-    let elems: usize = args.opt_parse("elems", 1 << 16).map_err(anyhow::Error::msg)?;
+    let workers: usize = args.opt_parse("workers", 8).map_err(sshuff::error::Error::msg)?;
+    let elems: usize = args.opt_parse("elems", 1 << 16).map_err(sshuff::error::Error::msg)?;
     let inputs: Vec<Vec<f32>> = (0..workers)
         .map(|r| {
             let mut rng = Pcg32::substream(7, r as u64);
@@ -231,8 +246,12 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
     let bytes0: Vec<u8> = inputs[0].iter().flat_map(|v| v.to_le_bytes()).collect();
     mgr.observe_bytes(key, &bytes0);
     let id = mgr.build(key).unwrap();
+    let threads: usize =
+        args.opt_parse("threads", EncoderPool::auto().threads()).map_err(sshuff::error::Error::msg)?;
     let mut codecs: Vec<Box<dyn Codec>> = baseline_codecs();
-    codecs.push(Box::new(SingleStageCodec::with_fixed(mgr.registry.clone(), id)));
+    codecs.push(Box::new(
+        SingleStageCodec::with_fixed(mgr.registry.clone(), id).with_threads(threads),
+    ));
     let only = args.opt("codec");
     let mut table = sshuff::benchkit::Table::new(&[
         "codec", "wire MB", "raw MB", "gain", "sim ms", "wall ms",
@@ -262,8 +281,8 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
 }
 
 fn cmd_stats(args: &Args) -> sshuff::Result<()> {
-    let workers: usize = args.opt_parse("workers", 4).map_err(anyhow::Error::msg)?;
-    let jobs: usize = args.opt_parse("jobs", 256).map_err(anyhow::Error::msg)?;
+    let workers: usize = args.opt_parse("workers", 4).map_err(sshuff::error::Error::msg)?;
+    let jobs: usize = args.opt_parse("jobs", 256).map_err(sshuff::error::Error::msg)?;
     let coord = Coordinator::new(workers, AvgPolicy::CumulativeMean);
     let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
     // observe a few batches, then compress a stream

@@ -1,0 +1,437 @@
+//! Parallel chunked encode/decode engine — the throughput path.
+//!
+//! The single-stage design (fixed pre-shared codebooks, one streaming
+//! pass) removes the *latency* stages from the critical path; what is
+//! left on large shards is raw encoder **throughput**, and a Huffman
+//! bit-packer is strictly sequential within one stream. This module
+//! restores scaling by splitting a tensor into `ceil(len / chunk_len)`
+//! near-equal chunks of at most `chunk_len` bytes (boundaries via
+//! [`crate::collectives::chunk_bounds`], the same splitter the ring
+//! collectives use), encoding chunks concurrently on a scoped thread
+//! pool against the shared [`Registry`], and stitching the per-chunk
+//! [`Frame`]s into a [`MultiFrame`] container. Decoding is
+//! chunk-parallel the same way, each chunk writing a disjoint slice of
+//! the output tensor.
+//!
+//! Properties:
+//! * **Deterministic wire bytes** — the container depends only on the
+//!   chunking, never on the thread count: encoding with 1 thread and
+//!   with N threads produces identical bytes (asserted in the tests and
+//!   the repo proptests).
+//! * **Byte-exact round-trip** — chunks use the exact per-frame format
+//!   of [`SingleStageEncoder::encode_with`]: coded when the book covers
+//!   the chunk, 5-byte raw escape otherwise.
+//! * **No shared mutable state** — workers pull chunk indices from an
+//!   atomic counter (work stealing) and the registry's decode tables are
+//!   shared read-only `Arc`s; nothing is copied per chunk.
+//!
+//! [`SingleStageEncoder::encode_with`]: crate::singlestage::SingleStageEncoder::encode_with
+//!
+//! # Examples
+//!
+//! ```
+//! use sshuff::parallel::{EncoderPool, DEFAULT_CHUNK_LEN};
+//! use sshuff::singlestage::{AvgPolicy, CodebookManager};
+//! use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
+//!
+//! let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+//! let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+//! mgr.observe_bytes(key, &vec![7u8; 4096]); // "previous batch"
+//! let id = mgr.build(key).unwrap();
+//!
+//! let data = vec![7u8; 200_000];
+//! let pool = EncoderPool::new(4);
+//! let mf = pool.encode(&mgr.registry, id, &data, DEFAULT_CHUNK_LEN);
+//! assert_eq!(mf.n_chunks(), 4); // ceil(200_000 / 65_536)
+//! assert_eq!(pool.decode(&mgr.registry, &mf).unwrap(), data);
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::collectives::chunk_bounds;
+use crate::singlestage::{select_codebook, Frame, MultiFrame, Registry, RAW_ID};
+use crate::stats::Histogram256;
+
+/// Default chunk length: 64 KiB — matches `stream::DEFAULT_BLOCK_LOG2`;
+/// large enough that per-chunk framing (9 B) is noise, small enough to
+/// load-balance across threads.
+pub const DEFAULT_CHUNK_LEN: usize = 64 * 1024;
+
+/// A scoped-thread chunked encoder/decoder over a shared [`Registry`].
+///
+/// The pool is a configuration value (thread count), not an OS resource:
+/// threads are spawned per call with `std::thread::scope`, so there is
+/// nothing to shut down and the pool is trivially `Send + Sync + Copy`.
+/// Single-chunk or single-thread calls run inline with zero spawn cost.
+#[derive(Debug, Clone, Copy)]
+pub struct EncoderPool {
+    threads: usize,
+}
+
+impl Default for EncoderPool {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+impl EncoderPool {
+    /// Pool with an explicit worker count (clamped to >= 1).
+    pub fn new(threads: usize) -> EncoderPool {
+        EncoderPool { threads: threads.max(1) }
+    }
+
+    /// Pool sized to the machine (`std::thread::available_parallelism`).
+    pub fn auto() -> EncoderPool {
+        EncoderPool::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Encode `data` against a fixed codebook id, split into
+    /// `ceil(len / chunk_len)` near-equal chunks of at most `chunk_len`
+    /// bytes. Chunks that the book does not cover escape to raw frames.
+    pub fn encode(
+        &self,
+        registry: &Registry,
+        id: u8,
+        data: &[u8],
+        chunk_len: usize,
+    ) -> MultiFrame {
+        self.run_encode(data, chunk_len, &|chunk| encode_chunk_fixed(registry, id, chunk))
+    }
+
+    /// Encode with per-chunk codebook selection (paper §4): each chunk is
+    /// scored against every candidate id and coded with the cheapest,
+    /// falling back to raw when nothing beats it.
+    pub fn encode_best(
+        &self,
+        registry: &Registry,
+        candidates: &[u8],
+        data: &[u8],
+        chunk_len: usize,
+    ) -> MultiFrame {
+        self.run_encode(data, chunk_len, &|chunk| encode_chunk_best(registry, candidates, chunk))
+    }
+
+    fn run_encode(
+        &self,
+        data: &[u8],
+        chunk_len: usize,
+        encode_chunk: &(dyn Fn(&[u8]) -> Frame + Sync),
+    ) -> MultiFrame {
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        // chunk sizes never exceed chunk_len, and Frame counts symbols
+        // in a u32 — reject geometries that could silently truncate
+        assert!(chunk_len <= u32::MAX as usize, "chunk_len must fit u32 symbol counts");
+        let n_chunks = data.len().div_ceil(chunk_len).max(1);
+        let bounds = chunk_bounds(data.len(), n_chunks);
+        if self.threads == 1 || n_chunks == 1 {
+            return MultiFrame::from_chunks(
+                bounds.iter().map(|&(lo, hi)| encode_chunk(&data[lo..hi])).collect(),
+            );
+        }
+        let next = AtomicUsize::new(0);
+        let workers = self.threads.min(n_chunks);
+        let mut slots: Vec<Option<Frame>> = (0..n_chunks).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut done = Vec::new();
+                        loop {
+                            let c = next.fetch_add(1, Ordering::Relaxed);
+                            if c >= n_chunks {
+                                break;
+                            }
+                            let (lo, hi) = bounds[c];
+                            done.push((c, encode_chunk(&data[lo..hi])));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (c, frame) in h.join().expect("encode worker panicked") {
+                    slots[c] = Some(frame);
+                }
+            }
+        });
+        MultiFrame::from_chunks(slots.into_iter().map(|f| f.expect("chunk encoded")).collect())
+    }
+
+    /// Decode a [`MultiFrame`] back to the original tensor bytes. Chunks
+    /// decode concurrently into disjoint slices of the output; a chunk
+    /// referencing an unregistered codebook id is a clean error.
+    pub fn decode(&self, registry: &Registry, mf: &MultiFrame) -> crate::Result<Vec<u8>> {
+        // validate every chunk header BEFORE sizing the output, so a
+        // corrupt container is a clean error, not a giant allocation
+        for (i, f) in mf.chunks.iter().enumerate() {
+            crate::error::ensure!(
+                f.symbol_count_plausible(),
+                "chunk {i} claims {} symbols in {} payload bytes",
+                f.header.n_symbols,
+                f.payload.len()
+            );
+        }
+        let sizes: Vec<usize> = mf.chunks.iter().map(|f| f.header.n_symbols as usize).collect();
+        let total: usize = sizes.iter().sum();
+        crate::error::ensure!(
+            total as u64 == mf.total_symbols,
+            "multiframe total mismatch: chunks sum to {total}, header says {}",
+            mf.total_symbols
+        );
+        let mut out = vec![0u8; total];
+        // carve the output into per-chunk disjoint slices
+        let mut slices: Vec<&mut [u8]> = Vec::with_capacity(sizes.len());
+        let mut rest = out.as_mut_slice();
+        for &sz in &sizes {
+            let (head, tail) = rest.split_at_mut(sz);
+            slices.push(head);
+            rest = tail;
+        }
+        let workers = self.threads.min(mf.chunks.len().max(1));
+        if workers <= 1 {
+            for (i, slice) in slices.into_iter().enumerate() {
+                decode_chunk(registry, &mf.chunks[i], slice)?;
+            }
+            return Ok(out);
+        }
+        // round-robin chunk ownership (chunks are equal-sized)
+        let mut buckets: Vec<Vec<(usize, &mut [u8])>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (i, slice) in slices.into_iter().enumerate() {
+            buckets[i % workers].push((i, slice));
+        }
+        std::thread::scope(|s| -> crate::Result<()> {
+            let handles: Vec<_> = buckets
+                .into_iter()
+                .map(|bucket| {
+                    s.spawn(move || -> crate::Result<()> {
+                        for (i, slice) in bucket {
+                            decode_chunk(registry, &mf.chunks[i], slice)?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("decode worker panicked")?;
+            }
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// Parse + decode a [`MultiFrame`] wire buffer.
+    pub fn decode_bytes(&self, registry: &Registry, wire: &[u8]) -> crate::Result<Vec<u8>> {
+        let mf = MultiFrame::parse(wire)?;
+        self.decode(registry, &mf)
+    }
+}
+
+/// One chunk, fixed id — the exact semantics of
+/// `SingleStageEncoder::encode_with`, minus the stats accounting.
+fn encode_chunk_fixed(registry: &Registry, id: u8, chunk: &[u8]) -> Frame {
+    match registry.get(id) {
+        Some(fixed) if fixed.covers_all || fixed.book.covers(chunk) => {
+            let (payload, _) = fixed.book.encode(chunk);
+            Frame::coded(id, chunk.len() as u32, payload)
+        }
+        _ => Frame::raw(chunk),
+    }
+}
+
+/// One chunk, best-of-candidates (histogram + K dot products + encode).
+fn encode_chunk_best(registry: &Registry, candidates: &[u8], chunk: &[u8]) -> Frame {
+    let hist = Histogram256::from_bytes(chunk);
+    let (id, _) = select_codebook(&hist, registry, candidates);
+    if id == RAW_ID {
+        Frame::raw(chunk)
+    } else {
+        encode_chunk_fixed(registry, id, chunk)
+    }
+}
+
+/// Decode one chunk frame into its output slice.
+fn decode_chunk(registry: &Registry, frame: &Frame, out: &mut [u8]) -> crate::Result<()> {
+    crate::error::ensure!(
+        frame.header.n_symbols as usize == out.len(),
+        "chunk symbol count {} does not match slot {}",
+        frame.header.n_symbols,
+        out.len()
+    );
+    crate::error::ensure!(
+        frame.symbol_count_plausible(),
+        "chunk claims {} symbols in {} payload bytes",
+        frame.header.n_symbols,
+        frame.payload.len()
+    );
+    if frame.header.id == RAW_ID {
+        out.copy_from_slice(&frame.payload);
+        return Ok(());
+    }
+    let fixed = registry
+        .get(frame.header.id)
+        .ok_or_else(|| crate::error::anyhow!("unknown codebook id {}", frame.header.id))?;
+    fixed.decoder.decode_into(&frame.payload, out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Pcg32, Zipf};
+    use crate::singlestage::{AvgPolicy, CodebookManager};
+    use crate::tensors::{DtypeTag, TensorKey, TensorKind};
+
+    fn skewed(seed: u64, n: usize) -> Vec<u8> {
+        let z = Zipf::new(256, 1.3);
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| z.sample(&mut rng) as u8).collect()
+    }
+
+    fn registry(seed: u64) -> (Registry, u8) {
+        let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+        let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+        mgr.observe_bytes(key, &skewed(seed, 1 << 15));
+        let id = mgr.build(key).unwrap();
+        (mgr.registry, id)
+    }
+
+    #[test]
+    fn wire_bytes_independent_of_thread_count() {
+        let (reg, id) = registry(1);
+        let data = skewed(2, 300_000);
+        let serial = EncoderPool::new(1).encode(&reg, id, &data, DEFAULT_CHUNK_LEN).to_bytes();
+        for threads in [2, 3, 4, 8] {
+            let parallel =
+                EncoderPool::new(threads).encode(&reg, id, &data, DEFAULT_CHUNK_LEN).to_bytes();
+            assert_eq!(parallel, serial, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn roundtrip_across_thread_counts_and_chunk_lens() {
+        let (reg, id) = registry(3);
+        for n in [0usize, 1, 17, 4096, 100_000] {
+            let data = skewed(10 + n as u64, n);
+            for threads in [1usize, 2, 4] {
+                for chunk_len in [64usize, 4096, DEFAULT_CHUNK_LEN] {
+                    let pool = EncoderPool::new(threads);
+                    let mf = pool.encode(&reg, id, &data, chunk_len);
+                    assert_eq!(
+                        pool.decode(&reg, &mf).unwrap(),
+                        data,
+                        "n={n} threads={threads} chunk={chunk_len}"
+                    );
+                    // wire-level round trip too
+                    assert_eq!(pool.decode_bytes(&reg, &mf.to_bytes()).unwrap(), data);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_count_matches_geometry() {
+        let (reg, id) = registry(5);
+        let pool = EncoderPool::new(4);
+        // exactly 3 chunks when the boundary lands on the tensor length
+        let data = skewed(6, 3 * 1024);
+        let mf = pool.encode(&reg, id, &data, 1024);
+        assert_eq!(mf.n_chunks(), 3);
+        assert!(mf.chunks.iter().all(|f| f.header.n_symbols == 1024));
+        // empty tensor still produces one (empty) chunk
+        let empty = pool.encode(&reg, id, &[], 1024);
+        assert_eq!(empty.n_chunks(), 1);
+        assert_eq!(empty.total_symbols, 0);
+    }
+
+    #[test]
+    fn uncovered_chunks_escape_to_raw() {
+        // book over a narrow alphabet, no smoothing: random data escapes
+        let mut counts = [0u64; 256];
+        for (i, c) in counts.iter_mut().enumerate().take(8) {
+            *c = 8 - i as u64;
+        }
+        let book = crate::huffman::CodeBook::from_counts(&counts).unwrap();
+        let mut reg = Registry::new();
+        let id = reg.add(std::sync::Arc::new(crate::singlestage::FixedCodebook::new(
+            book, None, 1,
+        )));
+        let mut rng = Pcg32::new(9);
+        let mut data = vec![0u8; 1 << 16];
+        rng.fill_bytes(&mut data);
+        let pool = EncoderPool::new(4);
+        let mf = pool.encode(&reg, id, &data, 4096);
+        assert_eq!(mf.raw_chunks(), mf.n_chunks());
+        assert_eq!(pool.decode(&reg, &mf).unwrap(), data);
+    }
+
+    #[test]
+    fn unknown_id_encodes_raw_and_coded_decode_errors() {
+        let pool = EncoderPool::new(2);
+        let data = skewed(11, 10_000);
+        // encoding against an empty registry escapes to raw, losslessly
+        let mf = pool.encode(&Registry::new(), 0, &data, 4096);
+        assert_eq!(mf.raw_chunks(), mf.n_chunks());
+        assert_eq!(pool.decode(&Registry::new(), &mf).unwrap(), data);
+        // a coded chunk with an unregistered id must error, not panic
+        let bad = MultiFrame::from_chunks(vec![Frame::coded(5, 4, vec![0xAB])]);
+        let err = pool.decode(&Registry::new(), &bad).unwrap_err();
+        assert!(err.to_string().contains("unknown codebook id"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_symbol_count_is_a_clean_error() {
+        // a coded chunk claiming more symbols than its payload can hold
+        // (>= 1 bit each) must error — not allocate wildly or panic
+        let (reg, id) = registry(31);
+        let pool = EncoderPool::new(2);
+        let huge = MultiFrame::from_chunks(vec![Frame::coded(id, u32::MAX, vec![0xAB, 0xCD])]);
+        let err = pool.decode(&reg, &huge).unwrap_err();
+        assert!(err.to_string().contains("claims"), "{err}");
+        // and through the single-stage decoder too
+        let dec = crate::singlestage::SingleStageDecoder::new(reg.clone());
+        assert!(dec.decode(&Frame::coded(id, 1_000_000, vec![0u8; 16])).is_err());
+    }
+
+    #[test]
+    fn encode_best_routes_chunks_like_stream_selection() {
+        let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+        let klo = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+        let khi = TensorKey::new(TensorKind::Ffn2Act, DtypeTag::Bf16);
+        let lo = skewed(21, 1 << 14);
+        let hi: Vec<u8> = lo.iter().map(|&b| 255 - b).collect();
+        mgr.observe_bytes(klo, &lo);
+        mgr.observe_bytes(khi, &hi);
+        mgr.build_all();
+        let id_lo = mgr.current_id(klo).unwrap();
+        let id_hi = mgr.current_id(khi).unwrap();
+        // alternating-distribution stream, one distribution per chunk
+        let mut data = Vec::new();
+        for i in 0..6 {
+            let block = skewed(100 + i, 4096);
+            if i % 2 == 0 {
+                data.extend(block);
+            } else {
+                data.extend(block.iter().map(|&b| 255 - b));
+            }
+        }
+        let pool = EncoderPool::new(3);
+        let mf = pool.encode_best(&mgr.registry, &[id_lo, id_hi], &data, 4096);
+        assert_eq!(mf.n_chunks(), 6);
+        for (i, frame) in mf.chunks.iter().enumerate() {
+            let want = if i % 2 == 0 { id_lo } else { id_hi };
+            assert_eq!(frame.header.id, want, "chunk {i}");
+        }
+        assert_eq!(pool.decode(&mgr.registry, &mf).unwrap(), data);
+    }
+
+    #[test]
+    fn pool_sizing() {
+        assert_eq!(EncoderPool::new(0).threads(), 1);
+        assert!(EncoderPool::auto().threads() >= 1);
+    }
+}

@@ -7,7 +7,9 @@
 
 use super::manifest::Manifest;
 use super::{artifacts_dir, literal_from, Engine, Executable};
+use crate::bitio::BitWriter;
 use crate::huffman::CodeBook;
+use crate::singlestage::{Frame, MultiFrame};
 use crate::stats::{Histogram256, NUM_SYMBOLS};
 use std::path::PathBuf;
 
@@ -56,7 +58,7 @@ impl KernelRunner {
     /// `data`: total encoded bits per codebook. Kernel scores full
     /// chunks; remainder is scored natively.
     pub fn codebook_eval(&self, data: &[u8], lengths: &[[u8; NUM_SYMBOLS]]) -> crate::Result<Vec<u64>> {
-        anyhow::ensure!(
+        crate::error::ensure!(
             lengths.len() == self.kernel_k,
             "codebook_eval lowered for K={}, got {}",
             self.kernel_k,
@@ -90,7 +92,7 @@ impl KernelRunner {
         data: &[u8],
         book: &CodeBook,
     ) -> crate::Result<(Vec<u32>, Vec<i32>, Vec<i32>, i32)> {
-        anyhow::ensure!(
+        crate::error::ensure!(
             data.len() == self.kernel_n,
             "encode_index takes exactly one {}-symbol chunk",
             self.kernel_n
@@ -100,13 +102,53 @@ impl KernelRunner {
         let lens: Vec<i32> = book.lengths.iter().map(|&l| l as i32).collect();
         let ln = literal_from(&lens, &[NUM_SYMBOLS])?;
         let out = self.encode_index.run(&[x, cw, ln])?;
-        anyhow::ensure!(out.len() == 4, "encode_index returns 4 outputs, got {}", out.len());
+        crate::error::ensure!(out.len() == 4, "encode_index returns 4 outputs, got {}", out.len());
         Ok((
             out[0].to_vec::<u32>()?,
             out[1].to_vec::<i32>()?,
             out[2].to_vec::<i32>()?,
             out[3].to_vec::<i32>()?[0],
         ))
+    }
+
+    /// Multi-chunk tensor encode through the Pallas `encode_index`
+    /// kernel: every full `kernel_n` chunk goes kernel → bit-pack, the
+    /// remainder is encoded natively, and the per-chunk frames stitch
+    /// into the same [`MultiFrame`] container the parallel engine
+    /// (`crate::parallel::EncoderPool`) produces and decodes. Chunks the
+    /// book does not cover escape to raw frames; `id` must be the
+    /// registry id of `book` for the decode side to line up.
+    pub fn encode_multiframe(
+        &self,
+        data: &[u8],
+        book: &CodeBook,
+        id: u8,
+    ) -> crate::Result<MultiFrame> {
+        let covers_all = book.support() == NUM_SYMBOLS;
+        let mut frames = Vec::with_capacity(data.len() / self.kernel_n + 1);
+        let mut chunks = data.chunks_exact(self.kernel_n);
+        for chunk in &mut chunks {
+            if !(covers_all || book.covers(chunk)) {
+                frames.push(Frame::raw(chunk));
+                continue;
+            }
+            let (codes, lens, _offsets, total) = self.encode_index(chunk, book)?;
+            let mut w = BitWriter::with_capacity((total as usize).div_ceil(8));
+            for (&code, &len) in codes.iter().zip(&lens) {
+                w.put_bits(code as u64, len as u32);
+            }
+            frames.push(Frame::coded(id, chunk.len() as u32, w.finish()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() || frames.is_empty() {
+            if covers_all || book.covers(rem) {
+                let (payload, _) = book.encode(rem);
+                frames.push(Frame::coded(id, rem.len() as u32, payload));
+            } else {
+                frames.push(Frame::raw(rem));
+            }
+        }
+        Ok(MultiFrame::from_chunks(frames))
     }
 }
 
@@ -163,6 +205,34 @@ mod tests {
                 (0..NUM_SYMBOLS).map(|s| h.counts[s] * table[s] as u64).sum();
             assert_eq!(kernel_bits[k], native, "codebook {k}");
         }
+    }
+
+    #[test]
+    fn kernel_multiframe_roundtrips_through_parallel_decoder() {
+        let Some((_e, kr)) = runner() else { return };
+        // full chunks + a remainder
+        let data = skewed(2 * kr.kernel_n + 777, 8);
+        let mut counts = Histogram256::from_bytes(&data).counts;
+        for c in counts.iter_mut() {
+            *c += 1; // full support
+        }
+        let book = CodeBook::from_counts(&counts).unwrap();
+        let mut reg = crate::singlestage::Registry::new();
+        let id = reg.add(std::sync::Arc::new(crate::singlestage::FixedCodebook::new(
+            book.clone(),
+            None,
+            1,
+        )));
+        let mf = kr.encode_multiframe(&data, &book, id).unwrap();
+        assert_eq!(mf.n_chunks(), 3);
+        assert_eq!(mf.raw_chunks(), 0);
+        // kernel-packed payloads are bit-identical to the scalar encoder
+        for (frame, chunk) in mf.chunks.iter().zip(data.chunks(kr.kernel_n)) {
+            let (want, _) = book.encode(chunk);
+            assert_eq!(frame.payload, want);
+        }
+        let pool = crate::parallel::EncoderPool::new(4);
+        assert_eq!(pool.decode(&reg, &mf).unwrap(), data);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! ```
 //! role ∈ {p(aram), m(omentum), d(ata), s(calar), t(ap)}.
 
+use super::xla_stub as xla;
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -28,7 +29,7 @@ impl DType {
             "u32" => DType::U32,
             "u16" => DType::U16,
             "u8" => DType::U8,
-            _ => anyhow::bail!("unknown dtype '{s}'"),
+            _ => crate::error::bail!("unknown dtype '{s}'"),
         })
     }
 
@@ -69,7 +70,7 @@ impl Role {
             "d" => Role::Data,
             "s" => Role::Scalar,
             "t" => Role::Tap,
-            _ => anyhow::bail!("unknown role '{s}'"),
+            _ => crate::error::bail!("unknown role '{s}'"),
         })
     }
 }
@@ -111,7 +112,7 @@ impl Manifest {
                 continue;
             }
             let toks: Vec<&str> = line.split_whitespace().collect();
-            let bad = || anyhow::anyhow!("manifest line {}: '{}'", lineno + 1, raw);
+            let bad = || crate::error::anyhow!("manifest line {}: '{}'", lineno + 1, raw);
             match toks[0] {
                 "field" => {
                     if toks.len() != 3 {
@@ -153,7 +154,7 @@ impl Manifest {
         let path = path.as_ref();
         Self::parse(
             &std::fs::read_to_string(path)
-                .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?,
+                .map_err(|e| crate::error::anyhow!("reading {}: {e}", path.display()))?,
         )
     }
 
@@ -161,7 +162,7 @@ impl Manifest {
         self.fields
             .get(key)
             .map(|s| s.as_str())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing field '{key}'"))
+            .ok_or_else(|| crate::error::anyhow!("manifest missing field '{key}'"))
     }
 
     pub fn field_usize(&self, key: &str) -> crate::Result<usize> {
@@ -180,14 +181,14 @@ impl Manifest {
         self.outputs
             .iter()
             .position(|s| s.name == name)
-            .ok_or_else(|| anyhow::anyhow!("manifest has no output '{name}'"))
+            .ok_or_else(|| crate::error::anyhow!("manifest has no output '{name}'"))
     }
 
     pub fn input_index(&self, name: &str) -> crate::Result<usize> {
         self.inputs
             .iter()
             .position(|s| s.name == name)
-            .ok_or_else(|| anyhow::anyhow!("manifest has no input '{name}'"))
+            .ok_or_else(|| crate::error::anyhow!("manifest has no input '{name}'"))
     }
 }
 

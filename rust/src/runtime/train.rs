@@ -3,6 +3,7 @@
 //! rust side, holding params/momentum as host literals between steps.
 
 use super::manifest::{Manifest, Role};
+use super::xla_stub as xla;
 use super::{artifacts_dir, literal_from, zeros_f32, Engine, Executable};
 use std::path::PathBuf;
 
@@ -39,7 +40,7 @@ impl TrainRunner {
             .inputs
             .iter()
             .find(|s| s.name == "tokens")
-            .ok_or_else(|| anyhow::anyhow!("manifest missing tokens input"))?
+            .ok_or_else(|| crate::error::anyhow!("manifest missing tokens input"))?
             .dims
             .clone();
         Ok(TrainRunner {
@@ -57,7 +58,7 @@ impl TrainRunner {
     pub fn init(&mut self, seed: u32) -> crate::Result<()> {
         self.params = self.init_exe.run(&[xla::Literal::scalar(seed)])?;
         let n_params = self.manifest.inputs_with_role(Role::Param).count();
-        anyhow::ensure!(
+        crate::error::ensure!(
             self.params.len() == n_params,
             "init returned {} params, manifest says {n_params}",
             self.params.len()
@@ -79,8 +80,8 @@ impl TrainRunner {
     /// Run one step on a flat `(batch * (seq_len+1))` token batch.
     /// Updates params/momentum in place; returns loss + taps.
     pub fn step(&mut self, tokens: &[i32]) -> crate::Result<StepOutput> {
-        anyhow::ensure!(!self.params.is_empty(), "call init() before step()");
-        anyhow::ensure!(
+        crate::error::ensure!(!self.params.is_empty(), "call init() before step()");
+        crate::error::ensure!(
             tokens.len() == self.tokens_per_step(),
             "token batch size {} != expected {}",
             tokens.len(),
@@ -103,7 +104,7 @@ impl TrainRunner {
         self.momentum = new_momentum;
 
         let mut rest_iter = rest.into_iter();
-        let loss_lit = rest_iter.next().ok_or_else(|| anyhow::anyhow!("missing loss output"))?;
+        let loss_lit = rest_iter.next().ok_or_else(|| crate::error::anyhow!("missing loss output"))?;
         let loss = loss_lit.to_vec::<f32>()?[0];
         let tap_specs: Vec<_> = self
             .manifest
@@ -113,7 +114,7 @@ impl TrainRunner {
         let mut taps = Vec::with_capacity(tap_specs.len());
         for ((name, dims), lit) in tap_specs.into_iter().zip(rest_iter) {
             let bits = lit.to_vec::<u16>()?;
-            anyhow::ensure!(
+            crate::error::ensure!(
                 bits.len() == dims.iter().product::<usize>(),
                 "tap {name} size mismatch"
             );

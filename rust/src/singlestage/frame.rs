@@ -11,8 +11,18 @@
 //! versus the three-stage baseline's 128-byte packed length table per
 //! message (see `baselines::ThreeStage`). Id [`RAW_ID`] marks an
 //! uncompressed escape frame whose payload is the original bytes.
-
-use byteorder::{ByteOrder, LittleEndian};
+//!
+//! [`MultiFrame`] is the multi-chunk container the parallel engine
+//! (`crate::parallel`) stitches per-chunk [`Frame`]s into:
+//!
+//! ```text
+//! [ 'M' 'F' ][ version: u8 ][ n_chunks: u32 LE ][ total_symbols: u64 LE ]
+//! then n_chunks x ( [ frame_len: u32 LE ][ Frame bytes ] )
+//! ```
+//!
+//! Chunks are independent, so any chunk can be encoded or decoded on any
+//! thread; stitching in chunk order makes the wire bytes deterministic
+//! regardless of thread count.
 
 /// Reserved id for raw (uncompressed) escape frames.
 pub const RAW_ID: u8 = 255;
@@ -53,13 +63,24 @@ impl Frame {
         HEADER_BYTES + self.payload.len()
     }
 
+    /// Can this header's symbol count possibly match the payload? Raw
+    /// frames carry one payload byte per symbol; coded frames spend at
+    /// least 1 bit per symbol. Decoders check this before sizing output
+    /// buffers so corrupt headers fail cleanly instead of driving huge
+    /// allocations.
+    pub fn symbol_count_plausible(&self) -> bool {
+        if self.header.id == RAW_ID {
+            self.payload.len() == self.header.n_symbols as usize
+        } else {
+            self.header.n_symbols as u64 <= self.payload.len() as u64 * 8
+        }
+    }
+
     /// Serialize to wire bytes.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_bytes());
         out.push(self.header.id);
-        let mut n = [0u8; 4];
-        LittleEndian::write_u32(&mut n, self.header.n_symbols);
-        out.extend_from_slice(&n);
+        out.extend_from_slice(&self.header.n_symbols.to_le_bytes());
         out.extend_from_slice(&self.payload);
         out
     }
@@ -67,19 +88,112 @@ impl Frame {
     /// Parse wire bytes (the payload is everything after the header).
     pub fn parse(wire: &[u8]) -> crate::Result<Frame> {
         if wire.len() < HEADER_BYTES {
-            anyhow::bail!("frame too short: {} bytes", wire.len());
+            crate::error::bail!("frame too short: {} bytes", wire.len());
         }
         let id = wire[0];
-        let n_symbols = LittleEndian::read_u32(&wire[1..5]);
+        let n_symbols = u32::from_le_bytes(wire[1..5].try_into().unwrap());
         let payload = wire[HEADER_BYTES..].to_vec();
         if id == RAW_ID && payload.len() != n_symbols as usize {
-            anyhow::bail!(
+            crate::error::bail!(
                 "raw frame length mismatch: {} payload vs {} symbols",
                 payload.len(),
                 n_symbols
             );
         }
         Ok(Frame { header: FrameHeader { id, n_symbols }, payload })
+    }
+}
+
+/// Magic prefix of the multi-chunk container.
+pub const MULTIFRAME_MAGIC: [u8; 2] = *b"MF";
+/// Container format version.
+pub const MULTIFRAME_VERSION: u8 = 1;
+/// Container header bytes before the first chunk.
+pub const MULTIFRAME_HEADER_BYTES: usize = 2 + 1 + 4 + 8;
+
+/// A multi-chunk container: per-chunk [`Frame`]s in tensor order, each
+/// independently decodable. Produced and consumed by the parallel
+/// chunked engine (`crate::parallel::EncoderPool`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MultiFrame {
+    /// Sum of the chunks' `n_symbols` — the original tensor byte length.
+    pub total_symbols: u64,
+    /// Per-chunk frames, in chunk (= tensor) order.
+    pub chunks: Vec<Frame>,
+}
+
+impl MultiFrame {
+    /// Stitch chunk frames into a container (totals derived).
+    pub fn from_chunks(chunks: Vec<Frame>) -> MultiFrame {
+        let total_symbols = chunks.iter().map(|f| f.header.n_symbols as u64).sum();
+        MultiFrame { total_symbols, chunks }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Chunks that escaped to raw (id == [`RAW_ID`]).
+    pub fn raw_chunks(&self) -> usize {
+        self.chunks.iter().filter(|f| f.header.id == RAW_ID).count()
+    }
+
+    /// Total bytes this container occupies on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        MULTIFRAME_HEADER_BYTES + self.chunks.iter().map(|f| 4 + f.wire_bytes()).sum::<usize>()
+    }
+
+    /// Serialize to wire bytes (deterministic in the chunking only — the
+    /// thread count that produced the chunks does not matter).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        out.extend_from_slice(&MULTIFRAME_MAGIC);
+        out.push(MULTIFRAME_VERSION);
+        out.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.total_symbols.to_le_bytes());
+        for frame in &self.chunks {
+            let bytes = frame.to_bytes();
+            out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            out.extend_from_slice(&bytes);
+        }
+        out
+    }
+
+    /// Parse a container; every framing error is a clean `Err`.
+    pub fn parse(wire: &[u8]) -> crate::Result<MultiFrame> {
+        crate::error::ensure!(
+            wire.len() >= MULTIFRAME_HEADER_BYTES,
+            "multiframe too short: {} bytes",
+            wire.len()
+        );
+        crate::error::ensure!(wire[0..2] == MULTIFRAME_MAGIC, "bad multiframe magic");
+        crate::error::ensure!(
+            wire[2] == MULTIFRAME_VERSION,
+            "unsupported multiframe version {}",
+            wire[2]
+        );
+        let n_chunks = u32::from_le_bytes(wire[3..7].try_into().unwrap()) as usize;
+        let total_symbols = u64::from_le_bytes(wire[7..15].try_into().unwrap());
+        let mut chunks = Vec::with_capacity(n_chunks.min(1 << 16));
+        let mut at = MULTIFRAME_HEADER_BYTES;
+        for c in 0..n_chunks {
+            crate::error::ensure!(at + 4 <= wire.len(), "multiframe truncated at chunk {c} header");
+            let len = u32::from_le_bytes(wire[at..at + 4].try_into().unwrap()) as usize;
+            at += 4;
+            crate::error::ensure!(
+                wire.len() - at >= len,
+                "multiframe truncated in chunk {c} body"
+            );
+            chunks.push(Frame::parse(&wire[at..at + len])?);
+            at += len;
+        }
+        crate::error::ensure!(at == wire.len(), "multiframe: {} trailing bytes", wire.len() - at);
+        let sum: u64 = chunks.iter().map(|f| f.header.n_symbols as u64).sum();
+        crate::error::ensure!(
+            sum == total_symbols,
+            "multiframe symbol count mismatch: chunks sum to {sum}, header says {total_symbols}"
+        );
+        Ok(MultiFrame { total_symbols, chunks })
     }
 }
 
@@ -124,5 +238,50 @@ mod tests {
         assert_eq!(Frame::parse(&raw.to_bytes()).unwrap(), raw);
         let coded = Frame::coded(0, 0, vec![]);
         assert_eq!(Frame::parse(&coded.to_bytes()).unwrap(), coded);
+    }
+
+    #[test]
+    fn multiframe_roundtrip() {
+        let mf = MultiFrame::from_chunks(vec![
+            Frame::coded(1, 100, vec![0xAA, 0xBB]),
+            Frame::raw(&[1, 2, 3]),
+            Frame::coded(2, 0, vec![]),
+        ]);
+        assert_eq!(mf.total_symbols, 103);
+        assert_eq!(mf.n_chunks(), 3);
+        assert_eq!(mf.raw_chunks(), 1);
+        let wire = mf.to_bytes();
+        assert_eq!(wire.len(), mf.wire_bytes());
+        assert_eq!(MultiFrame::parse(&wire).unwrap(), mf);
+    }
+
+    #[test]
+    fn multiframe_empty_container() {
+        let mf = MultiFrame::from_chunks(Vec::new());
+        assert_eq!(mf.total_symbols, 0);
+        assert_eq!(MultiFrame::parse(&mf.to_bytes()).unwrap(), mf);
+    }
+
+    #[test]
+    fn multiframe_rejects_corruption() {
+        assert!(MultiFrame::parse(b"XX").is_err());
+        let mf = MultiFrame::from_chunks(vec![Frame::raw(&[5, 6, 7])]);
+        let wire = mf.to_bytes();
+        // bad magic / version
+        let mut bad = wire.clone();
+        bad[0] = b'X';
+        assert!(MultiFrame::parse(&bad).is_err());
+        let mut bad = wire.clone();
+        bad[2] = 99;
+        assert!(MultiFrame::parse(&bad).is_err());
+        // truncation and trailing garbage
+        assert!(MultiFrame::parse(&wire[..wire.len() - 1]).is_err());
+        let mut extra = wire.clone();
+        extra.push(0);
+        assert!(MultiFrame::parse(&extra).is_err());
+        // total_symbols mismatch
+        let mut bad = wire;
+        bad[7] = 0xFF;
+        assert!(MultiFrame::parse(&bad).is_err());
     }
 }

@@ -15,7 +15,31 @@
 //!   multi-codebook evaluation ([`select_codebook`]) that scores K
 //!   candidate books on the block histogram and picks the cheapest;
 //! * a raw-escape frame guarantees progress on pathological blocks
-//!   (incompressible or uncovered symbols) at 5 bytes overhead.
+//!   (incompressible or uncovered symbols) at 5 bytes overhead;
+//! * large tensors scale across cores through the chunked
+//!   [`MultiFrame`] container driven by [`crate::parallel::EncoderPool`].
+//!
+//! # Examples
+//!
+//! ```
+//! use sshuff::singlestage::{AvgPolicy, CodebookManager, SingleStageDecoder, SingleStageEncoder};
+//! use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
+//!
+//! let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+//!
+//! // Off the critical path: average the PMFs of previous batches and
+//! // build a fixed codebook from them.
+//! let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+//! mgr.observe_bytes(key, b"previous batch bytes, previous batch bytes");
+//! let id = mgr.build(key).unwrap();
+//!
+//! // The critical path: one streaming pass, 1-byte codebook id on the
+//! // wire, exact decode on the pre-shared registry.
+//! let mut enc = SingleStageEncoder::new(mgr.registry.clone());
+//! let dec = SingleStageDecoder::new(mgr.registry.clone());
+//! let frame = enc.encode_with(id, b"fresh batch bytes");
+//! assert_eq!(dec.decode(&frame).unwrap(), b"fresh batch bytes".to_vec());
+//! ```
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -30,7 +54,7 @@ pub mod persist;
 pub mod planes;
 pub mod stream;
 pub use drift::{DriftConfig, DriftMonitor};
-pub use frame::{Frame, FrameHeader, RAW_ID};
+pub use frame::{Frame, FrameHeader, MultiFrame, RAW_ID};
 pub use persist::{load_registry, save_registry};
 pub use stream::{decode_stream, encode_stream, StreamStats};
 
@@ -321,10 +345,16 @@ impl SingleStageDecoder {
         if frame.header.id == RAW_ID {
             return Ok(frame.payload.clone());
         }
+        crate::error::ensure!(
+            frame.symbol_count_plausible(),
+            "coded frame claims {} symbols in {} payload bytes",
+            frame.header.n_symbols,
+            frame.payload.len()
+        );
         let book = self
             .registry
             .get(frame.header.id)
-            .ok_or_else(|| anyhow::anyhow!("unknown codebook id {}", frame.header.id))?;
+            .ok_or_else(|| crate::error::anyhow!("unknown codebook id {}", frame.header.id))?;
         Ok(book.decoder.decode(&frame.payload, frame.header.n_symbols as usize))
     }
 

@@ -18,7 +18,6 @@
 use super::{FixedCodebook, Registry};
 use crate::huffman::CodeBook;
 use crate::tensors::{DtypeTag, TensorKey, TensorKind};
-use byteorder::{ByteOrder, LittleEndian};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -33,7 +32,7 @@ fn dtype_from(code: u8) -> crate::Result<DtypeTag> {
     DtypeTag::ALL
         .get(code as usize)
         .copied()
-        .ok_or_else(|| anyhow::anyhow!("bad dtype code {code}"))
+        .ok_or_else(|| crate::error::anyhow!("bad dtype code {code}"))
 }
 
 /// Serialize a registry to bytes.
@@ -41,11 +40,8 @@ pub fn registry_to_bytes(reg: &Registry) -> Vec<u8> {
     let n = reg.len() as u16;
     let mut out = Vec::with_capacity(8 + n as usize * 136 + 4);
     out.extend_from_slice(&MAGIC);
-    let mut b2 = [0u8; 2];
-    LittleEndian::write_u16(&mut b2, FORMAT_VERSION);
-    out.extend_from_slice(&b2);
-    LittleEndian::write_u16(&mut b2, n);
-    out.extend_from_slice(&b2);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&n.to_le_bytes());
     for id in reg.ids() {
         let fixed = reg.get(id).unwrap();
         match fixed.key {
@@ -56,29 +52,25 @@ pub fn registry_to_bytes(reg: &Registry) -> Vec<u8> {
             }
             None => out.extend_from_slice(&[0, 0, 0]),
         }
-        let mut b4 = [0u8; 4];
-        LittleEndian::write_u32(&mut b4, fixed.version);
-        out.extend_from_slice(&b4);
+        out.extend_from_slice(&fixed.version.to_le_bytes());
         out.extend_from_slice(&fixed.book.pack_lengths());
     }
     let crc = crc32(&out);
-    let mut b4 = [0u8; 4];
-    LittleEndian::write_u32(&mut b4, crc);
-    out.extend_from_slice(&b4);
+    out.extend_from_slice(&crc.to_le_bytes());
     out
 }
 
 /// Deserialize a registry (ids preserved in order).
 pub fn registry_from_bytes(bytes: &[u8]) -> crate::Result<Registry> {
-    anyhow::ensure!(bytes.len() >= 12, "registry file too short");
-    anyhow::ensure!(bytes[0..4] == MAGIC, "bad registry magic");
-    let version = LittleEndian::read_u16(&bytes[4..6]);
-    anyhow::ensure!(version == FORMAT_VERSION, "unsupported registry version {version}");
-    let n = LittleEndian::read_u16(&bytes[6..8]) as usize;
+    crate::error::ensure!(bytes.len() >= 12, "registry file too short");
+    crate::error::ensure!(bytes[0..4] == MAGIC, "bad registry magic");
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    crate::error::ensure!(version == FORMAT_VERSION, "unsupported registry version {version}");
+    let n = u16::from_le_bytes(bytes[6..8].try_into().unwrap()) as usize;
     let body_len = 8 + n * 135;
-    anyhow::ensure!(bytes.len() == body_len + 4, "registry size mismatch");
-    let want_crc = LittleEndian::read_u32(&bytes[body_len..]);
-    anyhow::ensure!(crc32(&bytes[..body_len]) == want_crc, "registry crc mismatch");
+    crate::error::ensure!(bytes.len() == body_len + 4, "registry size mismatch");
+    let want_crc = u32::from_le_bytes(bytes[body_len..].try_into().unwrap());
+    crate::error::ensure!(crc32(&bytes[..body_len]) == want_crc, "registry crc mismatch");
 
     let mut reg = Registry::new();
     let mut at = 8;
@@ -86,7 +78,7 @@ pub fn registry_from_bytes(bytes: &[u8]) -> crate::Result<Registry> {
         let has_key = bytes[at] == 1;
         let kind_idx = bytes[at + 1] as usize;
         let dtype_code_v = bytes[at + 2];
-        let book_version = LittleEndian::read_u32(&bytes[at + 3..at + 7]);
+        let book_version = u32::from_le_bytes(bytes[at + 3..at + 7].try_into().unwrap());
         at += 7;
         let mut packed = [0u8; 128];
         packed.copy_from_slice(&bytes[at..at + 128]);
@@ -95,7 +87,7 @@ pub fn registry_from_bytes(bytes: &[u8]) -> crate::Result<Registry> {
         let key = if has_key {
             let kind = *TensorKind::ALL
                 .get(kind_idx)
-                .ok_or_else(|| anyhow::anyhow!("bad kind index {kind_idx}"))?;
+                .ok_or_else(|| crate::error::anyhow!("bad kind index {kind_idx}"))?;
             Some(TensorKey::new(kind, dtype_from(dtype_code_v)?))
         } else {
             None

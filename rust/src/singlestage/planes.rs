@@ -17,7 +17,6 @@
 use super::{CodebookManager, Frame, Registry, SingleStageDecoder, SingleStageEncoder};
 use crate::dtype::{bf16_high_plane, bf16_low_plane};
 use crate::tensors::{DtypeTag, TensorKey, TensorKind};
-use byteorder::{ByteOrder, LittleEndian};
 
 /// The per-plane keys a plane-split codebook pair is registered under.
 /// The high plane reuses the tensor's own key; the low plane trains its
@@ -58,9 +57,7 @@ pub fn encode_planes(registry: &Registry, ids: PlaneIds, bits: &[u16]) -> Vec<u8
     let hi_bytes = hi_frame.to_bytes();
     let lo_bytes = lo_frame.to_bytes();
     let mut out = Vec::with_capacity(4 + hi_bytes.len() + lo_bytes.len());
-    let mut b4 = [0u8; 4];
-    LittleEndian::write_u32(&mut b4, hi_bytes.len() as u32);
-    out.extend_from_slice(&b4);
+    out.extend_from_slice(&(hi_bytes.len() as u32).to_le_bytes());
     out.extend_from_slice(&hi_bytes);
     out.extend_from_slice(&lo_bytes);
     out
@@ -68,13 +65,13 @@ pub fn encode_planes(registry: &Registry, ids: PlaneIds, bits: &[u16]) -> Vec<u8
 
 /// Decode a plane-split wire buffer back to bf16 bits.
 pub fn decode_planes(registry: &Registry, wire: &[u8]) -> crate::Result<Vec<u16>> {
-    anyhow::ensure!(wire.len() >= 4, "plane wire too short");
-    let hi_len = LittleEndian::read_u32(&wire[0..4]) as usize;
-    anyhow::ensure!(4 + hi_len <= wire.len(), "plane wire truncated");
+    crate::error::ensure!(wire.len() >= 4, "plane wire too short");
+    let hi_len = u32::from_le_bytes(wire[0..4].try_into().unwrap()) as usize;
+    crate::error::ensure!(4 + hi_len <= wire.len(), "plane wire truncated");
     let dec = SingleStageDecoder::new(registry.clone());
     let hi = dec.decode_bytes(&wire[4..4 + hi_len])?;
     let lo = dec.decode_bytes(&wire[4 + hi_len..])?;
-    anyhow::ensure!(hi.len() == lo.len(), "plane length mismatch");
+    crate::error::ensure!(hi.len() == lo.len(), "plane length mismatch");
     Ok(hi.iter().zip(&lo).map(|(&h, &l)| ((h as u16) << 8) | l as u16).collect())
 }
 
@@ -124,7 +121,7 @@ mod tests {
     fn mantissa_plane_escapes_to_raw() {
         let (mgr, ids, bits) = setup();
         let wire = encode_planes(&mgr.registry, ids, &bits);
-        let hi_len = LittleEndian::read_u32(&wire[0..4]) as usize;
+        let hi_len = u32::from_le_bytes(wire[0..4].try_into().unwrap()) as usize;
         let lo_frame = Frame::parse(&wire[4 + hi_len..]).unwrap();
         // near-uniform mantissas: raw escape (or coded within a hair)
         let lo = bf16_low_plane(&bits);

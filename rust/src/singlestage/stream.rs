@@ -17,7 +17,6 @@
 
 use super::{select_codebook, Frame, Registry, SingleStageDecoder};
 use crate::stats::Histogram256;
-use byteorder::{ByteOrder, LittleEndian};
 
 const STREAM_MAGIC: [u8; 2] = *b"S1";
 const STREAM_VERSION: u8 = 1;
@@ -56,12 +55,8 @@ pub fn encode_stream(
     out.extend_from_slice(&STREAM_MAGIC);
     out.push(STREAM_VERSION);
     out.push(block_log2);
-    let mut b4 = [0u8; 4];
-    LittleEndian::write_u32(&mut b4, n_blocks);
-    out.extend_from_slice(&b4);
-    let mut b8 = [0u8; 8];
-    LittleEndian::write_u64(&mut b8, data.len() as u64);
-    out.extend_from_slice(&b8);
+    out.extend_from_slice(&n_blocks.to_le_bytes());
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
 
     let mut stats = StreamStats { blocks: n_blocks, ..Default::default() };
     stats.bytes_in = data.len() as u64;
@@ -87,8 +82,7 @@ pub fn encode_stream(
             Frame::coded(id, chunk.len() as u32, payload)
         };
         let bytes = frame.to_bytes();
-        LittleEndian::write_u32(&mut b4, bytes.len() as u32);
-        out.extend_from_slice(&b4);
+        out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
         out.extend_from_slice(&bytes);
     }
     stats.bytes_out = out.len() as u64;
@@ -97,38 +91,40 @@ pub fn encode_stream(
 
 /// Decode a block stream produced by [`encode_stream`].
 pub fn decode_stream(registry: &Registry, wire: &[u8]) -> crate::Result<Vec<u8>> {
-    anyhow::ensure!(wire.len() >= STREAM_HEADER_BYTES, "stream too short");
-    anyhow::ensure!(wire[0..2] == STREAM_MAGIC, "bad stream magic");
-    anyhow::ensure!(wire[2] == STREAM_VERSION, "unsupported stream version {}", wire[2]);
-    let n_blocks = LittleEndian::read_u32(&wire[4..8]) as usize;
-    let total = LittleEndian::read_u64(&wire[8..16]) as usize;
+    crate::error::ensure!(wire.len() >= STREAM_HEADER_BYTES, "stream too short");
+    crate::error::ensure!(wire[0..2] == STREAM_MAGIC, "bad stream magic");
+    crate::error::ensure!(wire[2] == STREAM_VERSION, "unsupported stream version {}", wire[2]);
+    let n_blocks = u32::from_le_bytes(wire[4..8].try_into().unwrap()) as usize;
+    let total = u64::from_le_bytes(wire[8..16].try_into().unwrap()) as usize;
     let decoder = SingleStageDecoder::new(registry.clone());
     let mut out = Vec::with_capacity(total);
     let mut at = STREAM_HEADER_BYTES;
     for b in 0..n_blocks {
-        anyhow::ensure!(at + 4 <= wire.len(), "truncated at block {b} header");
-        let len = LittleEndian::read_u32(&wire[at..at + 4]) as usize;
+        crate::error::ensure!(at + 4 <= wire.len(), "truncated at block {b} header");
+        let len = u32::from_le_bytes(wire[at..at + 4].try_into().unwrap()) as usize;
         at += 4;
-        anyhow::ensure!(at + len <= wire.len(), "truncated in block {b} body");
+        crate::error::ensure!(at + len <= wire.len(), "truncated in block {b} body");
         let frame = Frame::parse(&wire[at..at + len])?;
         out.extend_from_slice(&decoder.decode(&frame)?);
         at += len;
     }
-    anyhow::ensure!(at == wire.len(), "{} trailing bytes", wire.len() - at);
-    anyhow::ensure!(out.len() == total, "stream length mismatch: {} vs {total}", out.len());
+    crate::error::ensure!(at == wire.len(), "{} trailing bytes", wire.len() - at);
+    crate::error::ensure!(out.len() == total, "stream length mismatch: {} vs {total}", out.len());
     Ok(out)
 }
 
 /// Decode ONE block (index `idx`) without touching the rest — the
 /// out-of-order/DMA consumption path.
 pub fn decode_block(registry: &Registry, wire: &[u8], idx: usize) -> crate::Result<Vec<u8>> {
-    anyhow::ensure!(wire.len() >= STREAM_HEADER_BYTES && wire[0..2] == STREAM_MAGIC, "bad stream");
-    let n_blocks = LittleEndian::read_u32(&wire[4..8]) as usize;
-    anyhow::ensure!(idx < n_blocks, "block {idx} of {n_blocks}");
+    crate::error::ensure!(wire.len() >= STREAM_HEADER_BYTES && wire[0..2] == STREAM_MAGIC, "bad stream");
+    let n_blocks = u32::from_le_bytes(wire[4..8].try_into().unwrap()) as usize;
+    crate::error::ensure!(idx < n_blocks, "block {idx} of {n_blocks}");
     let mut at = STREAM_HEADER_BYTES;
     for b in 0..n_blocks {
-        let len = LittleEndian::read_u32(&wire[at..at + 4]) as usize;
+        crate::error::ensure!(wire.len() - at >= 4, "truncated at block {b} header");
+        let len = u32::from_le_bytes(wire[at..at + 4].try_into().unwrap()) as usize;
         at += 4;
+        crate::error::ensure!(wire.len() - at >= len, "truncated in block {b} body");
         if b == idx {
             let frame = Frame::parse(&wire[at..at + len])?;
             return SingleStageDecoder::new(registry.clone()).decode(&frame);

@@ -189,6 +189,62 @@ fn collectives_handle_tiny_and_ragged_sizes() {
 }
 
 #[test]
+fn multiframe_empty_payload_roundtrips() {
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+    mgr.observe_bytes(key, b"some previous batch");
+    let id = mgr.build(key).unwrap();
+    let pool = sshuff::parallel::EncoderPool::new(4);
+    let mf = pool.encode(&mgr.registry, id, &[], 4096);
+    assert_eq!(mf.total_symbols, 0);
+    assert_eq!(mf.n_chunks(), 1, "empty tensor still frames one (empty) chunk");
+    let wire = mf.to_bytes();
+    assert_eq!(pool.decode_bytes(&mgr.registry, &wire).unwrap(), Vec::<u8>::new());
+}
+
+#[test]
+fn multiframe_single_symbol_tensor() {
+    // a degenerate one-symbol alphabet across many chunks
+    let data = vec![42u8; 100_000];
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+    mgr.observe_bytes(key, &data);
+    let id = mgr.build(key).unwrap();
+    let pool = sshuff::parallel::EncoderPool::new(4);
+    let mf = pool.encode(&mgr.registry, id, &data, 1 << 14);
+    assert_eq!(mf.raw_chunks(), 0, "1-bit codes beat raw easily");
+    assert!(mf.wire_bytes() < data.len() / 4);
+    assert_eq!(pool.decode(&mgr.registry, &mf).unwrap(), data);
+}
+
+#[test]
+fn multiframe_chunk_boundary_exactly_at_tensor_length() {
+    let chunk = 1 << 12;
+    let data: Vec<u8> = (0..4 * chunk).map(|i| (i % 7) as u8).collect();
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn2Act, DtypeTag::Bf16);
+    mgr.observe_bytes(key, &data);
+    let id = mgr.build(key).unwrap();
+    let pool = sshuff::parallel::EncoderPool::new(3);
+    let mf = pool.encode(&mgr.registry, id, &data, chunk);
+    assert_eq!(mf.n_chunks(), 4);
+    assert!(mf.chunks.iter().all(|f| f.header.n_symbols as usize == chunk));
+    assert_eq!(pool.decode(&mgr.registry, &mf).unwrap(), data);
+}
+
+#[test]
+fn multiframe_missing_codebook_id_errors_not_panics() {
+    let pool = sshuff::parallel::EncoderPool::new(2);
+    // a coded chunk claiming an id the registry never published
+    let mf = sshuff::singlestage::MultiFrame::from_chunks(vec![Frame::coded(200, 3, vec![0xFF])]);
+    let err = pool.decode(&Registry::new(), &mf).unwrap_err();
+    assert!(err.to_string().contains("unknown codebook id"), "{err}");
+    // and through the wire-parse path too
+    let err = pool.decode_bytes(&Registry::new(), &mf.to_bytes()).unwrap_err();
+    assert!(err.to_string().contains("unknown codebook id"), "{err}");
+}
+
+#[test]
 fn ema_policy_rebuild_changes_codebook_after_drift() {
     // distribution drift: EMA manager's codebook tracks it
     let mut mgr = CodebookManager::new(AvgPolicy::Ema(0.5));

@@ -1,7 +1,7 @@
 //! Cross-module property tests (proptest_lite): the invariants DESIGN.md
 //! §6 calls out, exercised end-to-end rather than per module.
 
-use sshuff::baselines::{Codec, DeflateCodec, RawCodec, SingleStageCodec, ThreeStage, ZstdCodec};
+use sshuff::baselines::{Codec, Lz77Codec, RawCodec, SingleStageCodec, ThreeStage};
 use sshuff::huffman::{CodeBook, MAX_CODE_LEN};
 use sshuff::proptest_lite::{gens, shrinks, Runner};
 use sshuff::singlestage::{AvgPolicy, CodebookManager, Frame, SingleStageDecoder, SingleStageEncoder};
@@ -23,8 +23,7 @@ fn prop_every_codec_is_lossless_on_adversarial_streams() {
     let codecs: Vec<Box<dyn Codec>> = vec![
         Box::new(RawCodec),
         Box::new(ThreeStage),
-        Box::new(DeflateCodec::default()),
-        Box::new(ZstdCodec::default()),
+        Box::new(Lz77Codec),
         Box::new(SingleStageCodec::with_fixed(reg, id)),
     ];
     // adversarial: tiny alphabets, repeated runs, empty, full-range
@@ -160,6 +159,57 @@ fn prop_frame_parse_never_panics_on_corruption() {
             }
         },
     );
+}
+
+#[test]
+fn prop_parallel_encode_is_byte_identical_to_serial_and_lossless() {
+    // random streams: wire bytes must not depend on the thread count,
+    // and decode must be exact — including raw-escape chunks
+    let (reg, id) = trained_registry(5);
+    Runner::new("parallel-serial-bytes", 40).run(
+        |rng| gens::bytes_skewed(rng, 1 << 15),
+        shrinks::vec_u8,
+        |data| {
+            let serial = sshuff::parallel::EncoderPool::new(1);
+            let parallel = sshuff::parallel::EncoderPool::new(4);
+            let a = serial.encode(&reg, id, data, 4096).to_bytes();
+            let b = parallel.encode(&reg, id, data, 4096).to_bytes();
+            if a != b {
+                return Err("wire bytes depend on thread count".into());
+            }
+            let back = parallel.decode_bytes(&reg, &b).map_err(|e| e.to_string())?;
+            if &back != data {
+                return Err("parallel decode != original".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn parallel_roundtrip_all_dtypes_matches_serial() {
+    // every dtype's symbol stream through the chunked engine: 1-thread
+    // and 4-thread encodes are byte-identical and decode exactly
+    use sshuff::tensors::{shard_symbols, DtypeTag, TensorKey, TensorKind};
+    use sshuff::trainer::synthetic::synthetic_tap;
+    for &dt in &DtypeTag::ALL {
+        let key = TensorKey::new(TensorKind::Ffn1Act, dt);
+        let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+        for b in 0..2 {
+            let tap = synthetic_tap(TensorKind::Ffn1Act, 1, 128, 256, b);
+            mgr.observe_bytes(key, &shard_symbols(&tap, dt));
+        }
+        let id = mgr.build(key).unwrap();
+        let tap = synthetic_tap(TensorKind::Ffn1Act, 1, 128, 256, 50);
+        let data = shard_symbols(&tap, dt);
+        let serial = sshuff::parallel::EncoderPool::new(1);
+        let parallel = sshuff::parallel::EncoderPool::new(4);
+        let a = serial.encode(&mgr.registry, id, &data, 4096);
+        let b = parallel.encode(&mgr.registry, id, &data, 4096);
+        assert_eq!(a.to_bytes(), b.to_bytes(), "{}", dt.name());
+        assert_eq!(parallel.decode(&mgr.registry, &b).unwrap(), data, "{}", dt.name());
+        assert!(b.wire_bytes() < data.len() + 24 + b.n_chunks() * 9, "{}", dt.name());
+    }
 }
 
 #[test]
