@@ -163,6 +163,105 @@ impl Table {
     }
 }
 
+/// Machine-readable bench output: a flat list of named records with
+/// numeric fields, serialized as a JSON array of objects. serde is not
+/// in the offline crate set, so the emitter writes the (tiny) subset of
+/// JSON it needs itself; non-finite values serialize as `null`.
+///
+/// Benches use it to persist their results (e.g.
+/// `BENCH_collectives.json` at the repo root) so the perf trajectory is
+/// tracked across PRs, not just eyeballed in terminal tables.
+#[derive(Debug, Default, Clone)]
+pub struct JsonEmitter {
+    records: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl JsonEmitter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one record of `(field, value)` pairs under `name`.
+    pub fn record(&mut self, name: &str, fields: &[(&str, f64)]) {
+        self.records.push((
+            name.to_string(),
+            fields.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        ));
+    }
+
+    /// Append a [`Measurement`]'s summary statistics.
+    pub fn record_measurement(&mut self, m: &Measurement) {
+        self.record(
+            &m.name,
+            &[
+                ("median_ns", m.median_ns()),
+                ("p95_ns", m.p95_ns()),
+                ("min_ns", m.min_ns()),
+                ("bytes_per_iter", m.bytes_per_iter as f64),
+                ("throughput_mbps", m.throughput_mbps()),
+            ],
+        );
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Render as a JSON array of objects:
+    /// `[{"name": "...", "field": value, ...}, ...]`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, (name, fields)) in self.records.iter().enumerate() {
+            out.push_str("  {\"name\": \"");
+            out.push_str(&escape_json(name));
+            out.push('"');
+            for (k, v) in fields {
+                out.push_str(", \"");
+                out.push_str(&escape_json(k));
+                out.push_str("\": ");
+                out.push_str(&json_number(*v));
+            }
+            out.push('}');
+            if i + 1 < self.records.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]\n");
+        out
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_number(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +300,42 @@ mod tests {
         let without = b.run("wo", 0, || 1 + 1);
         assert!(with.report_line().contains("MB/s"));
         assert!(!without.report_line().contains("MB/s"));
+    }
+
+    #[test]
+    fn json_emitter_renders_records_and_escapes() {
+        let mut em = JsonEmitter::new();
+        assert!(em.is_empty());
+        em.record("all_reduce/r4", &[("wire_bytes", 1024.0), ("exposed_s", 0.5)]);
+        em.record("odd \"name\"\\", &[("nan_field", f64::NAN)]);
+        assert_eq!(em.len(), 2);
+        let json = em.to_json();
+        assert!(json.starts_with("[\n"));
+        assert!(json.trim_end().ends_with(']'));
+        let want = "{\"name\": \"all_reduce/r4\", \"wire_bytes\": 1024, \"exposed_s\": 0.5},";
+        assert!(json.contains(want), "{json}");
+        assert!(json.contains("\\\"name\\\"\\\\"), "quotes and backslashes escaped: {json}");
+        assert!(json.contains("\"nan_field\": null"));
+        // exactly one comma between the two records, none trailing
+        assert_eq!(json.matches("},\n").count(), 1);
+        assert!(!json.contains(",\n]"));
+    }
+
+    #[test]
+    fn json_emitter_records_measurements_and_writes_files() {
+        let b = Bench::quick();
+        let m = b.run("emit", 4096, || 1 + 1);
+        let mut em = JsonEmitter::new();
+        em.record_measurement(&m);
+        let json = em.to_json();
+        assert!(json.contains("\"name\": \"emit\""));
+        assert!(json.contains("median_ns"));
+        assert!(json.contains("throughput_mbps"));
+        let path = std::env::temp_dir().join("sshuff_benchkit_emit_test.json");
+        em.write(&path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, json);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -47,6 +47,12 @@ impl HierarchicalReport {
     pub fn total_wire_bytes(&self) -> u64 {
         self.intra.wire_bytes + self.inter.wire_bytes
     }
+
+    /// Exposed (non-overlapped) latency across both levels — the part of
+    /// the pipelined schedule the wire does not hide.
+    pub fn total_exposed_s(&self) -> f64 {
+        self.intra.timeline.exposed_s + self.inter.timeline.exposed_s
+    }
 }
 
 /// Hierarchical all-reduce (sum). `inputs[node * locals + l]` is the
@@ -64,15 +70,18 @@ pub fn hierarchical_all_reduce(
     let mut report = HierarchicalReport::default();
 
     // 1. intra-node reduce-scatter: local rank l of each node ends up
-    //    with chunk l of the node-local sum
+    //    with chunk l of the node-local sum. Nodes run in parallel:
+    //    their reports fold by max-time into one phase report.
+    let mut phase1 = CollectiveReport::default();
     let mut node_chunks: Vec<Vec<Vec<f32>>> = Vec::with_capacity(h.nodes); // [node][local] -> chunk
     for node in 0..h.nodes {
         let mut fabric = Fabric::new(h.locals, h.intra);
         let local_inputs = &inputs[node * h.locals..(node + 1) * h.locals];
         let (chunks, rep) = reduce_scatter(&mut fabric, intra_codec, local_inputs);
-        fold(&mut report.intra, &rep);
+        fold_parallel(&mut phase1, &rep);
         node_chunks.push(chunks);
     }
+    add_serial(&mut report.intra, &phase1);
 
     // 2. inter-node all-reduce: for each local slot l, the leaders'
     //    chunk-l vectors are summed across nodes (nodes run in parallel
@@ -83,34 +92,62 @@ pub fn hierarchical_all_reduce(
         let mut fabric = Fabric::new(h.nodes.max(1), h.inter);
         if h.nodes > 1 {
             let (reduced, rep) = all_reduce(&mut fabric, inter_codec, &slot_inputs);
-            fold(&mut report.inter, &rep);
+            add_serial(&mut report.inter, &rep);
             for (n, r) in reduced.into_iter().enumerate() {
                 node_chunks[n][l] = r;
             }
         }
     }
 
-    // 3. intra-node all-gather of the globally reduced chunks
+    // 3. intra-node all-gather of the globally reduced chunks — a second
+    //    serial phase of parallel node groups.
+    let mut phase3 = CollectiveReport::default();
     let mut out = vec![Vec::new(); h.ranks()];
     for node in 0..h.nodes {
         let mut fabric = Fabric::new(h.locals, h.intra);
         let (gathered, rep) = all_gather(&mut fabric, intra_codec, &node_chunks[node]);
-        fold(&mut report.intra, &rep);
+        fold_parallel(&mut phase3, &rep);
         for (l, v) in gathered.into_iter().enumerate() {
             out[node * h.locals + l] = v;
         }
     }
+    add_serial(&mut report.intra, &phase3);
     (out, report)
 }
 
-fn fold(dst: &mut CollectiveReport, src: &CollectiveReport) {
+/// Fold a report from one of several groups running **in parallel**
+/// (the per-node intra rings of one phase): bytes and steps accumulate,
+/// time-like quantities keep the slowest group. Measured wall time adds
+/// because the simulation really did run the groups one after another.
+fn fold_parallel(dst: &mut CollectiveReport, src: &CollectiveReport) {
     dst.wire_bytes += src.wire_bytes;
     dst.raw_bytes += src.raw_bytes;
-    // same-level groups run in parallel across nodes: take the max per
-    // phase; phases are serial. Approximation: successive folds of
-    // parallel groups keep the slowest.
-    dst.sim_time_s = dst.sim_time_s.max(src.sim_time_s) + 0.0;
+    dst.sim_time_s = dst.sim_time_s.max(src.sim_time_s);
     dst.steps += src.steps;
+    let (d, s) = (&mut dst.timeline, &src.timeline);
+    d.compute_s = d.compute_s.max(s.compute_s);
+    d.wire_s = d.wire_s.max(s.wire_s);
+    d.pipelined_s = d.pipelined_s.max(s.pipelined_s);
+    d.lockstep_s = d.lockstep_s.max(s.lockstep_s);
+    d.exposed_s = d.exposed_s.max(s.exposed_s);
+    d.wall_s += s.wall_s;
+}
+
+/// Accumulate a report that runs **serially after** what `dst` already
+/// holds (a later phase, or another slot sharing the same links): every
+/// quantity — including the time-like ones — adds.
+fn add_serial(dst: &mut CollectiveReport, src: &CollectiveReport) {
+    dst.wire_bytes += src.wire_bytes;
+    dst.raw_bytes += src.raw_bytes;
+    dst.sim_time_s += src.sim_time_s;
+    dst.steps += src.steps;
+    let (d, s) = (&mut dst.timeline, &src.timeline);
+    d.compute_s += s.compute_s;
+    d.wire_s += s.wire_s;
+    d.pipelined_s += s.pipelined_s;
+    d.lockstep_s += s.lockstep_s;
+    d.exposed_s += s.exposed_s;
+    d.wall_s += s.wall_s;
 }
 
 #[cfg(test)]
@@ -178,6 +215,35 @@ mod tests {
         for r in 1..4 {
             assert_eq!(out[r], out[0]);
         }
+    }
+
+    #[test]
+    fn intra_timeline_accounts_both_serial_phases() {
+        // intra = reduce-scatter phase + all-gather phase, serially: the
+        // folded report must account strictly more time than one phase
+        // alone (regression: a pure max-fold collapsed serial phases)
+        let h = hierarchy(2, 4);
+        let xs = inputs(&h, 4096, 21);
+        let (_, rep) = hierarchical_all_reduce(&h, &ThreeStage, &RawCodec, &xs);
+        let mut f = Fabric::new(h.locals, h.intra);
+        let (_, one_phase) = reduce_scatter(&mut f, &ThreeStage, &xs[0..h.locals]);
+        // deterministic quantities: wire time and sim time double up
+        // across the two phases (old max-fold kept them at one phase)
+        assert!(
+            rep.intra.sim_time_s > one_phase.sim_time_s,
+            "{} vs {}",
+            rep.intra.sim_time_s,
+            one_phase.sim_time_s
+        );
+        assert!(
+            rep.intra.timeline.wire_s > 1.5 * one_phase.timeline.wire_s,
+            "{} vs {}",
+            rep.intra.timeline.wire_s,
+            one_phase.timeline.wire_s
+        );
+        assert!(rep.intra.steps > one_phase.steps);
+        // measured-time components must at least not collapse to one run
+        assert!(rep.intra.timeline.pipelined_s > one_phase.timeline.pipelined_s * 0.5);
     }
 
     #[test]

@@ -1,17 +1,27 @@
-//! Ring collectives over the simulated [`Fabric`] with a pluggable,
-//! lossless per-hop [`Codec`] — the paper's §1 setting: "Collective
-//! operations are typically bounded by network bandwidth. Lossless
-//! compression is an effective way to reduce the network traffic."
+//! Ring collectives over a pluggable [`engine::Transport`] with a
+//! pluggable, lossless per-hop [`Codec`] — the paper's §1 setting:
+//! "Collective operations are typically bounded by network bandwidth.
+//! Lossless compression is an effective way to reduce the network
+//! traffic."
 //!
 //! Implemented (ring algorithms, NCCL-style):
 //! * [`all_reduce`] — reduce-scatter then all-gather, 2(n−1) steps;
 //! * [`reduce_scatter`] / [`all_gather`] — the two halves standalone;
 //! * [`all_to_all`] — n−1 rounds of direct pairwise exchange.
 //!
-//! Every hop serializes its f32 chunk to little-endian bytes, runs it
-//! through the codec, and accounts the *encoded* size on the fabric.
-//! Decoding is exact (codecs are lossless), so the collective result is
-//! bit-identical to the uncompressed run — asserted by tests.
+//! All of them are thin wrappers over the pipelined
+//! [`engine::CollectiveEngine`], which executes the same schedules over
+//! either the simulated [`engine::SimTransport`] (deterministic
+//! link-model accounting on a [`Fabric`]) or the threaded
+//! [`engine::ChannelTransport`] (each rank a real thread doing real
+//! encode/decode work). Every hop serializes its f32 chunk to
+//! little-endian bytes, runs it through the codec, and accounts the
+//! *encoded* size on the fabric; decoding is exact (codecs are
+//! lossless), so the collective result is bit-identical to the
+//! uncompressed run — asserted by tests. The [`CollectiveReport`] now
+//! carries a [`Timeline`] that separates compute time, wire occupancy,
+//! and exposed (non-overlapped) latency, so "compression fits in the
+//! link budget" is a measurable quantity rather than a claim.
 //!
 //! The default single-stage arm (`baselines::SingleStageCodec`) is the
 //! **parallel chunked engine**: each hop's payload is split with
@@ -22,8 +32,56 @@
 use crate::baselines::Codec;
 use crate::fabric::Fabric;
 
+pub mod engine;
 pub mod hierarchical;
+pub use engine::{
+    ChannelTransport, CollectiveEngine, HopIn, HopOut, RankHop, SimTransport, Transport,
+};
 pub use hierarchical::{hierarchical_all_reduce, Hierarchy};
+
+/// Default pipeline depth of the per-hop timeline model used by the
+/// compatibility wrappers: each hop is modeled as this many
+/// double-buffered sub-chunks (see [`engine::CollectiveEngine`]).
+pub const DEFAULT_PIPELINE_DEPTH: usize = 4;
+
+/// Where a collective's time goes once encode, transfer, and decode are
+/// allowed to overlap. All fields are seconds, accumulated per step
+/// (steps are serial; within a step the slowest rank/link governs).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Timeline {
+    /// Critical-path compute: per step, slowest encode + slowest decode.
+    pub compute_s: f64,
+    /// Wire occupancy: per step, the slowest link's transfer time.
+    /// Identical to [`CollectiveReport::sim_time_s`] on the simulated
+    /// transport.
+    pub wire_s: f64,
+    /// Modeled completion time with the hop pipelined at the engine's
+    /// depth: sub-chunk *c+1*'s encode overlaps sub-chunk *c*'s
+    /// transfer, double-buffered per link.
+    pub pipelined_s: f64,
+    /// Modeled completion time fully serialized per step
+    /// (encode → transfer → decode) — the lock-step reference.
+    pub lockstep_s: f64,
+    /// Pipelined time not hidden behind the wire
+    /// (`pipelined − wire`, clamped at 0, per step). Near zero means
+    /// compression fits within the link budget.
+    pub exposed_s: f64,
+    /// Measured wall time spent in the transport (real encode/decode
+    /// work; on the channel transport, ranks run concurrently).
+    pub wall_s: f64,
+}
+
+impl Timeline {
+    /// Speedup of the pipelined schedule over lock-step
+    /// (`lockstep / pipelined`; 1.0 when nothing ran).
+    pub fn overlap_gain(&self) -> f64 {
+        if self.pipelined_s > 0.0 {
+            self.lockstep_s / self.pipelined_s
+        } else {
+            1.0
+        }
+    }
+}
 
 /// Outcome accounting for one collective invocation.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -33,9 +91,12 @@ pub struct CollectiveReport {
     /// Bytes the same schedule would move uncompressed.
     pub raw_bytes: u64,
     /// Simulated wall time: per step, slowest link; steps are serial.
+    /// (Wire time only — see [`Timeline`] for the compute breakdown.)
     pub sim_time_s: f64,
     /// Ring steps executed.
     pub steps: u32,
+    /// Compute/wire/exposed-latency breakdown of the same run.
+    pub timeline: Timeline,
 }
 
 impl CollectiveReport {
@@ -105,8 +166,11 @@ fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
 }
 
 /// Contiguous chunk boundaries splitting `len` into `n` nearly-equal
-/// parts (first `len % n` chunks get one extra element).
+/// parts (first `len % n` chunks get one extra element). When
+/// `len < n`, the trailing chunks are empty `(len, len)` spans — the
+/// collectives and the parallel encoder both round-trip empty chunks.
 pub fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    assert!(n >= 1, "chunk_bounds needs n >= 1 parts");
     let base = len / n;
     let extra = len % n;
     let mut out = Vec::with_capacity(n);
@@ -119,103 +183,19 @@ pub fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// One compressed hop: encode, account on the fabric, decode at the
-/// receiver. Returns (decoded chunk, link transfer time).
-fn hop(
-    fabric: &mut Fabric,
-    codec: &dyn Codec,
-    report: &mut CollectiveReport,
-    from: usize,
-    to: usize,
-    chunk: &[f32],
-) -> (Vec<f32>, f64) {
-    hop_wire(fabric, codec, report, from, to, chunk, WireFormat::F32)
-}
-
-#[allow(clippy::too_many_arguments)]
-fn hop_wire(
-    fabric: &mut Fabric,
-    codec: &dyn Codec,
-    report: &mut CollectiveReport,
-    from: usize,
-    to: usize,
-    chunk: &[f32],
-    fmt: WireFormat,
-) -> (Vec<f32>, f64) {
-    let raw = fmt.serialize(chunk);
-    let wire = codec.encode(&raw);
-    let t = fabric.send(from, to, wire.len());
-    report.wire_bytes += wire.len() as u64;
-    report.raw_bytes += raw.len() as u64;
-    let decoded = codec.decode(&wire).expect("lossless codec must decode its own output");
-    debug_assert_eq!(decoded, raw);
-    (fmt.deserialize(&decoded), t)
-}
-
 /// Ring all-reduce (sum). `inputs[r]` is rank r's local vector; all
 /// vectors must be equal length. Returns the reduced vector per rank
-/// plus the report.
+/// plus the report. Compatibility wrapper over
+/// [`engine::CollectiveEngine::all_reduce`] on a [`SimTransport`].
 pub fn all_reduce(
     fabric: &mut Fabric,
     codec: &dyn Codec,
     inputs: &[Vec<f32>],
 ) -> (Vec<Vec<f32>>, CollectiveReport) {
-    let n = fabric.n_nodes();
-    assert_eq!(inputs.len(), n);
-    let len = inputs[0].len();
-    assert!(inputs.iter().all(|v| v.len() == len), "ragged all_reduce inputs");
-    if n == 1 {
-        return (inputs.to_vec(), CollectiveReport::default());
-    }
-    let bounds = chunk_bounds(len, n);
-    let mut data: Vec<Vec<f32>> = inputs.to_vec();
-    let mut report = CollectiveReport::default();
-
-    // Phase 1 — reduce-scatter: chunk c starts at rank c+1 (step 0) and
-    // accumulates around the ring, completing at rank c after n−1 steps.
-    for step in 0..n - 1 {
-        let mut step_time = 0.0f64;
-        let mut incoming: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(n);
-        for r in 0..n {
-            let to = fabric.next(r);
-            let c = (r + 2 * n - 1 - step) % n; // chunk this rank forwards
-            let (lo, hi) = bounds[c];
-            let chunk = data[r][lo..hi].to_vec();
-            let (decoded, t) = hop(fabric, codec, &mut report, r, to, &chunk);
-            step_time = step_time.max(t);
-            incoming.push((to, c, decoded));
-        }
-        for (to, c, chunk) in incoming {
-            let (lo, hi) = bounds[c];
-            for (dst, src) in data[to][lo..hi].iter_mut().zip(chunk) {
-                *dst += src;
-            }
-        }
-        report.sim_time_s += step_time;
-        report.steps += 1;
-    }
-
-    // Phase 2 — all-gather the reduced chunks around the ring.
-    for step in 0..n - 1 {
-        let mut step_time = 0.0f64;
-        let mut incoming: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(n);
-        for r in 0..n {
-            let to = fabric.next(r);
-            let c = (r + n - step) % n; // step 0: broadcast own final chunk
-            let (lo, hi) = bounds[c];
-            let chunk = data[r][lo..hi].to_vec();
-            let (decoded, t) = hop(fabric, codec, &mut report, r, to, &chunk);
-            step_time = step_time.max(t);
-            incoming.push((to, c, decoded));
-        }
-        for (to, c, chunk) in incoming {
-            let (lo, hi) = bounds[c];
-            data[to][lo..hi].copy_from_slice(&chunk);
-        }
-        report.sim_time_s += step_time;
-        report.steps += 1;
-    }
-    (data, report)
+    let mut transport = SimTransport::new(fabric);
+    let mut eng = CollectiveEngine::new(&mut transport, codec, DEFAULT_PIPELINE_DEPTH);
+    let out = eng.all_reduce(inputs);
+    (out, eng.take_report())
 }
 
 /// Reference all-reduce result in the exact summation order the ring
@@ -246,43 +226,10 @@ pub fn reduce_scatter(
     codec: &dyn Codec,
     inputs: &[Vec<f32>],
 ) -> (Vec<Vec<f32>>, CollectiveReport) {
-    let n = fabric.n_nodes();
-    assert_eq!(inputs.len(), n);
-    let len = inputs[0].len();
-    let bounds = chunk_bounds(len, n);
-    if n == 1 {
-        return (vec![inputs[0].clone()], CollectiveReport::default());
-    }
-    let mut data: Vec<Vec<f32>> = inputs.to_vec();
-    let mut report = CollectiveReport::default();
-    for step in 0..n - 1 {
-        let mut step_time = 0.0f64;
-        let mut incoming: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(n);
-        for r in 0..n {
-            let to = fabric.next(r);
-            let c = (r + 2 * n - 1 - step) % n;
-            let (lo, hi) = bounds[c];
-            let chunk = data[r][lo..hi].to_vec();
-            let (decoded, t) = hop(fabric, codec, &mut report, r, to, &chunk);
-            step_time = step_time.max(t);
-            incoming.push((to, c, decoded));
-        }
-        for (to, c, chunk) in incoming {
-            let (lo, hi) = bounds[c];
-            for (dst, src) in data[to][lo..hi].iter_mut().zip(chunk) {
-                *dst += src;
-            }
-        }
-        report.sim_time_s += step_time;
-        report.steps += 1;
-    }
-    let out = (0..n)
-        .map(|r| {
-            let (lo, hi) = bounds[r];
-            data[r][lo..hi].to_vec()
-        })
-        .collect();
-    (out, report)
+    let mut transport = SimTransport::new(fabric);
+    let mut eng = CollectiveEngine::new(&mut transport, codec, DEFAULT_PIPELINE_DEPTH);
+    let out = eng.reduce_scatter(inputs);
+    (out, eng.take_report())
 }
 
 /// Ring all-gather: rank r contributes `inputs[r]`; everyone returns the
@@ -304,35 +251,10 @@ pub fn all_gather_wire(
     inputs: &[Vec<f32>],
     wire: WireFormat,
 ) -> (Vec<Vec<f32>>, CollectiveReport) {
-    let n = fabric.n_nodes();
-    assert_eq!(inputs.len(), n);
-    let mut report = CollectiveReport::default();
-    // slots[r][c] = chunk c as known to rank r
-    let mut slots: Vec<Vec<Option<Vec<f32>>>> = (0..n)
-        .map(|r| (0..n).map(|c| if c == r { Some(inputs[r].clone()) } else { None }).collect())
-        .collect();
-    for step in 0..n.saturating_sub(1) {
-        let mut step_time = 0.0f64;
-        let mut incoming: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(n);
-        for r in 0..n {
-            let to = fabric.next(r);
-            let c = (r + n - step) % n;
-            let chunk = slots[r][c].clone().expect("ring schedule invariant");
-            let (decoded, t) = hop_wire(fabric, codec, &mut report, r, to, &chunk, wire);
-            step_time = step_time.max(t);
-            incoming.push((to, c, decoded));
-        }
-        for (to, c, chunk) in incoming {
-            slots[to][c] = Some(chunk);
-        }
-        report.sim_time_s += step_time;
-        report.steps += 1;
-    }
-    let out = slots
-        .into_iter()
-        .map(|row| row.into_iter().flat_map(|c| c.expect("gather complete")).collect())
-        .collect();
-    (out, report)
+    let mut transport = SimTransport::new(fabric);
+    let mut eng = CollectiveEngine::new(&mut transport, codec, DEFAULT_PIPELINE_DEPTH);
+    let out = eng.all_gather_wire(inputs, wire);
+    (out, eng.take_report())
 }
 
 /// All-to-all: `inputs[r][d]` is the chunk rank r sends to rank d.
@@ -342,30 +264,10 @@ pub fn all_to_all(
     codec: &dyn Codec,
     inputs: &[Vec<Vec<f32>>],
 ) -> (Vec<Vec<Vec<f32>>>, CollectiveReport) {
-    let n = fabric.n_nodes();
-    assert_eq!(inputs.len(), n);
-    assert!(inputs.iter().all(|row| row.len() == n), "all_to_all needs n chunks per rank");
-    let mut report = CollectiveReport::default();
-    let mut out: Vec<Vec<Vec<f32>>> = (0..n)
-        .map(|_| (0..n).map(|_| Vec::new()).collect::<Vec<_>>())
-        .collect();
-    // local chunk stays put
-    for r in 0..n {
-        out[r][r] = inputs[r][r].clone();
-    }
-    for round in 1..n {
-        let mut step_time = 0.0f64;
-        for r in 0..n {
-            let d = (r + round) % n;
-            let chunk = &inputs[r][d];
-            let (decoded, t) = hop(fabric, codec, &mut report, r, d, chunk);
-            out[d][r] = decoded;
-            step_time = step_time.max(t);
-        }
-        report.sim_time_s += step_time;
-        report.steps += 1;
-    }
-    (out, report)
+    let mut transport = SimTransport::new(fabric);
+    let mut eng = CollectiveEngine::new(&mut transport, codec, DEFAULT_PIPELINE_DEPTH);
+    let out = eng.all_to_all(inputs);
+    (out, eng.take_report())
 }
 
 #[cfg(test)]
@@ -397,6 +299,19 @@ mod tests {
                 assert_eq!(w[0].1, w[1].0);
             }
         }
+    }
+
+    #[test]
+    fn chunk_bounds_len_below_n_has_trailing_empty_chunks() {
+        assert_eq!(chunk_bounds(3, 5), vec![(0, 1), (1, 2), (2, 3), (3, 3), (3, 3)]);
+        assert!(chunk_bounds(0, 4).iter().all(|&(lo, hi)| lo == 0 && hi == 0));
+        assert_eq!(chunk_bounds(1, 1), vec![(0, 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk_bounds")]
+    fn chunk_bounds_zero_parts_panics() {
+        chunk_bounds(10, 0);
     }
 
     #[test]
@@ -545,5 +460,43 @@ mod tests {
         let (out, rep) = all_reduce(&mut f, &RawCodec, &xs);
         assert_eq!(out[0], xs[0]);
         assert_eq!(rep, CollectiveReport::default());
+    }
+
+    #[test]
+    fn empty_and_tiny_tensors_round_trip_every_collective() {
+        // len < n_ranks (empty chunks) and len == 0 must not panic and
+        // must stay bit-exact through the engine
+        for len in [0usize, 1, 3] {
+            for n in [1usize, 2, 5] {
+                let xs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32 + 0.5; len]).collect();
+                let want = all_reduce_reference(&xs);
+                let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+                let (out, _) = all_reduce(&mut f, &RawCodec, &xs);
+                for r in 0..n {
+                    assert_eq!(out[r], want, "all_reduce n={n} len={len} rank {r}");
+                }
+                let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+                let (rs, _) = reduce_scatter(&mut f, &RawCodec, &xs);
+                assert_eq!(rs.iter().map(|c| c.len()).sum::<usize>(), len, "n={n} len={len}");
+                let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+                let (ag, _) = all_gather(&mut f, &RawCodec, &xs);
+                assert_eq!(ag[0].len(), n * len, "n={n} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn timeline_pipelined_never_exceeds_lockstep() {
+        // payloads large enough that per-hop compute dwarfs the
+        // (depth-1) extra per-message latencies of sub-chunking
+        let n = 4;
+        let xs = inputs(n, 1 << 15, 17);
+        let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (_, rep) = all_reduce(&mut f, &ThreeStage, &xs);
+        let t = rep.timeline;
+        assert!(t.pipelined_s <= t.lockstep_s + 1e-12, "{} vs {}", t.pipelined_s, t.lockstep_s);
+        assert!(t.exposed_s >= 0.0);
+        assert!(t.overlap_gain() >= 1.0 - 1e-9);
+        assert!((t.wire_s - rep.sim_time_s).abs() < 1e-15);
     }
 }

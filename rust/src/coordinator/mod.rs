@@ -181,6 +181,47 @@ impl Coordinator {
         SingleStageDecoder::new(self.routing_table().registry.clone())
     }
 
+    /// Snapshot the current routing table as a per-hop collective codec:
+    /// a [`crate::baselines::SingleStageCodec`] whose candidate set is
+    /// every codebook id the leader has published (per-chunk best-of
+    /// selection across them), falling back to raw frames when nothing
+    /// has been built yet. The codec is immutable — a rebuild publishes
+    /// a new snapshot, it never mutates codecs already handed out.
+    pub fn collective_codec(&self) -> crate::baselines::SingleStageCodec {
+        let table = self.routing_table();
+        let mut ids: Vec<u8> = table.ids.values().copied().collect();
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.is_empty() {
+            ids.push(crate::singlestage::RAW_ID); // unregistered: every chunk escapes raw
+        }
+        crate::baselines::SingleStageCodec::new(table.registry.clone(), ids)
+    }
+
+    /// Route one batch gradient synchronization through the pipelined
+    /// collective engine: all-reduce `grads` (one vector per rank) over
+    /// `fabric` with the current snapshot codec, wire/raw byte counters
+    /// landing in `coordinator_collective_*` metrics.
+    pub fn all_reduce_batch(
+        &self,
+        fabric: &mut crate::fabric::Fabric,
+        grads: &[Vec<f32>],
+    ) -> (Vec<Vec<f32>>, crate::collectives::CollectiveReport) {
+        let codec = self.collective_codec();
+        let mut transport = crate::collectives::SimTransport::new(fabric);
+        let mut engine = crate::collectives::CollectiveEngine::new(
+            &mut transport,
+            &codec,
+            crate::collectives::DEFAULT_PIPELINE_DEPTH,
+        );
+        let out = engine.all_reduce(grads);
+        let rep = engine.take_report();
+        self.metrics.counter("coordinator_collective_wire_bytes").add(rep.wire_bytes);
+        self.metrics.counter("coordinator_collective_raw_bytes").add(rep.raw_bytes);
+        self.metrics.counter("coordinator_collective_steps").add(rep.steps as u64);
+        (out, rep)
+    }
+
     /// Submit a job; blocks when the queue is full (backpressure).
     pub fn submit(&self, job: CompressJob) {
         self.in_flight.inc();
@@ -411,6 +452,48 @@ mod tests {
     }
 
     use crate::stats::Histogram256;
+
+    #[test]
+    fn batch_all_reduce_routes_through_engine_with_snapshot_codec() {
+        use crate::collectives::all_reduce_reference;
+        use crate::fabric::{Fabric, LinkModel};
+        let c = Coordinator::new(2, AvgPolicy::CumulativeMean);
+        let n = 4;
+        let elems = 4096;
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|r| Pcg32::substream(3, r as u64).normal_f32s(elems, 1e-3))
+            .collect();
+        let want = all_reduce_reference(&grads);
+
+        // no codebooks published yet: raw-escape fallback, still exact
+        let mut f0 = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (out0, rep0) = c.all_reduce_batch(&mut f0, &grads);
+        for r in 0..n {
+            assert_eq!(out0[r], want, "rank {r} pre-build");
+        }
+        assert!(rep0.wire_bytes >= rep0.raw_bytes, "raw fallback cannot compress");
+
+        // publish codebooks trained on the gradient byte distribution
+        let key = TensorKey::new(TensorKind::Ffn1WGrad, DtypeTag::Bf16);
+        let bytes: Vec<u8> = grads[0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        c.observe_bytes(key, &bytes);
+        c.rebuild_codebooks();
+
+        let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let (out1, rep1) = c.all_reduce_batch(&mut f1, &grads);
+        for r in 0..n {
+            assert_eq!(out1[r], want, "rank {r} post-build");
+        }
+        assert!(
+            rep1.wire_bytes < rep1.raw_bytes,
+            "published codebooks must compress gradient hops: {} vs {}",
+            rep1.wire_bytes,
+            rep1.raw_bytes
+        );
+        assert_eq!(c.metrics.counter("coordinator_collective_wire_bytes").get(),
+            rep0.wire_bytes + rep1.wire_bytes);
+        assert!(c.metrics.counter("coordinator_collective_steps").get() > 0);
+    }
 
     #[test]
     fn drop_joins_workers() {

@@ -23,17 +23,36 @@ impl LinkModel {
     /// Datacenter NIC-ish: 12.5 GB/s (100 Gb), 5 µs.
     pub const DATACENTER: LinkModel = LinkModel { bandwidth_bps: 12.5e9, latency_s: 5e-6 };
 
-    /// Time to move `bytes` over this link.
+    /// Time to move `bytes` over this link under the alpha-beta model
+    /// `t = α + bytes / β`. A zero-byte message (an empty collective
+    /// chunk) still pays the per-message latency α, and never touches
+    /// the bandwidth term — so a degenerate zero-bandwidth model stays
+    /// finite for empty sends.
+    ///
+    /// ```
+    /// use sshuff::fabric::LinkModel;
+    /// let link = LinkModel { bandwidth_bps: 1e9, latency_s: 2e-6 };
+    /// assert_eq!(link.transfer_time(0), 2e-6); // α only
+    /// let t = link.transfer_time(1_000_000); // α + 1e6 / 1e9
+    /// assert!((t - 1.002e-3).abs() < 1e-12);
+    /// ```
     pub fn transfer_time(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return self.latency_s;
+        }
         self.latency_s + bytes as f64 / self.bandwidth_bps
     }
 }
 
 /// Per-link traffic counters.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct LinkStats {
     pub bytes: u64,
     pub messages: u64,
+    /// Cumulative modeled wire occupancy of this directed link — the
+    /// seconds it has spent busy under the alpha-beta model. The ratio
+    /// against total collective time is the link's utilization.
+    pub occupancy_s: f64,
 }
 
 /// N-node fabric with directed-link accounting. Topology-agnostic at the
@@ -69,10 +88,12 @@ impl Fabric {
     /// link transfer time.
     pub fn send(&mut self, from: usize, to: usize, bytes: usize) -> f64 {
         assert!(from < self.n && to < self.n && from != to, "bad link {from}->{to}");
+        let t = self.link.transfer_time(bytes);
         let s = &mut self.stats[from * self.n + to];
         s.bytes += bytes as u64;
         s.messages += 1;
-        self.link.transfer_time(bytes)
+        s.occupancy_s += t;
+        t
     }
 
     pub fn link_stats(&self, from: usize, to: usize) -> LinkStats {
@@ -92,6 +113,17 @@ impl Fabric {
     /// bottleneck under uniform links).
     pub fn max_link_bytes(&self) -> u64 {
         self.stats.iter().map(|s| s.bytes).max().unwrap_or(0)
+    }
+
+    /// Peak modeled occupancy over any single directed link — a lower
+    /// bound on any schedule's completion time.
+    pub fn max_link_occupancy_s(&self) -> f64 {
+        self.stats.iter().map(|s| s.occupancy_s).fold(0.0, f64::max)
+    }
+
+    /// Total modeled occupancy summed over all directed links.
+    pub fn total_occupancy_s(&self) -> f64 {
+        self.stats.iter().map(|s| s.occupancy_s).sum()
     }
 
     pub fn reset(&mut self) {
@@ -125,14 +157,32 @@ mod tests {
         f.send(0, 1, 100);
         f.send(0, 1, 50);
         f.send(1, 2, 10);
-        assert_eq!(f.link_stats(0, 1), LinkStats { bytes: 150, messages: 2 });
-        assert_eq!(f.link_stats(1, 2), LinkStats { bytes: 10, messages: 1 });
+        let s01 = f.link_stats(0, 1);
+        assert_eq!((s01.bytes, s01.messages), (150, 2));
+        let s12 = f.link_stats(1, 2);
+        assert_eq!((s12.bytes, s12.messages), (10, 1));
         assert_eq!(f.link_stats(2, 0), LinkStats::default());
         assert_eq!(f.total_bytes(), 160);
         assert_eq!(f.total_messages(), 3);
         assert_eq!(f.max_link_bytes(), 150);
         f.reset();
         assert_eq!(f.total_bytes(), 0);
+    }
+
+    #[test]
+    fn occupancy_accumulates_per_link_and_over_links() {
+        let link = LinkModel { bandwidth_bps: 1e9, latency_s: 1e-6 };
+        let mut f = Fabric::new(3, link);
+        f.send(0, 1, 1_000_000); // 1 us + 1 ms
+        f.send(0, 1, 0); // empty message: alpha only
+        f.send(1, 2, 1_000_000);
+        let want_busy = link.transfer_time(1_000_000) + link.transfer_time(0);
+        assert!((f.link_stats(0, 1).occupancy_s - want_busy).abs() < 1e-12);
+        assert!((f.max_link_occupancy_s() - want_busy).abs() < 1e-12);
+        let want_total = want_busy + link.transfer_time(1_000_000);
+        assert!((f.total_occupancy_s() - want_total).abs() < 1e-12);
+        f.reset();
+        assert_eq!(f.max_link_occupancy_s(), 0.0);
     }
 
     #[test]

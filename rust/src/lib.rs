@@ -14,7 +14,8 @@
 //! ## Layers
 //! * **L3 (this crate)** — the single-stage engine ([`singlestage`]),
 //!   canonical Huffman substrate ([`huffman`]), baselines
-//!   ([`baselines`]), simulated multi-worker fabric + collectives
+//!   ([`baselines`]), the pipelined collective engine over pluggable
+//!   transports ([`collectives::engine`]) with link-model accounting
 //!   ([`fabric`], [`collectives`]), the data-parallel trainer
 //!   ([`trainer`]) and the leader/worker coordinator ([`coordinator`]).
 //! * **L2/L1 (build-time python)** — a transformer train step with FFN

@@ -5,13 +5,14 @@
 //! repro figures    [--model ...] [--steps N] [--shards N] [--fig 1|2|3|4|all]
 //! repro sweep      [--model ...] [--dtypes bf16,e4m3,...]
 //! repro compress   [--file PATH] [--codec huffman-1stage|huffman-3stage|lz77] [--threads N]
-//! repro collective [--workers N] [--elems N] [--codec ...] [--threads N]
+//! repro collective [--ranks N] [--elems N] [--link-gbps G] [--pipeline-depth D]
+//!                  [--transport sim|channel] [--codec ...] [--threads N]
 //! repro stats      (coordinator metrics demo over a synthetic stream)
 //! ```
 
 use sshuff::baselines::{baseline_codecs, Codec, SingleStageCodec};
 use sshuff::cli::{Args, Cli, CommandSpec, OptSpec};
-use sshuff::collectives::all_reduce;
+use sshuff::collectives::{ChannelTransport, CollectiveEngine, SimTransport};
 use sshuff::coordinator::{CompressJob, Coordinator};
 use sshuff::experiments::{capture_cached, figures, measure_shards, CaptureSpec};
 use sshuff::fabric::{Fabric, LinkModel};
@@ -108,10 +109,34 @@ fn build_cli() -> Cli {
             },
             CommandSpec {
                 name: "collective",
-                about: "ring all-reduce over the simulated fabric, with compression",
+                about: "pipelined ring all-reduce over a transport, with compression",
                 opts: vec![
-                    OptSpec { name: "workers", takes_value: true, help: "ring size (default 8)" },
-                    OptSpec { name: "elems", takes_value: true, help: "f32 elements per rank (default 1<<16)" },
+                    OptSpec { name: "ranks", takes_value: true, help: "ring size (default 8)" },
+                    OptSpec {
+                        name: "workers",
+                        takes_value: true,
+                        help: "alias of --ranks (back-compat)",
+                    },
+                    OptSpec {
+                        name: "elems",
+                        takes_value: true,
+                        help: "f32 elements per rank (default 1<<16)",
+                    },
+                    OptSpec {
+                        name: "link-gbps",
+                        takes_value: true,
+                        help: "link bandwidth in gigaBYTES/s (25 = die-to-die; 100 Gbit NIC = 12.5)",
+                    },
+                    OptSpec {
+                        name: "pipeline-depth",
+                        takes_value: true,
+                        help: "sub-chunks per hop in the overlap model (default 4)",
+                    },
+                    OptSpec {
+                        name: "transport",
+                        takes_value: true,
+                        help: "sim|channel (default sim)",
+                    },
                     codec,
                     threads,
                 ],
@@ -233,8 +258,21 @@ fn cmd_compress(args: &Args) -> sshuff::Result<()> {
 
 fn cmd_collective(args: &Args) -> sshuff::Result<()> {
     let workers: usize = args.opt_parse("workers", 8).map_err(sshuff::error::Error::msg)?;
+    let ranks: usize = args.opt_parse("ranks", workers).map_err(sshuff::error::Error::msg)?;
     let elems: usize = args.opt_parse("elems", 1 << 16).map_err(sshuff::error::Error::msg)?;
-    let inputs: Vec<Vec<f32>> = (0..workers)
+    // gigaBYTES per second (the fabric presets' unit): die-to-die 25,
+    // a 100 Gbit NIC is 12.5
+    let gbps: f64 = args.opt_parse("link-gbps", 25.0).map_err(sshuff::error::Error::msg)?;
+    let depth: usize =
+        args.opt_parse("pipeline-depth", 4).map_err(sshuff::error::Error::msg)?;
+    let transport = args.opt_or("transport", "sim");
+    if !matches!(transport, "sim" | "channel") {
+        return Err(sshuff::error::Error::msg(format!(
+            "--transport must be sim or channel, got '{transport}'"
+        )));
+    }
+    let link = LinkModel { bandwidth_bps: gbps * 1e9, latency_s: 1e-6 };
+    let inputs: Vec<Vec<f32>> = (0..ranks)
         .map(|r| {
             let mut rng = Pcg32::substream(7, r as u64);
             rng.normal_f32s(elems, 1e-3) // gradient-like
@@ -254,7 +292,8 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
     ));
     let only = args.opt("codec");
     let mut table = sshuff::benchkit::Table::new(&[
-        "codec", "wire MB", "raw MB", "gain", "sim ms", "wall ms",
+        "codec", "wire MB", "gain", "sim ms", "lockstep ms", "pipelined ms", "overlap",
+        "compute ms", "exposed ms", "wall ms",
     ]);
     for c in &codecs {
         if let Some(name) = only {
@@ -262,20 +301,36 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
                 continue;
             }
         }
-        let mut fabric = Fabric::new(workers, LinkModel::DIE_TO_DIE);
-        let t0 = std::time::Instant::now();
-        let (_, rep) = all_reduce(&mut fabric, c.as_ref(), &inputs);
-        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        let rep = if transport == "channel" {
+            let mut tr = ChannelTransport::new(ranks, link);
+            let mut eng = CollectiveEngine::new(&mut tr, c.as_ref(), depth);
+            eng.all_reduce(&inputs);
+            eng.take_report()
+        } else {
+            let mut fabric = Fabric::new(ranks, link);
+            let mut tr = SimTransport::new(&mut fabric);
+            let mut eng = CollectiveEngine::new(&mut tr, c.as_ref(), depth);
+            eng.all_reduce(&inputs);
+            eng.take_report()
+        };
+        let t = rep.timeline;
         table.row(&[
             c.name().to_string(),
             format!("{:.3}", rep.wire_bytes as f64 / 1e6),
-            format!("{:.3}", rep.raw_bytes as f64 / 1e6),
             format!("{:.2}x", rep.bandwidth_gain()),
             format!("{:.3}", rep.sim_time_s * 1e3),
-            format!("{wall:.1}"),
+            format!("{:.3}", t.lockstep_s * 1e3),
+            format!("{:.3}", t.pipelined_s * 1e3),
+            format!("{:.2}x", t.overlap_gain()),
+            format!("{:.3}", t.compute_s * 1e3),
+            format!("{:.3}", t.exposed_s * 1e3),
+            format!("{:.1}", t.wall_s * 1e3),
         ]);
     }
-    println!("ring all-reduce: {workers} workers x {elems} f32");
+    println!(
+        "pipelined ring all-reduce: {ranks} ranks x {elems} f32, {gbps} GB/s links, \
+         depth {depth}, transport {transport}"
+    );
     println!("{}", table.render());
     Ok(())
 }

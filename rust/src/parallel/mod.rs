@@ -13,6 +13,12 @@
 //! chunk-parallel the same way, each chunk writing a disjoint slice of
 //! the output tensor.
 //!
+//! The pool is also the **encode stage of the pipelined collective
+//! engine** ([`crate::collectives::engine`]): every per-hop payload a
+//! collective ships goes through `SingleStageCodec`, which rides this
+//! chunked path, so the engine's encode stage scales across cores while
+//! its transfer stage occupies the link.
+//!
 //! Properties:
 //! * **Deterministic wire bytes** — the container depends only on the
 //!   chunking, never on the thread count: encoding with 1 thread and

@@ -56,7 +56,7 @@ pub mod stream;
 pub use drift::{DriftConfig, DriftMonitor};
 pub use frame::{Frame, FrameHeader, MultiFrame, RAW_ID};
 pub use persist::{load_registry, save_registry};
-pub use stream::{decode_stream, encode_stream, StreamStats};
+pub use stream::{block_spans, decode_block, decode_stream, encode_stream, StreamStats};
 
 /// How the "average distribution of previous batches" is maintained.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -113,14 +113,42 @@ pub fn decode_stream(registry: &Registry, wire: &[u8]) -> crate::Result<Vec<u8>>
     Ok(out)
 }
 
+/// Byte spans `(offset, len)` of every block frame inside a complete
+/// stream buffer — what a pipelined receiver (or a DMA engine
+/// double-buffering sub-chunks) needs to schedule per-block decodes in
+/// any order, without parsing any payload. Requires the whole buffer
+/// (it validates the full framing); to pull one block out of a
+/// possibly-truncated prefix, use [`decode_block`], which only scans up
+/// to the requested index.
+pub fn block_spans(wire: &[u8]) -> crate::Result<Vec<(usize, usize)>> {
+    let ok = wire.len() >= STREAM_HEADER_BYTES && wire[0..2] == STREAM_MAGIC;
+    crate::error::ensure!(ok, "bad stream");
+    crate::error::ensure!(wire[2] == STREAM_VERSION, "unsupported stream version {}", wire[2]);
+    let n_blocks = u32::from_le_bytes(wire[4..8].try_into().unwrap()) as usize;
+    let mut spans = Vec::with_capacity(n_blocks);
+    let mut at = STREAM_HEADER_BYTES;
+    for b in 0..n_blocks {
+        crate::error::ensure!(wire.len() - at >= 4, "truncated at block {b} header");
+        let len = u32::from_le_bytes(wire[at..at + 4].try_into().unwrap()) as usize;
+        at += 4;
+        crate::error::ensure!(wire.len() - at >= len, "truncated in block {b} body");
+        spans.push((at, len));
+        at += len;
+    }
+    crate::error::ensure!(at == wire.len(), "{} trailing bytes", wire.len() - at);
+    Ok(spans)
+}
+
 /// Decode ONE block (index `idx`) without touching the rest — the
-/// out-of-order/DMA consumption path.
+/// out-of-order/DMA consumption path. Scans only up to block `idx`, so
+/// an intact early block decodes even when later bytes have not landed
+/// yet (or are truncated).
 pub fn decode_block(registry: &Registry, wire: &[u8], idx: usize) -> crate::Result<Vec<u8>> {
     crate::error::ensure!(wire.len() >= STREAM_HEADER_BYTES && wire[0..2] == STREAM_MAGIC, "bad stream");
     let n_blocks = u32::from_le_bytes(wire[4..8].try_into().unwrap()) as usize;
     crate::error::ensure!(idx < n_blocks, "block {idx} of {n_blocks}");
     let mut at = STREAM_HEADER_BYTES;
-    for b in 0..n_blocks {
+    for b in 0..=idx {
         crate::error::ensure!(wire.len() - at >= 4, "truncated at block {b} header");
         let len = u32::from_le_bytes(wire[at..at + 4].try_into().unwrap()) as usize;
         at += 4;
@@ -233,6 +261,50 @@ mod tests {
             assert_eq!(block, data[b * 4096..(b + 1) * 4096], "block {b}");
         }
         assert!(decode_block(&reg, &wire, 5).is_err());
+    }
+
+    #[test]
+    fn block_spans_index_every_frame_exactly() {
+        let (reg, _) = setup(15);
+        let data = skewed(16, 5 * 4096);
+        let (wire, stats) = encode_stream(&reg, &[0], &data, 12);
+        let spans = block_spans(&wire).unwrap();
+        assert_eq!(spans.len() as u32, stats.blocks);
+        // spans are contiguous length-prefixed frames covering the tail
+        let mut at = STREAM_HEADER_BYTES;
+        for &(off, len) in &spans {
+            assert_eq!(off, at + 4);
+            at = off + len;
+        }
+        assert_eq!(at, wire.len());
+        // each span parses and decodes standalone, in any order
+        for (b, &(off, len)) in spans.iter().enumerate().rev() {
+            let frame = Frame::parse(&wire[off..off + len]).unwrap();
+            let block = SingleStageDecoder::new(reg.clone()).decode(&frame).unwrap();
+            assert_eq!(block, data[b * 4096..(b + 1) * 4096], "block {b}");
+        }
+        // truncation is caught
+        assert!(block_spans(&wire[..wire.len() - 1]).is_err());
+        assert!(block_spans(b"XX").is_err());
+    }
+
+    #[test]
+    fn decode_block_works_on_truncated_tail() {
+        // the out-of-order/DMA path: an intact early block must decode
+        // from a prefix even when the stream's tail has not landed yet
+        let (reg, _) = setup(17);
+        let data = skewed(18, 4 * 4096);
+        let (wire, _) = encode_stream(&reg, &[0], &data, 12);
+        let cut = &wire[..wire.len() - 5];
+        for b in 0..3 {
+            assert_eq!(
+                decode_block(&reg, cut, b).unwrap(),
+                data[b * 4096..(b + 1) * 4096],
+                "block {b}"
+            );
+        }
+        assert!(decode_block(&reg, cut, 3).is_err(), "missing bytes are still an error");
+        assert!(block_spans(cut).is_err(), "the full-frame indexer requires the whole buffer");
     }
 
     #[test]
