@@ -1,20 +1,35 @@
 //! §1/§4 latency claim — the single-stage encoder removes the stage-1
 //! (frequency scan) and stage-2 (Huffman build) compute plus the
-//! codebook bytes from the critical path.
+//! codebook bytes from the critical path — and the payload-layout claim:
+//! the 4-way interleaved bitstream breaks the decode dependency chain,
+//! so single-thread decode throughput rises without touching the
+//! codebook or the chunking.
 //!
 //! Micro-bench over shard sizes: 1-stage vs 3-stage encode wall time
 //! (median + p95, ns/byte, MB/s), per-stage breakdown of the 3-stage
-//! pipeline, decode speed, and bytes on the wire including headers.
+//! pipeline, then legacy-vs-interleaved4 kernel throughput (encode AND
+//! decode, single thread) on Gemma-like bf16 activation byte streams up
+//! to 4 MiB. Results land in `BENCH_encoder.json` at the repo root via
+//! `benchkit::JsonEmitter` so the perf trajectory is tracked across
+//! PRs; the run asserts interleaved4 decode >= legacy decode at >= 1 MiB.
+//! `SSHUFF_BENCH_QUICK=1` downshifts iteration counts for CI smoke runs.
 
 use sshuff::baselines::{Codec, ThreeStage};
-use sshuff::benchkit::{black_box, Bench, Table};
+use sshuff::benchkit::{black_box, Bench, JsonEmitter, Table};
 use sshuff::huffman::CodeBook;
 use sshuff::singlestage::{AvgPolicy, CodebookManager, SingleStageDecoder, SingleStageEncoder};
 use sshuff::stats::Histogram256;
 use sshuff::tensors::{shard_symbols, DtypeTag, TensorKey, TensorKind};
 use sshuff::trainer::synthetic::synthetic_tap;
 
+/// Gemma-like shard: synthetic bf16 FFN activation bytes, `nbytes` long.
+fn activation_bytes(nbytes: usize, seed: u64) -> Vec<u8> {
+    let tap = synthetic_tap(TensorKind::Ffn1Act, 1, 1, nbytes / 2, seed);
+    shard_symbols(&tap, DtypeTag::Bf16)
+}
+
 fn main() {
+    let quick = std::env::var("SSHUFF_BENCH_QUICK").is_ok();
     let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
     // fixed codebook from "previous batches"
     let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
@@ -23,7 +38,8 @@ fn main() {
         mgr.observe_bytes(key, &shard_symbols(&tap, DtypeTag::Bf16));
     }
     let id = mgr.build(key).unwrap();
-    let bench = Bench::default();
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut em = JsonEmitter::new();
 
     println!("single-stage vs three-stage encoder (synthetic FFN1-act bf16 bytes)\n");
     let mut table = Table::new(&[
@@ -31,9 +47,7 @@ fn main() {
         "wire 1st", "wire 3st", "decode MB/s",
     ]);
     for pow in [12usize, 14, 16, 18] {
-        let n_vals = (1 << pow) / 2;
-        let tap = synthetic_tap(TensorKind::Ffn1Act, 1, 1, n_vals, 99 + pow as u64);
-        let data = shard_symbols(&tap, DtypeTag::Bf16);
+        let data = activation_bytes(1 << pow, 99 + pow as u64);
         let nbytes = data.len() as u64;
 
         let mut enc1 = SingleStageEncoder::new(mgr.registry.clone());
@@ -50,6 +64,9 @@ fn main() {
         let md = bench.run(&format!("decode/{}B", nbytes), nbytes, || {
             black_box(dec.decode(&frame).unwrap())
         });
+        for m in [&m1, &m3, &md] {
+            em.record_measurement(m);
+        }
         table.row(&[
             format!("{} KiB", nbytes / 1024),
             format!("{:.1} us", m1.median_ns() / 1e3),
@@ -64,6 +81,84 @@ fn main() {
     }
     println!("{}", table.render());
 
+    // ------------------------------------------------- payload layouts
+    // Kernel-level, single thread: the same codebook and data, the only
+    // variable is the bitstream layout. Legacy decode is one serial
+    // shift/LUT chain; interleaved4 runs four lanes in lockstep.
+    let book = mgr.registry.get(id).unwrap().book.clone();
+    let decoder = book.decoder();
+    let mut layout_table = Table::new(&[
+        "shard", "enc legacy MB/s", "enc il4 MB/s", "dec legacy MB/s", "dec il4 MB/s",
+        "dec speedup",
+    ]);
+    println!("legacy vs interleaved4 payload kernels (single thread, same codebook)\n");
+    let mut asserted = false;
+    for nbytes in [64 * 1024usize, 1 << 20, 4 << 20] {
+        let data = activation_bytes(nbytes, 7 + nbytes as u64);
+        let n = data.len() as u64;
+        let me_l = bench.run(&format!("encode/legacy/{n}B"), n, || {
+            black_box(book.encode(&data))
+        });
+        let me_i = bench.run(&format!("encode/interleaved4/{n}B"), n, || {
+            black_box(book.encode_interleaved(&data))
+        });
+        let (legacy_payload, _) = book.encode(&data);
+        let inter_payload = book.encode_interleaved(&data);
+        let mut out = vec![0u8; data.len()];
+        let md_l = bench.run(&format!("decode/legacy/{n}B"), n, || {
+            decoder.decode_into(&legacy_payload, &mut out);
+            black_box(out.last().copied())
+        });
+        assert_eq!(out, data, "legacy roundtrip at {n}B");
+        let md_i = bench.run(&format!("decode/interleaved4/{n}B"), n, || {
+            decoder.decode_interleaved_into(&inter_payload, &mut out).unwrap();
+            black_box(out.last().copied())
+        });
+        assert_eq!(out, data, "interleaved4 roundtrip at {n}B");
+        let speedup = md_i.throughput_mbps() / md_l.throughput_mbps();
+        for m in [&me_l, &me_i, &md_l, &md_i] {
+            em.record_measurement(m);
+        }
+        em.record(
+            &format!("layout_summary/{n}B"),
+            &[
+                ("bytes", n as f64),
+                ("enc_legacy_mbps", me_l.throughput_mbps()),
+                ("enc_interleaved4_mbps", me_i.throughput_mbps()),
+                ("dec_legacy_mbps", md_l.throughput_mbps()),
+                ("dec_interleaved4_mbps", md_i.throughput_mbps()),
+                ("dec_speedup", speedup),
+            ],
+        );
+        layout_table.row(&[
+            format!("{} KiB", n / 1024),
+            format!("{:.0}", me_l.throughput_mbps()),
+            format!("{:.0}", me_i.throughput_mbps()),
+            format!("{:.0}", md_l.throughput_mbps()),
+            format!("{:.0}", md_i.throughput_mbps()),
+            format!("{speedup:.2}x"),
+        ]);
+        if n >= 1 << 20 {
+            asserted = true;
+            // quick (CI smoke) runs take few samples on noisy shared
+            // runners — gate with a tolerance there; full runs gate the
+            // real claim.
+            let floor = if quick { 0.8 } else { 1.0 };
+            assert!(
+                speedup >= floor,
+                "interleaved4 decode must not be slower than legacy at {n}B: \
+                 {:.0} vs {:.0} MB/s (floor {floor}x)",
+                md_i.throughput_mbps(),
+                md_l.throughput_mbps()
+            );
+        }
+    }
+    assert!(asserted, "at least one >= 1 MiB shard must gate the decode speedup");
+    println!("{}", layout_table.render());
+    println!("Reading: 'dec speedup' is interleaved4 over legacy, single thread — the");
+    println!("dependency-chain argument made falsifiable. Four sub-streams let the core");
+    println!("overlap four LUT walks; the wire cost is 13 bytes of marker + jump table.");
+
     // per-stage breakdown of the three-stage pipeline at 64 KiB
     let tap = synthetic_tap(TensorKind::Ffn1Act, 1, 128, 128, 5);
     let data = shard_symbols(&tap, DtypeTag::Bf16);
@@ -71,8 +166,8 @@ fn main() {
     let s1 = bench.run("stage1 histogram", nbytes, || black_box(Histogram256::from_bytes(&data)));
     let h = Histogram256::from_bytes(&data);
     let s2 = bench.run("stage2 build", 0, || black_box(CodeBook::from_counts(&h.counts)));
-    let book = CodeBook::from_counts(&h.counts).unwrap();
-    let s3 = bench.run("stage3 encode", nbytes, || black_box(book.encode(&data)));
+    let book3 = CodeBook::from_counts(&h.counts).unwrap();
+    let s3 = bench.run("stage3 encode", nbytes, || black_box(book3.encode(&data)));
     println!("three-stage breakdown at {} KiB:", nbytes / 1024);
     println!("  {}", s1.report_line());
     println!("  {}", s2.report_line());
@@ -84,4 +179,8 @@ fn main() {
     println!(
         "\ndata overhead per message: 3-stage header 133 B (codebook on wire), 1-stage header 5 B"
     );
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_encoder.json");
+    em.write(std::path::Path::new(path)).expect("write BENCH_encoder.json");
+    println!("\nwrote {} records to {path}", em.len());
 }

@@ -290,7 +290,15 @@ impl SingleStageCodec {
 
     /// Override the encoder thread count (default: all cores).
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.pool = EncoderPool::new(threads);
+        self.pool = EncoderPool::new(threads).with_layout(self.pool.layout());
+        self
+    }
+
+    /// Override the per-chunk payload layout (default:
+    /// `PayloadLayout::Interleaved4`, the fast-decode wire format).
+    /// Changes the wire bytes; decode accepts either layout.
+    pub fn with_layout(mut self, layout: crate::singlestage::PayloadLayout) -> Self {
+        self.pool = self.pool.with_layout(layout);
         self
     }
 

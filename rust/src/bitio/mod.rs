@@ -27,16 +27,23 @@ impl BitWriter {
     /// Append the low `len` bits of `code` (MSB of the field first).
     /// `len` must be `<= 57` so a single spill keeps `nbits < 8` slack;
     /// Huffman codes here are always `<= 32`.
+    ///
+    /// Hot path (§Perf): all whole bytes spill in one
+    /// `to_be_bytes` + `extend_from_slice` instead of a byte-at-a-time
+    /// loop — the same write-ahead idiom `CodeBook::encode` uses.
     #[inline]
     pub fn put_bits(&mut self, code: u64, len: u32) {
         debug_assert!(len <= 57);
         debug_assert!(len == 64 || code < (1u64 << len));
         self.acc |= code << (64 - self.nbits - len);
         self.nbits += len;
-        while self.nbits >= 8 {
-            self.buf.push((self.acc >> 56) as u8);
-            self.acc <<= 8;
-            self.nbits -= 8;
+        if self.nbits >= 8 {
+            let k = (self.nbits / 8) as usize;
+            self.buf.extend_from_slice(&self.acc.to_be_bytes()[..k]);
+            self.nbits &= 7;
+            // k == 8 only at nbits == 64 (7 slack + 57-bit put); a shift
+            // by 64 would overflow, so clear the accumulator instead.
+            self.acc = if k == 8 { 0 } else { self.acc << (8 * k) };
         }
     }
 
@@ -127,6 +134,90 @@ impl<'a> BitReader<'a> {
     }
 }
 
+/// Load 8 bytes big-endian at `pos`, zero-padded past the end of `buf`
+/// (reads past the end yield zero bits, mirroring
+/// [`BitReader::peek_bits`] semantics).
+#[inline]
+pub fn load_be64_padded(buf: &[u8], pos: usize) -> u64 {
+    let mut tmp = [0u8; 8];
+    if pos < buf.len() {
+        let k = (buf.len() - pos).min(8);
+        tmp[..k].copy_from_slice(&buf[pos..pos + k]);
+    }
+    u64::from_be_bytes(tmp)
+}
+
+/// One lane of an N-way interleaved bit reader: a 64-bit MSB-aligned
+/// accumulator plus a refill cursor over that lane's own sub-stream.
+///
+/// The point of lanes (§Perf): N lanes refilled and consumed in
+/// lockstep give the CPU N *independent* shift/lookup dependency
+/// chains, where a single [`BitReader`] serializes every symbol behind
+/// the previous symbol's consumed length. Each refill tops the
+/// accumulator up to >= 57 valid bits, so four <= 12-bit Huffman codes
+/// can be consumed per lane between refills.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BitLane {
+    /// Up-next stream bits, left-aligned.
+    pub acc: u64,
+    /// Valid bits in `acc` (may include zero padding past end of input).
+    pub nbits: u32,
+    /// Next unread byte of the lane's sub-stream.
+    pub pos: usize,
+}
+
+impl BitLane {
+    /// Refill from `buf` with an unchecked-width 8-byte load. The caller
+    /// must guarantee `self.pos + 8 <= buf.len()` (the fast-loop
+    /// precondition); after the call `nbits >= 57`.
+    #[inline]
+    pub fn refill(&mut self, buf: &[u8]) {
+        if self.nbits >= 57 {
+            return; // full enough — also keeps the shift below < 64
+        }
+        let w = u64::from_be_bytes(buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.acc |= w >> self.nbits;
+        let adv = ((64 - self.nbits) / 8) as usize;
+        self.pos += adv;
+        self.nbits += adv as u32 * 8;
+    }
+
+    /// Refill with zero padding past the end of `buf` — the tail-safe
+    /// form. Reading past the end feeds zero bits (corrupt or truncated
+    /// lanes decode to garbage rather than panicking).
+    #[inline]
+    pub fn refill_padded(&mut self, buf: &[u8]) {
+        if self.nbits >= 57 {
+            return;
+        }
+        let w = load_be64_padded(buf, self.pos);
+        self.acc |= w >> self.nbits;
+        let adv = ((64 - self.nbits) / 8) as usize;
+        self.pos += adv;
+        self.nbits += adv as u32 * 8;
+    }
+
+    /// Can [`refill`](BitLane::refill) read a full 8 bytes?
+    #[inline]
+    pub fn can_refill_unchecked(&self, buf: &[u8]) -> bool {
+        self.pos + 8 <= buf.len()
+    }
+
+    /// Peek the next `len` (1..=32) bits without consuming.
+    #[inline]
+    pub fn peek(&self, len: u32) -> u32 {
+        debug_assert!(len >= 1 && len <= 32);
+        (self.acc >> (64 - len)) as u32
+    }
+
+    /// Consume `len` bits (must be backed by a prior refill).
+    #[inline]
+    pub fn consume(&mut self, len: u32) {
+        self.acc <<= len;
+        self.nbits = self.nbits.saturating_sub(len);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +297,84 @@ mod tests {
         let r = BitReader::new(&bytes);
         assert_eq!(r.peek_bits(16), 0xFF00);
         assert_eq!(r.bits_remaining(), 8);
+    }
+
+    #[test]
+    fn put_bits_batched_spill_matches_bytewise_reference() {
+        // the single-spill fast path must produce the exact bytes of the
+        // old byte-at-a-time loop, including the k == 8 full-drain case
+        // (7 bits of slack + a 57-bit put)
+        let mut rng = Pcg32::new(7);
+        let mut w = BitWriter::new();
+        let mut ref_bits: Vec<bool> = Vec::new();
+        let mut items: Vec<(u64, u32)> = (0..5000)
+            .map(|_| {
+                let len = 1 + rng.gen_range(57);
+                let code = rng.next_u64() & ((1u64 << len) - 1);
+                (code, len)
+            })
+            .collect();
+        // force the full-drain case deterministically: 7 bits then 57
+        items.push((0x55, 7));
+        items.push((0x0123_4567_89AB_CDEF & ((1u64 << 57) - 1), 57));
+        for &(c, l) in &items {
+            w.put_bits(c, l);
+            for b in (0..l).rev() {
+                ref_bits.push((c >> b) & 1 == 1);
+            }
+        }
+        let mut want = vec![0u8; ref_bits.len().div_ceil(8)];
+        for (i, &bit) in ref_bits.iter().enumerate() {
+            if bit {
+                want[i / 8] |= 0x80 >> (i % 8);
+            }
+        }
+        assert_eq!(w.bit_len(), ref_bits.len() as u64);
+        assert_eq!(w.finish(), want);
+    }
+
+    #[test]
+    fn load_be64_padded_pads_zeroes() {
+        let buf = [0xAB, 0xCD, 0xEF];
+        assert_eq!(load_be64_padded(&buf, 0), 0xABCD_EF00_0000_0000);
+        assert_eq!(load_be64_padded(&buf, 2), 0xEF00_0000_0000_0000);
+        assert_eq!(load_be64_padded(&buf, 3), 0);
+        assert_eq!(load_be64_padded(&buf, 100), 0);
+        let full = [1u8, 2, 3, 4, 5, 6, 7, 8, 9];
+        assert_eq!(load_be64_padded(&full, 1), 0x0203_0405_0607_0809);
+    }
+
+    #[test]
+    fn bitlane_reads_like_bitreader() {
+        let mut rng = Pcg32::new(9);
+        let mut data = vec![0u8; 64];
+        rng.fill_bytes(&mut data);
+        let mut lane = BitLane::default();
+        let mut r = BitReader::new(&data);
+        for step in 0..120u32 {
+            let len = 1 + step % 12;
+            lane.refill_padded(&data);
+            assert!(lane.nbits >= 57 || lane.pos >= data.len());
+            assert_eq!(lane.peek(len) as u64, r.peek_bits(len) as u64, "step {step}");
+            lane.consume(len);
+            r.consume(len);
+        }
+    }
+
+    #[test]
+    fn bitlane_unchecked_matches_padded_away_from_the_tail() {
+        let mut rng = Pcg32::new(11);
+        let mut data = vec![0u8; 32];
+        rng.fill_bytes(&mut data);
+        let mut a = BitLane::default();
+        let mut b = BitLane::default();
+        while a.can_refill_unchecked(&data) {
+            a.refill(&data);
+            b.refill_padded(&data);
+            assert_eq!((a.acc, a.nbits, a.pos), (b.acc, b.nbits, b.pos));
+            a.consume(11);
+            b.consume(11);
+        }
     }
 
     #[test]

@@ -21,8 +21,8 @@ use std::time::Instant;
 
 use crate::metrics::{Counter, HistogramMetric, MetricsRegistry};
 use crate::singlestage::{
-    AvgPolicy, CodebookManager, DriftConfig, DriftMonitor, Frame, SingleStageDecoder,
-    SingleStageEncoder,
+    AvgPolicy, CodebookManager, DriftConfig, DriftMonitor, Frame, PayloadLayout,
+    SingleStageDecoder, SingleStageEncoder,
 };
 use crate::stats::Histogram256;
 use crate::tensors::TensorKey;
@@ -76,6 +76,9 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     pub metrics: MetricsRegistry,
     in_flight: Counter,
+    /// Payload layout every worker encode and published collective
+    /// codec uses (the coordinator picks the wire format for the fleet).
+    layout: PayloadLayout,
 }
 
 /// Bounded job queue depth per worker — the backpressure knob.
@@ -83,6 +86,16 @@ pub const QUEUE_DEPTH_PER_WORKER: usize = 4;
 
 impl Coordinator {
     pub fn new(n_workers: usize, policy: AvgPolicy) -> Coordinator {
+        Self::with_layout(n_workers, policy, PayloadLayout::default())
+    }
+
+    /// [`new`](Coordinator::new) with an explicit payload layout (e.g.
+    /// [`PayloadLayout::Legacy`] while draining pre-revision decoders).
+    pub fn with_layout(
+        n_workers: usize,
+        policy: AvgPolicy,
+        layout: PayloadLayout,
+    ) -> Coordinator {
         assert!(n_workers >= 1);
         let metrics = MetricsRegistry::new();
         let table: Arc<RwLock<Arc<RoutingTable>>> =
@@ -107,7 +120,8 @@ impl Coordinator {
             );
             workers.push(std::thread::spawn(move || {
                 worker_loop(
-                    w, job_rx, result_tx, table, frames, raw_frames, bytes_in, bytes_out, latency,
+                    w, job_rx, result_tx, table, layout, frames, raw_frames, bytes_in, bytes_out,
+                    latency,
                 )
             }));
         }
@@ -121,7 +135,13 @@ impl Coordinator {
             workers,
             in_flight: metrics.counter("coordinator_in_flight_submitted"),
             metrics,
+            layout,
         }
+    }
+
+    /// The payload layout this coordinator's workers encode with.
+    pub fn layout(&self) -> PayloadLayout {
+        self.layout
     }
 
     /// Leader-side: fold an observed histogram into `key`'s average PMF.
@@ -185,8 +205,10 @@ impl Coordinator {
     /// a [`crate::baselines::SingleStageCodec`] whose candidate set is
     /// every codebook id the leader has published (per-chunk best-of
     /// selection across them), falling back to raw frames when nothing
-    /// has been built yet. The codec is immutable — a rebuild publishes
-    /// a new snapshot, it never mutates codecs already handed out.
+    /// has been built yet. The codec inherits the coordinator's payload
+    /// layout, so the whole fleet ships one wire format. The codec is
+    /// immutable — a rebuild publishes a new snapshot, it never mutates
+    /// codecs already handed out.
     pub fn collective_codec(&self) -> crate::baselines::SingleStageCodec {
         let table = self.routing_table();
         let mut ids: Vec<u8> = table.ids.values().copied().collect();
@@ -196,6 +218,7 @@ impl Coordinator {
             ids.push(crate::singlestage::RAW_ID); // unregistered: every chunk escapes raw
         }
         crate::baselines::SingleStageCodec::new(table.registry.clone(), ids)
+            .with_layout(self.layout)
     }
 
     /// Route one batch gradient synchronization through the pipelined
@@ -279,6 +302,7 @@ fn worker_loop(
     job_rx: Arc<Mutex<Receiver<WorkerMsg>>>,
     result_tx: SyncSender<CompressResult>,
     table: Arc<RwLock<Arc<RoutingTable>>>,
+    layout: PayloadLayout,
     frames: Counter,
     raw_frames: Counter,
     bytes_in: Counter,
@@ -296,7 +320,7 @@ fn worker_loop(
         };
         let snapshot = table.read().unwrap().clone();
         let t0 = Instant::now();
-        let mut enc = SingleStageEncoder::new(snapshot.registry.clone());
+        let mut enc = SingleStageEncoder::new(snapshot.registry.clone()).with_layout(layout);
         let frame = match snapshot.id_for(job.key) {
             Some(id) => enc.encode_with(id, &job.data),
             None => Frame::raw(&job.data),
@@ -376,6 +400,27 @@ mod tests {
         // metrics landed
         assert_eq!(c.metrics.counter("coordinator_frames").get(), 32);
         assert!(c.metrics.render().contains("coordinator_encode_us_count"));
+    }
+
+    #[test]
+    fn coordinator_layout_controls_worker_frames() {
+        for layout in [PayloadLayout::Legacy, PayloadLayout::Interleaved4] {
+            let c = Coordinator::with_layout(2, AvgPolicy::CumulativeMean, layout);
+            assert_eq!(c.layout(), layout);
+            c.observe_bytes(key(), &skewed(5, 1 << 14));
+            c.rebuild_codebooks();
+            let jobs: Vec<CompressJob> = (0..8)
+                .map(|seq| CompressJob { seq, key: key(), data: skewed(200 + seq, 8192) })
+                .collect();
+            let originals: Vec<Vec<u8>> = jobs.iter().map(|j| j.data.clone()).collect();
+            let results = c.encode_batch(jobs);
+            let dec = c.decoder();
+            for (r, orig) in results.iter().zip(&originals) {
+                assert_ne!(r.frame.header.id, crate::singlestage::RAW_ID, "{layout:?}");
+                assert_eq!(r.frame.header.layout, layout, "{layout:?}");
+                assert_eq!(dec.decode(&r.frame).unwrap(), *orig, "{layout:?} seq {}", r.seq);
+            }
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ use sshuff::fabric::{Fabric, LinkModel};
 use sshuff::parallel::EncoderPool;
 use sshuff::prng::Pcg32;
 use sshuff::runtime::Engine;
-use sshuff::singlestage::{AvgPolicy, CodebookManager};
+use sshuff::singlestage::{AvgPolicy, CodebookManager, PayloadLayout};
 use sshuff::stats::Histogram256;
 use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
 use sshuff::trainer::Trainer;
@@ -67,6 +67,11 @@ fn build_cli() -> Cli {
         takes_value: true,
         help: "encoder threads for huffman-1stage (default: all cores)",
     };
+    let layout = OptSpec {
+        name: "layout",
+        takes_value: true,
+        help: "huffman-1stage payload layout: legacy|interleaved4 (default interleaved4)",
+    };
     Cli {
         bin: "repro",
         about: "Single-Stage Huffman Encoder for ML Compression — reproduction driver",
@@ -105,6 +110,7 @@ fn build_cli() -> Cli {
                     OptSpec { name: "file", takes_value: true, help: "input file (default: synthetic)" },
                     codec.clone(),
                     threads.clone(),
+                    layout.clone(),
                 ],
             },
             CommandSpec {
@@ -139,6 +145,7 @@ fn build_cli() -> Cli {
                     },
                     codec,
                     threads,
+                    layout,
                 ],
             },
             CommandSpec {
@@ -151,6 +158,13 @@ fn build_cli() -> Cli {
             },
         ],
     }
+}
+
+fn layout_from(args: &Args) -> sshuff::Result<PayloadLayout> {
+    let name = args.opt_or("layout", PayloadLayout::default().name());
+    PayloadLayout::parse(name).ok_or_else(|| {
+        sshuff::error::Error::msg(format!("--layout must be legacy or interleaved4, got '{name}'"))
+    })
 }
 
 fn spec_from(args: &Args) -> Result<CaptureSpec, String> {
@@ -226,13 +240,16 @@ fn cmd_compress(args: &Args) -> sshuff::Result<()> {
     };
     let threads: usize =
         args.opt_parse("threads", EncoderPool::auto().threads()).map_err(sshuff::error::Error::msg)?;
+    let layout = layout_from(args)?;
     let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
     let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
     mgr.observe_bytes(key, &data);
     let id = mgr.build(key).unwrap();
     let mut codecs: Vec<Box<dyn Codec>> = baseline_codecs();
     codecs.push(Box::new(
-        SingleStageCodec::with_fixed(mgr.registry.clone(), id).with_threads(threads),
+        SingleStageCodec::with_fixed(mgr.registry.clone(), id)
+            .with_threads(threads)
+            .with_layout(layout),
     ));
     let only = args.opt("codec");
     let mut table = sshuff::benchkit::Table::new(&["codec", "in", "out", "ratio", "saved%"]);
@@ -286,9 +303,12 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
     let id = mgr.build(key).unwrap();
     let threads: usize =
         args.opt_parse("threads", EncoderPool::auto().threads()).map_err(sshuff::error::Error::msg)?;
+    let layout = layout_from(args)?;
     let mut codecs: Vec<Box<dyn Codec>> = baseline_codecs();
     codecs.push(Box::new(
-        SingleStageCodec::with_fixed(mgr.registry.clone(), id).with_threads(threads),
+        SingleStageCodec::with_fixed(mgr.registry.clone(), id)
+            .with_threads(threads)
+            .with_layout(layout),
     ));
     let only = args.opt("codec");
     let mut table = sshuff::benchkit::Table::new(&[

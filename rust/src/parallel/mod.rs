@@ -55,7 +55,9 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::collectives::chunk_bounds;
-use crate::singlestage::{select_codebook, Frame, MultiFrame, Registry, RAW_ID};
+use crate::singlestage::{
+    encode_frame, select_codebook, Frame, MultiFrame, PayloadLayout, Registry, RAW_ID,
+};
 use crate::stats::Histogram256;
 
 /// Default chunk length: 64 KiB — matches `stream::DEFAULT_BLOCK_LOG2`;
@@ -65,13 +67,18 @@ pub const DEFAULT_CHUNK_LEN: usize = 64 * 1024;
 
 /// A scoped-thread chunked encoder/decoder over a shared [`Registry`].
 ///
-/// The pool is a configuration value (thread count), not an OS resource:
-/// threads are spawned per call with `std::thread::scope`, so there is
-/// nothing to shut down and the pool is trivially `Send + Sync + Copy`.
-/// Single-chunk or single-thread calls run inline with zero spawn cost.
+/// The pool is a configuration value (thread count + payload layout),
+/// not an OS resource: threads are spawned per call with
+/// `std::thread::scope`, so there is nothing to shut down and the pool
+/// is trivially `Send + Sync + Copy`. Single-chunk or single-thread
+/// calls run inline with zero spawn cost. Chunks are framed with the
+/// pool's [`PayloadLayout`] (default [`PayloadLayout::Interleaved4`] —
+/// the fast-decode wire format); decode accepts containers of either
+/// layout, per chunk, since frames self-describe.
 #[derive(Debug, Clone, Copy)]
 pub struct EncoderPool {
     threads: usize,
+    layout: PayloadLayout,
 }
 
 impl Default for EncoderPool {
@@ -83,7 +90,7 @@ impl Default for EncoderPool {
 impl EncoderPool {
     /// Pool with an explicit worker count (clamped to >= 1).
     pub fn new(threads: usize) -> EncoderPool {
-        EncoderPool { threads: threads.max(1) }
+        EncoderPool { threads: threads.max(1), layout: PayloadLayout::default() }
     }
 
     /// Pool sized to the machine (`std::thread::available_parallelism`).
@@ -91,8 +98,19 @@ impl EncoderPool {
         EncoderPool::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
     }
 
+    /// Override the per-chunk payload layout (part of the wire format,
+    /// unlike the thread count).
+    pub fn with_layout(mut self, layout: PayloadLayout) -> EncoderPool {
+        self.layout = layout;
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    pub fn layout(&self) -> PayloadLayout {
+        self.layout
     }
 
     /// Encode `data` against a fixed codebook id, split into
@@ -105,7 +123,8 @@ impl EncoderPool {
         data: &[u8],
         chunk_len: usize,
     ) -> MultiFrame {
-        self.run_encode(data, chunk_len, &|chunk| encode_chunk_fixed(registry, id, chunk))
+        let layout = self.layout;
+        self.run_encode(data, chunk_len, &|chunk| encode_frame(registry, id, chunk, layout))
     }
 
     /// Encode with per-chunk codebook selection (paper §4): each chunk is
@@ -118,7 +137,10 @@ impl EncoderPool {
         data: &[u8],
         chunk_len: usize,
     ) -> MultiFrame {
-        self.run_encode(data, chunk_len, &|chunk| encode_chunk_best(registry, candidates, chunk))
+        let layout = self.layout;
+        self.run_encode(data, chunk_len, &|chunk| {
+            encode_chunk_best(registry, candidates, chunk, layout)
+        })
     }
 
     fn run_encode(
@@ -237,30 +259,26 @@ impl EncoderPool {
     }
 }
 
-/// One chunk, fixed id — the exact semantics of
-/// `SingleStageEncoder::encode_with`, minus the stats accounting.
-fn encode_chunk_fixed(registry: &Registry, id: u8, chunk: &[u8]) -> Frame {
-    match registry.get(id) {
-        Some(fixed) if fixed.covers_all || fixed.book.covers(chunk) => {
-            let (payload, _) = fixed.book.encode(chunk);
-            Frame::coded(id, chunk.len() as u32, payload)
-        }
-        _ => Frame::raw(chunk),
-    }
-}
-
 /// One chunk, best-of-candidates (histogram + K dot products + encode).
-fn encode_chunk_best(registry: &Registry, candidates: &[u8], chunk: &[u8]) -> Frame {
+/// The per-frame semantics of `singlestage::encode_frame` after the
+/// selection pass picks the id.
+fn encode_chunk_best(
+    registry: &Registry,
+    candidates: &[u8],
+    chunk: &[u8],
+    layout: PayloadLayout,
+) -> Frame {
     let hist = Histogram256::from_bytes(chunk);
     let (id, _) = select_codebook(&hist, registry, candidates);
     if id == RAW_ID {
         Frame::raw(chunk)
     } else {
-        encode_chunk_fixed(registry, id, chunk)
+        encode_frame(registry, id, chunk, layout)
     }
 }
 
-/// Decode one chunk frame into its output slice.
+/// Decode one chunk frame into its output slice (either payload layout;
+/// the frame self-describes).
 fn decode_chunk(registry: &Registry, frame: &Frame, out: &mut [u8]) -> crate::Result<()> {
     crate::error::ensure!(
         frame.header.n_symbols as usize == out.len(),
@@ -281,7 +299,12 @@ fn decode_chunk(registry: &Registry, frame: &Frame, out: &mut [u8]) -> crate::Re
     let fixed = registry
         .get(frame.header.id)
         .ok_or_else(|| crate::error::anyhow!("unknown codebook id {}", frame.header.id))?;
-    fixed.decoder.decode_into(&frame.payload, out);
+    match frame.header.layout {
+        PayloadLayout::Legacy => fixed.decoder.decode_into(&frame.payload, out),
+        PayloadLayout::Interleaved4 => {
+            fixed.decoder.decode_interleaved_into(&frame.payload, out)?
+        }
+    }
     Ok(())
 }
 
@@ -352,6 +375,32 @@ mod tests {
         let empty = pool.encode(&reg, id, &[], 1024);
         assert_eq!(empty.n_chunks(), 1);
         assert_eq!(empty.total_symbols, 0);
+    }
+
+    #[test]
+    fn pool_layout_roundtrip_and_mixed_containers() {
+        let (reg, id) = registry(41);
+        let data = skewed(42, 100_000);
+        let pool_i = EncoderPool::new(4); // default: interleaved4
+        let pool_l = EncoderPool::new(4).with_layout(PayloadLayout::Legacy);
+        assert_eq!(pool_i.layout(), PayloadLayout::Interleaved4);
+        let mf_i = pool_i.encode(&reg, id, &data, 4096);
+        let mf_l = pool_l.encode(&reg, id, &data, 4096);
+        assert!(mf_i
+            .chunks
+            .iter()
+            .all(|f| f.header.id == RAW_ID || f.header.layout == PayloadLayout::Interleaved4));
+        assert!(mf_l.chunks.iter().all(|f| f.header.layout == PayloadLayout::Legacy));
+        assert_eq!(pool_i.decode(&reg, &mf_i).unwrap(), data);
+        assert_eq!(pool_i.decode(&reg, &mf_l).unwrap(), data, "legacy containers still decode");
+        // a container mixing layouts decodes chunk by chunk
+        let mut mixed = mf_l.chunks.clone();
+        mixed.extend(mf_i.chunks.clone());
+        let both: Vec<u8> = data.iter().chain(data.iter()).copied().collect();
+        let mf_mixed = MultiFrame::from_chunks(mixed);
+        assert_eq!(pool_l.decode(&reg, &mf_mixed).unwrap(), both);
+        // wire-level: marker-byte chunk headers survive container framing
+        assert_eq!(pool_i.decode_bytes(&reg, &mf_i.to_bytes()).unwrap(), data);
     }
 
     #[test]

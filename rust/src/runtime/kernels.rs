@@ -8,8 +8,8 @@
 use super::manifest::Manifest;
 use super::{artifacts_dir, literal_from, Engine, Executable};
 use crate::bitio::BitWriter;
-use crate::huffman::CodeBook;
-use crate::singlestage::{Frame, MultiFrame};
+use crate::huffman::{CodeBook, JUMP_TABLE_BYTES};
+use crate::singlestage::{interleaved_frame_or_raw, Frame, MultiFrame, PayloadLayout};
 use crate::stats::{Histogram256, NUM_SYMBOLS};
 use std::path::PathBuf;
 
@@ -117,12 +117,32 @@ impl KernelRunner {
     /// into the same [`MultiFrame`] container the parallel engine
     /// (`crate::parallel::EncoderPool`) produces and decodes. Chunks the
     /// book does not cover escape to raw frames; `id` must be the
-    /// registry id of `book` for the decode side to line up.
+    /// registry id of `book` for the decode side to line up. Frames use
+    /// the legacy payload layout (bit-identical to `CodeBook::encode`);
+    /// [`encode_multiframe_layout`](Self::encode_multiframe_layout)
+    /// selects the 4-way interleaved layout.
     pub fn encode_multiframe(
         &self,
         data: &[u8],
         book: &CodeBook,
         id: u8,
+    ) -> crate::Result<MultiFrame> {
+        self.encode_multiframe_layout(data, book, id, PayloadLayout::Legacy)
+    }
+
+    /// [`encode_multiframe`](Self::encode_multiframe) with an explicit
+    /// payload layout. The kernel's per-symbol (codeword, length)
+    /// gather is layout-independent; for
+    /// [`PayloadLayout::Interleaved4`] the bit-pack back half
+    /// round-robins the gathered codes into four sub-streams (symbol
+    /// `j` → stream `j % 4`) behind a jump table, exactly like
+    /// `CodeBook::encode_interleaved`.
+    pub fn encode_multiframe_layout(
+        &self,
+        data: &[u8],
+        book: &CodeBook,
+        id: u8,
+        layout: PayloadLayout,
     ) -> crate::Result<MultiFrame> {
         let covers_all = book.support() == NUM_SYMBOLS;
         let mut frames = Vec::with_capacity(data.len() / self.kernel_n + 1);
@@ -133,17 +153,51 @@ impl KernelRunner {
                 continue;
             }
             let (codes, lens, _offsets, total) = self.encode_index(chunk, book)?;
-            let mut w = BitWriter::with_capacity((total as usize).div_ceil(8));
-            for (&code, &len) in codes.iter().zip(&lens) {
-                w.put_bits(code as u64, len as u32);
+            match layout {
+                PayloadLayout::Legacy => {
+                    let mut w = BitWriter::with_capacity((total as usize).div_ceil(8));
+                    for (&code, &len) in codes.iter().zip(&lens) {
+                        w.put_bits(code as u64, len as u32);
+                    }
+                    frames.push(Frame::coded(id, chunk.len() as u32, w.finish()));
+                }
+                PayloadLayout::Interleaved4 => {
+                    let mut subs = [
+                        BitWriter::with_capacity((total as usize).div_ceil(32) + 2),
+                        BitWriter::with_capacity((total as usize).div_ceil(32) + 2),
+                        BitWriter::with_capacity((total as usize).div_ceil(32) + 2),
+                        BitWriter::with_capacity((total as usize).div_ceil(32) + 2),
+                    ];
+                    for (j, (&code, &len)) in codes.iter().zip(&lens).enumerate() {
+                        subs[j & 3].put_bits(code as u64, len as u32);
+                    }
+                    let streams = subs.map(|w| w.finish());
+                    let mut payload = Vec::with_capacity(
+                        JUMP_TABLE_BYTES + streams.iter().map(|s| s.len()).sum::<usize>(),
+                    );
+                    for s in streams.iter().take(3) {
+                        payload.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                    }
+                    for s in &streams {
+                        payload.extend_from_slice(s);
+                    }
+                    frames.push(interleaved_frame_or_raw(id, chunk, payload));
+                }
             }
-            frames.push(Frame::coded(id, chunk.len() as u32, w.finish()));
         }
         let rem = chunks.remainder();
         if !rem.is_empty() || frames.is_empty() {
             if covers_all || book.covers(rem) {
-                let (payload, _) = book.encode(rem);
-                frames.push(Frame::coded(id, rem.len() as u32, payload));
+                match layout {
+                    PayloadLayout::Legacy => {
+                        let (payload, _) = book.encode(rem);
+                        frames.push(Frame::coded(id, rem.len() as u32, payload));
+                    }
+                    PayloadLayout::Interleaved4 => {
+                        let payload = book.encode_interleaved(rem);
+                        frames.push(interleaved_frame_or_raw(id, rem, payload));
+                    }
+                }
             } else {
                 frames.push(Frame::raw(rem));
             }
@@ -230,6 +284,33 @@ mod tests {
         for (frame, chunk) in mf.chunks.iter().zip(data.chunks(kr.kernel_n)) {
             let (want, _) = book.encode(chunk);
             assert_eq!(frame.payload, want);
+        }
+        let pool = crate::parallel::EncoderPool::new(4);
+        assert_eq!(pool.decode(&reg, &mf).unwrap(), data);
+    }
+
+    #[test]
+    fn kernel_multiframe_interleaved_matches_native_kernel() {
+        let Some((_e, kr)) = runner() else { return };
+        let data = skewed(2 * kr.kernel_n + 321, 12);
+        let mut counts = Histogram256::from_bytes(&data).counts;
+        for c in counts.iter_mut() {
+            *c += 1; // full support
+        }
+        let book = CodeBook::from_counts(&counts).unwrap();
+        let mut reg = crate::singlestage::Registry::new();
+        let id = reg.add(std::sync::Arc::new(crate::singlestage::FixedCodebook::new(
+            book.clone(),
+            None,
+            1,
+        )));
+        let mf =
+            kr.encode_multiframe_layout(&data, &book, id, PayloadLayout::Interleaved4).unwrap();
+        // kernel-gathered interleaved payloads are bit-identical to the
+        // native interleaved encoder, jump table included
+        for (frame, chunk) in mf.chunks.iter().zip(data.chunks(kr.kernel_n)) {
+            assert_eq!(frame.header.layout, PayloadLayout::Interleaved4);
+            assert_eq!(frame.payload, book.encode_interleaved(chunk));
         }
         let pool = crate::parallel::EncoderPool::new(4);
         assert_eq!(pool.decode(&reg, &mf).unwrap(), data);

@@ -2,7 +2,7 @@
 //!
 //! The whole point of the paper: because codebooks are pre-shared, the
 //! encoder sends **only the encoded values and the code book id**. The
-//! header is 5 bytes:
+//! legacy header is 5 bytes:
 //!
 //! ```text
 //! [ id: u8 ][ n_symbols: u32 LE ][ payload ... ]
@@ -11,6 +11,27 @@
 //! versus the three-stage baseline's 128-byte packed length table per
 //! message (see `baselines::ThreeStage`). Id [`RAW_ID`] marks an
 //! uncompressed escape frame whose payload is the original bytes.
+//!
+//! Since this format revision, frames also carry a **payload layout**
+//! ([`PayloadLayout`]). Layout [`Interleaved4`](PayloadLayout) frames
+//! are flagged in-band by the reserved first byte
+//! [`INTERLEAVED4_MARKER`] (254) followed by the real codebook id:
+//!
+//! ```text
+//! [ 254 ][ id: u8 ][ n_symbols: u32 LE ][ jump table: 3 x u32 LE ][ 4 sub-streams ]
+//! ```
+//!
+//! Any first byte other than the marker parses exactly as before, so
+//! every pre-revision frame with codebook id 0..=253 (or a raw frame)
+//! still decodes byte-identically (asserted in `tests/proptests.rs`
+//! against a verbatim copy of the legacy encoder). The cost of the
+//! in-band flag is that codebook id 254 is reserved alongside 255
+//! (`Registry::MAX_BOOKS` dropped from 255 to 254): the one
+//! incompatibility is an archived pre-revision frame from a 255-book
+//! registry whose 254th book was actually used — such a frame now
+//! misparses and must be re-encoded (no such registry ships in this
+//! repo; `persist` files record the book count, so they load and
+//! re-encode cleanly).
 //!
 //! [`MultiFrame`] is the multi-chunk container the parallel engine
 //! (`crate::parallel`) stitches per-chunk [`Frame`]s into:
@@ -27,8 +48,60 @@
 /// Reserved id for raw (uncompressed) escape frames.
 pub const RAW_ID: u8 = 255;
 
-/// Wire header size in bytes.
+/// Reserved first wire byte flagging an [`PayloadLayout::Interleaved4`]
+/// frame (the real codebook id follows). Cannot be a codebook id.
+pub const INTERLEAVED4_MARKER: u8 = 254;
+
+/// Legacy wire header size in bytes.
 pub const HEADER_BYTES: usize = 5;
+
+/// Interleaved4 wire header size in bytes (marker + id + n_symbols).
+pub const INTERLEAVED4_HEADER_BYTES: usize = 6;
+
+/// How a coded frame's payload packs its bitstream.
+///
+/// `Legacy` is the original single serial bitstream — one dependency
+/// chain, kept for old frames and as the fallback. `Interleaved4` is
+/// the throughput layout: a [`crate::huffman::JUMP_TABLE_BYTES`] jump
+/// table then four round-robin sub-streams (symbol `j` in sub-stream
+/// `j % 4`) so the decoder runs four independent dependency chains —
+/// see `CodeBook::encode_interleaved` / `Decoder::decode_interleaved_into`.
+/// Raw escape frames always carry `Legacy` (the payload is the input).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PayloadLayout {
+    /// Single serial bitstream (pre-revision wire format).
+    Legacy,
+    /// Jump table + 4 round-robin sub-streams (the default for new
+    /// encodes — the fast decode path).
+    #[default]
+    Interleaved4,
+}
+
+impl PayloadLayout {
+    /// Wire header bytes a coded frame with this layout spends.
+    pub fn header_bytes(self) -> usize {
+        match self {
+            PayloadLayout::Legacy => HEADER_BYTES,
+            PayloadLayout::Interleaved4 => INTERLEAVED4_HEADER_BYTES,
+        }
+    }
+
+    /// Parse a CLI/user name (`legacy` | `interleaved4`).
+    pub fn parse(s: &str) -> Option<PayloadLayout> {
+        match s {
+            "legacy" => Some(PayloadLayout::Legacy),
+            "interleaved4" => Some(PayloadLayout::Interleaved4),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PayloadLayout::Legacy => "legacy",
+            PayloadLayout::Interleaved4 => "interleaved4",
+        }
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FrameHeader {
@@ -36,6 +109,8 @@ pub struct FrameHeader {
     pub id: u8,
     /// Number of original symbols (bytes) in this frame.
     pub n_symbols: u32,
+    /// Payload bitstream layout ([`PayloadLayout::Legacy`] for raw frames).
+    pub layout: PayloadLayout,
 }
 
 /// A single-stage frame: header + bit-packed (or raw) payload.
@@ -46,39 +121,79 @@ pub struct Frame {
 }
 
 impl Frame {
+    /// A coded frame in the legacy (single-bitstream) layout.
     pub fn coded(id: u8, n_symbols: u32, payload: Vec<u8>) -> Frame {
-        debug_assert_ne!(id, RAW_ID);
-        Frame { header: FrameHeader { id, n_symbols }, payload }
+        debug_assert!(id != RAW_ID && id != INTERLEAVED4_MARKER);
+        Frame {
+            header: FrameHeader { id, n_symbols, layout: PayloadLayout::Legacy },
+            payload,
+        }
+    }
+
+    /// A coded frame in the 4-way interleaved layout; `payload` must
+    /// start with the jump table (`CodeBook::encode_interleaved` output).
+    pub fn interleaved4(id: u8, n_symbols: u32, payload: Vec<u8>) -> Frame {
+        debug_assert!(id != RAW_ID && id != INTERLEAVED4_MARKER);
+        debug_assert!(payload.len() >= crate::huffman::JUMP_TABLE_BYTES);
+        Frame {
+            header: FrameHeader { id, n_symbols, layout: PayloadLayout::Interleaved4 },
+            payload,
+        }
+    }
+
+    /// A coded frame with the given layout.
+    pub fn coded_with_layout(
+        id: u8,
+        n_symbols: u32,
+        payload: Vec<u8>,
+        layout: PayloadLayout,
+    ) -> Frame {
+        match layout {
+            PayloadLayout::Legacy => Frame::coded(id, n_symbols, payload),
+            PayloadLayout::Interleaved4 => Frame::interleaved4(id, n_symbols, payload),
+        }
     }
 
     pub fn raw(data: &[u8]) -> Frame {
         Frame {
-            header: FrameHeader { id: RAW_ID, n_symbols: data.len() as u32 },
+            header: FrameHeader {
+                id: RAW_ID,
+                n_symbols: data.len() as u32,
+                layout: PayloadLayout::Legacy,
+            },
             payload: data.to_vec(),
         }
     }
 
     /// Total bytes this frame occupies on the wire.
     pub fn wire_bytes(&self) -> usize {
-        HEADER_BYTES + self.payload.len()
+        self.header.layout.header_bytes() + self.payload.len()
     }
 
     /// Can this header's symbol count possibly match the payload? Raw
     /// frames carry one payload byte per symbol; coded frames spend at
-    /// least 1 bit per symbol. Decoders check this before sizing output
-    /// buffers so corrupt headers fail cleanly instead of driving huge
-    /// allocations.
+    /// least 1 bit per symbol (interleaved frames additionally spend the
+    /// jump table). Decoders check this before sizing output buffers so
+    /// corrupt headers fail cleanly instead of driving huge allocations.
     pub fn symbol_count_plausible(&self) -> bool {
         if self.header.id == RAW_ID {
-            self.payload.len() == self.header.n_symbols as usize
-        } else {
-            self.header.n_symbols as u64 <= self.payload.len() as u64 * 8
+            return self.payload.len() == self.header.n_symbols as usize;
         }
+        let bit_capacity = match self.header.layout {
+            PayloadLayout::Legacy => self.payload.len() as u64 * 8,
+            PayloadLayout::Interleaved4 => {
+                (self.payload.len().saturating_sub(crate::huffman::JUMP_TABLE_BYTES)) as u64 * 8
+            }
+        };
+        self.header.n_symbols as u64 <= bit_capacity
     }
 
     /// Serialize to wire bytes.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_bytes());
+        if self.header.layout == PayloadLayout::Interleaved4 {
+            out.push(INTERLEAVED4_MARKER);
+        }
         out.push(self.header.id);
         out.extend_from_slice(&self.header.n_symbols.to_le_bytes());
         out.extend_from_slice(&self.payload);
@@ -86,7 +201,31 @@ impl Frame {
     }
 
     /// Parse wire bytes (the payload is everything after the header).
+    /// A first byte of [`INTERLEAVED4_MARKER`] selects the interleaved
+    /// header; anything else parses exactly as the pre-revision format,
+    /// so legacy frames remain decodable.
     pub fn parse(wire: &[u8]) -> crate::Result<Frame> {
+        if wire.first() == Some(&INTERLEAVED4_MARKER) {
+            if wire.len() < INTERLEAVED4_HEADER_BYTES {
+                crate::error::bail!("interleaved frame too short: {} bytes", wire.len());
+            }
+            let id = wire[1];
+            crate::error::ensure!(
+                id != RAW_ID && id != INTERLEAVED4_MARKER,
+                "interleaved frame with reserved codebook id {id}"
+            );
+            let n_symbols = u32::from_le_bytes(wire[2..6].try_into().unwrap());
+            let payload = wire[INTERLEAVED4_HEADER_BYTES..].to_vec();
+            crate::error::ensure!(
+                payload.len() >= crate::huffman::JUMP_TABLE_BYTES,
+                "interleaved frame missing jump table: {} payload bytes",
+                payload.len()
+            );
+            return Ok(Frame {
+                header: FrameHeader { id, n_symbols, layout: PayloadLayout::Interleaved4 },
+                payload,
+            });
+        }
         if wire.len() < HEADER_BYTES {
             crate::error::bail!("frame too short: {} bytes", wire.len());
         }
@@ -100,7 +239,10 @@ impl Frame {
                 n_symbols
             );
         }
-        Ok(Frame { header: FrameHeader { id, n_symbols }, payload })
+        Ok(Frame {
+            header: FrameHeader { id, n_symbols, layout: PayloadLayout::Legacy },
+            payload,
+        })
     }
 }
 
@@ -221,6 +363,71 @@ mod tests {
         let back = Frame::parse(&f.to_bytes()).unwrap();
         assert_eq!(back, f);
         assert_eq!(back.header.id, RAW_ID);
+    }
+
+    #[test]
+    fn roundtrip_interleaved4() {
+        // 12-byte jump table + 2 body bytes
+        let mut payload = vec![0u8; 12];
+        payload[0] = 1; // sub-stream 0 is 1 byte
+        payload.extend_from_slice(&[0xAA, 0xBB]);
+        let f = Frame::interleaved4(9, 77, payload);
+        assert_eq!(f.header.layout, PayloadLayout::Interleaved4);
+        let wire = f.to_bytes();
+        assert_eq!(wire[0], INTERLEAVED4_MARKER);
+        assert_eq!(wire[1], 9);
+        assert_eq!(wire.len(), f.wire_bytes());
+        assert_eq!(f.wire_bytes(), INTERLEAVED4_HEADER_BYTES + 14);
+        let back = Frame::parse(&wire).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn legacy_wire_bytes_parse_as_legacy_layout() {
+        // a frame serialized with the pre-revision 5-byte header
+        let mut wire = vec![3u8];
+        wire.extend_from_slice(&10u32.to_le_bytes());
+        wire.extend_from_slice(&[0xCA, 0xFE]);
+        let f = Frame::parse(&wire).unwrap();
+        assert_eq!(f.header.layout, PayloadLayout::Legacy);
+        assert_eq!(f.header.id, 3);
+        assert_eq!(f.to_bytes(), wire, "legacy frames re-serialize unchanged");
+    }
+
+    #[test]
+    fn interleaved4_rejects_reserved_ids_and_missing_jump_table() {
+        // reserved ids after the marker
+        for bad_id in [RAW_ID, INTERLEAVED4_MARKER] {
+            let mut wire = vec![INTERLEAVED4_MARKER, bad_id];
+            wire.extend_from_slice(&0u32.to_le_bytes());
+            wire.extend_from_slice(&[0u8; 12]);
+            assert!(Frame::parse(&wire).is_err(), "id {bad_id}");
+        }
+        // jump table truncated
+        let mut wire = vec![INTERLEAVED4_MARKER, 1];
+        wire.extend_from_slice(&0u32.to_le_bytes());
+        wire.extend_from_slice(&[0u8; 11]);
+        assert!(Frame::parse(&wire).is_err());
+        // header truncated
+        assert!(Frame::parse(&[INTERLEAVED4_MARKER, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn interleaved4_symbol_count_plausibility_excludes_jump_table() {
+        let payload = vec![0u8; 12 + 2]; // 2 body bytes = 16 bit capacity
+        let ok = Frame::interleaved4(1, 16, payload.clone());
+        assert!(ok.symbol_count_plausible());
+        let too_many = Frame::interleaved4(1, 17, payload);
+        assert!(!too_many.symbol_count_plausible());
+    }
+
+    #[test]
+    fn payload_layout_names_roundtrip() {
+        for layout in [PayloadLayout::Legacy, PayloadLayout::Interleaved4] {
+            assert_eq!(PayloadLayout::parse(layout.name()), Some(layout));
+        }
+        assert_eq!(PayloadLayout::parse("zstd"), None);
+        assert_eq!(PayloadLayout::default(), PayloadLayout::Interleaved4);
     }
 
     #[test]

@@ -54,7 +54,7 @@ pub mod persist;
 pub mod planes;
 pub mod stream;
 pub use drift::{DriftConfig, DriftMonitor};
-pub use frame::{Frame, FrameHeader, MultiFrame, RAW_ID};
+pub use frame::{Frame, FrameHeader, MultiFrame, PayloadLayout, INTERLEAVED4_MARKER, RAW_ID};
 pub use persist::{load_registry, save_registry};
 pub use stream::{block_spans, decode_block, decode_stream, encode_stream, StreamStats};
 
@@ -106,14 +106,15 @@ impl FixedCodebook {
 
 /// Codebook registry: id (u8) → codebook. Shared between the encoder and
 /// every decoder node — the paper's "code books are shared between the
-/// participating nodes". Id [`RAW_ID`] (255) is reserved for raw frames.
+/// participating nodes". Id [`RAW_ID`] (255) is reserved for raw frames
+/// and [`INTERLEAVED4_MARKER`] (254) for the interleaved layout flag.
 #[derive(Default, Clone)]
 pub struct Registry {
     books: Vec<Arc<FixedCodebook>>,
 }
 
 impl Registry {
-    pub const MAX_BOOKS: usize = 255; // 255 = RAW_ID
+    pub const MAX_BOOKS: usize = 254; // 254 = INTERLEAVED4_MARKER, 255 = RAW_ID
 
     pub fn new() -> Self {
         Self::default()
@@ -261,6 +262,44 @@ pub fn select_codebook(hist: &Histogram256, registry: &Registry, candidates: &[u
     best
 }
 
+/// Encode one block against a fixed codebook id with the given payload
+/// layout — the exact per-frame semantics shared by
+/// [`SingleStageEncoder::encode_with`] and the parallel chunk encoder
+/// (`crate::parallel`). Escapes to a raw frame when the book is missing
+/// or does not cover `data`, and (interleaved layout only) when the
+/// coded frame would not be strictly smaller than the raw escape — the
+/// interleaved jump table costs 13 bytes over a legacy frame, so
+/// marginal blocks stay raw and interleaved wire size stays bounded by
+/// `data.len() + `[`frame::HEADER_BYTES`]. The legacy layout keeps its
+/// pre-revision coverage-only escape, bit-for-bit.
+pub fn encode_frame(registry: &Registry, id: u8, data: &[u8], layout: PayloadLayout) -> Frame {
+    match registry.get(id) {
+        Some(fixed) if fixed.covers_all || fixed.book.covers(data) => match layout {
+            PayloadLayout::Legacy => {
+                let (payload, _) = fixed.book.encode(data);
+                Frame::coded(id, data.len() as u32, payload)
+            }
+            PayloadLayout::Interleaved4 => {
+                interleaved_frame_or_raw(id, data, fixed.book.encode_interleaved(data))
+            }
+        },
+        _ => Frame::raw(data),
+    }
+}
+
+/// The interleaved size escape, THE single definition of the rule: wrap
+/// an already-packed interleaved `payload` as a coded frame only when
+/// it is strictly smaller on the wire than the raw escape, else emit
+/// raw. Shared by [`encode_frame`] and the kernel bit-pack back half
+/// (`crate::runtime::kernels`), so the two paths cannot diverge.
+pub fn interleaved_frame_or_raw(id: u8, data: &[u8], payload: Vec<u8>) -> Frame {
+    if frame::INTERLEAVED4_HEADER_BYTES + payload.len() < frame::HEADER_BYTES + data.len() {
+        Frame::interleaved4(id, data.len() as u32, payload)
+    } else {
+        Frame::raw(data)
+    }
+}
+
 /// Encoder statistics (per encoder instance).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct EncoderStats {
@@ -278,14 +317,29 @@ impl EncoderStats {
 }
 
 /// The single-stage encoder: one streaming pass over the symbols.
+///
+/// Defaults to the [`PayloadLayout::Interleaved4`] payload layout (the
+/// fast-decode wire format); [`with_layout`](Self::with_layout) selects
+/// [`PayloadLayout::Legacy`] for pre-revision consumers.
 pub struct SingleStageEncoder {
     registry: Registry,
     stats: EncoderStats,
+    layout: PayloadLayout,
 }
 
 impl SingleStageEncoder {
     pub fn new(registry: Registry) -> Self {
-        Self { registry, stats: EncoderStats::default() }
+        Self { registry, stats: EncoderStats::default(), layout: PayloadLayout::default() }
+    }
+
+    /// Override the payload layout for subsequent encodes.
+    pub fn with_layout(mut self, layout: PayloadLayout) -> Self {
+        self.layout = layout;
+        self
+    }
+
+    pub fn layout(&self) -> PayloadLayout {
+        self.layout
     }
 
     pub fn registry(&self) -> &Registry {
@@ -299,14 +353,18 @@ impl SingleStageEncoder {
     /// Encode with a fixed codebook id — THE critical-path operation.
     /// Exactly one pass: per symbol, one LUT load and one bit-pack.
     /// Returns a raw frame if the book does not cover `data`.
+    ///
+    /// Escape interaction: in the interleaved layout the jump table and
+    /// wider header cost 13 extra bytes, so a coded frame is emitted
+    /// only when it is strictly smaller than the raw escape — the
+    /// bounded-overhead guarantee (wire <= raw + [`frame::HEADER_BYTES`])
+    /// holds for the interleaved layout. The legacy layout keeps its
+    /// pre-revision behavior bit-for-bit: coverage decides, size does
+    /// not (callers wanting the bound there use
+    /// [`encode_best`](Self::encode_best), which compares against raw
+    /// before encoding).
     pub fn encode_with(&mut self, id: u8, data: &[u8]) -> Frame {
-        let frame = match self.registry.get(id) {
-            Some(fixed) if fixed.covers_all || fixed.book.covers(data) => {
-                let (payload, _) = fixed.book.encode(data);
-                Frame::coded(id, data.len() as u32, payload)
-            }
-            _ => Frame::raw(data),
-        };
+        let frame = encode_frame(&self.registry, id, data, self.layout);
         self.account(&frame, data.len());
         frame
     }
@@ -355,7 +413,16 @@ impl SingleStageDecoder {
             .registry
             .get(frame.header.id)
             .ok_or_else(|| crate::error::anyhow!("unknown codebook id {}", frame.header.id))?;
-        Ok(book.decoder.decode(&frame.payload, frame.header.n_symbols as usize))
+        match frame.header.layout {
+            PayloadLayout::Legacy => {
+                Ok(book.decoder.decode(&frame.payload, frame.header.n_symbols as usize))
+            }
+            PayloadLayout::Interleaved4 => {
+                let mut out = vec![0u8; frame.header.n_symbols as usize];
+                book.decoder.decode_interleaved_into(&frame.payload, &mut out)?;
+                Ok(out)
+            }
+        }
     }
 
     /// Decode from wire bytes.
@@ -468,6 +535,47 @@ mod tests {
         let dec = SingleStageDecoder::new(m.registry.clone());
         let wire = enc.encode_with(id, &data).to_bytes();
         assert_eq!(dec.decode_bytes(&wire).unwrap(), data);
+    }
+
+    #[test]
+    fn both_layouts_roundtrip_and_interleaved_is_default() {
+        let data = skewed(40, 100_000, 1.3);
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        m.observe_bytes(key(), &data);
+        let id = m.build(key()).unwrap();
+        let dec = SingleStageDecoder::new(m.registry.clone());
+        let mut enc_i = SingleStageEncoder::new(m.registry.clone());
+        assert_eq!(enc_i.layout(), PayloadLayout::Interleaved4);
+        let fi = enc_i.encode_with(id, &data);
+        assert_eq!(fi.header.layout, PayloadLayout::Interleaved4);
+        let mut enc_l =
+            SingleStageEncoder::new(m.registry.clone()).with_layout(PayloadLayout::Legacy);
+        let fl = enc_l.encode_with(id, &data);
+        assert_eq!(fl.header.layout, PayloadLayout::Legacy);
+        assert_eq!(dec.decode(&fi).unwrap(), data);
+        assert_eq!(dec.decode(&fl).unwrap(), data);
+        // interleaving costs at most the marker byte + jump table + 3
+        // extra partial-byte roundings over the legacy payload
+        assert!(fi.wire_bytes() <= fl.wire_bytes() + 16, "{} vs {}", fi.wire_bytes(), fl.wire_bytes());
+        // wire-level roundtrip through the marker header
+        assert_eq!(dec.decode_bytes(&fi.to_bytes()).unwrap(), data);
+    }
+
+    #[test]
+    fn interleaved_escapes_to_raw_on_marginal_blocks() {
+        // near-uniform data: coded ~ raw, so the interleaved layout must
+        // escape rather than exceed the bounded-overhead guarantee
+        let mut rng = Pcg32::new(77);
+        let mut data = vec![0u8; 4096];
+        rng.fill_bytes(&mut data);
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        m.observe_bytes(key(), &data);
+        let id = m.build(key()).unwrap();
+        let mut enc = SingleStageEncoder::new(m.registry.clone());
+        let frame = enc.encode_with(id, &data);
+        assert!(frame.wire_bytes() <= data.len() + frame::HEADER_BYTES);
+        let dec = SingleStageDecoder::new(m.registry.clone());
+        assert_eq!(dec.decode(&frame).unwrap(), data);
     }
 
     #[test]

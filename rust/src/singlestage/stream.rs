@@ -15,7 +15,7 @@
 //! block can be decoded as soon as its bytes land, out of order, and a
 //! corrupted block is contained (tested).
 
-use super::{select_codebook, Frame, Registry, SingleStageDecoder};
+use super::{select_codebook, Frame, PayloadLayout, Registry, SingleStageDecoder};
 use crate::stats::Histogram256;
 
 const STREAM_MAGIC: [u8; 2] = *b"S1";
@@ -41,12 +41,26 @@ pub struct StreamStats {
 
 /// Encode `data` as a block stream, choosing per block among
 /// `candidates` (≤ 8 for the selection histogram; more are allowed but
-/// uncounted). Returns (wire bytes, stats).
+/// uncounted). Returns (wire bytes, stats). Blocks are framed with the
+/// default payload layout ([`PayloadLayout::Interleaved4`]); use
+/// [`encode_stream_layout`] to pin a layout. Decoding accepts streams
+/// of either layout (frames self-describe).
 pub fn encode_stream(
     registry: &Registry,
     candidates: &[u8],
     data: &[u8],
     block_log2: u8,
+) -> (Vec<u8>, StreamStats) {
+    encode_stream_layout(registry, candidates, data, block_log2, PayloadLayout::default())
+}
+
+/// [`encode_stream`] with an explicit per-block payload layout.
+pub fn encode_stream_layout(
+    registry: &Registry,
+    candidates: &[u8],
+    data: &[u8],
+    block_log2: u8,
+    layout: PayloadLayout,
 ) -> (Vec<u8>, StreamStats) {
     assert!((8..=24).contains(&block_log2), "block 256B..16MiB");
     let block = 1usize << block_log2;
@@ -68,7 +82,15 @@ pub fn encode_stream(
     for chunk in chunks {
         let hist = Histogram256::from_bytes(chunk);
         let (id, bits) = select_codebook(&hist, registry, candidates);
-        let frame = if id == super::RAW_ID || (bits / 8 + 5) as usize >= chunk.len() {
+        // per-layout coded overhead beyond the packed bits: the header,
+        // plus (interleaved) the jump table and up to 3 extra
+        // partial-byte roundings
+        let overhead = layout.header_bytes()
+            + match layout {
+                PayloadLayout::Legacy => 0,
+                PayloadLayout::Interleaved4 => crate::huffman::JUMP_TABLE_BYTES + 3,
+            };
+        let frame = if id == super::RAW_ID || (bits / 8) as usize + overhead >= chunk.len() {
             stats.raw_blocks += 1;
             Frame::raw(chunk)
         } else {
@@ -78,8 +100,16 @@ pub fn encode_stream(
                 }
             }
             let fixed = registry.get(id).expect("selected id registered");
-            let (payload, _) = fixed.book.encode(chunk);
-            Frame::coded(id, chunk.len() as u32, payload)
+            match layout {
+                PayloadLayout::Legacy => {
+                    let (payload, _) = fixed.book.encode(chunk);
+                    Frame::coded(id, chunk.len() as u32, payload)
+                }
+                PayloadLayout::Interleaved4 => {
+                    let payload = fixed.book.encode_interleaved(chunk);
+                    Frame::interleaved4(id, chunk.len() as u32, payload)
+                }
+            }
         };
         let bytes = frame.to_bytes();
         out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
@@ -249,6 +279,29 @@ mod tests {
         assert_eq!(stats.selections[0], 3, "{:?}", stats.selections);
         assert_eq!(stats.selections[1], 3);
         assert_eq!(decode_stream(&mgr.registry, &wire).unwrap(), data);
+    }
+
+    #[test]
+    fn stream_layouts_roundtrip_and_interoperate() {
+        let (reg, _) = setup(21);
+        let data = skewed(22, 5 * 4096);
+        let (wire_i, si) =
+            encode_stream_layout(&reg, &[0], &data, 12, PayloadLayout::Interleaved4);
+        let (wire_l, sl) = encode_stream_layout(&reg, &[0], &data, 12, PayloadLayout::Legacy);
+        assert_eq!(si.blocks, sl.blocks);
+        assert_eq!(decode_stream(&reg, &wire_i).unwrap(), data);
+        assert_eq!(decode_stream(&reg, &wire_l).unwrap(), data);
+        // the plain entry point uses the default (interleaved) layout
+        let (wire_def, _) = encode_stream(&reg, &[0], &data, 12);
+        assert_eq!(wire_def, wire_i);
+        // per-block random access works on interleaved streams too
+        for b in [0usize, 4] {
+            assert_eq!(
+                decode_block(&reg, &wire_i, b).unwrap(),
+                data[b * 4096..(b + 1) * 4096],
+                "block {b}"
+            );
+        }
     }
 
     #[test]

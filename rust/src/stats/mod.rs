@@ -10,6 +10,11 @@
 
 pub const NUM_SYMBOLS: usize = 256;
 
+/// Slice length for [`Histogram256::accumulate`]: 1 GiB per slice keeps
+/// each u32 sub-table bin at most 2^28 — a factor 16 below overflow —
+/// while the per-slice spill (256 u64 adds) amortizes to noise.
+pub const ACCUMULATE_SLICE_LEN: usize = 1 << 30;
+
 /// Exact 256-bin histogram of a byte stream.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Histogram256 {
@@ -37,26 +42,42 @@ impl Histogram256 {
     ///
     /// Hot path for the offline PMF maintenance: 4-way unrolled with
     /// independent sub-tables to break the store-to-load dependency on
-    /// repeated symbols (classic histogram optimization).
+    /// repeated symbols (classic histogram optimization). Input is
+    /// processed in [`ACCUMULATE_SLICE_LEN`]-byte slices, spilling the
+    /// u32 sub-tables to the u64 counts between slices, so a sub-table
+    /// bin (at most slice_len/4) stays far below u32 overflow for any
+    /// input length.
     pub fn accumulate(&mut self, data: &[u8]) {
-        let mut t0 = [0u32; NUM_SYMBOLS];
-        let mut t1 = [0u32; NUM_SYMBOLS];
-        let mut t2 = [0u32; NUM_SYMBOLS];
-        let mut t3 = [0u32; NUM_SYMBOLS];
-        let mut chunks = data.chunks_exact(4);
-        for c in &mut chunks {
-            t0[c[0] as usize] += 1;
-            t1[c[1] as usize] += 1;
-            t2[c[2] as usize] += 1;
-            t3[c[3] as usize] += 1;
-            // flush sub-tables well before u32 overflow
-        }
-        for &b in chunks.remainder() {
-            t0[b as usize] += 1;
-        }
-        for i in 0..NUM_SYMBOLS {
-            self.counts[i] +=
-                t0[i] as u64 + t1[i] as u64 + t2[i] as u64 + t3[i] as u64;
+        self.accumulate_sliced(data, ACCUMULATE_SLICE_LEN);
+    }
+
+    /// [`accumulate`](Self::accumulate) with an explicit slice length —
+    /// exposed so tests can exercise the spill boundary without
+    /// gigabyte inputs. `slice_len` must be a positive multiple of 4
+    /// and at most `4 * (u32::MAX as usize)` so a sub-table bin cannot
+    /// overflow within one slice.
+    fn accumulate_sliced(&mut self, data: &[u8], slice_len: usize) {
+        debug_assert!(slice_len >= 4 && slice_len % 4 == 0);
+        for slice in data.chunks(slice_len) {
+            let mut t0 = [0u32; NUM_SYMBOLS];
+            let mut t1 = [0u32; NUM_SYMBOLS];
+            let mut t2 = [0u32; NUM_SYMBOLS];
+            let mut t3 = [0u32; NUM_SYMBOLS];
+            let mut chunks = slice.chunks_exact(4);
+            for c in &mut chunks {
+                t0[c[0] as usize] += 1;
+                t1[c[1] as usize] += 1;
+                t2[c[2] as usize] += 1;
+                t3[c[3] as usize] += 1;
+            }
+            for &b in chunks.remainder() {
+                t0[b as usize] += 1;
+            }
+            // spill to the u64 totals before the next slice
+            for i in 0..NUM_SYMBOLS {
+                self.counts[i] +=
+                    t0[i] as u64 + t1[i] as u64 + t2[i] as u64 + t3[i] as u64;
+            }
         }
     }
 
@@ -314,6 +335,33 @@ mod tests {
             naive[b as usize] += 1;
         }
         assert_eq!(h.counts, naive);
+    }
+
+    #[test]
+    fn accumulate_spills_subtables_across_slice_boundaries() {
+        // data longer than the (overridden) slice length, with lengths
+        // straddling the boundary and a non-multiple-of-4 tail: the
+        // sliced accumulation must match the naive count exactly
+        let slice_len = 64usize;
+        let mut rng = Pcg32::new(5);
+        for n in [0usize, 1, slice_len - 1, slice_len, slice_len + 1, 3 * slice_len + 3] {
+            let mut data = vec![0u8; n];
+            rng.fill_bytes(&mut data);
+            let mut h = Histogram256::new();
+            h.accumulate_sliced(&data, slice_len);
+            let mut naive = [0u64; NUM_SYMBOLS];
+            for &b in &data {
+                naive[b as usize] += 1;
+            }
+            assert_eq!(h.counts, naive, "n={n}");
+            assert_eq!(h.total(), n as u64, "n={n}");
+        }
+        // repeated single symbol across many slices: one bin takes every
+        // count, the per-slice spill is what keeps the sub-tables small
+        let data = vec![7u8; 10 * slice_len + 2];
+        let mut h = Histogram256::new();
+        h.accumulate_sliced(&data, slice_len);
+        assert_eq!(h.counts[7], data.len() as u64);
     }
 
     #[test]

@@ -56,7 +56,7 @@ fn decoder_does_not_panic_on_truncated_payload() {
 }
 
 #[test]
-fn registry_capacity_and_raw_id_reservation() {
+fn registry_capacity_and_reserved_id_reservation() {
     let mut reg = Registry::new();
     let book = CodeBook::from_counts(&Histogram256::from_bytes(&[1, 2, 3]).counts).unwrap();
     for i in 0..Registry::MAX_BOOKS {
@@ -66,12 +66,17 @@ fn registry_capacity_and_raw_id_reservation() {
             i as u32,
         )));
         assert_ne!(id, RAW_ID, "RAW_ID must never be allocated");
+        assert_ne!(
+            id,
+            sshuff::singlestage::INTERLEAVED4_MARKER,
+            "the interleaved layout marker must never be allocated"
+        );
     }
-    assert_eq!(reg.len(), 255);
+    assert_eq!(reg.len(), 254);
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         reg.add(std::sync::Arc::new(sshuff::singlestage::FixedCodebook::new(book, None, 0)))
     }));
-    assert!(result.is_err(), "registry must reject book 256");
+    assert!(result.is_err(), "registry must reject book 255");
 }
 
 #[test]

@@ -2,9 +2,12 @@
 //! §6 calls out, exercised end-to-end rather than per module.
 
 use sshuff::baselines::{Codec, Lz77Codec, RawCodec, SingleStageCodec, ThreeStage};
-use sshuff::huffman::{CodeBook, MAX_CODE_LEN};
+use sshuff::huffman::{CodeBook, JUMP_TABLE_BYTES, MAX_CODE_LEN};
 use sshuff::proptest_lite::{gens, shrinks, Runner};
-use sshuff::singlestage::{AvgPolicy, CodebookManager, Frame, SingleStageDecoder, SingleStageEncoder};
+use sshuff::singlestage::{
+    AvgPolicy, CodebookManager, Frame, PayloadLayout, SingleStageDecoder, SingleStageEncoder,
+    INTERLEAVED4_MARKER,
+};
 use sshuff::stats::Histogram256;
 use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
 
@@ -210,6 +213,215 @@ fn parallel_roundtrip_all_dtypes_matches_serial() {
         assert_eq!(parallel.decode(&mgr.registry, &b).unwrap(), data, "{}", dt.name());
         assert!(b.wire_bytes() < data.len() + 24 + b.n_chunks() * 9, "{}", dt.name());
     }
+}
+
+#[test]
+fn interleaved4_roundtrips_bit_exactly_across_awkward_lengths() {
+    // every length 0..=67 (covers the empty payload, sub-lane counts,
+    // the 16-symbol fast-loop boundary and both tail shapes) x three
+    // data shapes; the interleaved decode must equal the input AND the
+    // legacy layout's decode of the same data
+    let (reg, id) = trained_registry(7);
+    let dec = SingleStageDecoder::new(reg.clone());
+    let z = sshuff::prng::Zipf::new(256, 1.3);
+    let mut rng = sshuff::prng::Pcg32::new(70);
+    for n in 0..=67usize {
+        let mut shapes: Vec<Vec<u8>> = Vec::new();
+        shapes.push((0..n).map(|_| z.sample(&mut rng) as u8).collect()); // skewed
+        shapes.push(vec![42u8; n]); // one-symbol
+        let mut uniform = vec![0u8; n];
+        rng.fill_bytes(&mut uniform);
+        shapes.push(uniform); // incompressible (escape-by-size territory)
+        for (v, data) in shapes.into_iter().enumerate() {
+            let mut enc_i = SingleStageEncoder::new(reg.clone());
+            let mut enc_l =
+                SingleStageEncoder::new(reg.clone()).with_layout(PayloadLayout::Legacy);
+            let fi = enc_i.encode_with(id, &data);
+            let fl = enc_l.encode_with(id, &data);
+            let di = dec.decode(&fi).unwrap();
+            let dl = dec.decode(&fl).unwrap();
+            assert_eq!(di, data, "n={n} shape={v} interleaved");
+            assert_eq!(di, dl, "n={n} shape={v} layouts disagree");
+            // and through wire bytes (marker-byte header parse)
+            assert_eq!(dec.decode_bytes(&fi.to_bytes()).unwrap(), data, "n={n} shape={v}");
+        }
+    }
+}
+
+#[test]
+fn prop_interleaved4_escape_path_is_lossless_and_bounded() {
+    // a narrow 8-symbol book (no smoothing): full-alphabet inputs force
+    // the raw escape; near-raw inputs force the interleaved size escape.
+    // Both must stay lossless and within the bounded-overhead guarantee.
+    let mut counts = [0u64; 256];
+    for (i, c) in counts.iter_mut().enumerate().take(8) {
+        *c = 8 - i as u64;
+    }
+    let book = CodeBook::from_counts(&counts).unwrap();
+    let mut reg = sshuff::singlestage::Registry::new();
+    let id = reg.add(std::sync::Arc::new(sshuff::singlestage::FixedCodebook::new(
+        book, None, 1,
+    )));
+    Runner::new("interleaved-escape", 50).run(
+        |rng| {
+            if rng.gen_range(2) == 0 {
+                gens::bytes(rng, 4096) // mostly uncovered -> raw escape
+            } else {
+                gens::bytes_small_alphabet(rng, 4096, 8) // covered
+            }
+        },
+        shrinks::vec_u8,
+        |data| {
+            let mut enc = SingleStageEncoder::new(reg.clone());
+            let frame = enc.encode_with(id, data);
+            if frame.wire_bytes() > data.len() + sshuff::singlestage::frame::HEADER_BYTES {
+                return Err(format!(
+                    "overhead bound violated: {} vs {}",
+                    frame.wire_bytes(),
+                    data.len()
+                ));
+            }
+            let dec = SingleStageDecoder::new(reg.clone());
+            let back = dec.decode(&frame).map_err(|e| e.to_string())?;
+            if &back != data {
+                return Err("escape path not lossless".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_interleaved_and_legacy_pools_agree_end_to_end() {
+    let (reg, id) = trained_registry(9);
+    Runner::new("interleaved-vs-legacy-pool", 30).run(
+        |rng| gens::bytes_skewed(rng, 1 << 14),
+        shrinks::vec_u8,
+        |data| {
+            let pi = sshuff::parallel::EncoderPool::new(2); // interleaved4 default
+            let pl =
+                sshuff::parallel::EncoderPool::new(2).with_layout(PayloadLayout::Legacy);
+            let a = pi
+                .decode(&reg, &pi.encode(&reg, id, data, 4096))
+                .map_err(|e| e.to_string())?;
+            let b = pl
+                .decode(&reg, &pl.encode(&reg, id, data, 4096))
+                .map_err(|e| e.to_string())?;
+            if &a != data || a != b {
+                return Err("pool layouts disagree".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// VERBATIM copy of the pre-revision `CodeBook::encode` — the encoder
+/// that produced every legacy frame in the wild before the payload
+/// layout revision. Kept here as the reference the backward
+/// compatibility guarantee is asserted against: if either the live
+/// legacy kernel or the decoder drifts, this test fails.
+fn reference_legacy_encode(book: &CodeBook, data: &[u8]) -> (Vec<u8>, u64) {
+    let mut packed = [0u32; 256];
+    for s in 0..256 {
+        packed[s] = (book.codes[s] << 8) | book.lengths[s] as u32;
+    }
+    let cap = data.len() * (MAX_CODE_LEN as usize).div_ceil(8).max(2) + 16;
+    let mut buf = vec![0u8; cap];
+    let mut at = 0usize;
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    let mut chunks = data.chunks_exact(4);
+    for c in &mut chunks {
+        for &b in c {
+            let e = packed[b as usize];
+            let len = e & 0xFF;
+            nbits += len;
+            acc |= ((e >> 8) as u64) << (64 - nbits);
+        }
+        buf[at..at + 8].copy_from_slice(&acc.to_be_bytes());
+        let k = (nbits / 8) as usize;
+        at += k;
+        acc <<= 8 * k;
+        nbits -= 8 * k as u32;
+    }
+    for &b in chunks.remainder() {
+        let e = packed[b as usize];
+        let len = e & 0xFF;
+        nbits += len;
+        acc |= ((e >> 8) as u64) << (64 - nbits);
+        buf[at..at + 8].copy_from_slice(&acc.to_be_bytes());
+        let k = (nbits / 8) as usize;
+        at += k;
+        acc <<= 8 * k;
+        nbits -= 8 * k as u32;
+    }
+    let total_bits = at as u64 * 8 + nbits as u64;
+    if nbits > 0 {
+        buf[at] = (acc >> 56) as u8;
+        at += 1;
+    }
+    buf.truncate(at);
+    (buf, total_bits)
+}
+
+#[test]
+fn legacy_frames_from_pre_revision_encoder_decode_byte_identically() {
+    let (reg, id) = trained_registry(8);
+    let dec = SingleStageDecoder::new(reg.clone());
+    let fixed = reg.get(id).unwrap().clone();
+    let z = sshuff::prng::Zipf::new(256, 1.2);
+    let mut rng = sshuff::prng::Pcg32::new(80);
+    for n in [0usize, 1, 7, 64, 4097, 65_536] {
+        let data: Vec<u8> = (0..n).map(|_| z.sample(&mut rng) as u8).collect();
+        let (payload, bits) = reference_legacy_encode(&fixed.book, &data);
+        // today's legacy kernel is still byte-identical to the reference
+        assert_eq!(fixed.book.encode(&data), (payload.clone(), bits), "n={n}");
+        // a pre-revision 5-byte-header wire frame decodes through the
+        // new stack, byte-identically
+        let mut wire = vec![id];
+        wire.extend_from_slice(&(n as u32).to_le_bytes());
+        wire.extend_from_slice(&payload);
+        let frame = Frame::parse(&wire).unwrap();
+        assert_eq!(frame.header.layout, PayloadLayout::Legacy, "n={n}");
+        assert_eq!(dec.decode(&frame).unwrap(), data, "n={n}");
+        assert_eq!(dec.decode_bytes(&wire).unwrap(), data, "n={n}");
+        // and through the allocation-free chunk decoder twin
+        let mut out = vec![0u8; n];
+        fixed.decoder.decode_into(&payload, &mut out);
+        assert_eq!(out, data, "n={n} decode_into");
+    }
+}
+
+#[test]
+fn golden_interleaved4_wire_bytes_are_pinned() {
+    // counts a=5 b=2 c=1 d=1 -> canonical codes a:0 (1 bit), b:10
+    // (2 bits), c:110 (3 bits), d:111 (3 bits) — pinned by the huffman
+    // unit tests. Data "abcdabcaaaa", symbol j -> lane j % 4:
+    //   lane0: j=0,4,8  = a,a,a -> 0 0 0      -> 0x00
+    //   lane1: j=1,5,9  = b,b,a -> 10 10 0    -> 0xA0
+    //   lane2: j=2,6,10 = c,c,a -> 110 110 0  -> 0xD8
+    //   lane3: j=3,7    = d,a   -> 111 0      -> 0xE0
+    // jump table = lane byte lengths 0..=2 as u32 LE (lane 3 derived).
+    let mut counts = [0u64; 256];
+    counts[b'a' as usize] = 5;
+    counts[b'b' as usize] = 2;
+    counts[b'c' as usize] = 1;
+    counts[b'd' as usize] = 1;
+    let book = CodeBook::from_counts(&counts).unwrap();
+    let payload = book.encode_interleaved(b"abcdabcaaaa");
+    let want_payload =
+        vec![1, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 0x00, 0xA0, 0xD8, 0xE0];
+    assert_eq!(payload, want_payload, "jump table or sub-stream bytes drifted");
+    assert_eq!(payload.len(), JUMP_TABLE_BYTES + 4);
+    let mut out = vec![0u8; 11];
+    book.decoder().decode_interleaved_into(&payload, &mut out).unwrap();
+    assert_eq!(out, b"abcdabcaaaa".to_vec());
+    // full frame header: marker, id, n_symbols u32 LE
+    let frame = Frame::interleaved4(3, 11, payload);
+    let wire = frame.to_bytes();
+    assert_eq!(&wire[..6], &[INTERLEAVED4_MARKER, 3, 11, 0, 0, 0]);
+    assert_eq!(&wire[6..], &want_payload[..]);
+    assert_eq!(Frame::parse(&wire).unwrap(), frame);
 }
 
 #[test]
