@@ -404,7 +404,7 @@ mod tests {
 
     #[test]
     fn coordinator_layout_controls_worker_frames() {
-        for layout in [PayloadLayout::Legacy, PayloadLayout::Interleaved4] {
+        for layout in PayloadLayout::ALL {
             let c = Coordinator::with_layout(2, AvgPolicy::CumulativeMean, layout);
             assert_eq!(c.layout(), layout);
             c.observe_bytes(key(), &skewed(5, 1 << 14));

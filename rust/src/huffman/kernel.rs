@@ -1,0 +1,428 @@
+//! Runtime-dispatched decode kernels for the interleaved payload
+//! layouts.
+//!
+//! Two kernels decode the same `N`-lane wire bytes (N = 4, 8, 16):
+//!
+//! * [`DecodeKernel::Scalar`] — the portable lockstep loop PR 3
+//!   shipped for 4 lanes, generalized over `N`: one LUT hit per symbol,
+//!   one unchecked 8-byte refill per lane per 4 symbols.
+//! * [`DecodeKernel::Simd`] — the wide kernel. On `x86_64` with AVX2 +
+//!   BMI2 it peeks and consumes 4 lanes at a time with explicit
+//!   `std::arch` vector shifts; elsewhere (NEON on `aarch64`, or a
+//!   forced-SIMD call on a machine without AVX2) it runs the same
+//!   algorithm as portable scalar code the autovectorizer can chew on.
+//!   Both shapes use the two-symbols-per-LUT-hit pair table.
+//!
+//! The kernel is selected **once** per process ([`active`]) from
+//! `is_x86_feature_detected!` and cached; setting `SSHUFF_FORCE_SCALAR=1`
+//! in the environment pins the scalar kernel (the CI matrix runs the
+//! whole test suite that way). Both kernels are defined to produce
+//! byte-identical output on *every* input — including corrupt bodies,
+//! where both emit the same bounded garbage — which is what
+//! `tests/kernel_differential.rs` pins.
+//!
+//! ## §Perf: refill cadence and the two-symbol fast path
+//!
+//! Every kernel's fast loop refills each lane to >= 57 buffered bits
+//! with one unchecked 8-byte load, then retires **4 LUT hits per lane
+//! per refill**: a hit consumes at most [`MAX_CODE_LEN`](super::MAX_CODE_LEN)
+//! = 12 bits, so 4 hits are <= 48 <= 57 bits and no mid-round refill
+//! check is needed.
+//! The SIMD kernel's hits go through the pair table (`Decoder::pair`):
+//! when the `max_len`-bit peek window holds two complete codes (always
+//! true when both are <= [`MAX_CODE_LEN`](super::MAX_CODE_LEN)/2, the
+//! common case for skewed ML byte streams), one hit emits two symbols
+//! — up to 8 symbols per
+//! lane per refill, which is why the guard requires 8 symbols of
+//! remaining demand per lane before entering the fast loop. Lane tails
+//! fall back to zero-padded refills, one symbol and one lane at a time.
+//!
+//! On AVX2 the per-hit peek (`acc >> (64 - max_len)`) and consume
+//! (`acc << used`) run on four u64 accumulators per vector op
+//! (`_mm256_srlv_epi64` / `_mm256_sllv_epi64`); BMI2 additionally gives
+//! the scalar refill arithmetic single-uop variable shifts (`shlx` /
+//! `shrx`). Table hits stay scalar — gathers lose on 8 KiB L1-resident
+//! LUTs.
+
+use crate::bitio::BitLane;
+use std::sync::OnceLock;
+
+/// Which decode core runs the interleaved fast loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeKernel {
+    /// Portable lockstep loop, one symbol per LUT hit.
+    Scalar,
+    /// Wide kernel: explicit AVX2 on `x86_64`, autovectorizable
+    /// portable code elsewhere; two symbols per LUT hit where codes
+    /// allow.
+    Simd,
+}
+
+impl DecodeKernel {
+    /// Stable short name (bench records, test labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            DecodeKernel::Scalar => "scalar",
+            DecodeKernel::Simd => "simd",
+        }
+    }
+}
+
+/// Does this machine have a real SIMD kernel? AVX2 + BMI2 on `x86_64`
+/// (checked at runtime), always on `aarch64` (NEON is baseline), false
+/// elsewhere.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    fn detect() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("bmi2")
+    }
+    #[cfg(target_arch = "aarch64")]
+    fn detect() -> bool {
+        true
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn detect() -> bool {
+        false
+    }
+    detect()
+}
+
+/// The kernel every interleaved decode uses by default: selected once
+/// per process and cached. SIMD when [`simd_available`], unless the
+/// environment sets `SSHUFF_FORCE_SCALAR=1` at first use.
+pub fn active() -> DecodeKernel {
+    static ACTIVE: OnceLock<DecodeKernel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let forced =
+            std::env::var("SSHUFF_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false);
+        if !forced && simd_available() {
+            DecodeKernel::Simd
+        } else {
+            DecodeKernel::Scalar
+        }
+    })
+}
+
+/// Every kernel runnable on this machine — what the differential tests
+/// and the bench sweep iterate over. Scalar always; SIMD when
+/// available.
+pub fn available_kernels() -> Vec<DecodeKernel> {
+    let mut ks = vec![DecodeKernel::Scalar];
+    if simd_available() {
+        ks.push(DecodeKernel::Simd);
+    }
+    ks
+}
+
+/// Portable scalar kernel: the PR 3 lockstep loop over `N` lanes.
+/// Symbol `j` comes from `subs[j % N]`; `out.len()` symbols are decoded.
+pub(super) fn decode_lanes_scalar<const N: usize>(
+    table: &[u16],
+    ml: u32,
+    subs: &[&[u8]; N],
+    out: &mut [u8],
+) {
+    let n = out.len();
+    let mut lanes = [BitLane::default(); N];
+    let mut r = 0usize; // rounds done; round r decodes out[N*r..N*r+N]
+    // fast loop: 4 rounds (4N symbols) per lane refill
+    'fast: while (r + 4) * N <= n {
+        for (lane, sub) in lanes.iter().zip(subs) {
+            if !lane.can_refill_unchecked(sub) {
+                break 'fast;
+            }
+        }
+        for (lane, sub) in lanes.iter_mut().zip(subs) {
+            lane.refill(sub); // now >= 57 bits per lane
+        }
+        let base = r * N;
+        for k in 0..4 {
+            for s in 0..N {
+                let entry = table[lanes[s].peek(ml) as usize];
+                let len = (entry >> 8) as u32;
+                out[base + k * N + s] = entry as u8;
+                lanes[s].consume(len);
+            }
+        }
+        r += 4;
+    }
+    // careful tail: zero-padded refills, one symbol at a time
+    for j in r * N..n {
+        let s = j % N;
+        lanes[s].refill_padded(subs[s]);
+        let entry = table[lanes[s].peek(ml) as usize];
+        out[j] = entry as u8;
+        lanes[s].consume((entry >> 8) as u32);
+    }
+}
+
+/// SIMD kernel entry point. Dispatches to the AVX2 core when the
+/// machine has it; otherwise runs the portable pair-table core (that is
+/// the NEON path on `aarch64`: the core is plain shifts and loads the
+/// default target features vectorize).
+pub(super) fn decode_lanes_simd<const N: usize>(
+    table: &[u16],
+    pair: &[u32],
+    ml: u32,
+    subs: &[&[u8]; N],
+    out: &mut [u8],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: simd_available() just confirmed avx2 + bmi2.
+        unsafe {
+            match N {
+                4 => x86::decode_pair_4(table, pair, ml, subs[..].try_into().unwrap(), out),
+                8 => x86::decode_pair_8(table, pair, ml, subs[..].try_into().unwrap(), out),
+                16 => x86::decode_pair_16(table, pair, ml, subs[..].try_into().unwrap(), out),
+                _ => unreachable!("unsupported interleave width {N}"),
+            }
+        }
+        return;
+    }
+    pair_core::<N>(table, pair, ml, subs, out);
+}
+
+/// Portable pair-table core: same schedule as the AVX2 core (4 pair
+/// hits per lane per refill, up to 2 symbols per hit) in plain integer
+/// code. Byte-identical to [`decode_lanes_scalar`] on every input: a
+/// count-2 pair entry packs exactly the two symbols two scalar hits
+/// would emit, and count-1 entries (including invalid prefixes, which
+/// consume 0 bits) degrade to the scalar step.
+fn pair_core<const N: usize>(
+    table: &[u16],
+    pair: &[u32],
+    ml: u32,
+    subs: &[&[u8]; N],
+    out: &mut [u8],
+) {
+    let n = out.len();
+    let mut lanes = [BitLane::default(); N];
+    // lane s owns out[s], out[s + N], ...: at = next slot, rem = symbols left
+    let mut at = [0usize; N];
+    let mut rem = [0usize; N];
+    for s in 0..N {
+        at[s] = s;
+        rem[s] = n / N + usize::from(s < n % N);
+    }
+    'fast: loop {
+        for s in 0..N {
+            // 4 pair hits can retire up to 8 symbols and 48 bits
+            if rem[s] < 8 || !lanes[s].can_refill_unchecked(subs[s]) {
+                break 'fast;
+            }
+        }
+        for (lane, sub) in lanes.iter_mut().zip(subs) {
+            lane.refill(sub); // now >= 57 bits per lane
+        }
+        for _ in 0..4 {
+            for s in 0..N {
+                let e = pair[lanes[s].peek(ml) as usize];
+                out[at[s]] = e as u8;
+                if e >> 24 == 2 {
+                    out[at[s] + N] = (e >> 8) as u8;
+                    at[s] += 2 * N;
+                    rem[s] -= 2;
+                } else {
+                    at[s] += N;
+                    rem[s] -= 1;
+                }
+                lanes[s].consume((e >> 16) & 0xFF);
+            }
+        }
+    }
+    decode_tail::<N>(table, ml, subs, out, &mut lanes, &at, &rem);
+}
+
+/// Shared careful tail: finish each lane's remaining symbols with
+/// zero-padded refills and single-symbol LUT hits.
+fn decode_tail<const N: usize>(
+    table: &[u16],
+    ml: u32,
+    subs: &[&[u8]; N],
+    out: &mut [u8],
+    lanes: &mut [BitLane; N],
+    at: &[usize; N],
+    rem: &[usize; N],
+) {
+    for s in 0..N {
+        let (mut a, mut r) = (at[s], rem[s]);
+        while r > 0 {
+            lanes[s].refill_padded(subs[s]);
+            let entry = table[lanes[s].peek(ml) as usize];
+            out[a] = entry as u8;
+            lanes[s].consume((entry >> 8) as u32);
+            a += N;
+            r -= 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! Explicit AVX2 lane cores. Accumulator peek/consume are vector
+    //! ops over 4 lanes at a time; table hits, refills and output
+    //! bookkeeping stay scalar (see the module §Perf notes).
+
+    use super::{decode_tail, BitLane};
+    use std::arch::x86_64::{
+        __m256i, _mm256_loadu_si256, _mm256_set1_epi64x, _mm256_sllv_epi64, _mm256_srlv_epi64,
+        _mm256_storeu_si256,
+    };
+
+    /// The AVX2 pair-table core; `N` must be a multiple of 4.
+    ///
+    /// Callers must only reach this through the `#[target_feature]`
+    /// wrappers below after an avx2+bmi2 runtime check. `#[inline(always)]`
+    /// lets each wrapper specialize this body under its enabled
+    /// features without `#[target_feature]` on a generic fn.
+    #[inline(always)]
+    unsafe fn pair_core_avx2<const N: usize>(
+        table: &[u16],
+        pair: &[u32],
+        ml: u32,
+        subs: &[&[u8]; N],
+        out: &mut [u8],
+    ) {
+        let n = out.len();
+        let mut acc = [0u64; N]; // stream bits, left-aligned (cf. BitLane)
+        let mut nbits = [0u32; N];
+        let mut pos = [0usize; N];
+        let mut at = [0usize; N];
+        let mut rem = [0usize; N];
+        for s in 0..N {
+            at[s] = s;
+            rem[s] = n / N + usize::from(s < n % N);
+        }
+        let shift = _mm256_set1_epi64x((64 - ml) as i64);
+        'fast: loop {
+            for s in 0..N {
+                // 4 pair hits can retire up to 8 symbols and 48 bits
+                if rem[s] < 8 || pos[s] + 8 > subs[s].len() {
+                    break 'fast;
+                }
+            }
+            for s in 0..N {
+                // refill to >= 57 bits (cf. BitLane::refill). The guard
+                // also keeps the shift < 64: nbits hits exactly 64 when
+                // a refill starts from a byte boundary.
+                if nbits[s] >= 57 {
+                    continue;
+                }
+                let w = u64::from_be_bytes(subs[s][pos[s]..pos[s] + 8].try_into().unwrap());
+                acc[s] |= w >> nbits[s];
+                let adv = ((64 - nbits[s]) / 8) as usize;
+                pos[s] += adv;
+                nbits[s] += adv as u32 * 8;
+            }
+            for _ in 0..4 {
+                let mut g = 0usize;
+                while g < N {
+                    let accv = _mm256_loadu_si256(acc[g..].as_ptr() as *const __m256i);
+                    let idxv = _mm256_srlv_epi64(accv, shift);
+                    let mut idx = [0u64; 4];
+                    _mm256_storeu_si256(idx.as_mut_ptr() as *mut __m256i, idxv);
+                    let mut used = [0i64; 4];
+                    for (k, &i) in idx.iter().enumerate() {
+                        let s = g + k;
+                        let e = pair[i as usize];
+                        let u = (e >> 16) & 0xFF;
+                        out[at[s]] = e as u8;
+                        if e >> 24 == 2 {
+                            out[at[s] + N] = (e >> 8) as u8;
+                            at[s] += 2 * N;
+                            rem[s] -= 2;
+                        } else {
+                            at[s] += N;
+                            rem[s] -= 1;
+                        }
+                        used[k] = u as i64;
+                        nbits[s] -= u;
+                    }
+                    let usedv = _mm256_loadu_si256(used.as_ptr() as *const __m256i);
+                    let next = _mm256_sllv_epi64(accv, usedv);
+                    _mm256_storeu_si256(acc[g..].as_mut_ptr() as *mut __m256i, next);
+                    g += 4;
+                }
+            }
+        }
+        // hand the per-lane bit cursors to the shared careful tail
+        let mut tail = [BitLane::default(); N];
+        for s in 0..N {
+            tail[s] = BitLane { acc: acc[s], nbits: nbits[s], pos: pos[s] };
+        }
+        decode_tail::<N>(table, ml, subs, out, &mut tail, &at, &rem);
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2 and BMI2 (callers check
+    /// [`super::simd_available`] first).
+    #[target_feature(enable = "avx2", enable = "bmi2")]
+    pub(super) unsafe fn decode_pair_4(
+        table: &[u16],
+        pair: &[u32],
+        ml: u32,
+        subs: &[&[u8]; 4],
+        out: &mut [u8],
+    ) {
+        pair_core_avx2::<4>(table, pair, ml, subs, out)
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2 and BMI2 (callers check
+    /// [`super::simd_available`] first).
+    #[target_feature(enable = "avx2", enable = "bmi2")]
+    pub(super) unsafe fn decode_pair_8(
+        table: &[u16],
+        pair: &[u32],
+        ml: u32,
+        subs: &[&[u8]; 8],
+        out: &mut [u8],
+    ) {
+        pair_core_avx2::<8>(table, pair, ml, subs, out)
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2 and BMI2 (callers check
+    /// [`super::simd_available`] first).
+    #[target_feature(enable = "avx2", enable = "bmi2")]
+    pub(super) unsafe fn decode_pair_16(
+        table: &[u16],
+        pair: &[u32],
+        ml: u32,
+        subs: &[&[u8]; 16],
+        out: &mut [u8],
+    ) {
+        pair_core_avx2::<16>(table, pair, ml, subs, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_names_are_stable() {
+        assert_eq!(DecodeKernel::Scalar.name(), "scalar");
+        assert_eq!(DecodeKernel::Simd.name(), "simd");
+    }
+
+    #[test]
+    fn available_kernels_always_include_scalar() {
+        let ks = available_kernels();
+        assert!(ks.contains(&DecodeKernel::Scalar));
+        assert_eq!(ks.contains(&DecodeKernel::Simd), simd_available());
+        // active() is one of the available kernels whatever the env says
+        assert!(ks.contains(&active()));
+    }
+
+    #[test]
+    fn force_scalar_env_is_respected_when_set() {
+        // active() caches on first use, so only assert the implication
+        // we can check deterministically in-process.
+        if std::env::var("SSHUFF_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+            assert_eq!(active(), DecodeKernel::Scalar);
+        }
+    }
+}

@@ -10,13 +10,22 @@
 //!   the wire for the three-stage baseline;
 //! * a table-driven decoder (one peek + one LUT hit per symbol).
 
-use crate::bitio::{BitLane, BitReader};
+use crate::bitio::BitReader;
 use crate::stats::{Histogram256, Pmf, NUM_SYMBOLS};
 
-/// Byte size of the jump table ahead of an interleaved payload: the
-/// byte lengths of sub-streams 0..=2 as `u32` LE (sub-stream 3's length
-/// is the remainder of the payload).
-pub const JUMP_TABLE_BYTES: usize = 12;
+pub mod kernel;
+
+/// Byte size of the jump table ahead of a 4-way interleaved payload:
+/// the byte lengths of sub-streams 0..=2 as `u32` LE (sub-stream 3's
+/// length is the remainder of the payload).
+pub const JUMP_TABLE_BYTES: usize = jump_table_bytes(4);
+
+/// Jump-table byte size ahead of an `lanes`-way interleaved payload:
+/// the byte lengths of sub-streams `0..lanes-1` as `u32` LE (the last
+/// sub-stream's length is the remainder of the payload).
+pub const fn jump_table_bytes(lanes: usize) -> usize {
+    (lanes - 1) * 4
+}
 
 /// Maximum code length. 12 bits keeps the decode LUT at 4096 entries
 /// (8 KiB of u16) — L1-resident — while costing < 0.1% compression vs
@@ -275,30 +284,54 @@ impl CodeBook {
     /// Panics in debug if a symbol is uncovered (callers check
     /// [`covers`](CodeBook::covers) / use the singlestage escape policy).
     pub fn encode_interleaved(&self, data: &[u8]) -> Vec<u8> {
+        self.encode_lanes::<4>(data)
+    }
+
+    /// Encode `data` as an `lanes`-way interleaved payload (see
+    /// [`encode_interleaved`](CodeBook::encode_interleaved)): a
+    /// [`jump_table_bytes`]`(lanes)` jump table (sub-stream byte lengths
+    /// `0..lanes-1` as u32 LE) followed by the sub-streams back to back.
+    /// Symbol `j` lands in sub-stream `j % lanes`.
+    ///
+    /// Supported widths are 4, 8 and 16 (the wire formats with an
+    /// in-band marker — see `singlestage::PayloadLayout`); any other
+    /// width panics.
+    pub fn encode_interleaved_n(&self, data: &[u8], lanes: usize) -> Vec<u8> {
+        match lanes {
+            4 => self.encode_lanes::<4>(data),
+            8 => self.encode_lanes::<8>(data),
+            16 => self.encode_lanes::<16>(data),
+            _ => panic!("unsupported interleave width {lanes}"),
+        }
+    }
+
+    /// The `N`-lane interleaved encode core. `N` = 4 reproduces the
+    /// pre-generalization `encode_interleaved` byte-for-byte (pinned in
+    /// `tests/proptests.rs`).
+    fn encode_lanes<const N: usize>(&self, data: &[u8]) -> Vec<u8> {
         // packed lookup: code <= 12 bits fits (code << 8) | len in u32
         let mut packed = [0u32; NUM_SYMBOLS];
         for s in 0..NUM_SYMBOLS {
             packed[s] = (self.codes[s] << 8) | self.lengths[s] as u32;
         }
-        // per-stream worst case: ceil(n/4) symbols x 2 bytes, +8 slack
-        let cap = data.len().div_ceil(4) * (MAX_CODE_LEN as usize).div_ceil(8).max(2) + 16;
-        let mut bufs: [Vec<u8>; 4] =
-            [vec![0u8; cap], vec![0u8; cap], vec![0u8; cap], vec![0u8; cap]];
-        let mut at = [0usize; 4]; // bytes committed per stream
-        let mut acc = [0u64; 4]; // bits packed from the MSB end downward
-        let mut nbits = [0u32; 4];
-        let mut chunks = data.chunks_exact(16);
+        // per-stream worst case: ceil(n/N) symbols x 2 bytes, +8 slack
+        let cap = data.len().div_ceil(N) * (MAX_CODE_LEN as usize).div_ceil(8).max(2) + 16;
+        let mut bufs: [Vec<u8>; N] = std::array::from_fn(|_| vec![0u8; cap]);
+        let mut at = [0usize; N]; // bytes committed per stream
+        let mut acc = [0u64; N]; // bits packed from the MSB end downward
+        let mut nbits = [0u32; N];
+        let mut chunks = data.chunks_exact(4 * N);
         for c in &mut chunks {
             for k in 0..4 {
-                for s in 0..4 {
-                    let e = packed[c[4 * k + s] as usize];
+                for s in 0..N {
+                    let e = packed[c[N * k + s] as usize];
                     let len = e & 0xFF;
-                    debug_assert!(len > 0, "symbol {:#x} has no code", c[4 * k + s]);
+                    debug_assert!(len > 0, "symbol {:#x} has no code", c[N * k + s]);
                     nbits[s] += len;
                     acc[s] |= ((e >> 8) as u64) << (64 - nbits[s]);
                 }
             }
-            for s in 0..4 {
+            for s in 0..N {
                 // write-ahead 8 bytes, commit only the whole ones
                 bufs[s][at[s]..at[s] + 8].copy_from_slice(&acc[s].to_be_bytes());
                 let k = (nbits[s] / 8) as usize;
@@ -308,7 +341,7 @@ impl CodeBook {
             }
         }
         for (j, &b) in chunks.remainder().iter().enumerate() {
-            let s = j & 3; // remainder starts at a multiple of 16
+            let s = j % N; // remainder starts at a multiple of 4N
             let e = packed[b as usize];
             let len = e & 0xFF;
             debug_assert!(len > 0, "symbol {b:#x} has no code");
@@ -320,15 +353,15 @@ impl CodeBook {
             acc[s] <<= 8 * k;
             nbits[s] -= 8 * k as u32;
         }
-        for s in 0..4 {
+        for s in 0..N {
             if nbits[s] > 0 {
                 bufs[s][at[s]] = (acc[s] >> 56) as u8;
                 at[s] += 1;
             }
         }
-        let mut out =
-            Vec::with_capacity(JUMP_TABLE_BYTES + at[0] + at[1] + at[2] + at[3]);
-        for &committed in at.iter().take(3) {
+        let total: usize = at.iter().sum();
+        let mut out = Vec::with_capacity(jump_table_bytes(N) + total);
+        for &committed in at.iter().take(N - 1) {
             out.extend_from_slice(&(committed as u32).to_le_bytes());
         }
         for (buf, &committed) in bufs.iter().zip(&at) {
@@ -445,6 +478,18 @@ fn package_merge(support: &[(u64, u8)], max_len: u32) -> Vec<(u8, u8)> {
 pub struct Decoder {
     /// `(len << 8) | symbol`; len = 0 marks an invalid prefix.
     table: Vec<u16>,
+    /// Two-symbol companion LUT for the interleaved kernels (§Perf):
+    /// indexed like `table`, each entry packs up to TWO decoded symbols:
+    /// bits 0..8 = first symbol, 8..16 = second symbol, 16..24 = total
+    /// bits consumed, 24..26 = symbol count (1 or 2). An index whose
+    /// first code is short enough that a whole second code also fits in
+    /// the same `max_len`-bit peek gets count 2 — one LUT hit then
+    /// retires two symbols. (This covers every pair of codes whose
+    /// lengths sum to <= `max_len`; in particular all codes of length
+    /// <= [`MAX_CODE_LEN`]/2 pair with each other.) Invalid prefixes
+    /// keep count 1 with 0 consumed bits so corrupt streams stay
+    /// bounded.
+    pair: Vec<u32>,
     max_len: u32,
 }
 
@@ -464,7 +509,27 @@ impl Decoder {
                 *e = entry;
             }
         }
-        Decoder { table, max_len: ml }
+        let mask = (1usize << ml) - 1;
+        let mut pair = vec![0u32; 1 << ml];
+        for (idx, p) in pair.iter_mut().enumerate() {
+            let e0 = table[idx];
+            let len0 = (e0 >> 8) as u32;
+            let sym0 = (e0 & 0xFF) as u32;
+            // single-symbol entry (also the invalid-prefix fallback:
+            // len0 = 0 consumes nothing, the caller's count still drops)
+            *p = (1 << 24) | (len0 << 16) | sym0;
+            if len0 > 0 && len0 < ml {
+                let e1 = table[(idx << len0) & mask];
+                let len1 = (e1 >> 8) as u32;
+                if len1 > 0 && len0 + len1 <= ml {
+                    *p = (2 << 24)
+                        | ((len0 + len1) << 16)
+                        | (((e1 & 0xFF) as u32) << 8)
+                        | sym0;
+                }
+            }
+        }
+        Decoder { table, pair, max_len: ml }
     }
 
     /// Decode exactly `n_symbols` symbols from the bit-packed payload.
@@ -531,76 +596,98 @@ impl Decoder {
     /// Hot path (§Perf): this is the whole point of the interleaved
     /// layout. [`decode_into`](Decoder::decode_into) is a serial chain —
     /// each LUT hit's consumed length gates the next shift, so the CPU
-    /// retires roughly one symbol per LUT-latency. Here four
-    /// [`BitLane`]s are refilled and consumed in lockstep: the four
-    /// shift/peek/LUT chains share no data, so an out-of-order core
-    /// overlaps four lookups per iteration. The fast loop refills each
-    /// lane once per FOUR symbols (4 x [`MAX_CODE_LEN`] = 48 <= the
-    /// >= 57 bits a refill guarantees) with unchecked 8-byte loads; the
-    /// stream tails fall back to zero-padded refills, one symbol at a
-    /// time.
+    /// retires roughly one symbol per LUT-latency. Interleaving runs N
+    /// independent [`BitLane`](crate::bitio::BitLane)s in lockstep:
+    /// the shift/peek/LUT chains share no data, so an out-of-order
+    /// core overlaps N lookups per iteration. Since the N-lane
+    /// generalization this is a thin
+    /// wrapper over [`Decoder::decode_interleaved_n_into`] with
+    /// `lanes = 4`; the per-kernel cadence (refills, two-symbol fast
+    /// path) is documented on [`kernel`].
     pub fn decode_interleaved_into(
         &self,
         payload: &[u8],
         out: &mut [u8],
     ) -> crate::Result<()> {
+        self.decode_interleaved_n_into(payload, out, 4)
+    }
+
+    /// Decode an `lanes`-way interleaved payload (as produced by
+    /// [`CodeBook::encode_interleaved_n`]) with the process-wide
+    /// [`kernel::active`] decode kernel. Symbol `j` comes from
+    /// sub-stream `j % lanes`. Supported widths are 4, 8 and 16; any
+    /// other width is a clean error, as are a truncated jump table and
+    /// a jump table overrunning the payload. Corrupt-but-well-framed
+    /// payloads decode to garbage of the right length, never panic or
+    /// over-read.
+    pub fn decode_interleaved_n_into(
+        &self,
+        payload: &[u8],
+        out: &mut [u8],
+        lanes: usize,
+    ) -> crate::Result<()> {
+        self.decode_interleaved_n_into_with(payload, out, lanes, kernel::active())
+    }
+
+    /// [`decode_interleaved_n_into`](Decoder::decode_interleaved_n_into)
+    /// with an explicit kernel — the hook the differential tests and
+    /// benches use to pin every (layout, kernel) pair byte-identical.
+    pub fn decode_interleaved_n_into_with(
+        &self,
+        payload: &[u8],
+        out: &mut [u8],
+        lanes: usize,
+        k: kernel::DecodeKernel,
+    ) -> crate::Result<()> {
+        match lanes {
+            4 => self.decode_lanes::<4>(payload, out, k),
+            8 => self.decode_lanes::<8>(payload, out, k),
+            16 => self.decode_lanes::<16>(payload, out, k),
+            _ => crate::error::bail!("unsupported interleave width {lanes}"),
+        }
+    }
+
+    /// Parse the `(N-1) x u32` jump table, slice the `N` sub-streams and
+    /// hand them to the selected kernel.
+    fn decode_lanes<const N: usize>(
+        &self,
+        payload: &[u8],
+        out: &mut [u8],
+        k: kernel::DecodeKernel,
+    ) -> crate::Result<()> {
+        let jt = jump_table_bytes(N);
         crate::error::ensure!(
-            payload.len() >= JUMP_TABLE_BYTES,
+            payload.len() >= jt,
             "interleaved payload too short for jump table: {} bytes",
             payload.len()
         );
-        let l0 = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
-        let l1 = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
-        let l2 = u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
-        let body = &payload[JUMP_TABLE_BYTES..];
-        // usize math is safe on 64-bit: 3 x u32::MAX < 2^34
+        let body = &payload[jt..];
+        let mut lens = [0usize; N];
+        let mut total = 0usize;
+        // usize math is safe on 64-bit: 15 x u32::MAX < 2^36
+        for (s, len) in lens.iter_mut().take(N - 1).enumerate() {
+            *len = u32::from_le_bytes(payload[4 * s..4 * s + 4].try_into().unwrap()) as usize;
+            total += *len;
+        }
         crate::error::ensure!(
-            l0 + l1 + l2 <= body.len(),
-            "interleaved jump table overruns payload: {}+{}+{} > {}",
-            l0,
-            l1,
-            l2,
+            total <= body.len(),
+            "interleaved jump table overruns payload: {total} > {}",
             body.len()
         );
-        let subs: [&[u8]; 4] = [
-            &body[..l0],
-            &body[l0..l0 + l1],
-            &body[l0 + l1..l0 + l1 + l2],
-            &body[l0 + l1 + l2..],
-        ];
-        let ml = self.max_len;
-        let n = out.len();
-        let mut lanes = [BitLane::default(); 4];
-        let mut r = 0usize; // rounds done; round r decodes out[4r..4r+4]
-        // fast loop: 4 rounds (16 symbols) per lane refill
-        while (r + 4) * 4 <= n
-            && lanes[0].can_refill_unchecked(subs[0])
-            && lanes[1].can_refill_unchecked(subs[1])
-            && lanes[2].can_refill_unchecked(subs[2])
-            && lanes[3].can_refill_unchecked(subs[3])
-        {
-            for s in 0..4 {
-                lanes[s].refill(subs[s]); // now >= 57 bits per lane
-            }
-            let base = r * 4;
-            for k in 0..4 {
-                for s in 0..4 {
-                    let entry = self.table[lanes[s].peek(ml) as usize];
-                    let len = (entry >> 8) as u32;
-                    debug_assert!(len > 0, "invalid prefix in stream");
-                    out[base + k * 4 + s] = entry as u8;
-                    lanes[s].consume(len);
-                }
-            }
-            r += 4;
+        lens[N - 1] = body.len() - total;
+        let mut subs: [&[u8]; N] = [&[]; N];
+        let mut off = 0usize;
+        for (sub, &len) in subs.iter_mut().zip(&lens) {
+            *sub = &body[off..off + len];
+            off += len;
         }
-        // careful tail: zero-padded refills, one symbol at a time
-        for j in r * 4..n {
-            let s = j & 3;
-            lanes[s].refill_padded(subs[s]);
-            let entry = self.table[lanes[s].peek(ml) as usize];
-            out[j] = entry as u8;
-            lanes[s].consume((entry >> 8) as u32);
+        match k {
+            kernel::DecodeKernel::Scalar => {
+                kernel::decode_lanes_scalar::<N>(&self.table, self.max_len, &subs, out)
+            }
+            kernel::DecodeKernel::Simd => {
+                kernel::decode_lanes_simd::<N>(&self.table, &self.pair, self.max_len, &subs, out)
+            }
         }
         Ok(())
     }

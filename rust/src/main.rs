@@ -70,7 +70,8 @@ fn build_cli() -> Cli {
     let layout = OptSpec {
         name: "layout",
         takes_value: true,
-        help: "huffman-1stage payload layout: legacy|interleaved4 (default interleaved4)",
+        help: "huffman-1stage payload layout: \
+               legacy|interleaved4|interleaved8|interleaved16 (default interleaved4)",
     };
     Cli {
         bin: "repro",
@@ -163,7 +164,9 @@ fn build_cli() -> Cli {
 fn layout_from(args: &Args) -> sshuff::Result<PayloadLayout> {
     let name = args.opt_or("layout", PayloadLayout::default().name());
     PayloadLayout::parse(name).ok_or_else(|| {
-        sshuff::error::Error::msg(format!("--layout must be legacy or interleaved4, got '{name}'"))
+        sshuff::error::Error::msg(format!(
+            "--layout must be legacy, interleaved4, interleaved8, or interleaved16, got '{name}'"
+        ))
     })
 }
 

@@ -301,9 +301,7 @@ fn decode_chunk(registry: &Registry, frame: &Frame, out: &mut [u8]) -> crate::Re
         .ok_or_else(|| crate::error::anyhow!("unknown codebook id {}", frame.header.id))?;
     match frame.header.layout {
         PayloadLayout::Legacy => fixed.decoder.decode_into(&frame.payload, out),
-        PayloadLayout::Interleaved4 => {
-            fixed.decoder.decode_interleaved_into(&frame.payload, out)?
-        }
+        l => fixed.decoder.decode_interleaved_n_into(&frame.payload, out, l.lanes())?,
     }
     Ok(())
 }
@@ -401,6 +399,17 @@ mod tests {
         assert_eq!(pool_l.decode(&reg, &mf_mixed).unwrap(), both);
         // wire-level: marker-byte chunk headers survive container framing
         assert_eq!(pool_i.decode_bytes(&reg, &mf_i.to_bytes()).unwrap(), data);
+        // wider interleave factors ride the same chunked path
+        for layout in [PayloadLayout::Interleaved8, PayloadLayout::Interleaved16] {
+            let pool_n = EncoderPool::new(4).with_layout(layout);
+            let mf_n = pool_n.encode(&reg, id, &data, 4096);
+            assert!(mf_n
+                .chunks
+                .iter()
+                .all(|f| f.header.id == RAW_ID || f.header.layout == layout));
+            assert_eq!(pool_n.decode(&reg, &mf_n).unwrap(), data, "{layout:?}");
+            assert_eq!(pool_i.decode_bytes(&reg, &mf_n.to_bytes()).unwrap(), data);
+        }
     }
 
     #[test]

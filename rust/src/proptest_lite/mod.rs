@@ -128,6 +128,24 @@ pub mod gens {
         (0..n).map(|_| rng.gen_range(k.max(1)) as u8).collect()
     }
 
+    /// Run-structured bytes: long single-symbol runs (1..=512 repeats)
+    /// over a small alphabet, length in `[0, max_len]`. Long runs of a
+    /// short code keep one interleave lane consuming for many refill
+    /// cycles while its siblings drain different symbols — the shape
+    /// that stresses lane-refill boundaries in the N-lane decoders.
+    pub fn bytes_runs(rng: &mut Pcg32, max_len: usize) -> Vec<u8> {
+        let n = rng.gen_range(max_len as u32 + 1) as usize;
+        let k = 2 + rng.gen_range(14); // alphabet size 2..=15
+        let mut v = Vec::with_capacity(n);
+        while v.len() < n {
+            let sym = rng.gen_range(k) as u8;
+            let run = 1 + rng.gen_range(512) as usize;
+            let take = run.min(n - v.len());
+            v.resize(v.len() + take, sym);
+        }
+        v
+    }
+
     /// A random histogram (counts), support size in `[1, 256]`.
     pub fn histogram(rng: &mut Pcg32, max_count: u32) -> [u64; 256] {
         let support = 1 + rng.gen_range(256) as usize;
@@ -281,6 +299,27 @@ mod tests {
         }
         let h = crate::stats::Histogram256::from_bytes(&data);
         assert!(h.entropy_bits() < 7.5, "H={}", h.entropy_bits());
+    }
+
+    #[test]
+    fn runs_bytes_have_long_runs() {
+        let mut rng = Pcg32::new(11);
+        let mut longest = 0usize;
+        for _ in 0..20 {
+            let v = gens::bytes_runs(&mut rng, 8192);
+            assert!(v.len() <= 8192);
+            assert!(v.iter().all(|&b| b < 16), "small alphabet");
+            let mut run = 0usize;
+            let mut prev = None;
+            for &b in &v {
+                run = if prev == Some(b) { run + 1 } else { 1 };
+                prev = Some(b);
+                longest = longest.max(run);
+            }
+        }
+        // runs up to 512 are drawn; something well past a refill (8 B of
+        // 1-bit codes = 64 symbols) must appear across 20 cases
+        assert!(longest >= 64, "longest run {longest}");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 use super::manifest::Manifest;
 use super::{artifacts_dir, literal_from, Engine, Executable};
 use crate::bitio::BitWriter;
-use crate::huffman::{CodeBook, JUMP_TABLE_BYTES};
+use crate::huffman::CodeBook;
 use crate::singlestage::{interleaved_frame_or_raw, Frame, MultiFrame, PayloadLayout};
 use crate::stats::{Histogram256, NUM_SYMBOLS};
 use std::path::PathBuf;
@@ -132,11 +132,11 @@ impl KernelRunner {
 
     /// [`encode_multiframe`](Self::encode_multiframe) with an explicit
     /// payload layout. The kernel's per-symbol (codeword, length)
-    /// gather is layout-independent; for
-    /// [`PayloadLayout::Interleaved4`] the bit-pack back half
-    /// round-robins the gathered codes into four sub-streams (symbol
-    /// `j` → stream `j % 4`) behind a jump table, exactly like
-    /// `CodeBook::encode_interleaved`.
+    /// gather is layout-independent; for the interleaved layouts the
+    /// bit-pack back half round-robins the gathered codes into `N`
+    /// sub-streams (symbol `j` → stream `j % N`, `N` =
+    /// [`PayloadLayout::lanes`]) behind an `(N-1)`-entry jump table,
+    /// exactly like `CodeBook::encode_interleaved_n`.
     pub fn encode_multiframe_layout(
         &self,
         data: &[u8],
@@ -161,27 +161,29 @@ impl KernelRunner {
                     }
                     frames.push(Frame::coded(id, chunk.len() as u32, w.finish()));
                 }
-                PayloadLayout::Interleaved4 => {
-                    let mut subs = [
-                        BitWriter::with_capacity((total as usize).div_ceil(32) + 2),
-                        BitWriter::with_capacity((total as usize).div_ceil(32) + 2),
-                        BitWriter::with_capacity((total as usize).div_ceil(32) + 2),
-                        BitWriter::with_capacity((total as usize).div_ceil(32) + 2),
-                    ];
+                l => {
+                    let lanes = l.lanes();
+                    let mut subs: Vec<BitWriter> = (0..lanes)
+                        .map(|_| {
+                            BitWriter::with_capacity(
+                                (total as usize).div_ceil(8 * lanes) + 2,
+                            )
+                        })
+                        .collect();
                     for (j, (&code, &len)) in codes.iter().zip(&lens).enumerate() {
-                        subs[j & 3].put_bits(code as u64, len as u32);
+                        subs[j % lanes].put_bits(code as u64, len as u32);
                     }
-                    let streams = subs.map(|w| w.finish());
+                    let streams: Vec<Vec<u8>> = subs.into_iter().map(|w| w.finish()).collect();
                     let mut payload = Vec::with_capacity(
-                        JUMP_TABLE_BYTES + streams.iter().map(|s| s.len()).sum::<usize>(),
+                        l.jump_table_bytes() + streams.iter().map(|s| s.len()).sum::<usize>(),
                     );
-                    for s in streams.iter().take(3) {
+                    for s in streams.iter().take(lanes - 1) {
                         payload.extend_from_slice(&(s.len() as u32).to_le_bytes());
                     }
                     for s in &streams {
                         payload.extend_from_slice(s);
                     }
-                    frames.push(interleaved_frame_or_raw(id, chunk, payload));
+                    frames.push(interleaved_frame_or_raw(id, chunk, payload, l));
                 }
             }
         }
@@ -193,9 +195,9 @@ impl KernelRunner {
                         let (payload, _) = book.encode(rem);
                         frames.push(Frame::coded(id, rem.len() as u32, payload));
                     }
-                    PayloadLayout::Interleaved4 => {
-                        let payload = book.encode_interleaved(rem);
-                        frames.push(interleaved_frame_or_raw(id, rem, payload));
+                    l => {
+                        let payload = book.encode_interleaved_n(rem, l.lanes());
+                        frames.push(interleaved_frame_or_raw(id, rem, payload, l));
                     }
                 }
             } else {
@@ -304,16 +306,21 @@ mod tests {
             None,
             1,
         )));
-        let mf =
-            kr.encode_multiframe_layout(&data, &book, id, PayloadLayout::Interleaved4).unwrap();
-        // kernel-gathered interleaved payloads are bit-identical to the
-        // native interleaved encoder, jump table included
-        for (frame, chunk) in mf.chunks.iter().zip(data.chunks(kr.kernel_n)) {
-            assert_eq!(frame.header.layout, PayloadLayout::Interleaved4);
-            assert_eq!(frame.payload, book.encode_interleaved(chunk));
+        for layout in [
+            PayloadLayout::Interleaved4,
+            PayloadLayout::Interleaved8,
+            PayloadLayout::Interleaved16,
+        ] {
+            let mf = kr.encode_multiframe_layout(&data, &book, id, layout).unwrap();
+            // kernel-gathered interleaved payloads are bit-identical to
+            // the native interleaved encoder, jump table included
+            for (frame, chunk) in mf.chunks.iter().zip(data.chunks(kr.kernel_n)) {
+                assert_eq!(frame.header.layout, layout);
+                assert_eq!(frame.payload, book.encode_interleaved_n(chunk, layout.lanes()));
+            }
+            let pool = crate::parallel::EncoderPool::new(4);
+            assert_eq!(pool.decode(&reg, &mf).unwrap(), data, "{layout:?}");
         }
-        let pool = crate::parallel::EncoderPool::new(4);
-        assert_eq!(pool.decode(&reg, &mf).unwrap(), data);
     }
 
     #[test]

@@ -12,26 +12,26 @@
 //! message (see `baselines::ThreeStage`). Id [`RAW_ID`] marks an
 //! uncompressed escape frame whose payload is the original bytes.
 //!
-//! Since this format revision, frames also carry a **payload layout**
-//! ([`PayloadLayout`]). Layout [`Interleaved4`](PayloadLayout) frames
-//! are flagged in-band by the reserved first byte
-//! [`INTERLEAVED4_MARKER`] (254) followed by the real codebook id:
+//! Since the Interleaved4 format revision, frames also carry a
+//! **payload layout** ([`PayloadLayout`]). Interleaved frames are
+//! flagged in-band by a reserved first byte — [`INTERLEAVED4_MARKER`]
+//! (254), [`INTERLEAVED8_MARKER`] (253) or [`INTERLEAVED16_MARKER`]
+//! (252) — followed by the real codebook id:
 //!
 //! ```text
-//! [ 254 ][ id: u8 ][ n_symbols: u32 LE ][ jump table: 3 x u32 LE ][ 4 sub-streams ]
+//! [ marker ][ id: u8 ][ n_symbols: u32 LE ][ jump table: (N-1) x u32 LE ][ N sub-streams ]
 //! ```
 //!
-//! Any first byte other than the marker parses exactly as before, so
-//! every pre-revision frame with codebook id 0..=253 (or a raw frame)
+//! Any first byte other than a marker parses exactly as before, so
+//! every pre-revision frame with codebook id 0..=251 (or a raw frame)
 //! still decodes byte-identically (asserted in `tests/proptests.rs`
 //! against a verbatim copy of the legacy encoder). The cost of the
-//! in-band flag is that codebook id 254 is reserved alongside 255
-//! (`Registry::MAX_BOOKS` dropped from 255 to 254): the one
-//! incompatibility is an archived pre-revision frame from a 255-book
-//! registry whose 254th book was actually used — such a frame now
-//! misparses and must be re-encoded (no such registry ships in this
-//! repo; `persist` files record the book count, so they load and
-//! re-encode cleanly).
+//! in-band flags is that codebook ids 252..=254 are reserved alongside
+//! 255 (`Registry::MAX_BOOKS` is now 252): the one incompatibility is
+//! an archived pre-revision frame from a bigger registry whose high
+//! book ids were actually used — such a frame now misparses and must
+//! be re-encoded (no such registry ships in this repo; `persist` files
+//! record the book count, so they load and re-encode cleanly).
 //!
 //! [`MultiFrame`] is the multi-chunk container the parallel engine
 //! (`crate::parallel`) stitches per-chunk [`Frame`]s into:
@@ -52,21 +52,44 @@ pub const RAW_ID: u8 = 255;
 /// frame (the real codebook id follows). Cannot be a codebook id.
 pub const INTERLEAVED4_MARKER: u8 = 254;
 
+/// Reserved first wire byte flagging an [`PayloadLayout::Interleaved8`]
+/// frame. Cannot be a codebook id.
+pub const INTERLEAVED8_MARKER: u8 = 253;
+
+/// Reserved first wire byte flagging an
+/// [`PayloadLayout::Interleaved16`] frame. Cannot be a codebook id —
+/// also the smallest reserved byte (see [`is_reserved_id`]).
+pub const INTERLEAVED16_MARKER: u8 = 252;
+
+/// Is `id` one of the wire bytes a codebook can never use? ([`RAW_ID`]
+/// and the three interleaved markers occupy 252..=255.)
+pub const fn is_reserved_id(id: u8) -> bool {
+    id >= INTERLEAVED16_MARKER
+}
+
 /// Legacy wire header size in bytes.
 pub const HEADER_BYTES: usize = 5;
 
-/// Interleaved4 wire header size in bytes (marker + id + n_symbols).
-pub const INTERLEAVED4_HEADER_BYTES: usize = 6;
+/// Interleaved wire header size in bytes (marker + id + n_symbols),
+/// the same for every interleaved width.
+pub const INTERLEAVED_HEADER_BYTES: usize = 6;
+
+/// Back-compat alias for [`INTERLEAVED_HEADER_BYTES`] from when
+/// Interleaved4 was the only interleaved layout.
+pub const INTERLEAVED4_HEADER_BYTES: usize = INTERLEAVED_HEADER_BYTES;
 
 /// How a coded frame's payload packs its bitstream.
 ///
 /// `Legacy` is the original single serial bitstream — one dependency
-/// chain, kept for old frames and as the fallback. `Interleaved4` is
-/// the throughput layout: a [`crate::huffman::JUMP_TABLE_BYTES`] jump
-/// table then four round-robin sub-streams (symbol `j` in sub-stream
-/// `j % 4`) so the decoder runs four independent dependency chains —
-/// see `CodeBook::encode_interleaved` / `Decoder::decode_interleaved_into`.
-/// Raw escape frames always carry `Legacy` (the payload is the input).
+/// chain, kept for old frames and as the fallback. The `InterleavedN`
+/// layouts are the throughput layouts: a
+/// [`crate::huffman::jump_table_bytes`]`(N)` jump table then N
+/// round-robin sub-streams (symbol `j` in sub-stream `j % N`) so the
+/// decoder runs N independent dependency chains — see
+/// `CodeBook::encode_interleaved_n` /
+/// `Decoder::decode_interleaved_n_into` and the decode kernels in
+/// `crate::huffman::kernel`. Raw escape frames always carry `Legacy`
+/// (the payload is the input).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum PayloadLayout {
     /// Single serial bitstream (pre-revision wire format).
@@ -75,22 +98,77 @@ pub enum PayloadLayout {
     /// encodes — the fast decode path).
     #[default]
     Interleaved4,
+    /// Jump table + 8 round-robin sub-streams.
+    Interleaved8,
+    /// Jump table + 16 round-robin sub-streams (widest decode ILP; the
+    /// jump table costs 60 bytes, so better for larger chunks).
+    Interleaved16,
 }
 
 impl PayloadLayout {
+    /// Every layout, for tests and sweeps.
+    pub const ALL: [PayloadLayout; 4] = [
+        PayloadLayout::Legacy,
+        PayloadLayout::Interleaved4,
+        PayloadLayout::Interleaved8,
+        PayloadLayout::Interleaved16,
+    ];
+
     /// Wire header bytes a coded frame with this layout spends.
     pub fn header_bytes(self) -> usize {
         match self {
             PayloadLayout::Legacy => HEADER_BYTES,
-            PayloadLayout::Interleaved4 => INTERLEAVED4_HEADER_BYTES,
+            _ => INTERLEAVED_HEADER_BYTES,
         }
     }
 
-    /// Parse a CLI/user name (`legacy` | `interleaved4`).
+    /// Sub-stream count of the payload (1 for the serial legacy layout).
+    pub fn lanes(self) -> usize {
+        match self {
+            PayloadLayout::Legacy => 1,
+            PayloadLayout::Interleaved4 => 4,
+            PayloadLayout::Interleaved8 => 8,
+            PayloadLayout::Interleaved16 => 16,
+        }
+    }
+
+    /// Jump-table bytes ahead of the sub-streams (0 for legacy).
+    pub fn jump_table_bytes(self) -> usize {
+        match self {
+            PayloadLayout::Legacy => 0,
+            l => crate::huffman::jump_table_bytes(l.lanes()),
+        }
+    }
+
+    /// The reserved in-band first wire byte, or `None` for legacy.
+    pub fn marker(self) -> Option<u8> {
+        match self {
+            PayloadLayout::Legacy => None,
+            PayloadLayout::Interleaved4 => Some(INTERLEAVED4_MARKER),
+            PayloadLayout::Interleaved8 => Some(INTERLEAVED8_MARKER),
+            PayloadLayout::Interleaved16 => Some(INTERLEAVED16_MARKER),
+        }
+    }
+
+    /// Inverse of [`marker`](PayloadLayout::marker): the interleaved
+    /// layout a first wire byte flags, if any.
+    pub fn from_marker(byte: u8) -> Option<PayloadLayout> {
+        match byte {
+            INTERLEAVED4_MARKER => Some(PayloadLayout::Interleaved4),
+            INTERLEAVED8_MARKER => Some(PayloadLayout::Interleaved8),
+            INTERLEAVED16_MARKER => Some(PayloadLayout::Interleaved16),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI/user name
+    /// (`legacy` | `interleaved4` | `interleaved8` | `interleaved16`).
     pub fn parse(s: &str) -> Option<PayloadLayout> {
         match s {
             "legacy" => Some(PayloadLayout::Legacy),
             "interleaved4" => Some(PayloadLayout::Interleaved4),
+            "interleaved8" => Some(PayloadLayout::Interleaved8),
+            "interleaved16" => Some(PayloadLayout::Interleaved16),
             _ => None,
         }
     }
@@ -99,6 +177,8 @@ impl PayloadLayout {
         match self {
             PayloadLayout::Legacy => "legacy",
             PayloadLayout::Interleaved4 => "interleaved4",
+            PayloadLayout::Interleaved8 => "interleaved8",
+            PayloadLayout::Interleaved16 => "interleaved16",
         }
     }
 }
@@ -123,7 +203,7 @@ pub struct Frame {
 impl Frame {
     /// A coded frame in the legacy (single-bitstream) layout.
     pub fn coded(id: u8, n_symbols: u32, payload: Vec<u8>) -> Frame {
-        debug_assert!(id != RAW_ID && id != INTERLEAVED4_MARKER);
+        debug_assert!(!is_reserved_id(id));
         Frame {
             header: FrameHeader { id, n_symbols, layout: PayloadLayout::Legacy },
             payload,
@@ -133,12 +213,22 @@ impl Frame {
     /// A coded frame in the 4-way interleaved layout; `payload` must
     /// start with the jump table (`CodeBook::encode_interleaved` output).
     pub fn interleaved4(id: u8, n_symbols: u32, payload: Vec<u8>) -> Frame {
-        debug_assert!(id != RAW_ID && id != INTERLEAVED4_MARKER);
-        debug_assert!(payload.len() >= crate::huffman::JUMP_TABLE_BYTES);
-        Frame {
-            header: FrameHeader { id, n_symbols, layout: PayloadLayout::Interleaved4 },
-            payload,
-        }
+        Frame::interleaved(id, n_symbols, payload, PayloadLayout::Interleaved4)
+    }
+
+    /// A coded frame in any interleaved layout; `payload` must start
+    /// with the layout's jump table (`CodeBook::encode_interleaved_n`
+    /// output for `layout.lanes()`).
+    pub fn interleaved(
+        id: u8,
+        n_symbols: u32,
+        payload: Vec<u8>,
+        layout: PayloadLayout,
+    ) -> Frame {
+        debug_assert!(layout != PayloadLayout::Legacy);
+        debug_assert!(!is_reserved_id(id));
+        debug_assert!(payload.len() >= layout.jump_table_bytes());
+        Frame { header: FrameHeader { id, n_symbols, layout }, payload }
     }
 
     /// A coded frame with the given layout.
@@ -150,7 +240,7 @@ impl Frame {
     ) -> Frame {
         match layout {
             PayloadLayout::Legacy => Frame::coded(id, n_symbols, payload),
-            PayloadLayout::Interleaved4 => Frame::interleaved4(id, n_symbols, payload),
+            l => Frame::interleaved(id, n_symbols, payload, l),
         }
     }
 
@@ -179,20 +269,16 @@ impl Frame {
         if self.header.id == RAW_ID {
             return self.payload.len() == self.header.n_symbols as usize;
         }
-        let bit_capacity = match self.header.layout {
-            PayloadLayout::Legacy => self.payload.len() as u64 * 8,
-            PayloadLayout::Interleaved4 => {
-                (self.payload.len().saturating_sub(crate::huffman::JUMP_TABLE_BYTES)) as u64 * 8
-            }
-        };
+        let bit_capacity =
+            (self.payload.len().saturating_sub(self.header.layout.jump_table_bytes())) as u64 * 8;
         self.header.n_symbols as u64 <= bit_capacity
     }
 
     /// Serialize to wire bytes.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_bytes());
-        if self.header.layout == PayloadLayout::Interleaved4 {
-            out.push(INTERLEAVED4_MARKER);
+        if let Some(marker) = self.header.layout.marker() {
+            out.push(marker);
         }
         out.push(self.header.id);
         out.extend_from_slice(&self.header.n_symbols.to_le_bytes());
@@ -201,30 +287,29 @@ impl Frame {
     }
 
     /// Parse wire bytes (the payload is everything after the header).
-    /// A first byte of [`INTERLEAVED4_MARKER`] selects the interleaved
-    /// header; anything else parses exactly as the pre-revision format,
-    /// so legacy frames remain decodable.
+    /// A reserved first byte ([`INTERLEAVED4_MARKER`],
+    /// [`INTERLEAVED8_MARKER`], [`INTERLEAVED16_MARKER`]) selects that
+    /// interleaved header; anything else parses exactly as the
+    /// pre-revision format, so legacy frames remain decodable.
     pub fn parse(wire: &[u8]) -> crate::Result<Frame> {
-        if wire.first() == Some(&INTERLEAVED4_MARKER) {
-            if wire.len() < INTERLEAVED4_HEADER_BYTES {
+        if let Some(layout) = wire.first().copied().and_then(PayloadLayout::from_marker) {
+            if wire.len() < INTERLEAVED_HEADER_BYTES {
                 crate::error::bail!("interleaved frame too short: {} bytes", wire.len());
             }
             let id = wire[1];
             crate::error::ensure!(
-                id != RAW_ID && id != INTERLEAVED4_MARKER,
+                !is_reserved_id(id),
                 "interleaved frame with reserved codebook id {id}"
             );
             let n_symbols = u32::from_le_bytes(wire[2..6].try_into().unwrap());
-            let payload = wire[INTERLEAVED4_HEADER_BYTES..].to_vec();
+            let payload = wire[INTERLEAVED_HEADER_BYTES..].to_vec();
             crate::error::ensure!(
-                payload.len() >= crate::huffman::JUMP_TABLE_BYTES,
-                "interleaved frame missing jump table: {} payload bytes",
-                payload.len()
+                payload.len() >= layout.jump_table_bytes(),
+                "interleaved frame missing jump table: {} payload bytes for {}",
+                payload.len(),
+                layout.name()
             );
-            return Ok(Frame {
-                header: FrameHeader { id, n_symbols, layout: PayloadLayout::Interleaved4 },
-                payload,
-            });
+            return Ok(Frame { header: FrameHeader { id, n_symbols, layout }, payload });
         }
         if wire.len() < HEADER_BYTES {
             crate::error::bail!("frame too short: {} bytes", wire.len());
@@ -395,21 +480,52 @@ mod tests {
     }
 
     #[test]
-    fn interleaved4_rejects_reserved_ids_and_missing_jump_table() {
-        // reserved ids after the marker
-        for bad_id in [RAW_ID, INTERLEAVED4_MARKER] {
-            let mut wire = vec![INTERLEAVED4_MARKER, bad_id];
+    fn interleaved_rejects_reserved_ids_and_missing_jump_table() {
+        for layout in [
+            PayloadLayout::Interleaved4,
+            PayloadLayout::Interleaved8,
+            PayloadLayout::Interleaved16,
+        ] {
+            let marker = layout.marker().unwrap();
+            // every reserved id after the marker
+            for bad_id in
+                [RAW_ID, INTERLEAVED4_MARKER, INTERLEAVED8_MARKER, INTERLEAVED16_MARKER]
+            {
+                assert!(is_reserved_id(bad_id));
+                let mut wire = vec![marker, bad_id];
+                wire.extend_from_slice(&0u32.to_le_bytes());
+                wire.resize(wire.len() + layout.jump_table_bytes(), 0);
+                assert!(Frame::parse(&wire).is_err(), "{} id {bad_id}", layout.name());
+            }
+            // jump table truncated by one byte
+            let mut wire = vec![marker, 1];
             wire.extend_from_slice(&0u32.to_le_bytes());
-            wire.extend_from_slice(&[0u8; 12]);
-            assert!(Frame::parse(&wire).is_err(), "id {bad_id}");
+            wire.resize(wire.len() + layout.jump_table_bytes() - 1, 0);
+            assert!(Frame::parse(&wire).is_err(), "{}", layout.name());
+            // header truncated
+            assert!(Frame::parse(&[marker, 1, 2]).is_err(), "{}", layout.name());
         }
-        // jump table truncated
-        let mut wire = vec![INTERLEAVED4_MARKER, 1];
-        wire.extend_from_slice(&0u32.to_le_bytes());
-        wire.extend_from_slice(&[0u8; 11]);
-        assert!(Frame::parse(&wire).is_err());
-        // header truncated
-        assert!(Frame::parse(&[INTERLEAVED4_MARKER, 1, 2]).is_err());
+        assert!(!is_reserved_id(251));
+    }
+
+    #[test]
+    fn interleaved_n_roundtrip_and_markers() {
+        for layout in [PayloadLayout::Interleaved8, PayloadLayout::Interleaved16] {
+            let jt = layout.jump_table_bytes();
+            assert_eq!(jt, (layout.lanes() - 1) * 4);
+            let mut payload = vec![0u8; jt];
+            payload[0] = 1; // sub-stream 0 is 1 byte
+            payload.extend_from_slice(&[0xAA, 0xBB]);
+            let f = Frame::interleaved(9, 7, payload, layout);
+            let wire = f.to_bytes();
+            assert_eq!(wire[0], layout.marker().unwrap());
+            assert_eq!(wire[1], 9);
+            assert_eq!(wire.len(), f.wire_bytes());
+            assert_eq!(f.wire_bytes(), INTERLEAVED_HEADER_BYTES + jt + 2);
+            let back = Frame::parse(&wire).unwrap();
+            assert_eq!(back, f);
+            assert_eq!(back.header.layout, layout);
+        }
     }
 
     #[test]
@@ -423,10 +539,15 @@ mod tests {
 
     #[test]
     fn payload_layout_names_roundtrip() {
-        for layout in [PayloadLayout::Legacy, PayloadLayout::Interleaved4] {
+        for layout in PayloadLayout::ALL {
             assert_eq!(PayloadLayout::parse(layout.name()), Some(layout));
+            match layout.marker() {
+                Some(m) => assert_eq!(PayloadLayout::from_marker(m), Some(layout)),
+                None => assert_eq!(layout, PayloadLayout::Legacy),
+            }
         }
         assert_eq!(PayloadLayout::parse("zstd"), None);
+        assert_eq!(PayloadLayout::from_marker(0), None);
         assert_eq!(PayloadLayout::default(), PayloadLayout::Interleaved4);
     }
 

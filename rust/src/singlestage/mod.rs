@@ -54,7 +54,10 @@ pub mod persist;
 pub mod planes;
 pub mod stream;
 pub use drift::{DriftConfig, DriftMonitor};
-pub use frame::{Frame, FrameHeader, MultiFrame, PayloadLayout, INTERLEAVED4_MARKER, RAW_ID};
+pub use frame::{
+    is_reserved_id, Frame, FrameHeader, MultiFrame, PayloadLayout, INTERLEAVED16_MARKER,
+    INTERLEAVED4_MARKER, INTERLEAVED8_MARKER, RAW_ID,
+};
 pub use persist::{load_registry, save_registry};
 pub use stream::{block_spans, decode_block, decode_stream, encode_stream, StreamStats};
 
@@ -107,14 +110,16 @@ impl FixedCodebook {
 /// Codebook registry: id (u8) → codebook. Shared between the encoder and
 /// every decoder node — the paper's "code books are shared between the
 /// participating nodes". Id [`RAW_ID`] (255) is reserved for raw frames
-/// and [`INTERLEAVED4_MARKER`] (254) for the interleaved layout flag.
+/// and [`INTERLEAVED4_MARKER`] (254), [`INTERLEAVED8_MARKER`] (253),
+/// [`INTERLEAVED16_MARKER`] (252) for the interleaved layout flags.
 #[derive(Default, Clone)]
 pub struct Registry {
     books: Vec<Arc<FixedCodebook>>,
 }
 
 impl Registry {
-    pub const MAX_BOOKS: usize = 254; // 254 = INTERLEAVED4_MARKER, 255 = RAW_ID
+    // 252..=254 = interleaved markers, 255 = RAW_ID
+    pub const MAX_BOOKS: usize = 252;
 
     pub fn new() -> Self {
         Self::default()
@@ -266,10 +271,12 @@ pub fn select_codebook(hist: &Histogram256, registry: &Registry, candidates: &[u
 /// layout — the exact per-frame semantics shared by
 /// [`SingleStageEncoder::encode_with`] and the parallel chunk encoder
 /// (`crate::parallel`). Escapes to a raw frame when the book is missing
-/// or does not cover `data`, and (interleaved layout only) when the
-/// coded frame would not be strictly smaller than the raw escape — the
-/// interleaved jump table costs 13 bytes over a legacy frame, so
-/// marginal blocks stay raw and interleaved wire size stays bounded by
+/// or does not cover `data`, and (interleaved layouts only) when the
+/// coded frame would not be strictly smaller than the raw escape — an
+/// interleaved frame costs the marker byte plus an
+/// `(N-1) x 4`-byte jump table over a legacy frame (13 bytes at N = 4,
+/// 61 at N = 16), so marginal blocks stay raw and interleaved wire
+/// size stays bounded by
 /// `data.len() + `[`frame::HEADER_BYTES`]. The legacy layout keeps its
 /// pre-revision coverage-only escape, bit-for-bit.
 pub fn encode_frame(registry: &Registry, id: u8, data: &[u8], layout: PayloadLayout) -> Frame {
@@ -279,9 +286,12 @@ pub fn encode_frame(registry: &Registry, id: u8, data: &[u8], layout: PayloadLay
                 let (payload, _) = fixed.book.encode(data);
                 Frame::coded(id, data.len() as u32, payload)
             }
-            PayloadLayout::Interleaved4 => {
-                interleaved_frame_or_raw(id, data, fixed.book.encode_interleaved(data))
-            }
+            l => interleaved_frame_or_raw(
+                id,
+                data,
+                fixed.book.encode_interleaved_n(data, l.lanes()),
+                l,
+            ),
         },
         _ => Frame::raw(data),
     }
@@ -292,9 +302,14 @@ pub fn encode_frame(registry: &Registry, id: u8, data: &[u8], layout: PayloadLay
 /// it is strictly smaller on the wire than the raw escape, else emit
 /// raw. Shared by [`encode_frame`] and the kernel bit-pack back half
 /// (`crate::runtime::kernels`), so the two paths cannot diverge.
-pub fn interleaved_frame_or_raw(id: u8, data: &[u8], payload: Vec<u8>) -> Frame {
-    if frame::INTERLEAVED4_HEADER_BYTES + payload.len() < frame::HEADER_BYTES + data.len() {
-        Frame::interleaved4(id, data.len() as u32, payload)
+pub fn interleaved_frame_or_raw(
+    id: u8,
+    data: &[u8],
+    payload: Vec<u8>,
+    layout: PayloadLayout,
+) -> Frame {
+    if layout.header_bytes() + payload.len() < frame::HEADER_BYTES + data.len() {
+        Frame::interleaved(id, data.len() as u32, payload, layout)
     } else {
         Frame::raw(data)
     }
@@ -417,9 +432,9 @@ impl SingleStageDecoder {
             PayloadLayout::Legacy => {
                 Ok(book.decoder.decode(&frame.payload, frame.header.n_symbols as usize))
             }
-            PayloadLayout::Interleaved4 => {
+            l => {
                 let mut out = vec![0u8; frame.header.n_symbols as usize];
-                book.decoder.decode_interleaved_into(&frame.payload, &mut out)?;
+                book.decoder.decode_interleaved_n_into(&frame.payload, &mut out, l.lanes())?;
                 Ok(out)
             }
         }
@@ -559,6 +574,22 @@ mod tests {
         assert!(fi.wire_bytes() <= fl.wire_bytes() + 16, "{} vs {}", fi.wire_bytes(), fl.wire_bytes());
         // wire-level roundtrip through the marker header
         assert_eq!(dec.decode_bytes(&fi.to_bytes()).unwrap(), data);
+    }
+
+    #[test]
+    fn every_layout_roundtrips_through_encoder_and_wire() {
+        let data = skewed(41, 50_000, 1.3);
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        m.observe_bytes(key(), &data);
+        let id = m.build(key()).unwrap();
+        let dec = SingleStageDecoder::new(m.registry.clone());
+        for layout in PayloadLayout::ALL {
+            let mut enc = SingleStageEncoder::new(m.registry.clone()).with_layout(layout);
+            let f = enc.encode_with(id, &data);
+            assert_eq!(f.header.layout, layout, "{}", layout.name());
+            assert_eq!(dec.decode(&f).unwrap(), data, "{}", layout.name());
+            assert_eq!(dec.decode_bytes(&f.to_bytes()).unwrap(), data, "{}", layout.name());
+        }
     }
 
     #[test]

@@ -83,12 +83,12 @@ pub fn encode_stream_layout(
         let hist = Histogram256::from_bytes(chunk);
         let (id, bits) = select_codebook(&hist, registry, candidates);
         // per-layout coded overhead beyond the packed bits: the header,
-        // plus (interleaved) the jump table and up to 3 extra
+        // plus (interleaved) the jump table and up to lanes-1 extra
         // partial-byte roundings
         let overhead = layout.header_bytes()
             + match layout {
                 PayloadLayout::Legacy => 0,
-                PayloadLayout::Interleaved4 => crate::huffman::JUMP_TABLE_BYTES + 3,
+                l => l.jump_table_bytes() + (l.lanes() - 1),
             };
         let frame = if id == super::RAW_ID || (bits / 8) as usize + overhead >= chunk.len() {
             stats.raw_blocks += 1;
@@ -105,9 +105,9 @@ pub fn encode_stream_layout(
                     let (payload, _) = fixed.book.encode(chunk);
                     Frame::coded(id, chunk.len() as u32, payload)
                 }
-                PayloadLayout::Interleaved4 => {
-                    let payload = fixed.book.encode_interleaved(chunk);
-                    Frame::interleaved4(id, chunk.len() as u32, payload)
+                l => {
+                    let payload = fixed.book.encode_interleaved_n(chunk, l.lanes());
+                    Frame::interleaved(id, chunk.len() as u32, payload, l)
                 }
             }
         };
@@ -301,6 +301,12 @@ mod tests {
                 data[b * 4096..(b + 1) * 4096],
                 "block {b}"
             );
+        }
+        // the wider layouts ride the same container and interoperate
+        for layout in [PayloadLayout::Interleaved8, PayloadLayout::Interleaved16] {
+            let (wire_n, sn) = encode_stream_layout(&reg, &[0], &data, 12, layout);
+            assert_eq!(sn.blocks, si.blocks, "{}", layout.name());
+            assert_eq!(decode_stream(&reg, &wire_n).unwrap(), data, "{}", layout.name());
         }
     }
 

@@ -3,7 +3,8 @@
 use sshuff::baselines::{Codec, ThreeStage};
 use sshuff::huffman::CodeBook;
 use sshuff::singlestage::{
-    AvgPolicy, CodebookManager, Frame, Registry, SingleStageDecoder, SingleStageEncoder, RAW_ID,
+    AvgPolicy, CodebookManager, Frame, PayloadLayout, Registry, SingleStageDecoder,
+    SingleStageEncoder, RAW_ID,
 };
 use sshuff::stats::Histogram256;
 use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
@@ -53,6 +54,24 @@ fn decoder_does_not_panic_on_truncated_payload() {
     let half = &payload[..payload.len() / 2];
     let out = decoder.decode(half, 100);
     assert_eq!(out.len(), 100);
+    // the interleaved layouts: truncation anywhere in the payload —
+    // inside the jump table, at a lane boundary, mid-lane — must yield
+    // Err or bounded garbage, never a panic or over-read, under every
+    // available decode kernel
+    for layout in PayloadLayout::ALL {
+        if layout == PayloadLayout::Legacy {
+            continue;
+        }
+        let lanes = layout.lanes();
+        let full = book.encode_interleaved_n(&data, lanes);
+        for cut in [0, 1, lanes, full.len() / 4, full.len() / 2, full.len() - 1] {
+            let trunc = &full[..cut.min(full.len())];
+            for k in sshuff::huffman::kernel::available_kernels() {
+                let mut out = vec![0u8; data.len()];
+                let _ = decoder.decode_interleaved_n_into_with(trunc, &mut out, lanes, k);
+            }
+        }
+    }
 }
 
 #[test]
@@ -66,17 +85,88 @@ fn registry_capacity_and_reserved_id_reservation() {
             i as u32,
         )));
         assert_ne!(id, RAW_ID, "RAW_ID must never be allocated");
-        assert_ne!(
-            id,
-            sshuff::singlestage::INTERLEAVED4_MARKER,
-            "the interleaved layout marker must never be allocated"
+        assert!(
+            !sshuff::singlestage::is_reserved_id(id),
+            "reserved marker byte {id} must never be allocated"
         );
     }
-    assert_eq!(reg.len(), 254);
+    assert_eq!(reg.len(), 252);
+    // the four reserved bytes sit contiguously above MAX_BOOKS
+    for marker in [
+        RAW_ID,
+        sshuff::singlestage::INTERLEAVED4_MARKER,
+        sshuff::singlestage::INTERLEAVED8_MARKER,
+        sshuff::singlestage::INTERLEAVED16_MARKER,
+    ] {
+        assert!(sshuff::singlestage::is_reserved_id(marker));
+        assert!(marker as usize >= Registry::MAX_BOOKS);
+    }
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         reg.add(std::sync::Arc::new(sshuff::singlestage::FixedCodebook::new(book, None, 0)))
     }));
-    assert!(result.is_err(), "registry must reject book 255");
+    assert!(result.is_err(), "registry must reject book 253");
+}
+
+#[test]
+fn corrupt_interleaved_n_wires_error_cleanly() {
+    // targeted corruption of N-lane frames: truncated jump tables, jump
+    // offsets past the payload end, lane-length overflow, bit-flipped
+    // marker bytes. Every outcome must be Err or bounded garbage —
+    // never a panic or an out-of-bounds read.
+    use sshuff::proptest_lite::{gens, shrinks, Runner};
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+    let mut seed_rng = sshuff::prng::Pcg32::new(90);
+    mgr.observe_bytes(key, &gens::bytes_skewed(&mut seed_rng, 1 << 15));
+    let id = mgr.build(key).unwrap();
+    let reg = mgr.registry;
+    let layouts =
+        [PayloadLayout::Interleaved4, PayloadLayout::Interleaved8, PayloadLayout::Interleaved16];
+    Runner::new("nlane-corrupt-wire", 150).run(
+        |rng| {
+            let layout = layouts[rng.gen_range(3) as usize];
+            let data = gens::bytes_skewed(rng, 2048);
+            let mut enc = SingleStageEncoder::new(reg.clone()).with_layout(layout);
+            let mut wire = enc.encode_with(id, &data).to_bytes();
+            match rng.gen_range(4) {
+                0 => {
+                    // truncate inside the header or the jump table
+                    let cap = wire.len().min(6 + layout.jump_table_bytes());
+                    wire.truncate(rng.gen_range(cap as u32 + 1) as usize);
+                }
+                1 if wire.len() >= 10 => {
+                    // first jump entry -> lane length far past payload end
+                    wire[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+                }
+                2 => {
+                    // bit-flip the marker byte (may alias another layout,
+                    // a raw frame, or a plain codebook id)
+                    wire[0] ^= 1 << rng.gen_range(8);
+                }
+                _ => {
+                    // arbitrary bit flips anywhere in the wire
+                    for _ in 0..=rng.gen_range(4) {
+                        let i = rng.gen_range(wire.len() as u32) as usize;
+                        wire[i] ^= 1 << rng.gen_range(8);
+                    }
+                }
+            }
+            wire
+        },
+        shrinks::vec_u8,
+        |wire| {
+            let dec = SingleStageDecoder::new(reg.clone());
+            match Frame::parse(wire) {
+                Err(_) => Ok(()), // clean reject
+                Ok(frame) => {
+                    // decode may fail (overrunning jump table, implausible
+                    // symbol count) or succeed with garbage; both fine
+                    let _ = dec.decode(&frame);
+                    Ok(())
+                }
+            }
+        },
+    );
 }
 
 #[test]

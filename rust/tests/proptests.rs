@@ -6,7 +6,7 @@ use sshuff::huffman::{CodeBook, JUMP_TABLE_BYTES, MAX_CODE_LEN};
 use sshuff::proptest_lite::{gens, shrinks, Runner};
 use sshuff::singlestage::{
     AvgPolicy, CodebookManager, Frame, PayloadLayout, SingleStageDecoder, SingleStageEncoder,
-    INTERLEAVED4_MARKER,
+    INTERLEAVED16_MARKER, INTERLEAVED4_MARKER, INTERLEAVED8_MARKER,
 };
 use sshuff::stats::Histogram256;
 use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
@@ -420,6 +420,69 @@ fn golden_interleaved4_wire_bytes_are_pinned() {
     let frame = Frame::interleaved4(3, 11, payload);
     let wire = frame.to_bytes();
     assert_eq!(&wire[..6], &[INTERLEAVED4_MARKER, 3, 11, 0, 0, 0]);
+    assert_eq!(&wire[6..], &want_payload[..]);
+    assert_eq!(Frame::parse(&wire).unwrap(), frame);
+}
+
+#[test]
+fn golden_interleaved8_wire_bytes_are_pinned() {
+    // same book and data as the 4-lane golden (a:0/1b, b:10/2b,
+    // c:110/3b, d:111/3b; data "abcdabcaaaa"), symbol j -> lane j % 8:
+    //   lane0: j=0,8  = a,a -> 0 0   -> 0x00   lane4: j=4 = a -> 0x00
+    //   lane1: j=1,9  = b,a -> 10 0  -> 0x80   lane5: j=5 = b -> 0x80
+    //   lane2: j=2,10 = c,a -> 110 0 -> 0xC0   lane6: j=6 = c -> 0xC0
+    //   lane3: j=3    = d   -> 111   -> 0xE0   lane7: j=7 = a -> 0x00
+    // jump table = lane byte lengths 0..=6 as u32 LE (lane 7 derived).
+    let mut counts = [0u64; 256];
+    counts[b'a' as usize] = 5;
+    counts[b'b' as usize] = 2;
+    counts[b'c' as usize] = 1;
+    counts[b'd' as usize] = 1;
+    let book = CodeBook::from_counts(&counts).unwrap();
+    let payload = book.encode_interleaved_n(b"abcdabcaaaa", 8);
+    let mut want_payload = Vec::new();
+    for _ in 0..7 {
+        want_payload.extend_from_slice(&1u32.to_le_bytes());
+    }
+    want_payload.extend_from_slice(&[0x00, 0x80, 0xC0, 0xE0, 0x00, 0x80, 0xC0, 0x00]);
+    assert_eq!(payload, want_payload, "8-lane jump table or sub-stream bytes drifted");
+    assert_eq!(payload.len(), sshuff::huffman::jump_table_bytes(8) + 8);
+    let mut out = vec![0u8; 11];
+    book.decoder().decode_interleaved_n_into(&payload, &mut out, 8).unwrap();
+    assert_eq!(out, b"abcdabcaaaa".to_vec());
+    let frame = Frame::interleaved(3, 11, payload, PayloadLayout::Interleaved8);
+    let wire = frame.to_bytes();
+    assert_eq!(&wire[..6], &[INTERLEAVED8_MARKER, 3, 11, 0, 0, 0]);
+    assert_eq!(&wire[6..], &want_payload[..]);
+    assert_eq!(Frame::parse(&wire).unwrap(), frame);
+}
+
+#[test]
+fn golden_interleaved16_wire_bytes_are_pinned() {
+    // 11 symbols over 16 lanes: lanes 0..=10 hold exactly one symbol
+    // (a,b,c,d,a,b,c,a,a,a,a), lanes 11..=15 are empty. Jump table =
+    // 15 u32 LE lane lengths (1 x11 then 0 x4), lane 15 derived.
+    let mut counts = [0u64; 256];
+    counts[b'a' as usize] = 5;
+    counts[b'b' as usize] = 2;
+    counts[b'c' as usize] = 1;
+    counts[b'd' as usize] = 1;
+    let book = CodeBook::from_counts(&counts).unwrap();
+    let payload = book.encode_interleaved_n(b"abcdabcaaaa", 16);
+    let mut want_payload = Vec::new();
+    for s in 0..15u32 {
+        want_payload.extend_from_slice(&u32::from(s < 11).to_le_bytes());
+    }
+    want_payload
+        .extend_from_slice(&[0x00, 0x80, 0xC0, 0xE0, 0x00, 0x80, 0xC0, 0x00, 0x00, 0x00, 0x00]);
+    assert_eq!(payload, want_payload, "16-lane jump table or sub-stream bytes drifted");
+    assert_eq!(payload.len(), sshuff::huffman::jump_table_bytes(16) + 11);
+    let mut out = vec![0u8; 11];
+    book.decoder().decode_interleaved_n_into(&payload, &mut out, 16).unwrap();
+    assert_eq!(out, b"abcdabcaaaa".to_vec());
+    let frame = Frame::interleaved(3, 11, payload, PayloadLayout::Interleaved16);
+    let wire = frame.to_bytes();
+    assert_eq!(&wire[..6], &[INTERLEAVED16_MARKER, 3, 11, 0, 0, 0]);
     assert_eq!(&wire[6..], &want_payload[..]);
     assert_eq!(Frame::parse(&wire).unwrap(), frame);
 }
