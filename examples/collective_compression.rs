@@ -59,7 +59,7 @@ fn main() -> sshuff::Result<()> {
         for codec in &codecs {
             let mut fabric = Fabric::new(workers, LinkModel::DIE_TO_DIE);
             let t0 = std::time::Instant::now();
-            let (out, rep) = all_reduce(&mut fabric, codec.as_ref(), &inputs);
+            let (out, rep) = all_reduce(&mut fabric, codec.as_ref(), &inputs)?;
             let wall = t0.elapsed().as_secs_f64() * 1e3;
             // sanity: reduced values identical across ranks
             assert!(out.windows(2).all(|w| w[0] == w[1]));
@@ -96,7 +96,7 @@ fn main() -> sshuff::Result<()> {
         let mut fabric = Fabric::new(workers, LinkModel::DIE_TO_DIE);
         let mut transport = SimTransport::new(&mut fabric);
         let mut engine = CollectiveEngine::new(&mut transport, &codec, depth);
-        let out = engine.all_reduce(&inputs);
+        let out = engine.all_reduce(&inputs)?;
         assert!(out.windows(2).all(|w| w[0] == w[1]));
         let t = engine.take_report().timeline;
         table.row(&[

@@ -56,7 +56,7 @@ fn main() {
             for codec in &codecs {
                 let mut fabric = Fabric::new(workers, link);
                 let t0 = std::time::Instant::now();
-                let (out, rep) = all_reduce(&mut fabric, codec.as_ref(), &inputs);
+                let (out, rep) = all_reduce(&mut fabric, codec.as_ref(), &inputs).unwrap();
                 let wall = t0.elapsed().as_secs_f64() * 1e3;
                 assert!(out.windows(2).all(|w| w[0] == w[1]), "{}", codec.name());
                 if codec.name() == "raw" {
@@ -104,7 +104,8 @@ fn main() {
             codec.as_ref(),
             &inputs,
             sshuff::collectives::WireFormat::Bf16,
-        );
+        )
+        .unwrap();
         assert!(out.windows(2).all(|w| w[0] == w[1]), "{}", codec.name());
         if codec.name() == "raw" {
             raw_time = rep.sim_time_s;

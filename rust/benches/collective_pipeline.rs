@@ -44,7 +44,7 @@ fn run(
         "channel" => {
             let mut tr = ChannelTransport::new(ranks, link);
             let mut eng = CollectiveEngine::new(&mut tr, codec, depth);
-            let out = eng.all_reduce(inputs);
+            let out = eng.all_reduce(inputs).expect("channel all_reduce");
             assert!(out.windows(2).all(|w| w[0] == w[1]), "{} ranks disagree", codec.name());
             eng.take_report()
         }
@@ -52,7 +52,7 @@ fn run(
             let mut fabric = Fabric::new(ranks, link);
             let mut tr = SimTransport::new(&mut fabric);
             let mut eng = CollectiveEngine::new(&mut tr, codec, depth);
-            let out = eng.all_reduce(inputs);
+            let out = eng.all_reduce(inputs).expect("sim all_reduce");
             assert!(out.windows(2).all(|w| w[0] == w[1]), "{} ranks disagree", codec.name());
             eng.take_report()
         }

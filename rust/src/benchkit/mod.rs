@@ -262,6 +262,175 @@ fn json_number(v: f64) -> String {
     }
 }
 
+/// Parse a document produced by [`JsonEmitter::to_json`] back into
+/// `(name, fields)` records — the regression gate's side of the
+/// emitter's JSON subset (serde is not in the offline crate set). The
+/// input must be an array of flat objects, each with a `"name"` string;
+/// every other key must map to a number or `null` (non-finite values
+/// serialize as `null` and are dropped here). String-valued extra
+/// fields are tolerated and ignored.
+pub fn parse_records(json: &str) -> Result<Vec<(String, Vec<(String, f64)>)>, String> {
+    let mut p = JsonParser { b: json.as_bytes(), i: 0 };
+    p.ws();
+    p.expect(b'[')?;
+    let mut records = Vec::new();
+    p.ws();
+    if p.peek() == Some(b']') {
+        p.i += 1;
+    } else {
+        loop {
+            p.ws();
+            records.push(p.object()?);
+            p.ws();
+            match p.next()? {
+                b',' => continue,
+                b']' => break,
+                c => return Err(format!("expected ',' or ']' after record, got '{}'", c as char)),
+            }
+        }
+    }
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing bytes after the record array at offset {}", p.i));
+    }
+    Ok(records)
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl JsonParser<'_> {
+    fn ws(&mut self) {
+        while self.peek().is_some_and(|c| c.is_ascii_whitespace()) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn next(&mut self) -> Result<u8, String> {
+        let c = self.peek().ok_or("unexpected end of input")?;
+        self.i += 1;
+        Ok(c)
+    }
+
+    fn expect(&mut self, want: u8) -> Result<(), String> {
+        let got = self.next()?;
+        if got != want {
+            return Err(format!("expected '{}', got '{}'", want as char, got as char));
+        }
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str) -> bool {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.next()? {
+                b'"' => return Ok(out),
+                b'\\' => match self.next()? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        if self.i + 4 > self.b.len() {
+                            return Err("truncated \\u escape".into());
+                        }
+                        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                            .map_err(|_| "non-ascii \\u escape")?;
+                        let code =
+                            u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape digits")?;
+                        self.i += 4;
+                        out.push(char::from_u32(code).ok_or("\\u escape is not a scalar value")?);
+                    }
+                    c => return Err(format!("unknown escape '\\{}'", c as char)),
+                },
+                c if c < 0x80 => out.push(c as char),
+                c => {
+                    // re-assemble the multi-byte UTF-8 sequence starting at c
+                    let start = self.i - 1;
+                    let len = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    if start + len > self.b.len() {
+                        return Err("truncated UTF-8 sequence in string".into());
+                    }
+                    let s = std::str::from_utf8(&self.b[start..start + len])
+                        .map_err(|_| "invalid UTF-8 in string")?;
+                    out.push_str(s);
+                    self.i = start + len;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        let start = self.i;
+        while self
+            .peek()
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        let tok = std::str::from_utf8(&self.b[start..self.i]).expect("ascii number token");
+        tok.parse::<f64>().map_err(|_| format!("bad number '{tok}'"))
+    }
+
+    fn object(&mut self) -> Result<(String, Vec<(String, f64)>), String> {
+        self.expect(b'{')?;
+        let mut name = None;
+        let mut fields = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+        } else {
+            loop {
+                self.ws();
+                let key = self.string()?;
+                self.ws();
+                self.expect(b':')?;
+                self.ws();
+                if key == "name" {
+                    name = Some(self.string()?);
+                } else if self.peek() == Some(b'"') {
+                    let _ = self.string()?;
+                } else if self.lit("null") {
+                    // a non-finite value the emitter dropped
+                } else {
+                    fields.push((key, self.number()?));
+                }
+                self.ws();
+                match self.next()? {
+                    b',' => continue,
+                    b'}' => break,
+                    c => return Err(format!("expected ',' or '}}' in record, got '{}'", c as char)),
+                }
+            }
+        }
+        Ok((name.ok_or("record object has no \"name\" field")?, fields))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -336,6 +505,34 @@ mod tests {
         let back = std::fs::read_to_string(&path).unwrap();
         assert_eq!(back, json);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn parse_records_round_trips_emitter_output() {
+        let mut em = JsonEmitter::new();
+        em.record("all_reduce/tcp/r4", &[("wire_bytes", 1024.0), ("wall_s", 0.125)]);
+        em.record("odd \"name\"\\with\u{1}ctrl", &[("nan_field", f64::NAN), ("ok", -3e-2)]);
+        let parsed = parse_records(&em.to_json()).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].0, "all_reduce/tcp/r4");
+        assert_eq!(
+            parsed[0].1,
+            vec![("wire_bytes".to_string(), 1024.0), ("wall_s".to_string(), 0.125)]
+        );
+        // the NaN serialized as null and is dropped; the name unescapes
+        assert_eq!(parsed[1].0, "odd \"name\"\\with\u{1}ctrl");
+        assert_eq!(parsed[1].1, vec![("ok".to_string(), -3e-2)]);
+    }
+
+    #[test]
+    fn parse_records_handles_empty_and_rejects_garbage() {
+        assert_eq!(parse_records("[]").unwrap(), vec![]);
+        assert_eq!(parse_records("[\n]\n").unwrap(), vec![]);
+        assert!(parse_records("").is_err());
+        assert!(parse_records("{}").is_err());
+        assert!(parse_records("[{\"x\": 1}]").is_err(), "record without a name");
+        assert!(parse_records("[{\"name\": \"a\"}] trailing").is_err());
+        assert!(parse_records("[{\"name\": \"a\", \"v\": 1e}]").is_err(), "bad number");
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //!   ranks. [`SimTransport`] keeps the deterministic [`Fabric`]
 //!   link-model accounting; [`ChannelTransport`] runs **each rank as a
 //!   real thread** doing real encode/decode work over in-process
-//!   channels, so the measured wall time reflects genuine overlap
-//!   across ranks;
+//!   channels; [`TcpTransport`] and [`UdsTransport`] move the same
+//!   frames over real OS sockets (loopback TCP with `TCP_NODELAY`, or
+//!   `socketpair(2)` Unix-domain sockets), so serialization and
+//!   syscalls are measured, not modeled;
 //! * a [`CollectiveEngine`] that re-expresses the ring collectives as
 //!   schedules of per-step hops and, for every hop, models a
 //!   **double-buffered pipeline**: the hop's payload is split into
@@ -31,12 +33,20 @@
 //!
 //! Wire bytes are **bit-identical to the lock-step path**: the engine
 //! performs exactly one `codec.encode` per hop on exactly the bytes the
-//! old free functions encoded (asserted in `tests/collective_engine.rs`).
+//! old free functions encoded (asserted in `tests/collective_engine.rs`
+//! and, across all four transports, `tests/transport_differential.rs`).
 //! Pipelining changes *when* time passes, never *what* is sent.
+//!
+//! Every transport is fallible: a rank that dies mid-collective (codec
+//! panic, closed socket, killed process) surfaces as an `Err` from the
+//! engine, never a panic or a hang — sockets carry read/write timeouts
+//! and are shut down on drop, and channel ranks detect disconnected
+//! peers.
 
 use std::sync::mpsc;
 use std::time::Instant;
 
+use super::wire;
 use super::{chunk_bounds, CollectiveReport, WireFormat};
 use crate::baselines::Codec;
 use crate::fabric::{Fabric, LinkModel};
@@ -63,6 +73,9 @@ pub struct HopOut {
     pub decode_s: f64,
     /// Modeled link transfer time (alpha-beta) for the wire bytes.
     pub wire_s: f64,
+    /// Measured time the receiver spent blocked waiting for the wire
+    /// bytes (socket/channel recv; 0 on the serial [`SimTransport`]).
+    pub wire_wall_s: f64,
 }
 
 /// Moves one collective step's hops between ranks, running the codec on
@@ -70,14 +83,120 @@ pub struct HopOut {
 ///
 /// `exchange` returns the completed hops **in submission order** plus
 /// the measured wall time of the whole step (for [`SimTransport`] that
-/// is serialized execution; for [`ChannelTransport`] the ranks really
-/// run concurrently, so it reflects overlap).
+/// is serialized execution; for the threaded and socket transports the
+/// ranks really run concurrently, so it reflects overlap). A dead rank
+/// — disconnected channel, closed or timed-out socket, panicked codec —
+/// comes back as `Err`, never a panic.
+///
+/// Implementing the trait needs only a way to move bytes; the engine
+/// handles scheduling and accounting. A minimal same-process loopback:
+///
+/// ```
+/// use sshuff::baselines::{Codec, RawCodec};
+/// use sshuff::collectives::{CollectiveEngine, HopIn, HopOut, Transport};
+/// use sshuff::fabric::LinkModel;
+///
+/// struct Loopback {
+///     n: usize,
+/// }
+///
+/// impl Transport for Loopback {
+///     fn n_ranks(&self) -> usize {
+///         self.n
+///     }
+///     fn name(&self) -> &'static str {
+///         "loopback"
+///     }
+///     fn link(&self) -> LinkModel {
+///         LinkModel::DIE_TO_DIE
+///     }
+///     fn exchange(
+///         &mut self,
+///         codec: &dyn Codec,
+///         hops: Vec<HopIn>,
+///     ) -> sshuff::Result<(Vec<HopOut>, f64)> {
+///         let mut outs = Vec::with_capacity(hops.len());
+///         for h in hops {
+///             let wire = codec.encode(&h.raw);
+///             let decoded = codec.decode(&wire)?;
+///             outs.push(HopOut {
+///                 from: h.from,
+///                 to: h.to,
+///                 decoded,
+///                 wire_bytes: wire.len(),
+///                 encode_s: 0.0,
+///                 decode_s: 0.0,
+///                 wire_s: 0.0,
+///                 wire_wall_s: 0.0,
+///             });
+///         }
+///         Ok((outs, 0.0))
+///     }
+/// }
+///
+/// let mut t = Loopback { n: 2 };
+/// let mut eng = CollectiveEngine::new(&mut t, &RawCodec, 1);
+/// let out = eng.all_reduce(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+/// assert_eq!(out[0], vec![4.0, 6.0]);
+/// ```
 pub trait Transport {
     fn n_ranks(&self) -> usize;
     fn name(&self) -> &'static str;
     /// Alpha-beta model of the links, used by the pipeline timeline.
     fn link(&self) -> LinkModel;
-    fn exchange(&mut self, codec: &dyn Codec, hops: Vec<HopIn>) -> (Vec<HopOut>, f64);
+    fn exchange(&mut self, codec: &dyn Codec, hops: Vec<HopIn>)
+        -> crate::Result<(Vec<HopOut>, f64)>;
+}
+
+/// The in-process transport family, buildable by name — what the CLI,
+/// the benches, and the differential tests sweep over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    Sim,
+    Channel,
+    Tcp,
+    Uds,
+}
+
+impl TransportKind {
+    pub const ALL: [TransportKind; 4] =
+        [TransportKind::Sim, TransportKind::Channel, TransportKind::Tcp, TransportKind::Uds];
+
+    pub fn parse(s: &str) -> crate::Result<TransportKind> {
+        Ok(match s {
+            "sim" => TransportKind::Sim,
+            "channel" => TransportKind::Channel,
+            "tcp" => TransportKind::Tcp,
+            "uds" | "unix" => TransportKind::Uds,
+            _ => crate::error::bail!("unknown transport '{s}' (expected sim|channel|tcp|uds)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Sim => "sim",
+            TransportKind::Channel => "channel",
+            TransportKind::Tcp => "tcp",
+            TransportKind::Uds => "uds",
+        }
+    }
+
+    /// Build an in-process transport over `n` ranks. The socket kinds
+    /// really open OS sockets and can fail (fd limits, no loopback).
+    pub fn build(self, n: usize, link: LinkModel) -> crate::Result<Box<dyn Transport>> {
+        Ok(match self {
+            TransportKind::Sim => Box::new(OwnedSimTransport::new(n, link)),
+            TransportKind::Channel => Box::new(ChannelTransport::new(n, link)),
+            TransportKind::Tcp => Box::new(TcpTransport::new(n, link)?),
+            TransportKind::Uds => Box::new(UdsTransport::new(n, link)?),
+        })
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
 }
 
 /// The deterministic transport: hops execute serially on the caller
@@ -106,43 +225,77 @@ impl Transport for SimTransport<'_> {
         self.fabric.link
     }
 
-    fn exchange(&mut self, codec: &dyn Codec, hops: Vec<HopIn>) -> (Vec<HopOut>, f64) {
+    fn exchange(
+        &mut self,
+        codec: &dyn Codec,
+        hops: Vec<HopIn>,
+    ) -> crate::Result<(Vec<HopOut>, f64)> {
         let t0 = Instant::now();
-        let outs = hops
-            .into_iter()
-            .map(|h| {
-                let te = Instant::now();
-                let wire = codec.encode(&h.raw);
-                let encode_s = te.elapsed().as_secs_f64();
-                let wire_s = self.fabric.send(h.from, h.to, wire.len());
-                let td = Instant::now();
-                let decoded =
-                    codec.decode(&wire).expect("lossless codec must decode its own output");
-                let decode_s = td.elapsed().as_secs_f64();
-                debug_assert_eq!(decoded, h.raw);
-                HopOut {
-                    from: h.from,
-                    to: h.to,
-                    decoded,
-                    wire_bytes: wire.len(),
-                    encode_s,
-                    decode_s,
-                    wire_s,
-                }
-            })
-            .collect();
-        (outs, t0.elapsed().as_secs_f64())
+        let mut outs = Vec::with_capacity(hops.len());
+        for h in hops {
+            let te = Instant::now();
+            let wire = codec.encode(&h.raw);
+            let encode_s = te.elapsed().as_secs_f64();
+            let wire_s = self.fabric.send(h.from, h.to, wire.len());
+            let td = Instant::now();
+            let decoded = codec.decode(&wire).map_err(|e| {
+                crate::error::anyhow!("codec {} failed on its own output: {e}", codec.name())
+            })?;
+            let decode_s = td.elapsed().as_secs_f64();
+            debug_assert_eq!(decoded, h.raw);
+            outs.push(HopOut {
+                from: h.from,
+                to: h.to,
+                decoded,
+                wire_bytes: wire.len(),
+                encode_s,
+                decode_s,
+                wire_s,
+                wire_wall_s: 0.0,
+            });
+        }
+        Ok((outs, t0.elapsed().as_secs_f64()))
     }
 }
 
-/// The in-process channel transport: every rank is a real OS thread.
-/// Per step, rank *r*'s thread encodes and sends its outgoing hop(s)
-/// over `std::sync::mpsc` channels, then receives and decodes its
-/// incoming hop(s) — all ranks concurrently, like deployed workers.
-/// Wire bytes are additionally accounted on an internal [`Fabric`] so
-/// byte-level reports match [`SimTransport`] exactly.
-pub struct ChannelTransport {
+/// [`SimTransport`] owning its fabric — what [`TransportKind::build`]
+/// hands out, since a boxed transport cannot borrow a caller-local
+/// fabric.
+pub struct OwnedSimTransport {
     fabric: Fabric,
+}
+
+impl OwnedSimTransport {
+    pub fn new(n: usize, link: LinkModel) -> Self {
+        Self { fabric: Fabric::new(n, link) }
+    }
+
+    /// Byte/message accounting accumulated across steps.
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+}
+
+impl Transport for OwnedSimTransport {
+    fn n_ranks(&self) -> usize {
+        self.fabric.n_nodes()
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn link(&self) -> LinkModel {
+        self.fabric.link
+    }
+
+    fn exchange(
+        &mut self,
+        codec: &dyn Codec,
+        hops: Vec<HopIn>,
+    ) -> crate::Result<(Vec<HopOut>, f64)> {
+        SimTransport::new(&mut self.fabric).exchange(codec, hops)
+    }
 }
 
 struct SendWork {
@@ -166,6 +319,84 @@ struct RecvDone {
     idx: usize,
     decoded: Vec<u8>,
     decode_s: f64,
+    wire_wall_s: f64,
+}
+
+/// Stitch per-rank send/recv completions back into submission-order
+/// [`HopOut`]s, accounting every message on the fabric.
+fn assemble_hops(
+    fabric: &mut Fabric,
+    meta: &[(usize, usize)],
+    sds: Vec<SendDone>,
+    rds: Vec<RecvDone>,
+) -> crate::Result<Vec<HopOut>> {
+    let n_hops = meta.len();
+    let mut enc: Vec<(usize, f64)> = vec![(0, 0.0); n_hops];
+    let mut dec: Vec<Option<(Vec<u8>, f64, f64)>> = (0..n_hops).map(|_| None).collect();
+    for sd in sds {
+        enc[sd.idx] = (sd.wire_bytes, sd.encode_s);
+    }
+    for rd in rds {
+        dec[rd.idx] = Some((rd.decoded, rd.decode_s, rd.wire_wall_s));
+    }
+    let mut outs = Vec::with_capacity(n_hops);
+    for (idx, d) in dec.into_iter().enumerate() {
+        let (from, to) = meta[idx];
+        let (wire_bytes, encode_s) = enc[idx];
+        let (decoded, decode_s, wire_wall_s) =
+            d.ok_or_else(|| crate::error::anyhow!("hop {idx} was never delivered"))?;
+        let wire_s = fabric.send(from, to, wire_bytes);
+        outs.push(HopOut {
+            from,
+            to,
+            decoded,
+            wire_bytes,
+            encode_s,
+            decode_s,
+            wire_s,
+            wire_wall_s,
+        });
+    }
+    Ok(outs)
+}
+
+/// Split one step's hops into per-rank send and receive work lists.
+#[allow(clippy::type_complexity)]
+fn split_work(
+    n: usize,
+    hops: Vec<HopIn>,
+) -> crate::Result<(Vec<(usize, usize)>, Vec<Vec<(usize, usize, Vec<u8>)>>, Vec<Vec<(usize, usize)>>)>
+{
+    let mut meta = Vec::with_capacity(hops.len());
+    let mut send_work: Vec<Vec<(usize, usize, Vec<u8>)>> = (0..n).map(|_| Vec::new()).collect();
+    let mut recv_work: Vec<Vec<(usize, usize)>> = (0..n).map(|_| Vec::new()).collect();
+    for (idx, h) in hops.into_iter().enumerate() {
+        crate::error::ensure!(
+            h.from < n && h.to < n && h.from != h.to,
+            "bad hop {}->{}",
+            h.from,
+            h.to
+        );
+        meta.push((h.from, h.to));
+        send_work[h.from].push((idx, h.to, h.raw));
+        recv_work[h.to].push((idx, h.from));
+    }
+    Ok((meta, send_work, recv_work))
+}
+
+/// The in-process channel transport: every rank is a real OS thread.
+/// Per step, rank *r*'s thread encodes and sends its outgoing hop(s)
+/// over `std::sync::mpsc` channels, then receives and decodes its
+/// incoming hop(s) — all ranks concurrently, like deployed workers.
+/// Wire bytes are additionally accounted on an internal [`Fabric`] so
+/// byte-level reports match [`SimTransport`] exactly.
+///
+/// A rank that dies mid-step (its codec panics, or it bails on a decode
+/// error) disconnects its channels; every peer blocked on it observes
+/// the disconnect and unwinds with an `Err`, so the exchange returns a
+/// clean error instead of panicking or hanging.
+pub struct ChannelTransport {
+    fabric: Fabric,
 }
 
 impl ChannelTransport {
@@ -192,28 +423,38 @@ impl Transport for ChannelTransport {
         self.fabric.link
     }
 
-    fn exchange(&mut self, codec: &dyn Codec, hops: Vec<HopIn>) -> (Vec<HopOut>, f64) {
+    fn exchange(
+        &mut self,
+        codec: &dyn Codec,
+        hops: Vec<HopIn>,
+    ) -> crate::Result<(Vec<HopOut>, f64)> {
         let n = self.fabric.n_nodes();
         let n_hops = hops.len();
         let mut meta: Vec<(usize, usize)> = Vec::with_capacity(n_hops);
         let mut send_work: Vec<Vec<SendWork>> = (0..n).map(|_| Vec::new()).collect();
         let mut recv_work: Vec<Vec<RecvWork>> = (0..n).map(|_| Vec::new()).collect();
         for (idx, h) in hops.into_iter().enumerate() {
-            assert!(h.from < n && h.to < n && h.from != h.to, "bad hop {}->{}", h.from, h.to);
+            crate::error::ensure!(
+                h.from < n && h.to < n && h.from != h.to,
+                "bad hop {}->{}",
+                h.from,
+                h.to
+            );
             let (tx, rx) = mpsc::channel::<Vec<u8>>();
             meta.push((h.from, h.to));
             send_work[h.from].push(SendWork { idx, raw: h.raw, tx });
             recv_work[h.to].push(RecvWork { idx, rx });
         }
 
-        let mut results: Vec<(Vec<SendDone>, Vec<RecvDone>)> = Vec::with_capacity(n);
+        type RankResult = crate::Result<(Vec<SendDone>, Vec<RecvDone>)>;
+        let mut results: Vec<RankResult> = Vec::with_capacity(n);
         let t0 = Instant::now();
         std::thread::scope(|s| {
             let handles: Vec<_> = send_work
                 .into_iter()
                 .zip(recv_work)
                 .map(|(sw, rw)| {
-                    s.spawn(move || {
+                    s.spawn(move || -> RankResult {
                         // Sends first: the channels are unbounded, so a
                         // rank never blocks on its sends and every recv
                         // below is eventually fed — no deadlock.
@@ -223,48 +464,303 @@ impl Transport for ChannelTransport {
                             let wire = codec.encode(&w.raw);
                             let encode_s = te.elapsed().as_secs_f64();
                             let wire_bytes = wire.len();
-                            w.tx.send(wire).expect("receiver rank alive");
+                            if w.tx.send(wire).is_err() {
+                                crate::error::bail!(
+                                    "rank link down: receiver of hop {} is gone",
+                                    w.idx
+                                );
+                            }
                             sds.push(SendDone { idx: w.idx, wire_bytes, encode_s });
                         }
                         let mut rds = Vec::with_capacity(rw.len());
                         for w in rw {
-                            let wire = w.rx.recv().expect("sender rank alive");
+                            let tw = Instant::now();
+                            let wire = match w.rx.recv() {
+                                Ok(wire) => wire,
+                                Err(_) => crate::error::bail!(
+                                    "rank link down: sender of hop {} died mid-step",
+                                    w.idx
+                                ),
+                            };
+                            let wire_wall_s = tw.elapsed().as_secs_f64();
                             let td = Instant::now();
-                            let decoded = codec
-                                .decode(&wire)
-                                .expect("lossless codec must decode its own output");
+                            let decoded = codec.decode(&wire)?;
                             let decode_s = td.elapsed().as_secs_f64();
-                            rds.push(RecvDone { idx: w.idx, decoded, decode_s });
+                            rds.push(RecvDone { idx: w.idx, decoded, decode_s, wire_wall_s });
                         }
-                        (sds, rds)
+                        Ok((sds, rds))
                     })
                 })
                 .collect();
             for h in handles {
-                results.push(h.join().expect("rank thread panicked"));
+                // A panicked rank (e.g. a panicking codec) dropped its
+                // channel ends during unwind, so its peers have already
+                // unwound cleanly; map the panic itself to an Err too.
+                results.push(h.join().unwrap_or_else(|_| {
+                    Err(crate::error::anyhow!("rank thread panicked mid-collective"))
+                }));
             }
         });
         let wall = t0.elapsed().as_secs_f64();
 
-        let mut enc: Vec<(usize, f64)> = vec![(0, 0.0); n_hops];
-        let mut dec: Vec<Option<(Vec<u8>, f64)>> = (0..n_hops).map(|_| None).collect();
-        for (sds, rds) in results {
-            for sd in sds {
-                enc[sd.idx] = (sd.wire_bytes, sd.encode_s);
-            }
-            for rd in rds {
-                dec[rd.idx] = Some((rd.decoded, rd.decode_s));
+        let mut all_sds = Vec::with_capacity(n_hops);
+        let mut all_rds = Vec::with_capacity(n_hops);
+        for r in results {
+            let (sds, rds) = r?;
+            all_sds.extend(sds);
+            all_rds.extend(rds);
+        }
+        let outs = assemble_hops(&mut self.fabric, &meta, all_sds, all_rds)?;
+        Ok((outs, wall))
+    }
+}
+
+/// Shut down every socket in a rank's link list, unblocking any peer
+/// parked in a read or write against this rank.
+fn poison(streams: &[Option<wire::FrameStream>]) {
+    for s in streams.iter().flatten() {
+        s.shutdown();
+    }
+}
+
+/// Shared core of [`TcpTransport`] and [`UdsTransport`]: a full mesh of
+/// connected OS socket pairs (one per unordered rank pair, split into
+/// send/recv halves), with one rank thread per exchange. Each rank
+/// thread runs its sender in a nested thread while receiving on its own
+/// — a rank genuinely sends and receives concurrently, so full socket
+/// buffers can never deadlock a step, and the measured wall time
+/// includes real syscalls, copies, and scheduling.
+struct SocketTransport {
+    fabric: Fabric,
+    name: &'static str,
+    ranks: Vec<RankSockets>,
+}
+
+struct RankSockets {
+    /// `tx[p]` / `rx[p]`: send / recv halves of this rank's socket to
+    /// peer `p` (`None` on the diagonal).
+    tx: Vec<Option<wire::FrameStream>>,
+    rx: Vec<Option<wire::FrameStream>>,
+}
+
+impl SocketTransport {
+    fn build(
+        n: usize,
+        link: LinkModel,
+        name: &'static str,
+        mk_pair: impl Fn() -> crate::Result<(wire::Socket, wire::Socket)>,
+    ) -> crate::Result<SocketTransport> {
+        crate::error::ensure!(n >= 1, "need at least one rank");
+        let mut ranks: Vec<RankSockets> = (0..n)
+            .map(|_| RankSockets {
+                tx: (0..n).map(|_| None).collect(),
+                rx: (0..n).map(|_| None).collect(),
+            })
+            .collect();
+        for i in 0..n {
+            for j in i + 1..n {
+                let (a, b) = mk_pair()?;
+                let da = wire::FrameStream::new(a).into_duplex()?;
+                let db = wire::FrameStream::new(b).into_duplex()?;
+                ranks[i].tx[j] = Some(da.tx);
+                ranks[i].rx[j] = Some(da.rx);
+                ranks[j].tx[i] = Some(db.tx);
+                ranks[j].rx[i] = Some(db.rx);
             }
         }
-        let mut outs = Vec::with_capacity(n_hops);
-        for (idx, d) in dec.into_iter().enumerate() {
-            let (from, to) = meta[idx];
-            let (wire_bytes, encode_s) = enc[idx];
-            let (decoded, decode_s) = d.expect("every hop decoded");
-            let wire_s = self.fabric.send(from, to, wire_bytes);
-            outs.push(HopOut { from, to, decoded, wire_bytes, encode_s, decode_s, wire_s });
+        Ok(SocketTransport { fabric: Fabric::new(n, link), name, ranks })
+    }
+
+    fn set_pace_bps(&mut self, bps: f64) {
+        for r in &mut self.ranks {
+            for t in r.tx.iter_mut().flatten() {
+                t.set_pace_bps(bps);
+            }
         }
-        (outs, wall)
+    }
+
+    fn exchange(
+        &mut self,
+        codec: &dyn Codec,
+        hops: Vec<HopIn>,
+    ) -> crate::Result<(Vec<HopOut>, f64)> {
+        let n = self.fabric.n_nodes();
+        let n_hops = hops.len();
+        let (meta, send_work, recv_work) = split_work(n, hops)?;
+
+        type SendRes = crate::Result<Vec<SendDone>>;
+        type RecvRes = crate::Result<Vec<RecvDone>>;
+        let mut results: Vec<(SendRes, RecvRes)> = Vec::with_capacity(n);
+        let t0 = Instant::now();
+        std::thread::scope(|outer| {
+            let handles: Vec<_> = self
+                .ranks
+                .iter_mut()
+                .zip(send_work.into_iter().zip(recv_work))
+                .map(|(links, (sw, rw))| {
+                    outer.spawn(move || {
+                        let RankSockets { tx, rx } = links;
+                        std::thread::scope(|inner| {
+                            let sender = inner.spawn(move || -> SendRes {
+                                let mut sds = Vec::with_capacity(sw.len());
+                                for (idx, to, raw) in sw {
+                                    let te = Instant::now();
+                                    let wire_buf = codec.encode(&raw);
+                                    let encode_s = te.elapsed().as_secs_f64();
+                                    let stream = tx[to].as_mut().expect("socket mesh link");
+                                    if let Err(e) = stream.send_frame(&wire_buf) {
+                                        // tx/rx halves share sockets, so
+                                        // this unblocks our peers too
+                                        poison(tx);
+                                        return Err(e);
+                                    }
+                                    sds.push(SendDone {
+                                        idx,
+                                        wire_bytes: wire_buf.len(),
+                                        encode_s,
+                                    });
+                                }
+                                Ok(sds)
+                            });
+                            let recv = (|| -> RecvRes {
+                                let mut rds = Vec::with_capacity(rw.len());
+                                for (idx, from) in rw {
+                                    let tw = Instant::now();
+                                    let stream = rx[from].as_mut().expect("socket mesh link");
+                                    let wire_buf = match stream.recv_frame() {
+                                        Ok(w) => w,
+                                        Err(e) => {
+                                            poison(rx);
+                                            return Err(e);
+                                        }
+                                    };
+                                    let wire_wall_s = tw.elapsed().as_secs_f64();
+                                    let td = Instant::now();
+                                    let decoded = codec.decode(&wire_buf)?;
+                                    let decode_s = td.elapsed().as_secs_f64();
+                                    rds.push(RecvDone { idx, decoded, decode_s, wire_wall_s });
+                                }
+                                Ok(rds)
+                            })();
+                            let send = sender.join().unwrap_or_else(|_| {
+                                Err(crate::error::anyhow!("sender thread panicked"))
+                            });
+                            (send, recv)
+                        })
+                    })
+                })
+                .collect();
+            for h in handles {
+                results.push(h.join().unwrap_or_else(|_| {
+                    (
+                        Err(crate::error::anyhow!("rank thread panicked")),
+                        Err(crate::error::anyhow!("rank thread panicked")),
+                    )
+                }));
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+
+        let mut all_sds = Vec::with_capacity(n_hops);
+        let mut all_rds = Vec::with_capacity(n_hops);
+        for (sres, rres) in results {
+            all_sds.extend(sres?);
+            all_rds.extend(rres?);
+        }
+        let outs = assemble_hops(&mut self.fabric, &meta, all_sds, all_rds)?;
+        Ok((outs, wall))
+    }
+}
+
+/// Real loopback TCP sockets between in-process ranks: one connected
+/// `TCP_NODELAY` socket pair per rank link (listener on port 0), with
+/// read/write timeouts and shutdown-on-drop. Frames cross the kernel's
+/// TCP stack, so wall times include real serialization and syscalls.
+///
+/// `set_pace_bps` throttles sends to emulate a slower NIC on loopback
+/// (see [`wire::FrameStream::set_pace_bps`]).
+pub struct TcpTransport(SocketTransport);
+
+impl TcpTransport {
+    pub fn new(n: usize, link: LinkModel) -> crate::Result<TcpTransport> {
+        let timeout = wire::default_timeout();
+        Ok(TcpTransport(SocketTransport::build(n, link, "tcp", || wire::pair_tcp(timeout))?))
+    }
+
+    /// Pace every rank's sends to `bps` bytes/second (0 disables).
+    pub fn set_pace_bps(&mut self, bps: f64) {
+        self.0.set_pace_bps(bps);
+    }
+
+    /// Byte/message accounting accumulated across steps.
+    pub fn fabric(&self) -> &Fabric {
+        &self.0.fabric
+    }
+}
+
+impl Transport for TcpTransport {
+    fn n_ranks(&self) -> usize {
+        self.0.fabric.n_nodes()
+    }
+
+    fn name(&self) -> &'static str {
+        self.0.name
+    }
+
+    fn link(&self) -> LinkModel {
+        self.0.fabric.link
+    }
+
+    fn exchange(
+        &mut self,
+        codec: &dyn Codec,
+        hops: Vec<HopIn>,
+    ) -> crate::Result<(Vec<HopOut>, f64)> {
+        self.0.exchange(codec, hops)
+    }
+}
+
+/// Unix-domain `socketpair(2)` links between in-process ranks — the
+/// same-host low-latency variant of [`TcpTransport`], with the same
+/// timeout and shutdown-on-drop hygiene.
+pub struct UdsTransport(SocketTransport);
+
+impl UdsTransport {
+    pub fn new(n: usize, link: LinkModel) -> crate::Result<UdsTransport> {
+        let timeout = wire::default_timeout();
+        Ok(UdsTransport(SocketTransport::build(n, link, "uds", || wire::pair_uds(timeout))?))
+    }
+
+    /// Pace every rank's sends to `bps` bytes/second (0 disables).
+    pub fn set_pace_bps(&mut self, bps: f64) {
+        self.0.set_pace_bps(bps);
+    }
+
+    /// Byte/message accounting accumulated across steps.
+    pub fn fabric(&self) -> &Fabric {
+        &self.0.fabric
+    }
+}
+
+impl Transport for UdsTransport {
+    fn n_ranks(&self) -> usize {
+        self.0.fabric.n_nodes()
+    }
+
+    fn name(&self) -> &'static str {
+        self.0.name
+    }
+
+    fn link(&self) -> LinkModel {
+        self.0.fabric.link
+    }
+
+    fn exchange(
+        &mut self,
+        codec: &dyn Codec,
+        hops: Vec<HopIn>,
+    ) -> crate::Result<(Vec<HopOut>, f64)> {
+        self.0.exchange(codec, hops)
     }
 }
 
@@ -279,7 +775,7 @@ impl Transport for ChannelTransport {
 /// pipelines trade `(depth-1) * alpha` of extra latency for overlap —
 /// exactly the tension the paper's "compression within the link budget"
 /// claim is about.
-fn pipelined_hop_time(
+pub(crate) fn pipelined_hop_time(
     encode_s: f64,
     wire_bytes: usize,
     decode_s: f64,
@@ -353,25 +849,26 @@ impl<'a> CollectiveEngine<'a> {
     /// Execute one scheduled step: each `(from, to, payload)` hop is
     /// serialized with `fmt`, encoded, moved over the transport, decoded
     /// at the receiver. Results come back in submission order.
-    pub fn step(&mut self, hops: Vec<RankHop>, fmt: WireFormat) -> Vec<RankHop> {
+    pub fn step(&mut self, hops: Vec<RankHop>, fmt: WireFormat) -> crate::Result<Vec<RankHop>> {
         if hops.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let link = self.transport.link();
         let ins: Vec<HopIn> = hops
             .into_iter()
             .map(|(from, to, payload)| HopIn { from, to, raw: fmt.serialize(&payload) })
             .collect();
-        let (outs, wall_s) = self.transport.exchange(self.codec, ins);
+        let (outs, wall_s) = self.transport.exchange(self.codec, ins)?;
 
         let (mut enc_max, mut dec_max, mut wire_max) = (0.0f64, 0.0f64, 0.0f64);
-        let (mut pipe_max, mut lock_max) = (0.0f64, 0.0f64);
+        let (mut pipe_max, mut lock_max, mut wirewall_max) = (0.0f64, 0.0f64, 0.0f64);
         for h in &outs {
             self.report.wire_bytes += h.wire_bytes as u64;
             self.report.raw_bytes += h.decoded.len() as u64;
             enc_max = enc_max.max(h.encode_s);
             dec_max = dec_max.max(h.decode_s);
             wire_max = wire_max.max(h.wire_s);
+            wirewall_max = wirewall_max.max(h.wire_wall_s);
             pipe_max = pipe_max
                 .max(pipelined_hop_time(h.encode_s, h.wire_bytes, h.decode_s, link, self.depth));
             lock_max =
@@ -384,24 +881,25 @@ impl<'a> CollectiveEngine<'a> {
         let t = &mut self.report.timeline;
         t.compute_s += enc_max + dec_max;
         t.wire_s += wire_max;
+        t.wire_wall_s += wirewall_max;
         t.pipelined_s += pipe_max;
         t.lockstep_s += lock_max;
         t.exposed_s += (pipe_max - wire_max).max(0.0);
         t.wall_s += wall_s;
 
-        outs.into_iter().map(|h| (h.from, h.to, fmt.deserialize(&h.decoded))).collect()
+        Ok(outs.into_iter().map(|h| (h.from, h.to, fmt.deserialize(&h.decoded))).collect())
     }
 
     /// Ring all-reduce (sum): reduce-scatter then all-gather, 2(n−1)
     /// steps. Chunk schedule and summation order are identical to
     /// [`super::all_reduce_reference`].
-    pub fn all_reduce(&mut self, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    pub fn all_reduce(&mut self, inputs: &[Vec<f32>]) -> crate::Result<Vec<Vec<f32>>> {
         let n = self.n_ranks();
         assert_eq!(inputs.len(), n);
         let len = inputs[0].len();
         assert!(inputs.iter().all(|v| v.len() == len), "ragged all_reduce inputs");
         if n == 1 {
-            return inputs.to_vec();
+            return Ok(inputs.to_vec());
         }
         let bounds = chunk_bounds(len, n);
         let mut data: Vec<Vec<f32>> = inputs.to_vec();
@@ -416,7 +914,7 @@ impl<'a> CollectiveEngine<'a> {
                     (r, (r + 1) % n, data[r][lo..hi].to_vec())
                 })
                 .collect();
-            for (from, to, decoded) in self.step(hops, WireFormat::F32) {
+            for (from, to, decoded) in self.step(hops, WireFormat::F32)? {
                 let (lo, hi) = bounds[(from + 2 * n - 1 - step) % n];
                 for (dst, src) in data[to][lo..hi].iter_mut().zip(decoded) {
                     *dst += src;
@@ -433,23 +931,23 @@ impl<'a> CollectiveEngine<'a> {
                     (r, (r + 1) % n, data[r][lo..hi].to_vec())
                 })
                 .collect();
-            for (from, to, decoded) in self.step(hops, WireFormat::F32) {
+            for (from, to, decoded) in self.step(hops, WireFormat::F32)? {
                 let (lo, hi) = bounds[(from + n - step) % n];
                 data[to][lo..hi].copy_from_slice(&decoded);
             }
         }
-        data
+        Ok(data)
     }
 
     /// Ring reduce-scatter (sum): rank r returns chunk r of the global
     /// sum.
-    pub fn reduce_scatter(&mut self, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    pub fn reduce_scatter(&mut self, inputs: &[Vec<f32>]) -> crate::Result<Vec<Vec<f32>>> {
         let n = self.n_ranks();
         assert_eq!(inputs.len(), n);
         let len = inputs[0].len();
         let bounds = chunk_bounds(len, n);
         if n == 1 {
-            return vec![inputs[0].clone()];
+            return Ok(vec![inputs[0].clone()]);
         }
         let mut data: Vec<Vec<f32>> = inputs.to_vec();
         for step in 0..n - 1 {
@@ -460,25 +958,29 @@ impl<'a> CollectiveEngine<'a> {
                     (r, (r + 1) % n, data[r][lo..hi].to_vec())
                 })
                 .collect();
-            for (from, to, decoded) in self.step(hops, WireFormat::F32) {
+            for (from, to, decoded) in self.step(hops, WireFormat::F32)? {
                 let (lo, hi) = bounds[(from + 2 * n - 1 - step) % n];
                 for (dst, src) in data[to][lo..hi].iter_mut().zip(decoded) {
                     *dst += src;
                 }
             }
         }
-        (0..n)
+        Ok((0..n)
             .map(|r| {
                 let (lo, hi) = bounds[r];
                 data[r][lo..hi].to_vec()
             })
-            .collect()
+            .collect())
     }
 
     /// Ring all-gather: rank r contributes `inputs[r]`; everyone returns
     /// the concatenation in rank order, `wire` chooses the on-wire
     /// element encoding.
-    pub fn all_gather_wire(&mut self, inputs: &[Vec<f32>], wire: WireFormat) -> Vec<Vec<f32>> {
+    pub fn all_gather_wire(
+        &mut self,
+        inputs: &[Vec<f32>],
+        wire: WireFormat,
+    ) -> crate::Result<Vec<Vec<f32>>> {
         let n = self.n_ranks();
         assert_eq!(inputs.len(), n);
         // slots[r][c] = chunk c as known to rank r
@@ -492,19 +994,19 @@ impl<'a> CollectiveEngine<'a> {
                     (r, (r + 1) % n, slots[r][c].clone().expect("ring schedule invariant"))
                 })
                 .collect();
-            for (from, to, decoded) in self.step(hops, wire) {
+            for (from, to, decoded) in self.step(hops, wire)? {
                 slots[to][(from + n - step) % n] = Some(decoded);
             }
         }
-        slots
+        Ok(slots
             .into_iter()
             .map(|row| row.into_iter().flat_map(|c| c.expect("gather complete")).collect())
-            .collect()
+            .collect())
     }
 
     /// All-to-all: `inputs[r][d]` is the chunk rank r sends to rank d;
     /// direct pairwise exchange in n−1 rounds (round k: r → (r+k) % n).
-    pub fn all_to_all(&mut self, inputs: &[Vec<Vec<f32>>]) -> Vec<Vec<Vec<f32>>> {
+    pub fn all_to_all(&mut self, inputs: &[Vec<Vec<f32>>]) -> crate::Result<Vec<Vec<Vec<f32>>>> {
         let n = self.n_ranks();
         assert_eq!(inputs.len(), n);
         assert!(inputs.iter().all(|row| row.len() == n), "all_to_all needs n chunks per rank");
@@ -515,11 +1017,11 @@ impl<'a> CollectiveEngine<'a> {
         for round in 1..n {
             let hops: Vec<RankHop> =
                 (0..n).map(|r| (r, (r + round) % n, inputs[r][(r + round) % n].clone())).collect();
-            for (from, to, decoded) in self.step(hops, WireFormat::F32) {
+            for (from, to, decoded) in self.step(hops, WireFormat::F32)? {
                 out[to][from] = decoded;
             }
         }
-        out
+        Ok(out)
     }
 }
 
@@ -572,12 +1074,12 @@ mod tests {
         let mut fabric = Fabric::new(n, LinkModel::DIE_TO_DIE);
         let mut sim = SimTransport::new(&mut fabric);
         let mut eng = CollectiveEngine::new(&mut sim, &ThreeStage, 4);
-        let out_sim = eng.all_reduce(&xs);
+        let out_sim = eng.all_reduce(&xs).unwrap();
         let rep_sim = eng.take_report();
 
         let mut chan = ChannelTransport::new(n, LinkModel::DIE_TO_DIE);
         let mut eng = CollectiveEngine::new(&mut chan, &ThreeStage, 4);
-        let out_chan = eng.all_reduce(&xs);
+        let out_chan = eng.all_reduce(&xs).unwrap();
         let rep_chan = eng.take_report();
 
         assert_eq!(out_sim, out_chan, "transports must agree bit-exactly");
@@ -589,13 +1091,48 @@ mod tests {
     }
 
     #[test]
+    fn socket_transports_match_sim_results_and_bytes() {
+        let n = 4;
+        let xs = inputs(n, 257, 23);
+        let mut fabric = Fabric::new(n, LinkModel::DIE_TO_DIE);
+        let mut sim = SimTransport::new(&mut fabric);
+        let mut eng = CollectiveEngine::new(&mut sim, &ThreeStage, 4);
+        let out_sim = eng.all_reduce(&xs).unwrap();
+        let rep_sim = eng.take_report();
+
+        for kind in [TransportKind::Tcp, TransportKind::Uds] {
+            let mut t = kind.build(n, LinkModel::DIE_TO_DIE).unwrap();
+            let mut eng = CollectiveEngine::new(t.as_mut(), &ThreeStage, 4);
+            let out = eng.all_reduce(&xs).unwrap();
+            let rep = eng.take_report();
+            assert_eq!(out, out_sim, "{kind} results must match sim bit-exactly");
+            assert_eq!(rep.wire_bytes, rep_sim.wire_bytes, "{kind}");
+            assert_eq!(rep.raw_bytes, rep_sim.raw_bytes, "{kind}");
+            assert_eq!(rep.steps, rep_sim.steps, "{kind}");
+            assert!(rep.timeline.wire_wall_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn transport_kind_parses_and_builds() {
+        for kind in TransportKind::ALL {
+            assert_eq!(TransportKind::parse(kind.name()).unwrap(), kind);
+            let t = kind.build(2, LinkModel::DIE_TO_DIE).unwrap();
+            assert_eq!(t.n_ranks(), 2);
+            assert_eq!(t.name(), kind.name());
+        }
+        assert_eq!(TransportKind::parse("unix").unwrap(), TransportKind::Uds);
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+    }
+
+    #[test]
     fn engine_accumulates_timeline_per_step() {
         let n = 3;
         let xs = inputs(n, 300, 5);
         let mut fabric = Fabric::new(n, LinkModel::DIE_TO_DIE);
         let mut sim = SimTransport::new(&mut fabric);
         let mut eng = CollectiveEngine::new(&mut sim, &RawCodec, 2);
-        let _ = eng.all_reduce(&xs);
+        let _ = eng.all_reduce(&xs).unwrap();
         let rep = eng.take_report();
         assert_eq!(rep.steps as usize, 2 * (n - 1));
         let t = rep.timeline;
@@ -605,8 +1142,21 @@ mod tests {
         assert!(t.pipelined_s > 0.0 && t.lockstep_s > 0.0);
         assert!(t.exposed_s >= 0.0);
         assert!(t.wall_s > 0.0);
+        assert_eq!(t.wire_wall_s, 0.0, "sim transport has no real wire to wait on");
         // after take_report the engine is reset
         assert_eq!(eng.report(), CollectiveReport::default());
+    }
+
+    #[test]
+    fn socket_transport_measures_real_wire_wait() {
+        let n = 2;
+        let xs = inputs(n, 1 << 12, 7);
+        let mut t = UdsTransport::new(n, LinkModel::DIE_TO_DIE).unwrap();
+        let mut eng = CollectiveEngine::new(&mut t, &RawCodec, 4);
+        let _ = eng.all_reduce(&xs).unwrap();
+        let rep = eng.take_report();
+        assert!(rep.timeline.wire_wall_s > 0.0, "socket recv wait must be measured");
+        assert!(rep.timeline.wall_s > 0.0);
     }
 
     #[test]
@@ -614,20 +1164,20 @@ mod tests {
         let n = 5;
         let xs = inputs(n, 33, 9);
         let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (want, _) = super::super::all_gather(&mut f1, &RawCodec, &xs);
+        let (want, _) = super::super::all_gather(&mut f1, &RawCodec, &xs).unwrap();
         let mut chan = ChannelTransport::new(n, LinkModel::DIE_TO_DIE);
         let mut eng = CollectiveEngine::new(&mut chan, &RawCodec, 4);
-        let got = eng.all_gather_wire(&xs, WireFormat::F32);
+        let got = eng.all_gather_wire(&xs, WireFormat::F32).unwrap();
         assert_eq!(got, want);
 
         let a2a_in: Vec<Vec<Vec<f32>>> = (0..n)
             .map(|r| (0..n).map(|d| vec![(r * 10 + d) as f32]).collect())
             .collect();
         let mut f2 = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (want, _) = super::super::all_to_all(&mut f2, &RawCodec, &a2a_in);
+        let (want, _) = super::super::all_to_all(&mut f2, &RawCodec, &a2a_in).unwrap();
         let mut chan = ChannelTransport::new(n, LinkModel::DIE_TO_DIE);
         let mut eng = CollectiveEngine::new(&mut chan, &RawCodec, 4);
-        let got = eng.all_to_all(&a2a_in);
+        let got = eng.all_to_all(&a2a_in).unwrap();
         assert_eq!(got, want);
     }
 }

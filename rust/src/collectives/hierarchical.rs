@@ -11,11 +11,15 @@
 //!
 //! Each level takes its own [`Codec`] so the two compression points can
 //! be configured independently (e.g. single-stage on die-to-die, LZ77
-//! on the datacenter links).
+//! on the datacenter links). [`hierarchical_all_reduce_on`] additionally
+//! takes a [`TransportKind`], so the same two-level schedule runs over
+//! the simulated fabric, per-rank threads, or real TCP/UDS socket
+//! meshes — each ring group gets its own transport instance.
 
-use super::{all_gather, all_reduce, reduce_scatter, CollectiveReport};
+use super::engine::{CollectiveEngine, TransportKind};
+use super::{CollectiveReport, DEFAULT_PIPELINE_DEPTH};
 use crate::baselines::Codec;
-use crate::fabric::{Fabric, LinkModel};
+use crate::fabric::LinkModel;
 
 /// Two-level topology + per-level link models.
 #[derive(Debug, Clone, Copy)]
@@ -55,15 +59,33 @@ impl HierarchicalReport {
     }
 }
 
-/// Hierarchical all-reduce (sum). `inputs[node * locals + l]` is the
-/// local vector of rank (node, l); all equal length. Returns the fully
-/// reduced vector per rank (rank-major like the inputs).
+/// Hierarchical all-reduce (sum) over the simulated fabric.
+/// `inputs[node * locals + l]` is the local vector of rank (node, l);
+/// all equal length. Returns the fully reduced vector per rank
+/// (rank-major like the inputs). Equivalent to
+/// [`hierarchical_all_reduce_on`] with [`TransportKind::Sim`].
 pub fn hierarchical_all_reduce(
     h: &Hierarchy,
     intra_codec: &dyn Codec,
     inter_codec: &dyn Codec,
     inputs: &[Vec<f32>],
-) -> (Vec<Vec<f32>>, HierarchicalReport) {
+) -> crate::Result<(Vec<Vec<f32>>, HierarchicalReport)> {
+    hierarchical_all_reduce_on(h, TransportKind::Sim, intra_codec, inter_codec, inputs)
+}
+
+/// [`hierarchical_all_reduce`] over an explicit [`TransportKind`]: every
+/// ring group (each node's intra ring, each slot's inter ring) is run on
+/// a freshly built transport of that kind, so the exact same two-level
+/// schedule executes over the simulated link model, per-rank threads, or
+/// real TCP/UDS socket meshes. Results are bit-identical across kinds
+/// (same summation order; codecs are lossless).
+pub fn hierarchical_all_reduce_on(
+    h: &Hierarchy,
+    kind: TransportKind,
+    intra_codec: &dyn Codec,
+    inter_codec: &dyn Codec,
+    inputs: &[Vec<f32>],
+) -> crate::Result<(Vec<Vec<f32>>, HierarchicalReport)> {
     assert_eq!(inputs.len(), h.ranks(), "need nodes*locals inputs");
     let len = inputs[0].len();
     assert!(inputs.iter().all(|v| v.len() == len));
@@ -75,10 +97,11 @@ pub fn hierarchical_all_reduce(
     let mut phase1 = CollectiveReport::default();
     let mut node_chunks: Vec<Vec<Vec<f32>>> = Vec::with_capacity(h.nodes); // [node][local] -> chunk
     for node in 0..h.nodes {
-        let mut fabric = Fabric::new(h.locals, h.intra);
+        let mut transport = kind.build(h.locals, h.intra)?;
+        let mut eng = CollectiveEngine::new(transport.as_mut(), intra_codec, DEFAULT_PIPELINE_DEPTH);
         let local_inputs = &inputs[node * h.locals..(node + 1) * h.locals];
-        let (chunks, rep) = reduce_scatter(&mut fabric, intra_codec, local_inputs);
-        fold_parallel(&mut phase1, &rep);
+        let chunks = eng.reduce_scatter(local_inputs)?;
+        fold_parallel(&mut phase1, &eng.take_report());
         node_chunks.push(chunks);
     }
     add_serial(&mut report.intra, &phase1);
@@ -86,13 +109,15 @@ pub fn hierarchical_all_reduce(
     // 2. inter-node all-reduce: for each local slot l, the leaders'
     //    chunk-l vectors are summed across nodes (nodes run in parallel
     //    per slot; slots share the inter links so their times add)
-    for l in 0..h.locals {
-        let slot_inputs: Vec<Vec<f32>> =
-            (0..h.nodes).map(|n| node_chunks[n][l].clone()).collect();
-        let mut fabric = Fabric::new(h.nodes.max(1), h.inter);
-        if h.nodes > 1 {
-            let (reduced, rep) = all_reduce(&mut fabric, inter_codec, &slot_inputs);
-            add_serial(&mut report.inter, &rep);
+    if h.nodes > 1 {
+        for l in 0..h.locals {
+            let slot_inputs: Vec<Vec<f32>> =
+                (0..h.nodes).map(|n| node_chunks[n][l].clone()).collect();
+            let mut transport = kind.build(h.nodes, h.inter)?;
+            let mut eng =
+                CollectiveEngine::new(transport.as_mut(), inter_codec, DEFAULT_PIPELINE_DEPTH);
+            let reduced = eng.all_reduce(&slot_inputs)?;
+            add_serial(&mut report.inter, &eng.take_report());
             for (n, r) in reduced.into_iter().enumerate() {
                 node_chunks[n][l] = r;
             }
@@ -104,21 +129,22 @@ pub fn hierarchical_all_reduce(
     let mut phase3 = CollectiveReport::default();
     let mut out = vec![Vec::new(); h.ranks()];
     for node in 0..h.nodes {
-        let mut fabric = Fabric::new(h.locals, h.intra);
-        let (gathered, rep) = all_gather(&mut fabric, intra_codec, &node_chunks[node]);
-        fold_parallel(&mut phase3, &rep);
+        let mut transport = kind.build(h.locals, h.intra)?;
+        let mut eng = CollectiveEngine::new(transport.as_mut(), intra_codec, DEFAULT_PIPELINE_DEPTH);
+        let gathered = eng.all_gather_wire(&node_chunks[node], super::WireFormat::F32)?;
+        fold_parallel(&mut phase3, &eng.take_report());
         for (l, v) in gathered.into_iter().enumerate() {
             out[node * h.locals + l] = v;
         }
     }
     add_serial(&mut report.intra, &phase3);
-    (out, report)
+    Ok((out, report))
 }
 
 /// Fold a report from one of several groups running **in parallel**
 /// (the per-node intra rings of one phase): bytes and steps accumulate,
 /// time-like quantities keep the slowest group. Measured wall time adds
-/// because the simulation really did run the groups one after another.
+/// because this process really did run the groups one after another.
 fn fold_parallel(dst: &mut CollectiveReport, src: &CollectiveReport) {
     dst.wire_bytes += src.wire_bytes;
     dst.raw_bytes += src.raw_bytes;
@@ -131,6 +157,7 @@ fn fold_parallel(dst: &mut CollectiveReport, src: &CollectiveReport) {
     d.lockstep_s = d.lockstep_s.max(s.lockstep_s);
     d.exposed_s = d.exposed_s.max(s.exposed_s);
     d.wall_s += s.wall_s;
+    d.wire_wall_s += s.wire_wall_s;
 }
 
 /// Accumulate a report that runs **serially after** what `dst` already
@@ -148,12 +175,15 @@ fn add_serial(dst: &mut CollectiveReport, src: &CollectiveReport) {
     d.lockstep_s += s.lockstep_s;
     d.exposed_s += s.exposed_s;
     d.wall_s += s.wall_s;
+    d.wire_wall_s += s.wire_wall_s;
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::{all_reduce, reduce_scatter};
     use super::*;
     use crate::baselines::{RawCodec, ThreeStage};
+    use crate::fabric::Fabric;
     use crate::prng::Pcg32;
 
     fn inputs(h: &Hierarchy, len: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -170,7 +200,7 @@ mod tests {
     fn matches_flat_sum_within_fp_tolerance() {
         let h = hierarchy(3, 4);
         let xs = inputs(&h, 101, 7);
-        let (out, rep) = hierarchical_all_reduce(&h, &RawCodec, &RawCodec, &xs);
+        let (out, rep) = hierarchical_all_reduce(&h, &RawCodec, &RawCodec, &xs).unwrap();
         // reference: plain sum (different association -> tolerance)
         let mut want = vec![0f64; 101];
         for v in &xs {
@@ -190,7 +220,7 @@ mod tests {
     fn all_ranks_agree_exactly() {
         let h = hierarchy(2, 3);
         let xs = inputs(&h, 64, 9);
-        let (out, _) = hierarchical_all_reduce(&h, &RawCodec, &RawCodec, &xs);
+        let (out, _) = hierarchical_all_reduce(&h, &RawCodec, &RawCodec, &xs).unwrap();
         for r in 1..h.ranks() {
             assert_eq!(out[r], out[0], "rank {r}");
         }
@@ -200,17 +230,32 @@ mod tests {
     fn compressed_levels_identical_to_uncompressed() {
         let h = hierarchy(2, 4);
         let xs = inputs(&h, 200, 11);
-        let (plain, _) = hierarchical_all_reduce(&h, &RawCodec, &RawCodec, &xs);
-        let (comp, rep) = hierarchical_all_reduce(&h, &ThreeStage, &ThreeStage, &xs);
+        let (plain, _) = hierarchical_all_reduce(&h, &RawCodec, &RawCodec, &xs).unwrap();
+        let (comp, rep) = hierarchical_all_reduce(&h, &ThreeStage, &ThreeStage, &xs).unwrap();
         assert_eq!(plain, comp, "lossless per-level compression");
         assert!(rep.intra.raw_bytes > 0 && rep.inter.raw_bytes > 0);
+    }
+
+    #[test]
+    fn channel_transport_matches_sim_bit_for_bit() {
+        let h = hierarchy(2, 3);
+        let xs = inputs(&h, 150, 23);
+        let (sim, sim_rep) =
+            hierarchical_all_reduce_on(&h, TransportKind::Sim, &ThreeStage, &RawCodec, &xs)
+                .unwrap();
+        let (chan, chan_rep) =
+            hierarchical_all_reduce_on(&h, TransportKind::Channel, &ThreeStage, &RawCodec, &xs)
+                .unwrap();
+        assert_eq!(sim, chan, "same schedule, same summation order");
+        assert_eq!(sim_rep.total_wire_bytes(), chan_rep.total_wire_bytes());
+        assert_eq!(sim_rep.intra.steps, chan_rep.intra.steps);
     }
 
     #[test]
     fn single_node_degenerates_to_flat_ring() {
         let h = hierarchy(1, 4);
         let xs = inputs(&h, 64, 13);
-        let (out, rep) = hierarchical_all_reduce(&h, &RawCodec, &RawCodec, &xs);
+        let (out, rep) = hierarchical_all_reduce(&h, &RawCodec, &RawCodec, &xs).unwrap();
         assert_eq!(rep.inter, CollectiveReport::default());
         for r in 1..4 {
             assert_eq!(out[r], out[0]);
@@ -224,9 +269,9 @@ mod tests {
         // alone (regression: a pure max-fold collapsed serial phases)
         let h = hierarchy(2, 4);
         let xs = inputs(&h, 4096, 21);
-        let (_, rep) = hierarchical_all_reduce(&h, &ThreeStage, &RawCodec, &xs);
+        let (_, rep) = hierarchical_all_reduce(&h, &ThreeStage, &RawCodec, &xs).unwrap();
         let mut f = Fabric::new(h.locals, h.intra);
-        let (_, one_phase) = reduce_scatter(&mut f, &ThreeStage, &xs[0..h.locals]);
+        let (_, one_phase) = reduce_scatter(&mut f, &ThreeStage, &xs[0..h.locals]).unwrap();
         // deterministic quantities: wire time and sim time double up
         // across the two phases (old max-fold kept them at one phase)
         assert!(
@@ -252,9 +297,9 @@ mod tests {
         // slot-chunk vs flat ring over all ranks on slow links
         let h = hierarchy(4, 8);
         let xs = inputs(&h, 4096, 15);
-        let (_, rep) = hierarchical_all_reduce(&h, &RawCodec, &RawCodec, &xs);
+        let (_, rep) = hierarchical_all_reduce(&h, &RawCodec, &RawCodec, &xs).unwrap();
         let mut flat_fabric = Fabric::new(h.ranks(), LinkModel::DATACENTER);
-        let (_, flat) = all_reduce(&mut flat_fabric, &RawCodec, &xs);
+        let (_, flat) = all_reduce(&mut flat_fabric, &RawCodec, &xs).unwrap();
         assert!(
             rep.inter.wire_bytes < flat.wire_bytes / 2,
             "inter {} vs flat {}",

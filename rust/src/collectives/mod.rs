@@ -11,17 +11,25 @@
 //!
 //! All of them are thin wrappers over the pipelined
 //! [`engine::CollectiveEngine`], which executes the same schedules over
-//! either the simulated [`engine::SimTransport`] (deterministic
-//! link-model accounting on a [`Fabric`]) or the threaded
+//! any [`engine::Transport`]: the simulated [`engine::SimTransport`]
+//! (deterministic link-model accounting on a [`Fabric`]), the threaded
 //! [`engine::ChannelTransport`] (each rank a real thread doing real
-//! encode/decode work). Every hop serializes its f32 chunk to
+//! encode/decode work), or the real-socket [`engine::TcpTransport`] /
+//! [`engine::UdsTransport`] (length-prefixed frames over loopback TCP
+//! or Unix-domain socket pairs). Every hop serializes its f32 chunk to
 //! little-endian bytes, runs it through the codec, and accounts the
 //! *encoded* size on the fabric; decoding is exact (codecs are
 //! lossless), so the collective result is bit-identical to the
-//! uncompressed run — asserted by tests. The [`CollectiveReport`] now
-//! carries a [`Timeline`] that separates compute time, wire occupancy,
-//! and exposed (non-overlapped) latency, so "compression fits in the
-//! link budget" is a measurable quantity rather than a claim.
+//! uncompressed run — asserted by tests across every transport. The
+//! [`CollectiveReport`] carries a [`Timeline`] that separates compute
+//! time, wire occupancy, and exposed (non-overlapped) latency — plus,
+//! on the socket transports, the *measured* receive-wait (`wire_wall_s`)
+//! next to the modeled wire time — so "compression fits in the link
+//! budget" is a measurable quantity rather than a claim.
+//!
+//! For genuine process boundaries, [`spawn`] re-execs the CLI as rank
+//! worker processes that rendezvous over [`wire`] and run the same
+//! schedules through the per-rank [`rank::RankEngine`].
 //!
 //! The default single-stage arm (`baselines::SingleStageCodec`) is the
 //! **parallel chunked engine**: each hop's payload is split with
@@ -34,10 +42,14 @@ use crate::fabric::Fabric;
 
 pub mod engine;
 pub mod hierarchical;
+pub mod rank;
+pub mod spawn;
+pub mod wire;
 pub use engine::{
-    ChannelTransport, CollectiveEngine, HopIn, HopOut, RankHop, SimTransport, Transport,
+    ChannelTransport, CollectiveEngine, HopIn, HopOut, OwnedSimTransport, RankHop, SimTransport,
+    TcpTransport, Transport, TransportKind, UdsTransport,
 };
-pub use hierarchical::{hierarchical_all_reduce, Hierarchy};
+pub use hierarchical::{hierarchical_all_reduce, hierarchical_all_reduce_on, Hierarchy};
 
 /// Default pipeline depth of the per-hop timeline model used by the
 /// compatibility wrappers: each hop is modeled as this many
@@ -55,6 +67,12 @@ pub struct Timeline {
     /// Identical to [`CollectiveReport::sim_time_s`] on the simulated
     /// transport.
     pub wire_s: f64,
+    /// **Measured** receive-wait: per step, the slowest rank's time
+    /// blocked waiting for wire bytes (socket or channel recv). Zero on
+    /// the serial [`engine::SimTransport`]; on the socket transports
+    /// this is the real wall-clock wire cost standing next to the
+    /// modeled [`Timeline::wire_s`].
+    pub wire_wall_s: f64,
     /// Modeled completion time with the hop pipelined at the engine's
     /// depth: sub-chunk *c+1*'s encode overlaps sub-chunk *c*'s
     /// transfer, double-buffered per link.
@@ -67,7 +85,7 @@ pub struct Timeline {
     /// compression fits within the link budget.
     pub exposed_s: f64,
     /// Measured wall time spent in the transport (real encode/decode
-    /// work; on the channel transport, ranks run concurrently).
+    /// work; on the concurrent transports, ranks run in parallel).
     pub wall_s: f64,
 }
 
@@ -123,7 +141,10 @@ pub enum WireFormat {
 }
 
 impl WireFormat {
-    fn serialize(&self, xs: &[f32]) -> Vec<u8> {
+    /// Serialize values to their little-endian wire bytes. Public so the
+    /// per-rank SPMD engine ([`rank::RankEngine`]) produces bytes
+    /// bit-identical to the global engine's.
+    pub fn serialize(&self, xs: &[f32]) -> Vec<u8> {
         match self {
             WireFormat::F32 => f32s_to_bytes(xs),
             WireFormat::Bf16 => {
@@ -141,7 +162,8 @@ impl WireFormat {
         }
     }
 
-    fn deserialize(&self, bytes: &[u8]) -> Vec<f32> {
+    /// Inverse of [`WireFormat::serialize`].
+    pub fn deserialize(&self, bytes: &[u8]) -> Vec<f32> {
         match self {
             WireFormat::F32 => bytes_to_f32s(bytes),
             WireFormat::Bf16 => bytes
@@ -191,11 +213,11 @@ pub fn all_reduce(
     fabric: &mut Fabric,
     codec: &dyn Codec,
     inputs: &[Vec<f32>],
-) -> (Vec<Vec<f32>>, CollectiveReport) {
+) -> crate::Result<(Vec<Vec<f32>>, CollectiveReport)> {
     let mut transport = SimTransport::new(fabric);
     let mut eng = CollectiveEngine::new(&mut transport, codec, DEFAULT_PIPELINE_DEPTH);
-    let out = eng.all_reduce(inputs);
-    (out, eng.take_report())
+    let out = eng.all_reduce(inputs)?;
+    Ok((out, eng.take_report()))
 }
 
 /// Reference all-reduce result in the exact summation order the ring
@@ -225,11 +247,11 @@ pub fn reduce_scatter(
     fabric: &mut Fabric,
     codec: &dyn Codec,
     inputs: &[Vec<f32>],
-) -> (Vec<Vec<f32>>, CollectiveReport) {
+) -> crate::Result<(Vec<Vec<f32>>, CollectiveReport)> {
     let mut transport = SimTransport::new(fabric);
     let mut eng = CollectiveEngine::new(&mut transport, codec, DEFAULT_PIPELINE_DEPTH);
-    let out = eng.reduce_scatter(inputs);
-    (out, eng.take_report())
+    let out = eng.reduce_scatter(inputs)?;
+    Ok((out, eng.take_report()))
 }
 
 /// Ring all-gather: rank r contributes `inputs[r]`; everyone returns the
@@ -238,7 +260,7 @@ pub fn all_gather(
     fabric: &mut Fabric,
     codec: &dyn Codec,
     inputs: &[Vec<f32>],
-) -> (Vec<Vec<f32>>, CollectiveReport) {
+) -> crate::Result<(Vec<Vec<f32>>, CollectiveReport)> {
     all_gather_wire(fabric, codec, inputs, WireFormat::F32)
 }
 
@@ -250,11 +272,11 @@ pub fn all_gather_wire(
     codec: &dyn Codec,
     inputs: &[Vec<f32>],
     wire: WireFormat,
-) -> (Vec<Vec<f32>>, CollectiveReport) {
+) -> crate::Result<(Vec<Vec<f32>>, CollectiveReport)> {
     let mut transport = SimTransport::new(fabric);
     let mut eng = CollectiveEngine::new(&mut transport, codec, DEFAULT_PIPELINE_DEPTH);
-    let out = eng.all_gather_wire(inputs, wire);
-    (out, eng.take_report())
+    let out = eng.all_gather_wire(inputs, wire)?;
+    Ok((out, eng.take_report()))
 }
 
 /// All-to-all: `inputs[r][d]` is the chunk rank r sends to rank d.
@@ -263,11 +285,11 @@ pub fn all_to_all(
     fabric: &mut Fabric,
     codec: &dyn Codec,
     inputs: &[Vec<Vec<f32>>],
-) -> (Vec<Vec<Vec<f32>>>, CollectiveReport) {
+) -> crate::Result<(Vec<Vec<Vec<f32>>>, CollectiveReport)> {
     let mut transport = SimTransport::new(fabric);
     let mut eng = CollectiveEngine::new(&mut transport, codec, DEFAULT_PIPELINE_DEPTH);
-    let out = eng.all_to_all(inputs);
-    (out, eng.take_report())
+    let out = eng.all_to_all(inputs)?;
+    Ok((out, eng.take_report()))
 }
 
 #[cfg(test)]
@@ -319,7 +341,7 @@ mod tests {
         for n in [2usize, 3, 4, 8] {
             let xs = inputs(n, 101, 5);
             let mut fabric = Fabric::new(n, LinkModel::DIE_TO_DIE);
-            let (out, report) = all_reduce(&mut fabric, &RawCodec, &xs);
+            let (out, report) = all_reduce(&mut fabric, &RawCodec, &xs).unwrap();
             let want = all_reduce_reference(&xs);
             for r in 0..n {
                 assert_eq!(out[r], want, "rank {r} of {n}");
@@ -333,10 +355,10 @@ mod tests {
         let n = 4;
         let xs = inputs(n, 256, 9);
         let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (plain, _) = all_reduce(&mut f1, &RawCodec, &xs);
+        let (plain, _) = all_reduce(&mut f1, &RawCodec, &xs).unwrap();
         for codec in [&ThreeStage as &dyn Codec, &Lz77Codec] {
             let mut f2 = Fabric::new(n, LinkModel::DIE_TO_DIE);
-            let (compressed, rep) = all_reduce(&mut f2, codec, &xs);
+            let (compressed, rep) = all_reduce(&mut f2, codec, &xs).unwrap();
             assert_eq!(compressed, plain, "{}", codec.name());
             assert!(rep.raw_bytes > 0);
         }
@@ -356,9 +378,9 @@ mod tests {
         let id = m.build(key).unwrap();
         let ss = SingleStageCodec::with_fixed(m.registry, id);
         let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (plain, _) = all_reduce(&mut f1, &RawCodec, &xs);
+        let (plain, _) = all_reduce(&mut f1, &RawCodec, &xs).unwrap();
         let mut f2 = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (compressed, rep) = all_reduce(&mut f2, &ss, &xs);
+        let (compressed, rep) = all_reduce(&mut f2, &ss, &xs).unwrap();
         assert_eq!(compressed, plain);
         assert!(rep.wire_bytes > 0);
     }
@@ -368,7 +390,7 @@ mod tests {
         let n = 4;
         let xs = inputs(n, 99, 3); // non-divisible length exercises ragged chunks
         let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (rs, _) = reduce_scatter(&mut f1, &RawCodec, &xs);
+        let (rs, _) = reduce_scatter(&mut f1, &RawCodec, &xs).unwrap();
         let want = all_reduce_reference(&xs);
         let bounds = chunk_bounds(99, n);
         for r in 0..n {
@@ -382,7 +404,7 @@ mod tests {
         let n = 5;
         let xs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 3]).collect();
         let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (out, report) = all_gather(&mut f, &RawCodec, &xs);
+        let (out, report) = all_gather(&mut f, &RawCodec, &xs).unwrap();
         let want: Vec<f32> = (0..n).flat_map(|r| vec![r as f32; 3]).collect();
         for r in 0..n {
             assert_eq!(out[r], want);
@@ -399,7 +421,7 @@ mod tests {
             .map(|r| (0..n).map(|d| vec![(r * 10 + d) as f32]).collect())
             .collect();
         let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (out, _) = all_to_all(&mut f, &RawCodec, &inputs);
+        let (out, _) = all_to_all(&mut f, &RawCodec, &inputs).unwrap();
         for d in 0..n {
             for r in 0..n {
                 assert_eq!(out[d][r], vec![(r * 10 + d) as f32], "out[{d}][{r}]");
@@ -422,9 +444,9 @@ mod tests {
             .collect();
         let mut f16 = Fabric::new(n, LinkModel::DIE_TO_DIE);
         let (out16, rep16) =
-            all_gather_wire(&mut f16, &RawCodec, &inputs, WireFormat::Bf16);
+            all_gather_wire(&mut f16, &RawCodec, &inputs, WireFormat::Bf16).unwrap();
         let mut f32f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (out32, rep32) = all_gather(&mut f32f, &RawCodec, &inputs);
+        let (out32, rep32) = all_gather(&mut f32f, &RawCodec, &inputs).unwrap();
         assert_eq!(out16, out32, "bf16 wire must be lossless for bf16 values");
         assert_eq!(rep16.raw_bytes * 2, rep32.raw_bytes, "half the bytes on the wire");
     }
@@ -435,9 +457,9 @@ mod tests {
         // highly compressible: constant vectors
         let xs: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0f32; 4096]).collect();
         let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (_, plain) = all_reduce(&mut f1, &RawCodec, &xs);
+        let (_, plain) = all_reduce(&mut f1, &RawCodec, &xs).unwrap();
         let mut f2 = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (_, comp) = all_reduce(&mut f2, &ThreeStage, &xs);
+        let (_, comp) = all_reduce(&mut f2, &ThreeStage, &xs).unwrap();
         assert!(comp.wire_bytes < plain.wire_bytes / 2);
         assert!(comp.bandwidth_gain() > 2.0);
         assert!(comp.sim_time_s < plain.sim_time_s);
@@ -448,7 +470,7 @@ mod tests {
         let n = 3;
         let xs = inputs(n, 300, 1);
         let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (_, rep) = all_reduce(&mut f, &RawCodec, &xs);
+        let (_, rep) = all_reduce(&mut f, &RawCodec, &xs).unwrap();
         assert_eq!(rep.wire_bytes, f.total_bytes());
         assert_eq!(rep.bandwidth_gain(), 1.0);
     }
@@ -457,7 +479,7 @@ mod tests {
     fn single_node_collectives_are_noops() {
         let xs = inputs(1, 10, 2);
         let mut f = Fabric::new(1, LinkModel::DIE_TO_DIE);
-        let (out, rep) = all_reduce(&mut f, &RawCodec, &xs);
+        let (out, rep) = all_reduce(&mut f, &RawCodec, &xs).unwrap();
         assert_eq!(out[0], xs[0]);
         assert_eq!(rep, CollectiveReport::default());
     }
@@ -471,15 +493,15 @@ mod tests {
                 let xs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32 + 0.5; len]).collect();
                 let want = all_reduce_reference(&xs);
                 let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-                let (out, _) = all_reduce(&mut f, &RawCodec, &xs);
+                let (out, _) = all_reduce(&mut f, &RawCodec, &xs).unwrap();
                 for r in 0..n {
                     assert_eq!(out[r], want, "all_reduce n={n} len={len} rank {r}");
                 }
                 let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-                let (rs, _) = reduce_scatter(&mut f, &RawCodec, &xs);
+                let (rs, _) = reduce_scatter(&mut f, &RawCodec, &xs).unwrap();
                 assert_eq!(rs.iter().map(|c| c.len()).sum::<usize>(), len, "n={n} len={len}");
                 let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-                let (ag, _) = all_gather(&mut f, &RawCodec, &xs);
+                let (ag, _) = all_gather(&mut f, &RawCodec, &xs).unwrap();
                 assert_eq!(ag[0].len(), n * len, "n={n} len={len}");
             }
         }
@@ -492,7 +514,7 @@ mod tests {
         let n = 4;
         let xs = inputs(n, 1 << 15, 17);
         let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (_, rep) = all_reduce(&mut f, &ThreeStage, &xs);
+        let (_, rep) = all_reduce(&mut f, &ThreeStage, &xs).unwrap();
         let t = rep.timeline;
         assert!(t.pipelined_s <= t.lockstep_s + 1e-12, "{} vs {}", t.pipelined_s, t.lockstep_s);
         assert!(t.exposed_s >= 0.0);

@@ -1,0 +1,430 @@
+//! Per-rank (SPMD) collective engine: the schedules of
+//! [`super::engine::CollectiveEngine`] re-expressed from the point of
+//! view of **one** rank driving its own socket [`wire::Mesh`] — the
+//! engine a spawned worker process runs (see [`super::spawn`]).
+//!
+//! The global engine holds every rank's data and executes whole steps;
+//! here each process holds only its own vector and walks the identical
+//! step sequence: same chunk boundaries ([`chunk_bounds`]), same ring
+//! direction, same summation order — so the reduced values are
+//! **bit-identical** to the global engine's (asserted by the in-process
+//! tests below and the cross-process harness).
+//!
+//! Every schedule takes a `group`: the ordered list of global ranks
+//! participating (`group[i]` is group index i). Flat collectives pass
+//! `0..n`; the hierarchical wrapper passes each node's contiguous local
+//! group and each slot's strided leader group, mirroring
+//! [`super::hierarchical_all_reduce_on`].
+//!
+//! Within a step the send runs on a scoped helper thread while the
+//! receive blocks on this thread — one send + one recv per rank per
+//! step, so a full OS-buffer can never deadlock the ring.
+
+use super::wire::{self, Mesh};
+use super::{chunk_bounds, CollectiveReport, WireFormat};
+use crate::baselines::Codec;
+use std::time::Instant;
+
+/// One rank's view of the collective schedules, over a connected
+/// [`Mesh`]. Accounting mirrors [`super::CollectiveReport`] but is
+/// *per rank*: `wire_bytes`/`raw_bytes` count only the hops **this**
+/// rank received (summing the reports of all ranks reproduces the
+/// global engine's byte totals), and the timeline carries only measured
+/// quantities (`compute_s`, `wall_s`, `wire_wall_s`) — there is no link
+/// model on a real wire.
+pub struct RankEngine<'a> {
+    mesh: &'a mut Mesh,
+    codec: &'a dyn Codec,
+    report: CollectiveReport,
+}
+
+impl<'a> RankEngine<'a> {
+    pub fn new(mesh: &'a mut Mesh, codec: &'a dyn Codec) -> Self {
+        Self { mesh, codec, report: CollectiveReport::default() }
+    }
+
+    /// This process's global rank.
+    pub fn rank(&self) -> usize {
+        self.mesh.rank()
+    }
+
+    /// Total ranks in the mesh (not the current group).
+    pub fn n_ranks(&self) -> usize {
+        self.mesh.n_ranks()
+    }
+
+    pub fn report(&self) -> CollectiveReport {
+        self.report
+    }
+
+    pub fn take_report(&mut self) -> CollectiveReport {
+        std::mem::take(&mut self.report)
+    }
+
+    fn group_index(&self, group: &[usize]) -> usize {
+        group
+            .iter()
+            .position(|&r| r == self.rank())
+            .unwrap_or_else(|| panic!("rank {} not in group {group:?}", self.rank()))
+    }
+
+    /// One hop: serialize + encode `payload`, send it to global rank
+    /// `to` while receiving this step's frame from global rank `from`,
+    /// decode + deserialize the received frame. The send runs on a
+    /// scoped thread so a full socket buffer cannot deadlock two ranks
+    /// sending to each other.
+    fn step_to_from(
+        &mut self,
+        to: usize,
+        from: usize,
+        payload: &[f32],
+        fmt: WireFormat,
+    ) -> crate::Result<Vec<f32>> {
+        let t_step = Instant::now();
+        let raw = fmt.serialize(payload);
+        let t0 = Instant::now();
+        let wire_buf = self.codec.encode(&raw);
+        let encode_s = t0.elapsed().as_secs_f64();
+
+        let (tx, rx) = self.mesh.tx_rx(to, from);
+        let (sent, got) = std::thread::scope(|s| {
+            let sender = s.spawn(move || {
+                let r = tx.send_frame(&wire_buf);
+                if r.is_err() {
+                    tx.shutdown(); // unblock our own recv half fast
+                }
+                r
+            });
+            let t1 = Instant::now();
+            let got = rx.recv_frame();
+            let wait_s = t1.elapsed().as_secs_f64();
+            if got.is_err() {
+                rx.shutdown(); // unblock the sender half fast
+            }
+            let sent = sender
+                .join()
+                .unwrap_or_else(|_| Err(crate::error::anyhow!("send thread panicked")));
+            (sent, got.map(|f| (f, wait_s)))
+        });
+        if let Err(e) = sent {
+            self.mesh.shutdown_all();
+            return Err(e);
+        }
+        let (frame, wait_s) = match got {
+            Ok(x) => x,
+            Err(e) => {
+                self.mesh.shutdown_all();
+                return Err(e);
+            }
+        };
+
+        let t2 = Instant::now();
+        let decoded = self.codec.decode(&frame)?;
+        let decode_s = t2.elapsed().as_secs_f64();
+
+        // account the received hop (summing over ranks == global totals)
+        self.report.wire_bytes += frame.len() as u64;
+        self.report.raw_bytes += decoded.len() as u64;
+        self.report.steps += 1;
+        let t = &mut self.report.timeline;
+        t.compute_s += encode_s + decode_s;
+        t.wire_wall_s += wait_s;
+        t.wall_s += t_step.elapsed().as_secs_f64();
+        Ok(fmt.deserialize(&decoded))
+    }
+
+    /// Ring all-reduce (sum) within `group`; `mine` is this rank's
+    /// vector. Schedule and summation order match
+    /// [`super::engine::CollectiveEngine::all_reduce`] with
+    /// r → group index.
+    pub fn all_reduce_group(&mut self, group: &[usize], mine: &[f32]) -> crate::Result<Vec<f32>> {
+        let g = group.len();
+        let gi = self.group_index(group);
+        if g == 1 {
+            return Ok(mine.to_vec());
+        }
+        let bounds = chunk_bounds(mine.len(), g);
+        let to = group[(gi + 1) % g];
+        let from = group[(gi + g - 1) % g];
+        let mut data = mine.to_vec();
+
+        // Phase 1 — reduce-scatter (chunk c completes at group index c).
+        for step in 0..g - 1 {
+            let (slo, shi) = bounds[(gi + 2 * g - 1 - step) % g];
+            let payload = data[slo..shi].to_vec();
+            let decoded = self.step_to_from(to, from, &payload, WireFormat::F32)?;
+            let (rlo, rhi) = bounds[(gi + 2 * g - 2 - step) % g];
+            for (dst, src) in data[rlo..rhi].iter_mut().zip(decoded) {
+                *dst += src;
+            }
+        }
+        // Phase 2 — all-gather the reduced chunks.
+        for step in 0..g - 1 {
+            let (slo, shi) = bounds[(gi + g - step) % g];
+            let payload = data[slo..shi].to_vec();
+            let decoded = self.step_to_from(to, from, &payload, WireFormat::F32)?;
+            let (rlo, rhi) = bounds[(gi + 2 * g - 1 - step) % g];
+            data[rlo..rhi].copy_from_slice(&decoded);
+        }
+        Ok(data)
+    }
+
+    /// Ring reduce-scatter (sum) within `group`: returns this rank's
+    /// chunk (group index gi → chunk gi of the group sum).
+    pub fn reduce_scatter_group(
+        &mut self,
+        group: &[usize],
+        mine: &[f32],
+    ) -> crate::Result<Vec<f32>> {
+        let g = group.len();
+        let gi = self.group_index(group);
+        if g == 1 {
+            return Ok(mine.to_vec());
+        }
+        let bounds = chunk_bounds(mine.len(), g);
+        let to = group[(gi + 1) % g];
+        let from = group[(gi + g - 1) % g];
+        let mut data = mine.to_vec();
+        for step in 0..g - 1 {
+            let (slo, shi) = bounds[(gi + 2 * g - 1 - step) % g];
+            let payload = data[slo..shi].to_vec();
+            let decoded = self.step_to_from(to, from, &payload, WireFormat::F32)?;
+            let (rlo, rhi) = bounds[(gi + 2 * g - 2 - step) % g];
+            for (dst, src) in data[rlo..rhi].iter_mut().zip(decoded) {
+                *dst += src;
+            }
+        }
+        let (lo, hi) = bounds[gi];
+        Ok(data[lo..hi].to_vec())
+    }
+
+    /// Ring all-gather within `group`: returns the concatenation of
+    /// every member's `mine` in group order. Chunks may be ragged
+    /// (different lengths per member) — the hierarchical wrapper
+    /// gathers uneven reduce-scatter chunks.
+    pub fn all_gather_group(
+        &mut self,
+        group: &[usize],
+        mine: &[f32],
+        fmt: WireFormat,
+    ) -> crate::Result<Vec<f32>> {
+        let g = group.len();
+        let gi = self.group_index(group);
+        if g == 1 {
+            return Ok(mine.to_vec());
+        }
+        let to = group[(gi + 1) % g];
+        let from = group[(gi + g - 1) % g];
+        let mut slots: Vec<Option<Vec<f32>>> = (0..g).map(|_| None).collect();
+        slots[gi] = Some(mine.to_vec());
+        for step in 0..g - 1 {
+            let payload =
+                slots[(gi + g - step) % g].clone().expect("ring schedule invariant");
+            let decoded = self.step_to_from(to, from, &payload, fmt)?;
+            slots[(gi + 2 * g - 1 - step) % g] = Some(decoded);
+        }
+        Ok(slots.into_iter().flat_map(|c| c.expect("gather complete")).collect())
+    }
+
+    /// All-to-all over the full mesh: `chunks[d]` is what this rank
+    /// sends to global rank d; returns `out[s]` = what global rank s
+    /// sent us. Direct pairwise exchange, round k: send to (rank+k)%n,
+    /// receive from (rank+n−k)%n — the same rounds as the global
+    /// engine's schedule.
+    pub fn all_to_all(&mut self, chunks: &[Vec<f32>]) -> crate::Result<Vec<Vec<f32>>> {
+        let n = self.n_ranks();
+        assert_eq!(chunks.len(), n, "all_to_all needs one chunk per destination");
+        let me = self.rank();
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); n];
+        out[me] = chunks[me].clone();
+        for round in 1..n {
+            let to = (me + round) % n;
+            let from = (me + n - round) % n;
+            let decoded = self.step_to_from(to, from, &chunks[to], WireFormat::F32)?;
+            out[from] = decoded;
+        }
+        Ok(out)
+    }
+
+    /// Two-level all-reduce over a `nodes × locals` factorization of the
+    /// mesh, mirroring [`super::hierarchical_all_reduce_on`]: intra-node
+    /// reduce-scatter (contiguous local groups) → inter-node all-reduce
+    /// (strided leader groups, one per local slot) → intra-node
+    /// all-gather of the ragged chunks. One codec for both levels.
+    pub fn hierarchical_all_reduce(
+        &mut self,
+        nodes: usize,
+        locals: usize,
+        mine: &[f32],
+    ) -> crate::Result<Vec<f32>> {
+        let n = self.n_ranks();
+        assert_eq!(nodes * locals, n, "hierarchy must cover the mesh");
+        let me = self.rank();
+        let node = me / locals;
+        let slot = me % locals;
+        let intra: Vec<usize> = (node * locals..(node + 1) * locals).collect();
+        let inter: Vec<usize> = (0..nodes).map(|nd| nd * locals + slot).collect();
+        let chunk = self.reduce_scatter_group(&intra, mine)?;
+        let reduced =
+            if nodes > 1 { self.all_reduce_group(&inter, &chunk)? } else { chunk };
+        self.all_gather_group(&intra, &reduced, WireFormat::F32)
+    }
+}
+
+/// Run `f(rank_engine)` on every rank of a freshly connected in-process
+/// UDS mesh, one OS thread per rank, and return the per-rank results in
+/// rank order. Test/bench helper — the real harness crosses process
+/// boundaries in [`super::spawn`].
+pub fn run_local_mesh<T, F>(n: usize, codec: &dyn Codec, f: F) -> crate::Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(&mut RankEngine) -> crate::Result<T> + Sync,
+{
+    let timeout = wire::default_timeout();
+    let deadline = Instant::now() + timeout;
+    let dir = wire::scratch_dir("mesh")?;
+    let listeners: Vec<wire::Listener> = (0..n)
+        .map(|r| wire::Listener::bind_uds_in(&dir, &format!("rank{r}")))
+        .collect::<crate::Result<_>>()?;
+    let peers: Vec<wire::Endpoint> =
+        listeners.iter().map(|l| l.endpoint()).collect::<crate::Result<_>>()?;
+    let mut out: Vec<crate::Result<T>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let (listener, peers) = (&listeners[r], &peers);
+                let f = &f;
+                s.spawn(move || -> crate::Result<T> {
+                    let mut mesh = Mesh::connect(r, n, listener, peers, deadline, timeout)?;
+                    let mut eng = RankEngine::new(&mut mesh, codec);
+                    f(&mut eng)
+                })
+            })
+            .collect();
+        for h in handles {
+            out.push(h.join().unwrap_or_else(|_| {
+                Err(crate::error::anyhow!("mesh rank thread panicked"))
+            }));
+        }
+    });
+    drop(listeners); // Listener::drop unlinks the UDS socket files
+    let _ = std::fs::remove_dir(&dir);
+    out.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::{CollectiveEngine, OwnedSimTransport};
+    use super::super::{all_reduce_reference, DEFAULT_PIPELINE_DEPTH};
+    use super::*;
+    use crate::baselines::{RawCodec, ThreeStage};
+    use crate::fabric::LinkModel;
+    use crate::prng::Pcg32;
+
+    fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        (0..n).map(|r| Pcg32::substream(seed, r as u64).normal_f32s(len, 1.0)).collect()
+    }
+
+    #[test]
+    fn spmd_all_reduce_bit_identical_to_global_engine() {
+        for n in [2usize, 3, 4] {
+            let xs = inputs(n, 101, 41);
+            let group: Vec<usize> = (0..n).collect();
+            let outs = run_local_mesh(n, &ThreeStage, |eng| {
+                eng.all_reduce_group(&group, &xs[eng.rank()])
+            })
+            .unwrap();
+            let want = all_reduce_reference(&xs);
+            for (r, out) in outs.iter().enumerate() {
+                assert_eq!(*out, want, "rank {r} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmd_reduce_scatter_and_all_gather_match_global() {
+        let n = 4;
+        let xs = inputs(n, 99, 43); // ragged chunks
+        let group: Vec<usize> = (0..n).collect();
+        let rs = run_local_mesh(n, &RawCodec, |eng| {
+            eng.reduce_scatter_group(&group, &xs[eng.rank()])
+        })
+        .unwrap();
+        let want = all_reduce_reference(&xs);
+        let bounds = chunk_bounds(99, n);
+        for r in 0..n {
+            let (lo, hi) = bounds[r];
+            assert_eq!(rs[r], want[lo..hi].to_vec(), "rank {r}");
+        }
+        let ag = run_local_mesh(n, &RawCodec, |eng| {
+            eng.all_gather_group(&group, &xs[eng.rank()], WireFormat::F32)
+        })
+        .unwrap();
+        let cat: Vec<f32> = xs.iter().flatten().copied().collect();
+        for r in 0..n {
+            assert_eq!(ag[r], cat, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn spmd_all_to_all_transposes() {
+        let n = 3;
+        let chunks: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|r| (0..n).map(|d| vec![(r * 10 + d) as f32; 2]).collect())
+            .collect();
+        let outs =
+            run_local_mesh(n, &RawCodec, |eng| eng.all_to_all(&chunks[eng.rank()])).unwrap();
+        for d in 0..n {
+            for s in 0..n {
+                assert_eq!(outs[d][s], vec![(s * 10 + d) as f32; 2], "out[{d}][{s}]");
+            }
+        }
+    }
+
+    #[test]
+    fn spmd_hierarchical_matches_global_wrapper_bitwise() {
+        let (nodes, locals) = (2usize, 2usize);
+        let n = nodes * locals;
+        let xs = inputs(n, 150, 47);
+        let h = super::super::Hierarchy {
+            nodes,
+            locals,
+            intra: LinkModel::DIE_TO_DIE,
+            inter: LinkModel::DATACENTER,
+        };
+        let (want, _) =
+            super::super::hierarchical_all_reduce(&h, &ThreeStage, &ThreeStage, &xs).unwrap();
+        let outs = run_local_mesh(n, &ThreeStage, |eng| {
+            eng.hierarchical_all_reduce(nodes, locals, &xs[eng.rank()])
+        })
+        .unwrap();
+        for r in 0..n {
+            assert_eq!(outs[r], want[r], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn per_rank_byte_accounting_sums_to_global_totals() {
+        let n = 4;
+        let xs = inputs(n, 257, 53);
+        let group: Vec<usize> = (0..n).collect();
+        let reports = run_local_mesh(n, &ThreeStage, |eng| {
+            eng.all_reduce_group(&group, &xs[eng.rank()])?;
+            Ok(eng.take_report())
+        })
+        .unwrap();
+        let mut transport = OwnedSimTransport::new(n, LinkModel::DIE_TO_DIE);
+        let mut geng = CollectiveEngine::new(&mut transport, &ThreeStage, DEFAULT_PIPELINE_DEPTH);
+        geng.all_reduce(&xs).unwrap();
+        let global = geng.take_report();
+        let wire: u64 = reports.iter().map(|r| r.wire_bytes).sum();
+        let raw: u64 = reports.iter().map(|r| r.raw_bytes).sum();
+        assert_eq!(wire, global.wire_bytes);
+        assert_eq!(raw, global.raw_bytes);
+        // each rank walked every step of the 2(n-1)-step schedule
+        for r in &reports {
+            assert_eq!(r.steps, global.steps);
+            assert!(r.timeline.wire_wall_s > 0.0);
+        }
+    }
+}

@@ -1,0 +1,914 @@
+//! Real wires for the collective engine: length-prefixed frames over
+//! TCP (`std::net`) or Unix domain sockets (`std::os::unix::net`), plus
+//! the pieces the multi-process harness is built from — a rendezvous
+//! protocol, a full-duplex peer [`Mesh`], optional write pacing, and a
+//! binary [`WorkerReport`].
+//!
+//! Everything here is std-only. The framing is deliberately tiny: every
+//! message is `[len: u32 LE][payload]` with a 1 GiB sanity cap, so a
+//! corrupt or misaligned peer fails fast instead of allocating wildly.
+//! All sockets carry explicit read/write timeouts (default 30 s,
+//! `SSHUFF_WIRE_TIMEOUT_S` overrides) and shut both directions down on
+//! drop, so a worker whose peer dies mid-collective surfaces an `Err`
+//! instead of hanging.
+//!
+//! Rendezvous protocol (all frames over the same length-prefixed wire):
+//!
+//! 1. the parent binds a listener (TCP port 0 or a scratch UDS path)
+//!    and passes its URI (`tcp://host:port` / `uds:///path`) to every
+//!    spawned rank worker;
+//! 2. each worker binds its *own* peer listener, connects to the
+//!    parent, and sends `HELLO{rank, listen_uri}`;
+//! 3. once all ranks are in, the parent broadcasts the full address
+//!    `TABLE`; workers then build the peer [`Mesh`] directly — rank *r*
+//!    dials every rank below it (sending a one-frame hello with its
+//!    rank) and accepts a connection from every rank above it;
+//! 4. after running its collectives each worker sends a
+//!    [`WorkerReport`] frame and waits for `BYE` (or EOF) before
+//!    exiting, so no rank tears its sockets down while a peer is still
+//!    mid-collective.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Frames above this are treated as stream corruption, not data.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Rendezvous message tags (first payload byte of control frames).
+pub const MSG_HELLO: u8 = 1;
+pub const MSG_TABLE: u8 = 2;
+pub const MSG_REPORT: u8 = 3;
+pub const MSG_BYE: u8 = 4;
+
+/// Socket read/write timeout: `SSHUFF_WIRE_TIMEOUT_S` (seconds, may be
+/// fractional) or 30 s. This is the liveness backstop — a peer that
+/// stops talking turns into an `Err` after this long, never a hang.
+pub fn default_timeout() -> Duration {
+    std::env::var("SSHUFF_WIRE_TIMEOUT_S")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .filter(|t| *t > 0.0)
+        .map(Duration::from_secs_f64)
+        .unwrap_or(Duration::from_secs(30))
+}
+
+/// One connected stream socket, TCP or Unix-domain.
+pub enum Socket {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl Socket {
+    fn try_clone(&self) -> std::io::Result<Socket> {
+        Ok(match self {
+            Socket::Tcp(s) => Socket::Tcp(s.try_clone()?),
+            Socket::Uds(s) => Socket::Uds(s.try_clone()?),
+        })
+    }
+
+    /// Apply `t` as both the read and the write timeout.
+    pub fn set_timeouts(&self, t: Duration) -> std::io::Result<()> {
+        match self {
+            Socket::Tcp(s) => {
+                s.set_read_timeout(Some(t))?;
+                s.set_write_timeout(Some(t))
+            }
+            Socket::Uds(s) => {
+                s.set_read_timeout(Some(t))?;
+                s.set_write_timeout(Some(t))
+            }
+        }
+    }
+
+    /// Shut both directions down, unblocking any thread parked in a
+    /// read or write on this socket (or on a clone of it). Errors are
+    /// ignored — the socket may already be gone.
+    pub fn shutdown(&self) {
+        match self {
+            Socket::Tcp(s) => drop(s.shutdown(std::net::Shutdown::Both)),
+            Socket::Uds(s) => drop(s.shutdown(std::net::Shutdown::Both)),
+        }
+    }
+}
+
+impl Read for Socket {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Socket::Tcp(s) => s.read(buf),
+            Socket::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Socket {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Socket::Tcp(s) => s.write(buf),
+            Socket::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Socket::Tcp(s) => s.flush(),
+            Socket::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// A socket speaking `[len: u32 LE][payload]` frames, optionally paced
+/// to a target send bandwidth.
+///
+/// Pacing sleeps after each send until the frame has "occupied the
+/// wire" for `bytes / pace_bps` seconds — a deliberately simple token
+/// bucket that lets loopback runs emulate a slower NIC so compression
+/// wins show up at realistic link speeds.
+pub struct FrameStream {
+    sock: Socket,
+    pace_bps: f64,
+}
+
+impl FrameStream {
+    pub fn new(sock: Socket) -> FrameStream {
+        FrameStream { sock, pace_bps: 0.0 }
+    }
+
+    /// Target send bandwidth in bytes/second; 0 disables pacing.
+    pub fn set_pace_bps(&mut self, bps: f64) {
+        self.pace_bps = if bps.is_finite() && bps > 0.0 { bps } else { 0.0 };
+    }
+
+    /// Shut the underlying socket down (both directions, clones too).
+    pub fn shutdown(&self) {
+        self.sock.shutdown();
+    }
+
+    pub fn send_frame(&mut self, payload: &[u8]) -> crate::Result<()> {
+        crate::error::ensure!(
+            payload.len() <= MAX_FRAME_BYTES,
+            "frame of {} bytes exceeds cap {}",
+            payload.len(),
+            MAX_FRAME_BYTES
+        );
+        let t0 = Instant::now();
+        self.sock
+            .write_all(&(payload.len() as u32).to_le_bytes())
+            .and_then(|()| self.sock.write_all(payload))
+            .and_then(|()| self.sock.flush())
+            .map_err(|e| crate::error::anyhow!("frame send ({} bytes): {e}", payload.len()))?;
+        if self.pace_bps > 0.0 {
+            let want = (payload.len() + 4) as f64 / self.pace_bps;
+            let spent = t0.elapsed().as_secs_f64();
+            if want > spent {
+                std::thread::sleep(Duration::from_secs_f64(want - spent));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn recv_frame(&mut self) -> crate::Result<Vec<u8>> {
+        let mut hdr = [0u8; 4];
+        self.sock
+            .read_exact(&mut hdr)
+            .map_err(|e| crate::error::anyhow!("frame header recv: {e}"))?;
+        let len = u32::from_le_bytes(hdr) as usize;
+        crate::error::ensure!(
+            len <= MAX_FRAME_BYTES,
+            "incoming frame claims {len} bytes (cap {MAX_FRAME_BYTES}) — corrupt stream?"
+        );
+        let mut payload = vec![0u8; len];
+        self.sock
+            .read_exact(&mut payload)
+            .map_err(|e| crate::error::anyhow!("frame body recv ({len} bytes): {e}"))?;
+        Ok(payload)
+    }
+
+    /// Split into independently borrowable send/receive halves (clones
+    /// of one underlying socket, so `shutdown` on either kills both).
+    pub fn into_duplex(self) -> crate::Result<Duplex> {
+        let rx = self
+            .sock
+            .try_clone()
+            .map_err(|e| crate::error::anyhow!("socket clone for duplex: {e}"))?;
+        Ok(Duplex { tx: self, rx: FrameStream::new(rx) })
+    }
+}
+
+impl Drop for FrameStream {
+    fn drop(&mut self) {
+        self.sock.shutdown();
+    }
+}
+
+/// Full-duplex link to one peer: `tx` and `rx` are clones of the same
+/// socket, so a sender thread and a receiver thread can use them
+/// concurrently without aliasing one `&mut`.
+pub struct Duplex {
+    pub tx: FrameStream,
+    pub rx: FrameStream,
+}
+
+impl Duplex {
+    pub fn shutdown(&self) {
+        self.tx.shutdown();
+    }
+}
+
+/// A connectable address: `tcp://host:port` or `uds:///path`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    Tcp(SocketAddr),
+    Uds(PathBuf),
+}
+
+impl Endpoint {
+    pub fn uri(&self) -> String {
+        match self {
+            Endpoint::Tcp(a) => format!("tcp://{a}"),
+            Endpoint::Uds(p) => format!("uds://{}", p.display()),
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Endpoint> {
+        if let Some(addr) = s.strip_prefix("tcp://") {
+            return Ok(Endpoint::Tcp(
+                addr.parse().map_err(|e| crate::error::anyhow!("endpoint '{s}': {e}"))?,
+            ));
+        }
+        if let Some(path) = s.strip_prefix("uds://") {
+            crate::error::ensure!(!path.is_empty(), "endpoint '{s}': empty socket path");
+            return Ok(Endpoint::Uds(PathBuf::from(path)));
+        }
+        crate::error::bail!("endpoint '{s}': expected tcp://host:port or uds:///path");
+    }
+
+    /// Connect, retrying until `deadline` (the peer's listener may not
+    /// be up yet). The returned stream has `timeout` applied to reads
+    /// and writes, and `TCP_NODELAY` set on TCP.
+    pub fn connect(&self, deadline: Instant, timeout: Duration) -> crate::Result<FrameStream> {
+        let mut last = String::new();
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                crate::error::bail!("connect {}: deadline exceeded ({last})", self.uri());
+            }
+            let attempt = match self {
+                Endpoint::Tcp(addr) => {
+                    TcpStream::connect_timeout(addr, remaining.min(timeout)).and_then(|s| {
+                        s.set_nodelay(true)?;
+                        Ok(Socket::Tcp(s))
+                    })
+                }
+                Endpoint::Uds(path) => UnixStream::connect(path).map(Socket::Uds),
+            };
+            match attempt {
+                Ok(sock) => {
+                    sock.set_timeouts(timeout)
+                        .map_err(|e| crate::error::anyhow!("connect {}: {e}", self.uri()))?;
+                    return Ok(FrameStream::new(sock));
+                }
+                Err(e) => {
+                    last = e.to_string();
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+    }
+}
+
+/// A bound, non-blocking listener with deadline-aware `accept`. The UDS
+/// variant owns its socket file and removes it on drop.
+pub enum Listener {
+    Tcp(TcpListener),
+    Uds { listener: UnixListener, path: PathBuf },
+}
+
+impl Listener {
+    /// Bind a loopback TCP listener on an OS-assigned port.
+    pub fn bind_tcp() -> crate::Result<Listener> {
+        let l = TcpListener::bind(("127.0.0.1", 0))
+            .map_err(|e| crate::error::anyhow!("tcp bind: {e}"))?;
+        l.set_nonblocking(true)?;
+        Ok(Listener::Tcp(l))
+    }
+
+    /// Bind a Unix-domain listener at `dir/name`.
+    pub fn bind_uds_in(dir: &Path, name: &str) -> crate::Result<Listener> {
+        let path = dir.join(name);
+        let l = UnixListener::bind(&path)
+            .map_err(|e| crate::error::anyhow!("uds bind {}: {e}", path.display()))?;
+        l.set_nonblocking(true)?;
+        Ok(Listener::Uds { listener: l, path })
+    }
+
+    pub fn endpoint(&self) -> crate::Result<Endpoint> {
+        Ok(match self {
+            Listener::Tcp(l) => Endpoint::Tcp(l.local_addr()?),
+            Listener::Uds { path, .. } => Endpoint::Uds(path.clone()),
+        })
+    }
+
+    /// Accept one connection, polling until `deadline`. The accepted
+    /// stream is switched back to blocking with `timeout` applied.
+    pub fn accept(&self, deadline: Instant, timeout: Duration) -> crate::Result<FrameStream> {
+        loop {
+            let accepted = match self {
+                Listener::Tcp(l) => match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nodelay(true)?;
+                        Some(Socket::Tcp(s))
+                    }
+                    Err(e) if retryable(&e) => None,
+                    Err(e) => crate::error::bail!("tcp accept: {e}"),
+                },
+                Listener::Uds { listener, .. } => match listener.accept() {
+                    Ok((s, _)) => Some(Socket::Uds(s)),
+                    Err(e) if retryable(&e) => None,
+                    Err(e) => crate::error::bail!("uds accept: {e}"),
+                },
+            };
+            match accepted {
+                Some(sock) => {
+                    match &sock {
+                        Socket::Tcp(s) => s.set_nonblocking(false)?,
+                        Socket::Uds(s) => s.set_nonblocking(false)?,
+                    }
+                    sock.set_timeouts(timeout)?;
+                    return Ok(FrameStream::new(sock));
+                }
+                None => {
+                    if Instant::now() >= deadline {
+                        crate::error::bail!(
+                            "accept on {} timed out",
+                            self.endpoint().map(|e| e.uri()).unwrap_or_default()
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
+    }
+}
+
+fn retryable(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::Interrupted)
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Uds { path, .. } = self {
+            drop(std::fs::remove_file(path));
+        }
+    }
+}
+
+/// A fresh private directory under the system temp dir for UDS socket
+/// files (`pid` + a process-wide counter keep concurrent runs apart).
+pub fn scratch_dir(tag: &str) -> crate::Result<PathBuf> {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!("sshuff-{tag}-{}-{n}", std::process::id()));
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| crate::error::anyhow!("scratch dir {}: {e}", dir.display()))?;
+    Ok(dir)
+}
+
+/// A connected pair of loopback TCP sockets (listener on port 0,
+/// `TCP_NODELAY`, timeouts applied) — the in-process transport's links.
+pub fn pair_tcp(timeout: Duration) -> crate::Result<(Socket, Socket)> {
+    let l = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = l.local_addr()?;
+    let a = TcpStream::connect(addr)?;
+    let (b, _) = l.accept()?;
+    a.set_nodelay(true)?;
+    b.set_nodelay(true)?;
+    let (a, b) = (Socket::Tcp(a), Socket::Tcp(b));
+    a.set_timeouts(timeout)?;
+    b.set_timeouts(timeout)?;
+    Ok((a, b))
+}
+
+/// A connected `socketpair(2)` of Unix-domain sockets with timeouts.
+pub fn pair_uds(timeout: Duration) -> crate::Result<(Socket, Socket)> {
+    let (a, b) = UnixStream::pair()?;
+    let (a, b) = (Socket::Uds(a), Socket::Uds(b));
+    a.set_timeouts(timeout)?;
+    b.set_timeouts(timeout)?;
+    Ok((a, b))
+}
+
+/// This rank's full mesh of peer links: `links[p]` is the duplex to
+/// rank `p` (`None` for self). Built by dialing every lower rank and
+/// accepting from every higher one, so exactly one connection exists
+/// per unordered pair.
+pub struct Mesh {
+    rank: usize,
+    n: usize,
+    links: Vec<Option<Duplex>>,
+}
+
+impl Mesh {
+    pub fn connect(
+        rank: usize,
+        n: usize,
+        listener: &Listener,
+        peers: &[Endpoint],
+        deadline: Instant,
+        timeout: Duration,
+    ) -> crate::Result<Mesh> {
+        crate::error::ensure!(rank < n, "rank {rank} out of range for {n} ranks");
+        crate::error::ensure!(peers.len() == n, "need {n} peer endpoints, got {}", peers.len());
+        let mut links: Vec<Option<Duplex>> = (0..n).map(|_| None).collect();
+        for (p, peer) in peers.iter().enumerate().take(rank) {
+            let mut s = peer.connect(deadline, timeout)?;
+            s.send_frame(&(rank as u32).to_le_bytes())?;
+            links[p] = Some(s.into_duplex()?);
+        }
+        for _ in rank + 1..n {
+            let mut s = listener.accept(deadline, timeout)?;
+            let hello = s.recv_frame()?;
+            crate::error::ensure!(hello.len() == 4, "mesh hello: bad frame");
+            let p = u32::from_le_bytes([hello[0], hello[1], hello[2], hello[3]]) as usize;
+            crate::error::ensure!(
+                p > rank && p < n && links[p].is_none(),
+                "mesh hello: unexpected rank {p} (I am {rank} of {n})"
+            );
+            links[p] = Some(s.into_duplex()?);
+        }
+        Ok(Mesh { rank, n, links })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    /// Pace every outgoing link to `bps` bytes/second (0 disables).
+    pub fn set_pace_bps(&mut self, bps: f64) {
+        for link in self.links.iter_mut().flatten() {
+            link.tx.set_pace_bps(bps);
+        }
+    }
+
+    /// Mutably borrow the send half toward `to` and the receive half
+    /// from `from` at once (they may be the same peer — the halves are
+    /// distinct fields of one [`Duplex`]).
+    pub fn tx_rx(&mut self, to: usize, from: usize) -> (&mut FrameStream, &mut FrameStream) {
+        assert!(to < self.n && from < self.n, "peer out of range");
+        assert!(to != self.rank && from != self.rank, "no self link in mesh");
+        if to == from {
+            let d = self.links[to].as_mut().expect("mesh link");
+            (&mut d.tx, &mut d.rx)
+        } else {
+            let (lo, hi) = (to.min(from), to.max(from));
+            let (head, tail) = self.links.split_at_mut(hi);
+            let a = head[lo].as_mut().expect("mesh link");
+            let b = tail[0].as_mut().expect("mesh link");
+            if to < from {
+                (&mut a.tx, &mut b.rx)
+            } else {
+                (&mut b.tx, &mut a.rx)
+            }
+        }
+    }
+
+    /// Shut every link down — peers blocked on us fail fast.
+    pub fn shutdown_all(&self) {
+        for link in self.links.iter().flatten() {
+            link.shutdown();
+        }
+    }
+}
+
+impl Drop for Mesh {
+    fn drop(&mut self) {
+        self.shutdown_all();
+    }
+}
+
+/// Parent side of the rendezvous: accept `n` worker hellos, then
+/// broadcast the address table. Returns the control connections in
+/// rank order.
+pub fn serve_rendezvous(
+    listener: &Listener,
+    n: usize,
+    deadline: Instant,
+    timeout: Duration,
+) -> crate::Result<Vec<FrameStream>> {
+    let mut conns: Vec<Option<FrameStream>> = (0..n).map(|_| None).collect();
+    let mut uris: Vec<String> = vec![String::new(); n];
+    for _ in 0..n {
+        let mut s = listener.accept(deadline, timeout)?;
+        let f = s.recv_frame()?;
+        crate::error::ensure!(
+            f.len() >= 5 && f[0] == MSG_HELLO,
+            "rendezvous: expected HELLO, got {} bytes",
+            f.len()
+        );
+        let rank = u32::from_le_bytes([f[1], f[2], f[3], f[4]]) as usize;
+        crate::error::ensure!(rank < n, "rendezvous: rank {rank} out of range");
+        crate::error::ensure!(conns[rank].is_none(), "rendezvous: duplicate rank {rank}");
+        uris[rank] = String::from_utf8(f[5..].to_vec())
+            .map_err(|_| crate::error::anyhow!("rendezvous: non-utf8 listen uri"))?;
+        conns[rank] = Some(s);
+    }
+    let mut table = vec![MSG_TABLE];
+    table.extend_from_slice(&(n as u32).to_le_bytes());
+    for uri in &uris {
+        table.extend_from_slice(&(uri.len() as u16).to_le_bytes());
+        table.extend_from_slice(uri.as_bytes());
+    }
+    for c in conns.iter_mut() {
+        c.as_mut().expect("all ranks checked in").send_frame(&table)?;
+    }
+    Ok(conns.into_iter().map(|c| c.expect("all ranks checked in")).collect())
+}
+
+/// Worker side of the rendezvous: connect to the parent, announce our
+/// rank + peer-listener URI, receive the address table. Returns the
+/// parent control connection plus every rank's endpoint.
+pub fn join_rendezvous(
+    parent: &Endpoint,
+    rank: usize,
+    listen_uri: &str,
+    deadline: Instant,
+    timeout: Duration,
+) -> crate::Result<(FrameStream, Vec<Endpoint>)> {
+    let mut s = parent.connect(deadline, timeout)?;
+    let mut hello = vec![MSG_HELLO];
+    hello.extend_from_slice(&(rank as u32).to_le_bytes());
+    hello.extend_from_slice(listen_uri.as_bytes());
+    s.send_frame(&hello)?;
+    let t = s.recv_frame()?;
+    crate::error::ensure!(
+        t.len() >= 5 && t[0] == MSG_TABLE,
+        "rendezvous: expected TABLE, got {} bytes",
+        t.len()
+    );
+    let n = u32::from_le_bytes([t[1], t[2], t[3], t[4]]) as usize;
+    let mut peers = Vec::with_capacity(n);
+    let mut at = 5usize;
+    for _ in 0..n {
+        crate::error::ensure!(at + 2 <= t.len(), "rendezvous: truncated TABLE");
+        let len = u16::from_le_bytes([t[at], t[at + 1]]) as usize;
+        at += 2;
+        crate::error::ensure!(at + len <= t.len(), "rendezvous: truncated TABLE entry");
+        let uri = std::str::from_utf8(&t[at..at + len])
+            .map_err(|_| crate::error::anyhow!("rendezvous: non-utf8 TABLE entry"))?;
+        peers.push(Endpoint::parse(uri)?);
+        at += len;
+    }
+    Ok((s, peers))
+}
+
+/// FNV-1a 64-bit hash — the harness's cheap cross-process checksum.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// [`fnv64`] over the little-endian bytes of an f32 slice.
+pub fn fnv64_f32s(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// What one rank worker sends back to the parent: per-collective wall
+/// times and result checksums, plus its aggregate wire accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerReport {
+    pub rank: u32,
+    pub ok: bool,
+    pub err: String,
+    /// Post-codec bytes this rank placed on the wire (send side).
+    pub wire_bytes: u64,
+    /// Pre-codec bytes this rank serialized for sending.
+    pub raw_bytes: u64,
+    /// Ring steps this rank participated in.
+    pub steps: u32,
+    /// Measured wall seconds, one entry per collective run.
+    pub walls_s: Vec<f64>,
+    /// [`fnv64_f32s`] of each collective's result on this rank.
+    pub checksums: Vec<u64>,
+}
+
+impl WorkerReport {
+    pub fn new(rank: u32) -> WorkerReport {
+        WorkerReport {
+            rank,
+            ok: false,
+            err: String::new(),
+            wire_bytes: 0,
+            raw_bytes: 0,
+            steps: 0,
+            walls_s: Vec::new(),
+            checksums: Vec::new(),
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![MSG_REPORT];
+        out.extend_from_slice(&self.rank.to_le_bytes());
+        out.push(self.ok as u8);
+        out.extend_from_slice(&(self.err.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.err.as_bytes());
+        out.extend_from_slice(&self.wire_bytes.to_le_bytes());
+        out.extend_from_slice(&self.raw_bytes.to_le_bytes());
+        out.extend_from_slice(&self.steps.to_le_bytes());
+        out.extend_from_slice(&(self.walls_s.len() as u32).to_le_bytes());
+        for w in &self.walls_s {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.checksums.len() as u32).to_le_bytes());
+        for c in &self.checksums {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(frame: &[u8]) -> crate::Result<WorkerReport> {
+        let mut r = Reader { buf: frame, at: 0 };
+        crate::error::ensure!(r.u8()? == MSG_REPORT, "worker report: bad tag");
+        let rank = r.u32()?;
+        let ok = r.u8()? != 0;
+        let err_len = r.u32()? as usize;
+        let err = String::from_utf8(r.take(err_len)?.to_vec())
+            .map_err(|_| crate::error::anyhow!("worker report: non-utf8 error text"))?;
+        let wire_bytes = r.u64()?;
+        let raw_bytes = r.u64()?;
+        let steps = r.u32()?;
+        let n_walls = r.u32()? as usize;
+        crate::error::ensure!(n_walls <= 1024, "worker report: absurd wall count {n_walls}");
+        let mut walls_s = Vec::with_capacity(n_walls);
+        for _ in 0..n_walls {
+            walls_s.push(f64::from_le_bytes(r.take(8)?.try_into().expect("8 bytes")));
+        }
+        let n_sums = r.u32()? as usize;
+        crate::error::ensure!(n_sums <= 1024, "worker report: absurd checksum count {n_sums}");
+        let mut checksums = Vec::with_capacity(n_sums);
+        for _ in 0..n_sums {
+            checksums.push(r.u64()?);
+        }
+        crate::error::ensure!(r.at == frame.len(), "worker report: trailing bytes");
+        Ok(WorkerReport { rank, ok, err, wire_bytes, raw_bytes, steps, walls_s, checksums })
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        crate::error::ensure!(self.at + n <= self.buf.len(), "worker report: truncated");
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn secs(s: u64) -> Duration {
+        Duration::from_secs(s)
+    }
+
+    #[test]
+    fn frames_round_trip_over_a_socketpair() {
+        let (a, b) = pair_uds(secs(5)).unwrap();
+        let mut tx = FrameStream::new(a);
+        let mut rx = FrameStream::new(b);
+        tx.send_frame(b"hello").unwrap();
+        tx.send_frame(&[]).unwrap();
+        tx.send_frame(&[7u8; 70_000]).unwrap();
+        assert_eq!(rx.recv_frame().unwrap(), b"hello");
+        assert_eq!(rx.recv_frame().unwrap(), Vec::<u8>::new());
+        assert_eq!(rx.recv_frame().unwrap(), vec![7u8; 70_000]);
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_an_error_not_an_alloc() {
+        use std::io::Write as _;
+        let (a, b) = pair_uds(secs(5)).unwrap();
+        let mut raw = a;
+        raw.write_all(&(u32::MAX).to_le_bytes()).unwrap();
+        let mut rx = FrameStream::new(b);
+        let err = rx.recv_frame().unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+    }
+
+    #[test]
+    fn recv_on_dead_peer_is_a_clean_error() {
+        let (a, b) = pair_uds(secs(5)).unwrap();
+        drop(FrameStream::new(a)); // drop shuts the pair down
+        let mut rx = FrameStream::new(b);
+        assert!(rx.recv_frame().is_err());
+    }
+
+    #[test]
+    fn recv_timeout_is_a_clean_error() {
+        let (_a, b) = pair_uds(Duration::from_millis(50)).unwrap();
+        let mut rx = FrameStream::new(b);
+        let t0 = Instant::now();
+        assert!(rx.recv_frame().is_err());
+        assert!(t0.elapsed() < secs(5), "timeout must fire promptly");
+    }
+
+    #[test]
+    fn endpoint_uri_round_trips() {
+        for uri in ["tcp://127.0.0.1:8080", "uds:///tmp/x.sock"] {
+            assert_eq!(Endpoint::parse(uri).unwrap().uri(), uri);
+        }
+        assert!(Endpoint::parse("http://nope").is_err());
+        assert!(Endpoint::parse("uds://").is_err());
+        assert!(Endpoint::parse("tcp://not-an-addr").is_err());
+    }
+
+    #[test]
+    fn pacing_slows_sends_to_the_target_rate() {
+        let (a, b) = pair_uds(secs(5)).unwrap();
+        let mut tx = FrameStream::new(a);
+        let mut rx = FrameStream::new(b);
+        tx.set_pace_bps(1e6); // 1 MB/s
+        let t0 = Instant::now();
+        tx.send_frame(&[0u8; 100_000]).unwrap(); // ~0.1 s at 1 MB/s
+        let took = t0.elapsed().as_secs_f64();
+        assert!(took >= 0.08, "paced send finished in {took}s");
+        assert_eq!(rx.recv_frame().unwrap().len(), 100_000);
+    }
+
+    #[test]
+    fn worker_report_encodes_and_decodes() {
+        let mut r = WorkerReport::new(3);
+        r.ok = true;
+        r.err = String::new();
+        r.wire_bytes = 123_456;
+        r.raw_bytes = 654_321;
+        r.steps = 14;
+        r.walls_s = vec![0.25, 1.5];
+        r.checksums = vec![fnv64(b"abc"), 0, u64::MAX];
+        let decoded = WorkerReport::decode(&r.encode()).unwrap();
+        assert_eq!(decoded, r);
+        assert!(WorkerReport::decode(&r.encode()[..10]).is_err());
+        assert!(WorkerReport::decode(&[MSG_BYE]).is_err());
+    }
+
+    #[test]
+    fn fnv64_is_stable_and_order_sensitive() {
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv64(b"ab"), fnv64(b"ba"));
+        assert_eq!(fnv64_f32s(&[1.0, 2.0]), fnv64(&[0, 0, 128, 63, 0, 0, 0, 64]));
+    }
+
+    fn mesh_over(listeners: Vec<Listener>) {
+        let n = listeners.len();
+        let peers: Vec<Endpoint> = listeners.iter().map(|l| l.endpoint().unwrap()).collect();
+        let deadline = Instant::now() + secs(20);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = listeners
+                .iter()
+                .enumerate()
+                .map(|(r, l)| {
+                    let peers = peers.clone();
+                    s.spawn(move || {
+                        let mut mesh =
+                            Mesh::connect(r, n, l, &peers, deadline, secs(10)).unwrap();
+                        // ring exchange: send to next, receive from prev
+                        let to = (r + 1) % n;
+                        let from = (r + n - 1) % n;
+                        let (tx, rx) = mesh.tx_rx(to, from);
+                        tx.send_frame(&[r as u8; 5]).unwrap();
+                        assert_eq!(rx.recv_frame().unwrap(), vec![from as u8; 5]);
+                        // reversed ring: send to prev, receive from next
+                        let (tx, rx) = mesh.tx_rx(from, to);
+                        tx.send_frame(&[100 + r as u8]).unwrap();
+                        assert_eq!(rx.recv_frame().unwrap(), vec![100 + to as u8]);
+                        // same-peer send+recv: ranks 0 and 1 exchange
+                        // directly (duplex halves split cleanly)
+                        if r <= 1 {
+                            let peer = 1 - r;
+                            let (tx, rx) = mesh.tx_rx(peer, peer);
+                            tx.send_frame(&[200 + r as u8]).unwrap();
+                            assert_eq!(rx.recv_frame().unwrap(), vec![200 + peer as u8]);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn mesh_connects_full_duplex_over_uds() {
+        let dir = scratch_dir("mesh-test").unwrap();
+        let listeners: Vec<Listener> = (0..3)
+            .map(|r| Listener::bind_uds_in(&dir, &format!("peer-{r}.sock")).unwrap())
+            .collect();
+        mesh_over(listeners);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mesh_connects_full_duplex_over_tcp() {
+        let listeners: Vec<Listener> = (0..3).map(|_| Listener::bind_tcp().unwrap()).collect();
+        mesh_over(listeners);
+    }
+
+    #[test]
+    fn rendezvous_hands_every_worker_the_full_table() {
+        let n = 3;
+        let parent = Listener::bind_tcp().unwrap();
+        let parent_ep = parent.endpoint().unwrap();
+        let deadline = Instant::now() + secs(20);
+        std::thread::scope(|s| {
+            let server = s.spawn(|| {
+                let mut conns = serve_rendezvous(&parent, n, deadline, secs(10)).unwrap();
+                for (r, c) in conns.iter_mut().enumerate() {
+                    let rep = WorkerReport::decode(&c.recv_frame().unwrap()).unwrap();
+                    assert_eq!(rep.rank as usize, r);
+                    c.send_frame(&[MSG_BYE]).unwrap();
+                }
+            });
+            let workers: Vec<_> = (0..n)
+                .map(|r| {
+                    let parent_ep = parent_ep.clone();
+                    s.spawn(move || {
+                        let uri = format!("tcp://127.0.0.1:{}", 9000 + r);
+                        let (mut c, peers) =
+                            join_rendezvous(&parent_ep, r, &uri, deadline, secs(10)).unwrap();
+                        assert_eq!(peers.len(), n);
+                        assert_eq!(peers[r].uri(), uri);
+                        c.send_frame(&WorkerReport::new(r as u32).encode()).unwrap();
+                        assert_eq!(c.recv_frame().unwrap(), vec![MSG_BYE]);
+                    })
+                })
+                .collect();
+            for w in workers {
+                w.join().unwrap();
+            }
+            server.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn rendezvous_rejects_duplicate_ranks() {
+        let parent = Listener::bind_tcp().unwrap();
+        let parent_ep = parent.endpoint().unwrap();
+        let deadline = Instant::now() + secs(20);
+        std::thread::scope(|s| {
+            let server =
+                s.spawn(|| serve_rendezvous(&parent, 2, deadline, secs(10)).map(|_| ()));
+            // both claim rank 0; the server must reject the second. The
+            // first worker blocks awaiting the table until the server
+            // bails and its control socket drops — a clean Err, no hang.
+            let workers: Vec<_> = (0..2)
+                .map(|_| {
+                    let parent_ep = parent_ep.clone();
+                    s.spawn(move || {
+                        let _ =
+                            join_rendezvous(&parent_ep, 0, "tcp://127.0.0.1:1", deadline, secs(10));
+                    })
+                })
+                .collect();
+            let err = server.join().unwrap().unwrap_err().to_string();
+            assert!(err.contains("duplicate rank"), "{err}");
+            for w in workers {
+                w.join().unwrap();
+            }
+        });
+    }
+}

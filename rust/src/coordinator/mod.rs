@@ -229,7 +229,7 @@ impl Coordinator {
         &self,
         fabric: &mut crate::fabric::Fabric,
         grads: &[Vec<f32>],
-    ) -> (Vec<Vec<f32>>, crate::collectives::CollectiveReport) {
+    ) -> crate::Result<(Vec<Vec<f32>>, crate::collectives::CollectiveReport)> {
         let codec = self.collective_codec();
         let mut transport = crate::collectives::SimTransport::new(fabric);
         let mut engine = crate::collectives::CollectiveEngine::new(
@@ -237,12 +237,12 @@ impl Coordinator {
             &codec,
             crate::collectives::DEFAULT_PIPELINE_DEPTH,
         );
-        let out = engine.all_reduce(grads);
+        let out = engine.all_reduce(grads)?;
         let rep = engine.take_report();
         self.metrics.counter("coordinator_collective_wire_bytes").add(rep.wire_bytes);
         self.metrics.counter("coordinator_collective_raw_bytes").add(rep.raw_bytes);
         self.metrics.counter("coordinator_collective_steps").add(rep.steps as u64);
-        (out, rep)
+        Ok((out, rep))
     }
 
     /// Submit a job; blocks when the queue is full (backpressure).
@@ -512,7 +512,7 @@ mod tests {
 
         // no codebooks published yet: raw-escape fallback, still exact
         let mut f0 = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (out0, rep0) = c.all_reduce_batch(&mut f0, &grads);
+        let (out0, rep0) = c.all_reduce_batch(&mut f0, &grads).unwrap();
         for r in 0..n {
             assert_eq!(out0[r], want, "rank {r} pre-build");
         }
@@ -525,7 +525,7 @@ mod tests {
         c.rebuild_codebooks();
 
         let mut f1 = Fabric::new(n, LinkModel::DIE_TO_DIE);
-        let (out1, rep1) = c.all_reduce_batch(&mut f1, &grads);
+        let (out1, rep1) = c.all_reduce_batch(&mut f1, &grads).unwrap();
         for r in 0..n {
             assert_eq!(out1[r], want, "rank {r} post-build");
         }

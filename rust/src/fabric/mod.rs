@@ -22,6 +22,14 @@ impl LinkModel {
     pub const DIE_TO_DIE: LinkModel = LinkModel { bandwidth_bps: 25e9, latency_s: 1e-6 };
     /// Datacenter NIC-ish: 12.5 GB/s (100 Gb), 5 µs.
     pub const DATACENTER: LinkModel = LinkModel { bandwidth_bps: 12.5e9, latency_s: 5e-6 };
+    /// Commodity 10 GbE: 1.25 GB/s, 10 µs — the bandwidth-starved regime
+    /// where wire compression pays for itself most clearly.
+    pub const TEN_GBE: LinkModel = LinkModel { bandwidth_bps: 1.25e9, latency_s: 10e-6 };
+
+    /// NIC-style link from a Gbit/s rating (5 µs per-message latency).
+    pub fn from_gbits(gbits: f64) -> LinkModel {
+        LinkModel { bandwidth_bps: gbits * 1e9 / 8.0, latency_s: 5e-6 }
+    }
 
     /// Time to move `bytes` over this link under the alpha-beta model
     /// `t = α + bytes / β`. A zero-byte message (an empty collective
@@ -141,6 +149,19 @@ mod tests {
         assert!((l.transfer_time(0) - 1e-6).abs() < 1e-15);
         // 1 MB at 1 GB/s = 1 ms (+ 1 us)
         assert!((l.transfer_time(1_000_000) - 1.001e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nic_presets_and_from_gbits() {
+        // 10 GbE carries 1.25 GB/s; from_gbits agrees with the preset
+        assert_eq!(LinkModel::TEN_GBE.bandwidth_bps, 1.25e9);
+        assert_eq!(LinkModel::from_gbits(10.0).bandwidth_bps, 1.25e9);
+        assert_eq!(LinkModel::from_gbits(100.0).bandwidth_bps, LinkModel::DATACENTER.bandwidth_bps);
+        // slower link, strictly slower transfer
+        assert!(
+            LinkModel::TEN_GBE.transfer_time(1 << 20)
+                > LinkModel::DATACENTER.transfer_time(1 << 20)
+        );
     }
 
     #[test]

@@ -6,16 +6,22 @@
 //! repro sweep      [--model ...] [--dtypes bf16,e4m3,...]
 //! repro compress   [--file PATH] [--codec huffman-1stage|huffman-3stage|lz77] [--threads N]
 //! repro collective [--ranks N] [--elems N] [--link-gbps G] [--pipeline-depth D]
-//!                  [--transport sim|channel] [--codec ...] [--threads N]
+//!                  [--transport sim|channel|tcp|uds] [--codec ...] [--threads N]
+//! repro collective --spawn N [--transport tcp|uds] [--elems N] [--nodes X --locals Y]
+//!                  (N worker OS processes mesh up over real sockets, run every
+//!                   collective, and are verified against the sim reference)
+//! repro bench      [--suite all|collectives|encoder|transport] [--quick] [--check]
+//!                  (runs the JSON-emitting benches; --check gates against the
+//!                   committed BENCH_*.json baselines)
 //! repro stats      (coordinator metrics demo over a synthetic stream)
 //! ```
 
 use sshuff::baselines::{baseline_codecs, Codec, SingleStageCodec};
 use sshuff::cli::{Args, Cli, CommandSpec, OptSpec};
-use sshuff::collectives::{ChannelTransport, CollectiveEngine, SimTransport};
+use sshuff::collectives::{spawn, CollectiveEngine, TransportKind};
 use sshuff::coordinator::{CompressJob, Coordinator};
 use sshuff::experiments::{capture_cached, figures, measure_shards, CaptureSpec};
-use sshuff::fabric::{Fabric, LinkModel};
+use sshuff::fabric::LinkModel;
 use sshuff::parallel::EncoderPool;
 use sshuff::prng::Pcg32;
 use sshuff::runtime::Engine;
@@ -40,6 +46,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args),
         Some("compress") => cmd_compress(&args),
         Some("collective") => cmd_collective(&args),
+        Some("bench") => cmd_bench(&args),
         Some("stats") => cmd_stats(&args),
         _ => {
             eprintln!("{}", cli.usage());
@@ -142,11 +149,69 @@ fn build_cli() -> Cli {
                     OptSpec {
                         name: "transport",
                         takes_value: true,
-                        help: "sim|channel (default sim)",
+                        help: "sim|channel|tcp|uds (default sim; with --spawn: tcp|uds)",
+                    },
+                    OptSpec {
+                        name: "spawn",
+                        takes_value: true,
+                        help: "spawn N worker OS processes over a real wire and verify \
+                               every collective against the sim reference",
+                    },
+                    OptSpec {
+                        name: "nodes",
+                        takes_value: true,
+                        help: "hierarchy: node count (default 2 if N even, else 1)",
+                    },
+                    OptSpec {
+                        name: "locals",
+                        takes_value: true,
+                        help: "hierarchy: ranks per node (nodes*locals must equal N)",
+                    },
+                    seed.clone(),
+                    OptSpec {
+                        name: "pace-gbps",
+                        takes_value: true,
+                        help: "spawn: outgoing pacing per link in Gbit/s (0 = unpaced)",
+                    },
+                    OptSpec {
+                        name: "timeout-s",
+                        takes_value: true,
+                        help: "spawn: hard deadline for the whole run (default 120)",
+                    },
+                    OptSpec {
+                        name: "worker-rank",
+                        takes_value: true,
+                        help: "internal: run as spawned worker rank R",
+                    },
+                    OptSpec {
+                        name: "rendezvous",
+                        takes_value: true,
+                        help: "internal: parent rendezvous URI (tcp://… or uds://…)",
                     },
                     codec,
                     threads,
                     layout,
+                ],
+            },
+            CommandSpec {
+                name: "bench",
+                about: "run the JSON-emitting bench suites, refresh BENCH_*.json",
+                opts: vec![
+                    OptSpec {
+                        name: "suite",
+                        takes_value: true,
+                        help: "all|collectives|encoder|transport (default all)",
+                    },
+                    OptSpec {
+                        name: "quick",
+                        takes_value: false,
+                        help: "CI sizes (sets SSHUFF_BENCH_QUICK=1)",
+                    },
+                    OptSpec {
+                        name: "check",
+                        takes_value: false,
+                        help: "gate fresh results against the BENCH_*.json committed at HEAD",
+                    },
                 ],
             },
             CommandSpec {
@@ -277,6 +342,14 @@ fn cmd_compress(args: &Args) -> sshuff::Result<()> {
 }
 
 fn cmd_collective(args: &Args) -> sshuff::Result<()> {
+    // Re-exec'ed worker processes and the `--spawn` parent take the
+    // multi-process path; everything else runs in-process below.
+    if args.opt("worker-rank").is_some() {
+        return cmd_collective_worker(args);
+    }
+    if args.opt("spawn").is_some() {
+        return cmd_collective_spawn(args);
+    }
     let workers: usize = args.opt_parse("workers", 8).map_err(sshuff::error::Error::msg)?;
     let ranks: usize = args.opt_parse("ranks", workers).map_err(sshuff::error::Error::msg)?;
     let elems: usize = args.opt_parse("elems", 1 << 16).map_err(sshuff::error::Error::msg)?;
@@ -285,12 +358,7 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
     let gbps: f64 = args.opt_parse("link-gbps", 25.0).map_err(sshuff::error::Error::msg)?;
     let depth: usize =
         args.opt_parse("pipeline-depth", 4).map_err(sshuff::error::Error::msg)?;
-    let transport = args.opt_or("transport", "sim");
-    if !matches!(transport, "sim" | "channel") {
-        return Err(sshuff::error::Error::msg(format!(
-            "--transport must be sim or channel, got '{transport}'"
-        )));
-    }
+    let kind = TransportKind::parse(args.opt_or("transport", "sim"))?;
     let link = LinkModel { bandwidth_bps: gbps * 1e9, latency_s: 1e-6 };
     let inputs: Vec<Vec<f32>> = (0..ranks)
         .map(|r| {
@@ -316,7 +384,7 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
     let only = args.opt("codec");
     let mut table = sshuff::benchkit::Table::new(&[
         "codec", "wire MB", "gain", "sim ms", "lockstep ms", "pipelined ms", "overlap",
-        "compute ms", "exposed ms", "wall ms",
+        "compute ms", "wire wall ms", "wall ms",
     ]);
     for c in &codecs {
         if let Some(name) = only {
@@ -324,18 +392,11 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
                 continue;
             }
         }
-        let rep = if transport == "channel" {
-            let mut tr = ChannelTransport::new(ranks, link);
-            let mut eng = CollectiveEngine::new(&mut tr, c.as_ref(), depth);
-            eng.all_reduce(&inputs);
-            eng.take_report()
-        } else {
-            let mut fabric = Fabric::new(ranks, link);
-            let mut tr = SimTransport::new(&mut fabric);
-            let mut eng = CollectiveEngine::new(&mut tr, c.as_ref(), depth);
-            eng.all_reduce(&inputs);
-            eng.take_report()
-        };
+        let mut tr = kind.build(ranks, link)?;
+        let mut eng = CollectiveEngine::new(tr.as_mut(), c.as_ref(), depth);
+        let out = eng.all_reduce(&inputs)?;
+        assert!(out.windows(2).all(|w| w[0] == w[1]), "{}: ranks disagree", c.name());
+        let rep = eng.take_report();
         let t = rep.timeline;
         table.row(&[
             c.name().to_string(),
@@ -346,15 +407,184 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
             format!("{:.3}", t.pipelined_s * 1e3),
             format!("{:.2}x", t.overlap_gain()),
             format!("{:.3}", t.compute_s * 1e3),
-            format!("{:.3}", t.exposed_s * 1e3),
+            format!("{:.3}", t.wire_wall_s * 1e3),
             format!("{:.1}", t.wall_s * 1e3),
         ]);
     }
     println!(
         "pipelined ring all-reduce: {ranks} ranks x {elems} f32, {gbps} GB/s links, \
-         depth {depth}, transport {transport}"
+         depth {depth}, transport {kind}"
     );
     println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_collective_worker(args: &Args) -> sshuff::Result<()> {
+    let rank: usize = args.opt_parse("worker-rank", 0).map_err(sshuff::error::Error::msg)?;
+    let ranks: usize = args.opt_parse("ranks", 2).map_err(sshuff::error::Error::msg)?;
+    let rendezvous = args
+        .opt("rendezvous")
+        .ok_or_else(|| sshuff::error::Error::msg("--worker-rank requires --rendezvous"))?
+        .to_string();
+    let elems: usize = args.opt_parse("elems", 1 << 14).map_err(sshuff::error::Error::msg)?;
+    let (dn, dl) = spawn::SpawnConfig::default_hierarchy(ranks);
+    let nodes: usize = args.opt_parse("nodes", dn).map_err(sshuff::error::Error::msg)?;
+    let locals: usize = args.opt_parse("locals", dl).map_err(sshuff::error::Error::msg)?;
+    let seed: u64 = args.opt_parse("seed", 7u64).map_err(sshuff::error::Error::msg)?;
+    let pace_gbps: f64 = args.opt_parse("pace-gbps", 0.0).map_err(sshuff::error::Error::msg)?;
+    let timeout_s: f64 = args.opt_parse("timeout-s", 60.0).map_err(sshuff::error::Error::msg)?;
+    spawn::run_worker(&spawn::WorkerConfig {
+        rank,
+        ranks,
+        rendezvous,
+        elems,
+        nodes,
+        locals,
+        seed,
+        pace_gbps,
+        timeout: std::time::Duration::from_secs_f64(timeout_s),
+    })
+}
+
+fn cmd_collective_spawn(args: &Args) -> sshuff::Result<()> {
+    let ranks: usize = args.opt_parse("spawn", 4).map_err(sshuff::error::Error::msg)?;
+    let kind = TransportKind::parse(args.opt_or("transport", "uds"))?;
+    let quick = std::env::var("SSHUFF_BENCH_QUICK").is_ok();
+    let elems: usize = args
+        .opt_parse("elems", if quick { 1 << 12 } else { 1 << 14 })
+        .map_err(sshuff::error::Error::msg)?;
+    let (dn, dl) = spawn::SpawnConfig::default_hierarchy(ranks);
+    let nodes: usize = args.opt_parse("nodes", dn).map_err(sshuff::error::Error::msg)?;
+    let locals: usize = args.opt_parse("locals", dl).map_err(sshuff::error::Error::msg)?;
+    let seed: u64 = args.opt_parse("seed", 7u64).map_err(sshuff::error::Error::msg)?;
+    let pace_gbps: f64 = args.opt_parse("pace-gbps", 0.0).map_err(sshuff::error::Error::msg)?;
+    let timeout_s: f64 = args.opt_parse("timeout-s", 120.0).map_err(sshuff::error::Error::msg)?;
+    spawn::run_spawn(&spawn::SpawnConfig {
+        ranks,
+        kind,
+        elems,
+        nodes,
+        locals,
+        seed,
+        pace_gbps,
+        timeout: std::time::Duration::from_secs_f64(timeout_s),
+    })?;
+    Ok(())
+}
+
+/// The bench suites the `bench` subcommand knows about:
+/// (suite name, `--bench` target, JSON artifact at the repo root).
+const BENCH_SUITES: [(&str, &str, &str); 3] = [
+    ("collectives", "collective_pipeline", "BENCH_collectives.json"),
+    ("encoder", "encoder_latency", "BENCH_encoder.json"),
+    ("transport", "collective_wallclock", "BENCH_transport.json"),
+];
+
+fn cmd_bench(args: &Args) -> sshuff::Result<()> {
+    let suite = args.opt_or("suite", "all");
+    let check = args.has_flag("check");
+    let quick = args.has_flag("quick");
+    // The binary lives in target/, but benches are driven through cargo
+    // against the workspace this binary was built from.
+    let root = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/.."));
+    let selected: Vec<_> =
+        BENCH_SUITES.iter().filter(|(name, _, _)| suite == "all" || suite == *name).collect();
+    if selected.is_empty() {
+        return Err(sshuff::error::Error::msg(format!(
+            "--suite must be all, collectives, encoder, or transport, got '{suite}'"
+        )));
+    }
+    for (name, bench, json) in selected {
+        let baseline = if check { baseline_records(root, json) } else { Vec::new() };
+        let mut cmd = std::process::Command::new("cargo");
+        cmd.arg("bench")
+            .arg("--manifest-path")
+            .arg(root.join("rust/Cargo.toml"))
+            .arg("--bench")
+            .arg(bench);
+        if quick {
+            cmd.env("SSHUFF_BENCH_QUICK", "1");
+        }
+        let status = cmd.status()?;
+        if !status.success() {
+            return Err(sshuff::error::Error::msg(format!(
+                "cargo bench --bench {bench} failed: {status}"
+            )));
+        }
+        if check {
+            let fresh = std::fs::read_to_string(root.join(json))?;
+            let fresh = sshuff::benchkit::parse_records(&fresh)
+                .map_err(|e| sshuff::error::Error::msg(format!("{json}: {e}")))?;
+            gate_against_baseline(name, &baseline, &fresh)?;
+        }
+    }
+    Ok(())
+}
+
+/// The suite's records as committed at HEAD. A missing or unparseable
+/// baseline (first run, fresh clone without history) means record-only.
+fn baseline_records(
+    root: &std::path::Path,
+    json: &str,
+) -> Vec<(String, Vec<(String, f64)>)> {
+    let out = std::process::Command::new("git")
+        .arg("-C")
+        .arg(root)
+        .arg("show")
+        .arg(format!("HEAD:{json}"))
+        .output();
+    match out {
+        Ok(o) if o.status.success() => String::from_utf8(o.stdout)
+            .ok()
+            .and_then(|s| sshuff::benchkit::parse_records(&s).ok())
+            .unwrap_or_default(),
+        _ => Vec::new(),
+    }
+}
+
+/// Regression gate: every baseline record must still exist, and its
+/// higher-is-better fields must stay above half the committed value —
+/// loose enough for shared-runner noise, tight enough to catch a real
+/// cliff. Time-like fields are tracked in the JSON but not gated (CI
+/// machines vary too much for absolute latencies).
+fn gate_against_baseline(
+    suite: &str,
+    baseline: &[(String, Vec<(String, f64)>)],
+    fresh: &[(String, Vec<(String, f64)>)],
+) -> sshuff::Result<()> {
+    const HIGHER_IS_BETTER: [&str; 4] = ["throughput_mbps", "overlap_gain", "gain", "speedup"];
+    const TOLERANCE: f64 = 0.5;
+    if baseline.is_empty() {
+        println!("bench[{suite}]: no committed baseline — recorded fresh results only");
+        return Ok(());
+    }
+    let mut gated = 0usize;
+    for (name, base_fields) in baseline {
+        let Some((_, fresh_fields)) = fresh.iter().find(|(n, _)| n == name) else {
+            return Err(sshuff::error::Error::msg(format!(
+                "bench[{suite}]: baseline record '{name}' missing from the fresh run"
+            )));
+        };
+        for (field, base) in base_fields {
+            if !HIGHER_IS_BETTER.contains(&field.as_str()) || *base <= 0.0 {
+                continue;
+            }
+            let Some((_, now)) = fresh_fields.iter().find(|(f, _)| f == field) else {
+                continue;
+            };
+            if *now < TOLERANCE * base {
+                return Err(sshuff::error::Error::msg(format!(
+                    "bench[{suite}] regression: {name}.{field} = {now:.3} fell below \
+                     {TOLERANCE} x committed baseline {base:.3}"
+                )));
+            }
+            gated += 1;
+        }
+    }
+    println!(
+        "bench[{suite}]: {} records, {gated} gated fields within {TOLERANCE}x of baseline",
+        baseline.len()
+    );
     Ok(())
 }
 

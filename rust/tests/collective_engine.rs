@@ -100,7 +100,7 @@ fn engine_wire_bytes_bit_identical_to_legacy_lockstep_path() {
             let mut f_legacy = Fabric::new(n, LinkModel::DIE_TO_DIE);
             let (out_legacy, wire_legacy) = legacy_all_reduce(&mut f_legacy, codec.as_ref(), &xs);
             let mut f_engine = Fabric::new(n, LinkModel::DIE_TO_DIE);
-            let (out_engine, rep) = all_reduce(&mut f_engine, codec.as_ref(), &xs);
+            let (out_engine, rep) = all_reduce(&mut f_engine, codec.as_ref(), &xs).unwrap();
             assert_eq!(out_engine, out_legacy, "{} n={n}: results", codec.name());
             assert_eq!(rep.wire_bytes, wire_legacy, "{} n={n}: wire bytes", codec.name());
             // the per-link traffic pattern is identical too
@@ -133,13 +133,13 @@ fn prop_pipelined_all_reduce_bit_exact_on_awkward_shapes_both_transports() {
                 let mut fabric = Fabric::new(n, LinkModel::DIE_TO_DIE);
                 let mut sim = SimTransport::new(&mut fabric);
                 let mut eng = CollectiveEngine::new(&mut sim, &ss, depth);
-                let out = eng.all_reduce(&xs);
+                let out = eng.all_reduce(&xs).unwrap();
                 for (r, got) in out.iter().enumerate() {
                     assert_eq!(got, &want, "sim n={n} len={len} depth={depth} rank {r}");
                 }
                 let mut chan = ChannelTransport::new(n, LinkModel::DIE_TO_DIE);
                 let mut eng = CollectiveEngine::new(&mut chan, &ss, depth);
-                let out = eng.all_reduce(&xs);
+                let out = eng.all_reduce(&xs).unwrap();
                 for (r, got) in out.iter().enumerate() {
                     assert_eq!(got, &want, "channel n={n} len={len} depth={depth} rank {r}");
                 }
@@ -160,11 +160,11 @@ fn prop_pipelined_reduce_scatter_bit_exact_on_awkward_shapes_both_transports() {
             let mut fabric = Fabric::new(n, LinkModel::DIE_TO_DIE);
             let mut sim = SimTransport::new(&mut fabric);
             let mut eng = CollectiveEngine::new(&mut sim, &ss, 4);
-            let rs_sim = eng.reduce_scatter(&xs);
+            let rs_sim = eng.reduce_scatter(&xs).unwrap();
 
             let mut chan = ChannelTransport::new(n, LinkModel::DIE_TO_DIE);
             let mut eng = CollectiveEngine::new(&mut chan, &ss, 4);
-            let rs_chan = eng.reduce_scatter(&xs);
+            let rs_chan = eng.reduce_scatter(&xs).unwrap();
 
             for (out, transport) in [(&rs_sim, "sim"), (&rs_chan, "channel")] {
                 assert_eq!(out.len(), n, "{transport} n={n} len={len}");
@@ -187,7 +187,7 @@ fn all_gather_and_all_to_all_empty_chunks_round_trip_both_transports() {
     // zero-length contributions and ragged all_to_all with empty cells
     let empty: Vec<Vec<f32>> = (0..n).map(|_| Vec::new()).collect();
     let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-    let (ag, _) = all_gather_wire(&mut f, &RawCodec, &empty, WireFormat::F32);
+    let (ag, _) = all_gather_wire(&mut f, &RawCodec, &empty, WireFormat::F32).unwrap();
     assert!(ag.iter().all(|v| v.is_empty()));
 
     let a2a_in: Vec<Vec<Vec<f32>>> = (0..n)
@@ -198,10 +198,10 @@ fn all_gather_and_all_to_all_empty_chunks_round_trip_both_transports() {
         })
         .collect();
     let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-    let (want, _) = all_to_all(&mut f, &RawCodec, &a2a_in);
+    let (want, _) = all_to_all(&mut f, &RawCodec, &a2a_in).unwrap();
     let mut chan = ChannelTransport::new(n, LinkModel::DIE_TO_DIE);
     let mut eng = CollectiveEngine::new(&mut chan, &RawCodec, 4);
-    let got = eng.all_to_all(&a2a_in);
+    let got = eng.all_to_all(&a2a_in).unwrap();
     assert_eq!(got, want);
     for d in 0..n {
         for r in 0..n {
@@ -220,7 +220,7 @@ fn timeline_overlap_beats_lockstep_at_scale() {
     let mut fabric = Fabric::new(n, LinkModel::DIE_TO_DIE);
     let mut sim = SimTransport::new(&mut fabric);
     let mut eng = CollectiveEngine::new(&mut sim, &ss, 4);
-    let out = eng.all_reduce(&xs);
+    let out = eng.all_reduce(&xs).unwrap();
     let rep = eng.take_report();
     assert!(out.windows(2).all(|w| w[0] == w[1]));
     let t = rep.timeline;

@@ -264,22 +264,22 @@ fn collectives_handle_tiny_and_ragged_sizes() {
     let n = 5;
     let inputs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; 3]).collect();
     let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-    let (out, _) = all_reduce(&mut f, &RawCodec, &inputs);
+    let (out, _) = all_reduce(&mut f, &RawCodec, &inputs).unwrap();
     let want: f32 = (0..n).map(|r| r as f32).sum();
     for r in 0..n {
         assert_eq!(out[r], vec![want; 3]);
     }
     let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-    let (rs, _) = reduce_scatter(&mut f, &RawCodec, &inputs);
+    let (rs, _) = reduce_scatter(&mut f, &RawCodec, &inputs).unwrap();
     assert_eq!(rs.iter().map(|c| c.len()).sum::<usize>(), 3);
     let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-    let (ag, _) = all_gather(&mut f, &RawCodec, &inputs);
+    let (ag, _) = all_gather(&mut f, &RawCodec, &inputs).unwrap();
     assert_eq!(ag[0].len(), 15);
     // all_to_all with empty chunks
     let a2a_in: Vec<Vec<Vec<f32>>> =
         (0..n).map(|r| (0..n).map(|d| if d == 0 { vec![] } else { vec![(r + d) as f32] }).collect()).collect();
     let mut f = Fabric::new(n, LinkModel::DIE_TO_DIE);
-    let (a2a, _) = all_to_all(&mut f, &RawCodec, &a2a_in);
+    let (a2a, _) = all_to_all(&mut f, &RawCodec, &a2a_in).unwrap();
     assert!(a2a[0].iter().all(|c| c.is_empty()));
 }
 

@@ -111,9 +111,9 @@ fn compressed_all_reduce_equals_uncompressed_through_coordinator_books() {
     let ss = SingleStageCodec::with_fixed(mgr.registry.clone(), id);
 
     let mut f1 = Fabric::new(n, LinkModel::DATACENTER);
-    let (plain, rep_raw) = all_reduce(&mut f1, &RawCodec, &inputs);
+    let (plain, rep_raw) = all_reduce(&mut f1, &RawCodec, &inputs).unwrap();
     let mut f2 = Fabric::new(n, LinkModel::DATACENTER);
-    let (compressed, rep_ss) = all_reduce(&mut f2, &ss, &inputs);
+    let (compressed, rep_ss) = all_reduce(&mut f2, &ss, &inputs).unwrap();
     assert_eq!(plain, compressed, "compression must not change the reduction");
     assert!(rep_ss.wire_bytes < rep_raw.wire_bytes);
     assert!(rep_ss.sim_time_s < rep_raw.sim_time_s);

@@ -508,7 +508,8 @@ fn prop_collectives_sum_preserved_under_compression() {
             let want = all_reduce_reference(inputs);
             for codec in [&RawCodec as &dyn Codec, &ThreeStage] {
                 let mut fabric = Fabric::new(n, LinkModel::DIE_TO_DIE);
-                let (out, _) = all_reduce(&mut fabric, codec, inputs);
+                let (out, _) = all_reduce(&mut fabric, codec, inputs)
+                    .map_err(|e| format!("{} errored: {e}", codec.name()))?;
                 for (r, got) in out.iter().enumerate() {
                     if got != &want {
                         return Err(format!("{} rank {r} mismatch", codec.name()));

@@ -1,0 +1,236 @@
+//! Cross-transport differential suite: the four collectives must
+//! produce identical values AND identical wire accounting on every
+//! transport — deterministic simulation, thread-per-rank channels, and
+//! the real socket wires (loopback TCP, Unix socketpairs). Plus the
+//! failure side: a rank that dies mid-collective must surface as a
+//! clean `Err` on every transport, never a panic or a hang.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use sshuff::baselines::{Codec, RawCodec, ThreeStage};
+use sshuff::collectives::{
+    hierarchical_all_reduce_on, wire, ChannelTransport, CollectiveEngine, CollectiveReport,
+    Hierarchy, TransportKind, UdsTransport, WireFormat, DEFAULT_PIPELINE_DEPTH,
+};
+use sshuff::fabric::LinkModel;
+use sshuff::prng::Pcg32;
+
+fn inputs(n: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|r| Pcg32::substream(13, r as u64).normal_f32s(len, 1e-3)).collect()
+}
+
+/// What rank r sends to each destination in all_to_all: slices of its
+/// own input vector (ragged when n does not divide len).
+fn a2a_inputs(xs: &[Vec<f32>]) -> Vec<Vec<Vec<f32>>> {
+    let n = xs.len();
+    xs.iter()
+        .map(|mine| {
+            (0..n)
+                .map(|d| {
+                    let per = mine.len() / n;
+                    let lo = d * per;
+                    let hi = if d + 1 == n { mine.len() } else { lo + per };
+                    mine[lo..hi].to_vec()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+struct Run {
+    ar: Vec<Vec<f32>>,
+    rs: Vec<Vec<f32>>,
+    ag: Vec<Vec<f32>>,
+    aa: Vec<Vec<Vec<f32>>>,
+    report: CollectiveReport,
+}
+
+fn run_all(kind: TransportKind, codec: &dyn Codec, xs: &[Vec<f32>]) -> Run {
+    let mut tr = kind.build(xs.len(), LinkModel::DIE_TO_DIE).unwrap();
+    let mut eng = CollectiveEngine::new(tr.as_mut(), codec, DEFAULT_PIPELINE_DEPTH);
+    let ar = eng.all_reduce(xs).unwrap();
+    let rs = eng.reduce_scatter(xs).unwrap();
+    let ag = eng.all_gather_wire(xs, WireFormat::F32).unwrap();
+    let aa = eng.all_to_all(&a2a_inputs(xs)).unwrap();
+    Run { ar, rs, ag, aa, report: eng.take_report() }
+}
+
+#[test]
+fn every_transport_matches_sim_bit_for_bit() {
+    let xs = inputs(4, 257); // ragged on purpose
+    for codec in [&RawCodec as &dyn Codec, &ThreeStage] {
+        let want = run_all(TransportKind::Sim, codec, &xs);
+        for kind in [TransportKind::Channel, TransportKind::Tcp, TransportKind::Uds] {
+            let got = run_all(kind, codec, &xs);
+            let tag = format!("{kind}/{}", codec.name());
+            assert_eq!(got.ar, want.ar, "{tag}: all_reduce values");
+            assert_eq!(got.rs, want.rs, "{tag}: reduce_scatter values");
+            assert_eq!(got.ag, want.ag, "{tag}: all_gather values");
+            assert_eq!(got.aa, want.aa, "{tag}: all_to_all values");
+            // same schedules, same codec, same frames: the wire itself
+            // must be bit-identical, not just the results
+            assert_eq!(got.report.wire_bytes, want.report.wire_bytes, "{tag}: wire bytes");
+            assert_eq!(got.report.raw_bytes, want.report.raw_bytes, "{tag}: raw bytes");
+            assert_eq!(got.report.steps, want.report.steps, "{tag}: steps");
+        }
+    }
+}
+
+#[test]
+fn hierarchical_matches_across_transports() {
+    let h = Hierarchy {
+        nodes: 2,
+        locals: 2,
+        intra: LinkModel::DIE_TO_DIE,
+        inter: LinkModel::DATACENTER,
+    };
+    let xs = inputs(4, 101);
+    let (want, wrep) =
+        hierarchical_all_reduce_on(&h, TransportKind::Sim, &ThreeStage, &RawCodec, &xs).unwrap();
+    for kind in [TransportKind::Channel, TransportKind::Tcp, TransportKind::Uds] {
+        let (got, grep) =
+            hierarchical_all_reduce_on(&h, kind, &ThreeStage, &RawCodec, &xs).unwrap();
+        assert_eq!(got, want, "{kind}: hierarchical values");
+        assert_eq!(
+            grep.total_wire_bytes(),
+            wrep.total_wire_bytes(),
+            "{kind}: hierarchical wire bytes"
+        );
+    }
+}
+
+/// Encodes normally until the `nth` call, then panics — one rank dying
+/// mid-collective.
+struct DieOnNthEncode {
+    calls: AtomicUsize,
+    nth: usize,
+}
+
+impl Codec for DieOnNthEncode {
+    fn name(&self) -> &'static str {
+        "die-on-nth-encode"
+    }
+    fn encode(&self, data: &[u8]) -> Vec<u8> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) + 1 == self.nth {
+            panic!("injected rank death");
+        }
+        data.to_vec()
+    }
+    fn decode(&self, wire: &[u8]) -> sshuff::Result<Vec<u8>> {
+        Ok(wire.to_vec())
+    }
+}
+
+/// Decodes normally until the `nth` call, then errors — a rank bailing
+/// on a poisoned frame.
+struct FailOnNthDecode {
+    calls: AtomicUsize,
+    nth: usize,
+}
+
+impl Codec for FailOnNthDecode {
+    fn name(&self) -> &'static str {
+        "fail-on-nth-decode"
+    }
+    fn encode(&self, data: &[u8]) -> Vec<u8> {
+        data.to_vec()
+    }
+    fn decode(&self, wire: &[u8]) -> sshuff::Result<Vec<u8>> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) + 1 == self.nth {
+            return Err(sshuff::error::Error::msg("injected decode failure"));
+        }
+        Ok(wire.to_vec())
+    }
+}
+
+#[test]
+fn channel_transport_surfaces_a_dead_rank_as_err_not_panic_or_hang() {
+    // rank thread 1's first encode panics mid-step; its channel ends
+    // drop during unwind, so every peer blocked on it unwinds too and
+    // the engine returns a clean Err from safe ground
+    let xs = inputs(4, 64);
+    let codec = DieOnNthEncode { calls: AtomicUsize::new(0), nth: 2 };
+    let mut tr = ChannelTransport::new(4, LinkModel::DIE_TO_DIE);
+    let mut eng = CollectiveEngine::new(&mut tr, &codec, DEFAULT_PIPELINE_DEPTH);
+    let err = eng.all_reduce(&xs).expect_err("a dead rank must fail the collective");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("panicked") || msg.contains("link down"),
+        "error should name the dead rank or downed link: {msg}"
+    );
+}
+
+#[test]
+fn socket_transport_surfaces_a_dead_rank_as_err_not_panic_or_hang() {
+    // over real sockets the panicking sender never writes its frame;
+    // the peer's read blocks until the wire timeout trips, so cap it
+    // (healthy exchanges in this binary finish in milliseconds)
+    std::env::set_var("SSHUFF_WIRE_TIMEOUT_S", "2");
+    let xs = inputs(3, 64);
+    let codec = DieOnNthEncode { calls: AtomicUsize::new(0), nth: 2 };
+    let mut tr = UdsTransport::new(3, LinkModel::DIE_TO_DIE).unwrap();
+    let mut eng = CollectiveEngine::new(&mut tr, &codec, DEFAULT_PIPELINE_DEPTH);
+    let t0 = std::time::Instant::now();
+    let err = eng.all_reduce(&xs).expect_err("a dead rank must fail the collective");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(20),
+        "failure must surface via shutdown/timeout, not the 30 s default hang"
+    );
+    let msg = format!("{err:#}");
+    assert!(!msg.is_empty());
+}
+
+#[test]
+fn decode_failure_is_an_err_on_sim_and_channel() {
+    let xs = inputs(3, 64);
+    for kind in [TransportKind::Sim, TransportKind::Channel] {
+        let codec = FailOnNthDecode { calls: AtomicUsize::new(0), nth: 2 };
+        let mut tr = kind.build(3, LinkModel::DIE_TO_DIE).unwrap();
+        let mut eng = CollectiveEngine::new(tr.as_mut(), &codec, DEFAULT_PIPELINE_DEPTH);
+        let err = eng.all_reduce(&xs).expect_err("decode failure must fail the collective");
+        assert!(format!("{err:#}").contains("decode"), "{kind}: {err:#}");
+    }
+}
+
+#[test]
+fn shutdown_unblocks_a_reader_parked_on_the_other_half() {
+    // Drop/shutdown hygiene at the frame layer: the duplex halves share
+    // one socket, so shutting down the tx half kicks a thread blocked
+    // in recv_frame on the rx half — this is what guarantees engine
+    // teardown never leaves a worker parked on a dead wire.
+    let (a, _b) = wire::pair_uds(std::time::Duration::from_secs(30)).unwrap();
+    let duplex = wire::FrameStream::new(a).into_duplex().unwrap();
+    let wire::Duplex { tx, mut rx } = duplex;
+    let t0 = std::time::Instant::now();
+    let reader = std::thread::spawn(move || rx.recv_frame());
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    tx.shutdown();
+    let res = reader.join().expect("reader thread must not panic");
+    assert!(res.is_err(), "recv on a shut-down socket must error");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(10),
+        "shutdown must unblock the reader immediately, not via timeout"
+    );
+}
+
+#[test]
+#[ignore = "spawns real worker OS processes; run with `cargo test -- --ignored`"]
+fn spawn_harness_runs_all_collectives_over_real_processes() {
+    for transport in ["uds", "tcp"] {
+        let status = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args([
+                "collective",
+                "--spawn",
+                "4",
+                "--transport",
+                transport,
+                "--elems",
+                "2048",
+                "--timeout-s",
+                "90",
+            ])
+            .status()
+            .expect("launch repro");
+        assert!(status.success(), "spawn run over {transport} failed");
+    }
+}
