@@ -11,7 +11,7 @@
 
 use crate::huffman::CodeBook;
 use crate::parallel::EncoderPool;
-use crate::singlestage::{MultiFrame, Registry};
+use crate::singlestage::{CodecConfig, MultiFrame, PlaneTransform, Registry};
 use crate::stats::{Histogram256, NUM_SYMBOLS};
 use std::collections::HashMap;
 
@@ -288,10 +288,39 @@ impl SingleStageCodec {
         Self::new(registry, vec![id])
     }
 
+    /// [`new`](Self::new) with a full [`CodecConfig`]: thread count,
+    /// payload layout, plane transform, and chunk length in one place —
+    /// the builder-style `with_*` methods below cover the same knobs
+    /// one at a time.
+    pub fn with_config(registry: Registry, candidates: Vec<u8>, config: &CodecConfig) -> Self {
+        assert!(!candidates.is_empty());
+        assert!(config.chunk_len > 0 && config.chunk_len <= u32::MAX as usize);
+        Self {
+            registry,
+            candidates,
+            pool: EncoderPool::with_config(config),
+            chunk_len: config.chunk_len,
+        }
+    }
+
     /// Override the encoder thread count (default: all cores).
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.pool = EncoderPool::new(threads).with_layout(self.pool.layout());
+        self.pool = EncoderPool::new(threads)
+            .with_layout(self.pool.layout())
+            .with_planes(self.pool.planes());
         self
+    }
+
+    /// Override the plane transform (default: none). Changes the wire
+    /// bytes; decode accepts any mix of plane and byte-stream frames.
+    pub fn with_planes(mut self, planes: PlaneTransform) -> Self {
+        self.pool = self.pool.with_planes(planes);
+        self
+    }
+
+    /// The plane transform this codec encodes with.
+    pub fn planes(&self) -> PlaneTransform {
+        self.pool.planes()
     }
 
     /// Override the per-chunk payload layout (default:
@@ -356,6 +385,22 @@ mod tests {
         let mut v = baseline_codecs();
         v.push(Box::new(SingleStageCodec::with_fixed(m.registry, id)));
         v
+    }
+
+    #[test]
+    fn singlestage_codec_config_plane_transforms_roundtrip() {
+        let mut m = CodebookManager::new(AvgPolicy::CumulativeMean);
+        let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+        m.observe_bytes(key, &skewed(7, 1 << 14));
+        let id = m.build(key).unwrap();
+        let data = skewed(8, 100_000);
+        for planes in [PlaneTransform::Bf16Split, PlaneTransform::E4m3Quad] {
+            let config = CodecConfig::new().with_planes(planes).with_threads(2);
+            let codec = SingleStageCodec::with_config(m.registry.clone(), vec![id], &config);
+            assert_eq!(codec.planes(), planes);
+            let wire = codec.encode(&data);
+            assert_eq!(codec.decode(&wire).unwrap(), data, "{}", planes.name());
+        }
     }
 
     #[test]

@@ -21,8 +21,8 @@ use std::time::Instant;
 
 use crate::metrics::{Counter, HistogramMetric, MetricsRegistry};
 use crate::singlestage::{
-    AvgPolicy, CodebookManager, DriftConfig, DriftMonitor, Frame, PayloadLayout,
-    SingleStageDecoder, SingleStageEncoder,
+    AvgPolicy, CodebookManager, CodecConfig, DriftConfig, DriftMonitor, Frame, PayloadLayout,
+    PlaneTransform, SingleStageDecoder, SingleStageEncoder,
 };
 use crate::stats::Histogram256;
 use crate::tensors::TensorKey;
@@ -79,6 +79,9 @@ pub struct Coordinator {
     /// Payload layout every worker encode and published collective
     /// codec uses (the coordinator picks the wire format for the fleet).
     layout: PayloadLayout,
+    /// Plane transform every worker encode and published collective
+    /// codec applies before entropy coding.
+    planes: PlaneTransform,
 }
 
 /// Bounded job queue depth per worker — the backpressure knob.
@@ -96,6 +99,21 @@ impl Coordinator {
         policy: AvgPolicy,
         layout: PayloadLayout,
     ) -> Coordinator {
+        Self::with_config(n_workers, policy, &CodecConfig::new().with_layout(layout))
+    }
+
+    /// [`new`](Coordinator::new) with a full [`CodecConfig`]: payload
+    /// layout plus plane transform, both applied fleet-wide by every
+    /// worker encode and the published collective codec. The config's
+    /// `threads` knob is ignored here — `n_workers` governs the
+    /// coordinator's own worker pool.
+    pub fn with_config(
+        n_workers: usize,
+        policy: AvgPolicy,
+        config: &CodecConfig,
+    ) -> Coordinator {
+        let layout = config.layout;
+        let planes = config.planes;
         assert!(n_workers >= 1);
         let metrics = MetricsRegistry::new();
         let table: Arc<RwLock<Arc<RoutingTable>>> =
@@ -120,8 +138,8 @@ impl Coordinator {
             );
             workers.push(std::thread::spawn(move || {
                 worker_loop(
-                    w, job_rx, result_tx, table, layout, frames, raw_frames, bytes_in, bytes_out,
-                    latency,
+                    w, job_rx, result_tx, table, layout, planes, frames, raw_frames, bytes_in,
+                    bytes_out, latency,
                 )
             }));
         }
@@ -136,12 +154,18 @@ impl Coordinator {
             in_flight: metrics.counter("coordinator_in_flight_submitted"),
             metrics,
             layout,
+            planes,
         }
     }
 
     /// The payload layout this coordinator's workers encode with.
     pub fn layout(&self) -> PayloadLayout {
         self.layout
+    }
+
+    /// The plane transform this coordinator's workers encode with.
+    pub fn planes(&self) -> PlaneTransform {
+        self.planes
     }
 
     /// Leader-side: fold an observed histogram into `key`'s average PMF.
@@ -161,7 +185,10 @@ impl Coordinator {
         mgr.build_all();
         let mut ids = HashMap::new();
         for key in crate::tensors::TensorKind::ALL.iter().flat_map(|&k| {
-            crate::tensors::DtypeTag::ALL.iter().map(move |&d| TensorKey::new(k, d))
+            crate::tensors::DtypeTag::ALL
+                .iter()
+                .chain(crate::tensors::DtypeTag::PLANES.iter())
+                .map(move |&d| TensorKey::new(k, d))
         }) {
             if let Some(id) = mgr.current_id(key) {
                 ids.insert(key, id);
@@ -217,8 +244,8 @@ impl Coordinator {
         if ids.is_empty() {
             ids.push(crate::singlestage::RAW_ID); // unregistered: every chunk escapes raw
         }
-        crate::baselines::SingleStageCodec::new(table.registry.clone(), ids)
-            .with_layout(self.layout)
+        let config = CodecConfig::new().with_layout(self.layout).with_planes(self.planes);
+        crate::baselines::SingleStageCodec::with_config(table.registry.clone(), ids, &config)
     }
 
     /// Route one batch gradient synchronization through the pipelined
@@ -303,6 +330,7 @@ fn worker_loop(
     result_tx: SyncSender<CompressResult>,
     table: Arc<RwLock<Arc<RoutingTable>>>,
     layout: PayloadLayout,
+    planes: PlaneTransform,
     frames: Counter,
     raw_frames: Counter,
     bytes_in: Counter,
@@ -320,7 +348,9 @@ fn worker_loop(
         };
         let snapshot = table.read().unwrap().clone();
         let t0 = Instant::now();
-        let mut enc = SingleStageEncoder::new(snapshot.registry.clone()).with_layout(layout);
+        let mut enc = SingleStageEncoder::new(snapshot.registry.clone())
+            .with_layout(layout)
+            .with_planes(planes);
         let frame = match snapshot.id_for(job.key) {
             Some(id) => enc.encode_with(id, &job.data),
             None => Frame::raw(&job.data),
@@ -421,6 +451,34 @@ mod tests {
                 assert_eq!(dec.decode(&r.frame).unwrap(), *orig, "{layout:?} seq {}", r.seq);
             }
         }
+    }
+
+    #[test]
+    fn coordinator_config_threads_plane_transform_to_workers() {
+        let config = CodecConfig::new().with_planes(PlaneTransform::Bf16Split);
+        let c = Coordinator::with_config(2, AvgPolicy::CumulativeMean, &config);
+        assert_eq!(c.planes(), PlaneTransform::Bf16Split);
+        c.observe_bytes(key(), &skewed(5, 1 << 14));
+        c.rebuild_codebooks();
+        let jobs: Vec<CompressJob> = (0..8)
+            .map(|seq| CompressJob { seq, key: key(), data: skewed(300 + seq, 8192) })
+            .collect();
+        let originals: Vec<Vec<u8>> = jobs.iter().map(|j| j.data.clone()).collect();
+        let results = c.encode_batch(jobs);
+        let dec = c.decoder();
+        let mut planes_seen = false;
+        for (r, orig) in results.iter().zip(&originals) {
+            planes_seen |= r.frame.header.id == crate::singlestage::PLANES_MARKER;
+            assert_eq!(dec.decode(&r.frame).unwrap(), *orig, "seq {}", r.seq);
+        }
+        assert!(planes_seen, "plane transform must reach worker frames");
+        // the published collective codec carries the same transform
+        assert_eq!(c.collective_codec().planes(), PlaneTransform::Bf16Split);
+        // plane dtype keys participate in routing snapshots
+        let pk = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16Hi);
+        c.observe_bytes(pk, &skewed(6, 1 << 13));
+        c.rebuild_codebooks();
+        assert!(c.routing_table().id_for(pk).is_some(), "plane dtype key must route");
     }
 
     #[test]

@@ -272,8 +272,8 @@ pub struct ShardMeasurements {
 /// auto scales would fabricate KL at power-of-two boundaries.
 pub fn measure_shards(cap: &KindCapture, dtype: DtypeTag, prev_hist: &Histogram256) -> ShardMeasurements {
     let scale = match dtype {
-        DtypeTag::Bf16 => None,
         DtypeTag::Mini(f) => Some(crate::tensors::tensor_log2_scale(&cap.shards, f)),
+        _ => None,
     };
     let streams: Vec<Vec<u8>> = cap
         .shards

@@ -14,6 +14,7 @@ use crate::bitio::BitReader;
 use crate::stats::{Histogram256, Pmf, NUM_SYMBOLS};
 
 pub mod kernel;
+pub mod quad;
 
 /// Byte size of the jump table ahead of a 4-way interleaved payload:
 /// the byte lengths of sub-streams 0..=2 as `u32` LE (sub-stream 3's

@@ -1,0 +1,239 @@
+//! Fixed **quad-length** canonical Huffman codes for e4m3-style
+//! streams (after "Quad Length Codes for Lossless Compression of
+//! e4m3", arXiv 2602.17849).
+//!
+//! Instead of deriving a free-form code from a tree, every symbol is
+//! assigned to one of exactly four **length classes**:
+//!
+//! | class | code length | capacity |
+//! |-------|-------------|----------|
+//! | 0     | 4 bits      | 6        |
+//! | 1     | 6 bits      | 20       |
+//! | 2     | 8 bits      | 30       |
+//! | 3     | 10 bits     | 200      |
+//!
+//! The capacities are chosen so the Kraft sum is exactly 1
+//! (`6/2^4 + 20/2^6 + 30/2^8 + 200/2^10 = 1`) and they cover all 256
+//! byte values (`6 + 20 + 30 + 200 = 256`), so the code is complete:
+//! every symbol has a codeword and no bit pattern is wasted. For e4m3
+//! tensors — whose exponent distribution is strongly peaked — the six
+//! 4-bit slots absorb the hottest codes and the 200 cold codes pay
+//! only 10 bits, which empirically lands within a few percent of the
+//! entropy bound while **bypassing tree construction entirely**:
+//! building the code is a single ranking pass over the histogram, and
+//! the wire form of the whole table is a 64-byte class map (2 bits per
+//! symbol) instead of a 128-byte length table.
+//!
+//! Because the maximum class length (10) is below the crate-wide
+//! [`MAX_CODE_LEN`](super::MAX_CODE_LEN) (12), the resulting
+//! [`CodeBook`] feeds the existing LUT [`Decoder`](super::Decoder)
+//! and every payload layout / decode kernel unchanged.
+//!
+//! ```
+//! use sshuff::dtype::MiniFormat;
+//! use sshuff::huffman::quad;
+//! use sshuff::stats::Histogram256;
+//!
+//! // Quantize a small activation-like f32 tensor to e4m3 codes...
+//! let values: Vec<f32> = (0..256).map(|i| ((i as f32) * 0.37).sin()).collect();
+//! let (codes, _scale) = MiniFormat::E4M3.quantize(&values);
+//! // ...rank its histogram into the four length classes and encode.
+//! let hist = Histogram256::from_bytes(&codes);
+//! let (book, class_map) = quad::quad_book(&hist);
+//! let (payload, bits) = book.encode(&codes);
+//! assert!(payload.len() < codes.len()); // beats the raw bytes
+//! // The 64-byte class map alone reconstructs the decoder.
+//! let back = quad::book_from_classes(&quad::unpack_classes(&class_map));
+//! let decoded = back.decoder().decode(&payload, codes.len());
+//! assert_eq!(decoded, codes);
+//! assert_eq!(bits, back.encoded_bits_for(&hist).unwrap());
+//! ```
+
+use crate::stats::Histogram256;
+
+use super::CodeBook;
+
+/// Code length (bits) of each quad class.
+pub const QUAD_LENGTHS: [u8; 4] = [4, 6, 8, 10];
+
+/// How many symbols each quad class holds. Sums to 256 with Kraft sum
+/// exactly 1: `6/16 + 20/64 + 30/256 + 200/1024 = 1`.
+pub const QUAD_CLASS_SIZES: [usize; 4] = [6, 20, 30, 200];
+
+/// Wire size of a packed class map: 2 bits per symbol x 256.
+pub const CLASS_MAP_BYTES: usize = 64;
+
+/// Assign every byte symbol to a quad class: rank by
+/// `(count desc, symbol asc)` and fill the classes in capacity order,
+/// so the most frequent symbols take the shortest codes and ties
+/// break deterministically.
+pub fn classify(hist: &Histogram256) -> [u8; 256] {
+    let mut order: [u8; 256] = [0; 256];
+    for (i, slot) in order.iter_mut().enumerate() {
+        *slot = i as u8;
+    }
+    order.sort_by_key(|&s| (std::cmp::Reverse(hist.counts[s as usize]), s));
+    let mut classes = [0u8; 256];
+    let mut rank = 0usize;
+    for (class, &capacity) in QUAD_CLASS_SIZES.iter().enumerate() {
+        for _ in 0..capacity {
+            classes[order[rank] as usize] = class as u8;
+            rank += 1;
+        }
+    }
+    classes
+}
+
+/// Pack a class map to its 2-bits-per-symbol wire form (symbol `4i+j`
+/// in bits `2j..2j+2` of byte `i`).
+pub fn pack_classes(classes: &[u8; 256]) -> [u8; CLASS_MAP_BYTES] {
+    let mut out = [0u8; CLASS_MAP_BYTES];
+    for (i, chunk) in classes.chunks_exact(4).enumerate() {
+        out[i] = chunk[0] | (chunk[1] << 2) | (chunk[2] << 4) | (chunk[3] << 6);
+    }
+    out
+}
+
+/// Inverse of [`pack_classes`]. Every 2-bit field is a valid class, so
+/// unpacking cannot fail — but the result may violate the class
+/// capacities if the bytes are corrupt, and [`book_from_classes`] on
+/// an over-full class assigns canonical codes wider than their class
+/// length (the Kraft sum exceeds 1). Decoders must gate on
+/// [`classes_valid`] first.
+pub fn unpack_classes(packed: &[u8; CLASS_MAP_BYTES]) -> [u8; 256] {
+    let mut classes = [0u8; 256];
+    for (i, &b) in packed.iter().enumerate() {
+        classes[4 * i] = b & 3;
+        classes[4 * i + 1] = (b >> 2) & 3;
+        classes[4 * i + 2] = (b >> 4) & 3;
+        classes[4 * i + 3] = b >> 6;
+    }
+    classes
+}
+
+/// Does a class assignment respect the exact quad capacities
+/// (6/20/30/200)? [`classify`] always produces a valid assignment;
+/// wire-decoded maps must pass this gate before
+/// [`book_from_classes`], because an over-full class breaks the
+/// prefix-code invariants the LUT decoder is built on.
+pub fn classes_valid(classes: &[u8; 256]) -> bool {
+    let mut counts = [0usize; 4];
+    for &c in classes.iter() {
+        counts[c as usize] += 1;
+    }
+    counts == QUAD_CLASS_SIZES
+}
+
+/// Canonical [`CodeBook`] for a class assignment (lengths are
+/// `QUAD_LENGTHS[class]`, codes assigned canonically).
+pub fn book_from_classes(classes: &[u8; 256]) -> CodeBook {
+    let mut lengths = [0u8; 256];
+    for (len, &class) in lengths.iter_mut().zip(classes.iter()) {
+        *len = QUAD_LENGTHS[class as usize];
+    }
+    CodeBook::from_lengths(lengths)
+}
+
+/// Build the quad book for a histogram in one ranking pass: returns
+/// the canonical [`CodeBook`] plus the packed 64-byte class map that
+/// reconstructs it on the decode side.
+pub fn quad_book(hist: &Histogram256) -> (CodeBook, [u8; CLASS_MAP_BYTES]) {
+    let classes = classify(hist);
+    (book_from_classes(&classes), pack_classes(&classes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_geometry_is_complete() {
+        assert_eq!(QUAD_CLASS_SIZES.iter().sum::<usize>(), 256);
+        // Kraft sum scaled by 2^10 must be exactly 2^10.
+        let kraft: u64 = QUAD_LENGTHS
+            .iter()
+            .zip(QUAD_CLASS_SIZES.iter())
+            .map(|(&len, &cap)| (cap as u64) << (10 - len as u32))
+            .sum();
+        assert_eq!(kraft, 1 << 10);
+    }
+
+    #[test]
+    fn classify_ranks_by_count_then_symbol() {
+        let mut hist = Histogram256::default();
+        hist.counts[7] = 100;
+        hist.counts[3] = 100;
+        hist.counts[200] = 50;
+        let classes = classify(&hist);
+        // the three observed symbols land in the 4-bit class...
+        assert_eq!(classes[3], 0);
+        assert_eq!(classes[7], 0);
+        assert_eq!(classes[200], 0);
+        // ...and the remaining 4-bit slots go to the smallest symbols.
+        assert_eq!(classes[0], 0);
+        assert_eq!(classes[1], 0);
+        assert_eq!(classes[2], 0);
+        assert_ne!(classes[4], 0);
+        // capacities are exactly respected
+        for (class, &cap) in QUAD_CLASS_SIZES.iter().enumerate() {
+            let n = classes.iter().filter(|&&c| c == class as u8).count();
+            assert_eq!(n, cap, "class {class}");
+        }
+    }
+
+    #[test]
+    fn class_map_packs_roundtrip() {
+        let mut hist = Histogram256::default();
+        for (i, c) in hist.counts.iter_mut().enumerate() {
+            *c = (i as u64 * 2654435761) % 1000;
+        }
+        let classes = classify(&hist);
+        assert_eq!(unpack_classes(&pack_classes(&classes)), classes);
+    }
+
+    #[test]
+    fn corrupt_class_maps_are_rejected() {
+        let classes = classify(&Histogram256::from_bytes(&[1, 2, 3]));
+        assert!(classes_valid(&classes));
+        // flipping any 2-bit field moves a symbol between classes, so
+        // the exact capacities can no longer all hold
+        let mut packed = pack_classes(&classes);
+        packed[0] ^= 0b11;
+        assert!(!classes_valid(&unpack_classes(&packed)));
+        let mut all_short = [0u8; 256];
+        all_short[0] = 0; // every symbol claims a 4-bit code
+        assert!(!classes_valid(&all_short));
+    }
+
+    #[test]
+    fn quad_book_is_complete_and_roundtrips() {
+        let data: Vec<u8> = (0..4096u32).map(|i| (i * i % 37) as u8).collect();
+        let hist = Histogram256::from_bytes(&data);
+        let (book, map) = quad_book(&hist);
+        assert_eq!(book.support(), 256, "quad code covers every byte");
+        assert_eq!(book.max_len(), 10);
+        // complete prefix code: Kraft sum scaled by 2^max_len is 2^10
+        assert_eq!(book.kraft_scaled(), 1 << 10);
+        let (payload, _bits) = book.encode(&data);
+        let rebuilt = book_from_classes(&unpack_classes(&map));
+        assert_eq!(rebuilt, book, "class map reconstructs the exact book");
+        assert_eq!(rebuilt.decoder().decode(&payload, data.len()), data);
+    }
+
+    #[test]
+    fn skewed_stream_beats_flat_byte_cost() {
+        // heavily peaked distribution: quad code must beat 8 bits/byte
+        let mut data = vec![0u8; 10_000];
+        for (i, b) in data.iter_mut().enumerate() {
+            *b = match i % 10 {
+                0..=5 => 0x38,
+                6..=8 => 0x3C,
+                _ => (i % 256) as u8,
+            };
+        }
+        let hist = Histogram256::from_bytes(&data);
+        let (book, _) = quad_book(&hist);
+        let bits = book.encoded_bits_for(&hist).unwrap();
+        assert!(bits < data.len() as u64 * 8);
+    }
+}

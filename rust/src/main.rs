@@ -5,12 +5,13 @@
 //! repro figures    [--model ...] [--steps N] [--shards N] [--fig 1|2|3|4|all]
 //! repro sweep      [--model ...] [--dtypes bf16,e4m3,...]
 //! repro compress   [--file PATH] [--codec huffman-1stage|huffman-3stage|lz77] [--threads N]
+//!                  [--layout legacy|interleaved4|...] [--planes none|bf16-split|e4m3-quad]
 //! repro collective [--ranks N] [--elems N] [--link-gbps G] [--pipeline-depth D]
 //!                  [--transport sim|channel|tcp|uds] [--codec ...] [--threads N]
 //! repro collective --spawn N [--transport tcp|uds] [--elems N] [--nodes X --locals Y]
 //!                  (N worker OS processes mesh up over real sockets, run every
 //!                   collective, and are verified against the sim reference)
-//! repro bench      [--suite all|collectives|encoder|transport] [--quick] [--check]
+//! repro bench      [--suite all|collectives|encoder|transport|dtype] [--quick] [--check]
 //!                  (runs the JSON-emitting benches; --check gates against the
 //!                   committed BENCH_*.json baselines)
 //! repro stats      (coordinator metrics demo over a synthetic stream)
@@ -25,7 +26,7 @@ use sshuff::fabric::LinkModel;
 use sshuff::parallel::EncoderPool;
 use sshuff::prng::Pcg32;
 use sshuff::runtime::Engine;
-use sshuff::singlestage::{AvgPolicy, CodebookManager, PayloadLayout};
+use sshuff::singlestage::{AvgPolicy, CodebookManager, PayloadLayout, PlaneTransform};
 use sshuff::stats::Histogram256;
 use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
 use sshuff::trainer::Trainer;
@@ -80,6 +81,11 @@ fn build_cli() -> Cli {
         help: "huffman-1stage payload layout: \
                legacy|interleaved4|interleaved8|interleaved16 (default interleaved4)",
     };
+    let planes = OptSpec {
+        name: "planes",
+        takes_value: true,
+        help: "huffman-1stage plane transform: none|bf16-split|e4m3-quad (default none)",
+    };
     Cli {
         bin: "repro",
         about: "Single-Stage Huffman Encoder for ML Compression — reproduction driver",
@@ -119,6 +125,7 @@ fn build_cli() -> Cli {
                     codec.clone(),
                     threads.clone(),
                     layout.clone(),
+                    planes.clone(),
                 ],
             },
             CommandSpec {
@@ -191,6 +198,7 @@ fn build_cli() -> Cli {
                     codec,
                     threads,
                     layout,
+                    planes,
                 ],
             },
             CommandSpec {
@@ -200,7 +208,7 @@ fn build_cli() -> Cli {
                     OptSpec {
                         name: "suite",
                         takes_value: true,
-                        help: "all|collectives|encoder|transport (default all)",
+                        help: "all|collectives|encoder|transport|dtype (default all)",
                     },
                     OptSpec {
                         name: "quick",
@@ -231,6 +239,15 @@ fn layout_from(args: &Args) -> sshuff::Result<PayloadLayout> {
     PayloadLayout::parse(name).ok_or_else(|| {
         sshuff::error::Error::msg(format!(
             "--layout must be legacy, interleaved4, interleaved8, or interleaved16, got '{name}'"
+        ))
+    })
+}
+
+fn planes_from(args: &Args) -> sshuff::Result<PlaneTransform> {
+    let name = args.opt_or("planes", PlaneTransform::default().name());
+    PlaneTransform::parse(name).ok_or_else(|| {
+        sshuff::error::Error::msg(format!(
+            "--planes must be none, bf16-split, or e4m3-quad, got '{name}'"
         ))
     })
 }
@@ -309,6 +326,7 @@ fn cmd_compress(args: &Args) -> sshuff::Result<()> {
     let threads: usize =
         args.opt_parse("threads", EncoderPool::auto().threads()).map_err(sshuff::error::Error::msg)?;
     let layout = layout_from(args)?;
+    let planes = planes_from(args)?;
     let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
     let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
     mgr.observe_bytes(key, &data);
@@ -317,7 +335,8 @@ fn cmd_compress(args: &Args) -> sshuff::Result<()> {
     codecs.push(Box::new(
         SingleStageCodec::with_fixed(mgr.registry.clone(), id)
             .with_threads(threads)
-            .with_layout(layout),
+            .with_layout(layout)
+            .with_planes(planes),
     ));
     let only = args.opt("codec");
     let mut table = sshuff::benchkit::Table::new(&["codec", "in", "out", "ratio", "saved%"]);
@@ -375,11 +394,13 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
     let threads: usize =
         args.opt_parse("threads", EncoderPool::auto().threads()).map_err(sshuff::error::Error::msg)?;
     let layout = layout_from(args)?;
+    let planes = planes_from(args)?;
     let mut codecs: Vec<Box<dyn Codec>> = baseline_codecs();
     codecs.push(Box::new(
         SingleStageCodec::with_fixed(mgr.registry.clone(), id)
             .with_threads(threads)
-            .with_layout(layout),
+            .with_layout(layout)
+            .with_planes(planes),
     ));
     let only = args.opt("codec");
     let mut table = sshuff::benchkit::Table::new(&[
@@ -474,10 +495,11 @@ fn cmd_collective_spawn(args: &Args) -> sshuff::Result<()> {
 
 /// The bench suites the `bench` subcommand knows about:
 /// (suite name, `--bench` target, JSON artifact at the repo root).
-const BENCH_SUITES: [(&str, &str, &str); 3] = [
+const BENCH_SUITES: [(&str, &str, &str); 4] = [
     ("collectives", "collective_pipeline", "BENCH_collectives.json"),
     ("encoder", "encoder_latency", "BENCH_encoder.json"),
     ("transport", "collective_wallclock", "BENCH_transport.json"),
+    ("dtype", "sweep_dtype_tensor", "BENCH_dtype.json"),
 ];
 
 fn cmd_bench(args: &Args) -> sshuff::Result<()> {
@@ -491,7 +513,7 @@ fn cmd_bench(args: &Args) -> sshuff::Result<()> {
         BENCH_SUITES.iter().filter(|(name, _, _)| suite == "all" || suite == *name).collect();
     if selected.is_empty() {
         return Err(sshuff::error::Error::msg(format!(
-            "--suite must be all, collectives, encoder, or transport, got '{suite}'"
+            "--suite must be all, collectives, encoder, transport, or dtype, got '{suite}'"
         )));
     }
     for (name, bench, json) in selected {

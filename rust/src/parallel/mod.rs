@@ -56,7 +56,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::collectives::chunk_bounds;
 use crate::singlestage::{
-    encode_frame, select_codebook, Frame, MultiFrame, PayloadLayout, Registry, RAW_ID,
+    encode_frame, planes, select_codebook, CodecConfig, Frame, MultiFrame, PayloadLayout,
+    PlaneTransform, Registry, PLANES_MARKER, RAW_ID,
 };
 use crate::stats::Histogram256;
 
@@ -79,6 +80,7 @@ pub const DEFAULT_CHUNK_LEN: usize = 64 * 1024;
 pub struct EncoderPool {
     threads: usize,
     layout: PayloadLayout,
+    planes: PlaneTransform,
 }
 
 impl Default for EncoderPool {
@@ -90,12 +92,22 @@ impl Default for EncoderPool {
 impl EncoderPool {
     /// Pool with an explicit worker count (clamped to >= 1).
     pub fn new(threads: usize) -> EncoderPool {
-        EncoderPool { threads: threads.max(1), layout: PayloadLayout::default() }
+        EncoderPool {
+            threads: threads.max(1),
+            layout: PayloadLayout::default(),
+            planes: PlaneTransform::None,
+        }
     }
 
     /// Pool sized to the machine (`std::thread::available_parallelism`).
     pub fn auto() -> EncoderPool {
         EncoderPool::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    /// Pool configured from a [`CodecConfig`] (threads + layout +
+    /// planes; `chunk_len` stays a per-call argument here).
+    pub fn with_config(config: &CodecConfig) -> EncoderPool {
+        EncoderPool::new(config.threads).with_layout(config.layout).with_planes(config.planes)
     }
 
     /// Override the per-chunk payload layout (part of the wire format,
@@ -105,12 +117,23 @@ impl EncoderPool {
         self
     }
 
+    /// Apply a plane transform per chunk (part of the wire format:
+    /// chunks become [`PLANES_MARKER`] frames when the transform wins).
+    pub fn with_planes(mut self, planes: PlaneTransform) -> EncoderPool {
+        self.planes = planes;
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
 
     pub fn layout(&self) -> PayloadLayout {
         self.layout
+    }
+
+    pub fn planes(&self) -> PlaneTransform {
+        self.planes
     }
 
     /// Encode `data` against a fixed codebook id, split into
@@ -124,7 +147,14 @@ impl EncoderPool {
         chunk_len: usize,
     ) -> MultiFrame {
         let layout = self.layout;
-        self.run_encode(data, chunk_len, &|chunk| encode_frame(registry, id, chunk, layout))
+        let planes = self.planes;
+        self.run_encode(data, chunk_len, &|chunk| {
+            if planes == PlaneTransform::None {
+                encode_frame(registry, id, chunk, layout)
+            } else {
+                planes::encode_plane_frame(registry, planes, chunk, layout)
+            }
+        })
     }
 
     /// Encode with per-chunk codebook selection (paper §4): each chunk is
@@ -138,8 +168,14 @@ impl EncoderPool {
         chunk_len: usize,
     ) -> MultiFrame {
         let layout = self.layout;
+        let planes = self.planes;
         self.run_encode(data, chunk_len, &|chunk| {
-            encode_chunk_best(registry, candidates, chunk, layout)
+            if planes == PlaneTransform::None {
+                encode_chunk_best(registry, candidates, chunk, layout)
+            } else {
+                // selection happens per plane inside the transform
+                planes::encode_plane_frame(registry, planes, chunk, layout)
+            }
         })
     }
 
@@ -292,6 +328,17 @@ fn decode_chunk(registry: &Registry, frame: &Frame, out: &mut [u8]) -> crate::Re
         frame.header.n_symbols,
         frame.payload.len()
     );
+    if frame.header.id == PLANES_MARKER {
+        let decoded = planes::decode_plane_frame(registry, frame)?;
+        crate::error::ensure!(
+            decoded.len() == out.len(),
+            "plane chunk decoded to {} bytes, expected {}",
+            decoded.len(),
+            out.len()
+        );
+        out.copy_from_slice(&decoded);
+        return Ok(());
+    }
     if frame.header.id == RAW_ID {
         out.copy_from_slice(&frame.payload);
         return Ok(());

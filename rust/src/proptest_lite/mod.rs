@@ -162,6 +162,30 @@ pub mod gens {
         let n = rng.gen_range(max_len as u32 + 1) as usize;
         rng.normal_f32s(n, std)
     }
+
+    /// Activation-like bf16 words, length in `[0, max_len]`: normal
+    /// values at a per-case scale drawn over several orders of
+    /// magnitude, truncated f32 → bf16. The exponent byte concentrates
+    /// around the scale (Gemma-style skew) while the mantissa byte
+    /// stays near-uniform — the shape the bf16 plane split exploits.
+    pub fn bf16_activations(rng: &mut Pcg32, max_len: usize) -> Vec<u16> {
+        let n = rng.gen_range(max_len as u32 + 1) as usize;
+        // std in roughly [1e-4, 1e2]
+        let std = 10f32.powf(rng.next_f64() as f32 * 6.0 - 4.0);
+        rng.normal_f32s(n, std).into_iter().map(|v| (v.to_bits() >> 16) as u16).collect()
+    }
+
+    /// Quantized e4m3 codes, length in `[0, max_len]`: normal values
+    /// pushed through the [`crate::dtype::MiniFormat::E4M3`] quantizer,
+    /// so the byte distribution concentrates on a few exponent classes
+    /// exactly like quantized weights/activations do.
+    pub fn e4m3_values(rng: &mut Pcg32, max_len: usize) -> Vec<u8> {
+        let n = rng.gen_range(max_len as u32 + 1) as usize;
+        let std = 10f32.powf(rng.next_f64() as f32 * 4.0 - 2.0);
+        let vals = rng.normal_f32s(n, std);
+        let (codes, _exp) = crate::dtype::MiniFormat::E4M3.quantize(&vals);
+        codes
+    }
 }
 
 /// Stock shrinkers.
@@ -320,6 +344,25 @@ mod tests {
         // runs up to 512 are drawn; something well past a refill (8 B of
         // 1-bit codes = 64 symbols) must appear across 20 cases
         assert!(longest >= 64, "longest run {longest}");
+    }
+
+    #[test]
+    fn dtype_generators_are_skewed() {
+        let mut rng = Pcg32::new(21);
+        // bf16 activations: the high (sign+exponent) plane concentrates
+        let mut hi = Vec::new();
+        while hi.len() < 10_000 {
+            hi.extend(gens::bf16_activations(&mut rng, 4096).iter().map(|w| (w >> 8) as u8));
+        }
+        let h = crate::stats::Histogram256::from_bytes(&hi);
+        assert!(h.entropy_bits() < 7.0, "bf16 hi-plane H={}", h.entropy_bits());
+        // e4m3 codes concentrate on a few exponent classes
+        let mut codes = Vec::new();
+        while codes.len() < 10_000 {
+            codes.extend(gens::e4m3_values(&mut rng, 4096));
+        }
+        let h = crate::stats::Histogram256::from_bytes(&codes);
+        assert!(h.entropy_bits() < 7.5, "e4m3 H={}", h.entropy_bits());
     }
 
     #[test]

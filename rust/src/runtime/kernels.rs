@@ -9,7 +9,10 @@ use super::manifest::Manifest;
 use super::{artifacts_dir, literal_from, Engine, Executable};
 use crate::bitio::BitWriter;
 use crate::huffman::CodeBook;
-use crate::singlestage::{interleaved_frame_or_raw, Frame, MultiFrame, PayloadLayout};
+use crate::singlestage::{
+    interleaved_frame_or_raw, planes, CodecConfig, Frame, MultiFrame, PayloadLayout,
+    PlaneTransform, Registry,
+};
 use crate::stats::{Histogram256, NUM_SYMBOLS};
 use std::path::PathBuf;
 
@@ -206,6 +209,40 @@ impl KernelRunner {
         }
         Ok(MultiFrame::from_chunks(frames))
     }
+
+    /// [`encode_multiframe_layout`](Self::encode_multiframe_layout)
+    /// driven by a [`CodecConfig`]. With `config.planes == None` this
+    /// is exactly the kernel-gathered path above. With a plane
+    /// transform active, each `kernel_n` chunk (and the remainder)
+    /// becomes a self-describing plane frame instead: the transform
+    /// re-partitions the chunk's bytes into planes host-side and
+    /// selects per-plane codes from `registry`, so the single-book
+    /// per-symbol gather the Pallas kernel implements does not apply —
+    /// the plane path deliberately bypasses `encode_index` and uses the
+    /// native encoders. The resulting [`MultiFrame`] decodes through
+    /// the same `EncoderPool::decode` either way.
+    pub fn encode_multiframe_config(
+        &self,
+        data: &[u8],
+        book: &CodeBook,
+        id: u8,
+        registry: &Registry,
+        config: &CodecConfig,
+    ) -> crate::Result<MultiFrame> {
+        if config.planes == PlaneTransform::None {
+            return self.encode_multiframe_layout(data, book, id, config.layout);
+        }
+        let mut frames = Vec::with_capacity(data.len() / self.kernel_n + 1);
+        let mut chunks = data.chunks_exact(self.kernel_n);
+        for chunk in &mut chunks {
+            frames.push(planes::encode_plane_frame(registry, config.planes, chunk, config.layout));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() || frames.is_empty() {
+            frames.push(planes::encode_plane_frame(registry, config.planes, rem, config.layout));
+        }
+        Ok(MultiFrame::from_chunks(frames))
+    }
 }
 
 #[cfg(test)]
@@ -320,6 +357,43 @@ mod tests {
             }
             let pool = crate::parallel::EncoderPool::new(4);
             assert_eq!(pool.decode(&reg, &mf).unwrap(), data, "{layout:?}");
+        }
+    }
+
+    #[test]
+    fn kernel_multiframe_config_routes_plane_transforms() {
+        let Some((_e, kr)) = runner() else { return };
+        let data = skewed(kr.kernel_n + 99, 14);
+        let mut counts = Histogram256::from_bytes(&data).counts;
+        for c in counts.iter_mut() {
+            *c += 1;
+        }
+        let book = CodeBook::from_counts(&counts).unwrap();
+        let mut reg = crate::singlestage::Registry::new();
+        let id = reg.add(std::sync::Arc::new(crate::singlestage::FixedCodebook::new(
+            book.clone(),
+            None,
+            1,
+        )));
+        // None delegates to the kernel-gathered layout path exactly
+        let cfg = CodecConfig::new().with_layout(PayloadLayout::Interleaved4);
+        let mf_none = kr.encode_multiframe_config(&data, &book, id, &reg, &cfg).unwrap();
+        let mf_layout =
+            kr.encode_multiframe_layout(&data, &book, id, PayloadLayout::Interleaved4).unwrap();
+        assert_eq!(mf_none.to_bytes(), mf_layout.to_bytes());
+        // plane transforms produce plane/raw frames and still roundtrip
+        let pool = crate::parallel::EncoderPool::new(4);
+        for planes in [PlaneTransform::Bf16Split, PlaneTransform::E4m3Quad] {
+            let cfg = CodecConfig::new().with_planes(planes);
+            let mf = kr.encode_multiframe_config(&data, &book, id, &reg, &cfg).unwrap();
+            assert_eq!(mf.n_chunks(), 2, "{}", planes.name());
+            for frame in &mf.chunks {
+                assert!(
+                    frame.header.id == crate::singlestage::PLANES_MARKER
+                        || frame.header.id == crate::singlestage::RAW_ID
+                );
+            }
+            assert_eq!(pool.decode(&reg, &mf).unwrap(), data, "{}", planes.name());
         }
     }
 

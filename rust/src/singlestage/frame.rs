@@ -22,12 +22,21 @@
 //! [ marker ][ id: u8 ][ n_symbols: u32 LE ][ jump table: (N-1) x u32 LE ][ N sub-streams ]
 //! ```
 //!
+//! Since the plane-transform revision a fifth reserved byte,
+//! [`PLANES_MARKER`] (251), flags a **plane-transformed** frame (see
+//! `singlestage::planes`): the byte after the marker names the
+//! [`PlaneTransform`] and the body is transform-specific:
+//!
+//! ```text
+//! [ PLANES_MARKER ][ transform: u8 ][ n_symbols: u32 LE ][ body ... ]
+//! ```
+//!
 //! Any first byte other than a marker parses exactly as before, so
-//! every pre-revision frame with codebook id 0..=251 (or a raw frame)
+//! every pre-revision frame with codebook id 0..=250 (or a raw frame)
 //! still decodes byte-identically (asserted in `tests/proptests.rs`
 //! against a verbatim copy of the legacy encoder). The cost of the
-//! in-band flags is that codebook ids 252..=254 are reserved alongside
-//! 255 (`Registry::MAX_BOOKS` is now 252): the one incompatibility is
+//! in-band flags is that codebook ids 251..=254 are reserved alongside
+//! 255 (`Registry::MAX_BOOKS` is now 251): the one incompatibility is
 //! an archived pre-revision frame from a bigger registry whose high
 //! book ids were actually used — such a frame now misparses and must
 //! be re-encoded (no such registry ships in this repo; `persist` files
@@ -57,14 +66,21 @@ pub const INTERLEAVED4_MARKER: u8 = 254;
 pub const INTERLEAVED8_MARKER: u8 = 253;
 
 /// Reserved first wire byte flagging an
-/// [`PayloadLayout::Interleaved16`] frame. Cannot be a codebook id —
-/// also the smallest reserved byte (see [`is_reserved_id`]).
+/// [`PayloadLayout::Interleaved16`] frame. Cannot be a codebook id.
 pub const INTERLEAVED16_MARKER: u8 = 252;
 
-/// Is `id` one of the wire bytes a codebook can never use? ([`RAW_ID`]
-/// and the three interleaved markers occupy 252..=255.)
+/// Reserved first wire byte flagging a plane-transformed frame (see
+/// [`PlaneTransform`] and `singlestage::planes`). The byte after the
+/// marker is the transform's wire code, not a codebook id — plane
+/// bodies carry their own self-describing sub-frames or fixed-code
+/// tables. Also the smallest reserved byte (see [`is_reserved_id`]).
+pub const PLANES_MARKER: u8 = 251;
+
+/// Is `id` one of the wire bytes a codebook can never use? ([`RAW_ID`],
+/// the three interleaved markers, and [`PLANES_MARKER`] occupy
+/// 251..=255.)
 pub const fn is_reserved_id(id: u8) -> bool {
-    id >= INTERLEAVED16_MARKER
+    id >= PLANES_MARKER
 }
 
 /// Legacy wire header size in bytes.
@@ -73,6 +89,10 @@ pub const HEADER_BYTES: usize = 5;
 /// Interleaved wire header size in bytes (marker + id + n_symbols),
 /// the same for every interleaved width.
 pub const INTERLEAVED_HEADER_BYTES: usize = 6;
+
+/// Plane-transformed wire header size in bytes
+/// (marker + transform code + n_symbols).
+pub const PLANES_HEADER_BYTES: usize = 6;
 
 /// Back-compat alias for [`INTERLEAVED_HEADER_BYTES`] from when
 /// Interleaved4 was the only interleaved layout.
@@ -183,14 +203,21 @@ impl PayloadLayout {
     }
 }
 
+use super::planes::PlaneTransform;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FrameHeader {
-    /// Codebook id (shared registry), or [`RAW_ID`].
+    /// Codebook id (shared registry), [`RAW_ID`], or [`PLANES_MARKER`]
+    /// for plane-transformed frames.
     pub id: u8,
     /// Number of original symbols (bytes) in this frame.
     pub n_symbols: u32,
-    /// Payload bitstream layout ([`PayloadLayout::Legacy`] for raw frames).
+    /// Payload bitstream layout ([`PayloadLayout::Legacy`] for raw and
+    /// plane-transformed frames — plane bodies record their own layout).
     pub layout: PayloadLayout,
+    /// Plane transform applied before entropy coding
+    /// ([`PlaneTransform::None`] for every non-plane frame).
+    pub transform: PlaneTransform,
 }
 
 /// A single-stage frame: header + bit-packed (or raw) payload.
@@ -205,7 +232,12 @@ impl Frame {
     pub fn coded(id: u8, n_symbols: u32, payload: Vec<u8>) -> Frame {
         debug_assert!(!is_reserved_id(id));
         Frame {
-            header: FrameHeader { id, n_symbols, layout: PayloadLayout::Legacy },
+            header: FrameHeader {
+                id,
+                n_symbols,
+                layout: PayloadLayout::Legacy,
+                transform: PlaneTransform::None,
+            },
             payload,
         }
     }
@@ -228,7 +260,10 @@ impl Frame {
         debug_assert!(layout != PayloadLayout::Legacy);
         debug_assert!(!is_reserved_id(id));
         debug_assert!(payload.len() >= layout.jump_table_bytes());
-        Frame { header: FrameHeader { id, n_symbols, layout }, payload }
+        Frame {
+            header: FrameHeader { id, n_symbols, layout, transform: PlaneTransform::None },
+            payload,
+        }
     }
 
     /// A coded frame with the given layout.
@@ -250,22 +285,50 @@ impl Frame {
                 id: RAW_ID,
                 n_symbols: data.len() as u32,
                 layout: PayloadLayout::Legacy,
+                transform: PlaneTransform::None,
             },
             payload: data.to_vec(),
         }
     }
 
+    /// A plane-transformed frame; `body` is the transform-specific
+    /// payload built by `singlestage::planes` (see [`PlaneTransform`]).
+    pub fn planes(transform: PlaneTransform, n_symbols: u32, body: Vec<u8>) -> Frame {
+        debug_assert!(transform != PlaneTransform::None);
+        Frame {
+            header: FrameHeader {
+                id: PLANES_MARKER,
+                n_symbols,
+                layout: PayloadLayout::Legacy,
+                transform,
+            },
+            payload: body,
+        }
+    }
+
     /// Total bytes this frame occupies on the wire.
     pub fn wire_bytes(&self) -> usize {
-        self.header.layout.header_bytes() + self.payload.len()
+        let header = if self.header.id == PLANES_MARKER {
+            PLANES_HEADER_BYTES
+        } else {
+            self.header.layout.header_bytes()
+        };
+        header + self.payload.len()
     }
 
     /// Can this header's symbol count possibly match the payload? Raw
     /// frames carry one payload byte per symbol; coded frames spend at
     /// least 1 bit per symbol (interleaved frames additionally spend the
-    /// jump table). Decoders check this before sizing output buffers so
-    /// corrupt headers fail cleanly instead of driving huge allocations.
+    /// jump table); plane-transformed frames spend at least the
+    /// transform's fixed floor ([`PlaneTransform::min_body_bits`]).
+    /// Decoders check this before sizing output buffers so corrupt
+    /// headers fail cleanly instead of driving huge allocations.
     pub fn symbol_count_plausible(&self) -> bool {
+        if self.header.id == PLANES_MARKER {
+            let n = self.header.n_symbols as u64;
+            return self.header.transform.min_body_bits(n)
+                <= self.payload.len() as u64 * 8;
+        }
         if self.header.id == RAW_ID {
             return self.payload.len() == self.header.n_symbols as usize;
         }
@@ -277,6 +340,13 @@ impl Frame {
     /// Serialize to wire bytes.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_bytes());
+        if self.header.id == PLANES_MARKER {
+            out.push(PLANES_MARKER);
+            out.push(self.header.transform.code());
+            out.extend_from_slice(&self.header.n_symbols.to_le_bytes());
+            out.extend_from_slice(&self.payload);
+            return out;
+        }
         if let Some(marker) = self.header.layout.marker() {
             out.push(marker);
         }
@@ -287,11 +357,23 @@ impl Frame {
     }
 
     /// Parse wire bytes (the payload is everything after the header).
-    /// A reserved first byte ([`INTERLEAVED4_MARKER`],
-    /// [`INTERLEAVED8_MARKER`], [`INTERLEAVED16_MARKER`]) selects that
-    /// interleaved header; anything else parses exactly as the
-    /// pre-revision format, so legacy frames remain decodable.
+    /// A reserved first byte ([`PLANES_MARKER`],
+    /// [`INTERLEAVED4_MARKER`], [`INTERLEAVED8_MARKER`],
+    /// [`INTERLEAVED16_MARKER`]) selects that header kind; anything
+    /// else parses exactly as the pre-revision format, so legacy frames
+    /// remain decodable.
     pub fn parse(wire: &[u8]) -> crate::Result<Frame> {
+        if wire.first() == Some(&PLANES_MARKER) {
+            if wire.len() < PLANES_HEADER_BYTES {
+                crate::error::bail!("plane frame too short: {} bytes", wire.len());
+            }
+            let transform = match PlaneTransform::from_code(wire[1]) {
+                Some(t) if t != PlaneTransform::None => t,
+                _ => crate::error::bail!("bad plane transform code {}", wire[1]),
+            };
+            let n_symbols = u32::from_le_bytes(wire[2..6].try_into().unwrap());
+            return Ok(Frame::planes(transform, n_symbols, wire[PLANES_HEADER_BYTES..].to_vec()));
+        }
         if let Some(layout) = wire.first().copied().and_then(PayloadLayout::from_marker) {
             if wire.len() < INTERLEAVED_HEADER_BYTES {
                 crate::error::bail!("interleaved frame too short: {} bytes", wire.len());
@@ -309,7 +391,10 @@ impl Frame {
                 payload.len(),
                 layout.name()
             );
-            return Ok(Frame { header: FrameHeader { id, n_symbols, layout }, payload });
+            return Ok(Frame {
+                header: FrameHeader { id, n_symbols, layout, transform: PlaneTransform::None },
+                payload,
+            });
         }
         if wire.len() < HEADER_BYTES {
             crate::error::bail!("frame too short: {} bytes", wire.len());
@@ -325,7 +410,12 @@ impl Frame {
             );
         }
         Ok(Frame {
-            header: FrameHeader { id, n_symbols, layout: PayloadLayout::Legacy },
+            header: FrameHeader {
+                id,
+                n_symbols,
+                layout: PayloadLayout::Legacy,
+                transform: PlaneTransform::None,
+            },
             payload,
         })
     }
@@ -488,9 +578,13 @@ mod tests {
         ] {
             let marker = layout.marker().unwrap();
             // every reserved id after the marker
-            for bad_id in
-                [RAW_ID, INTERLEAVED4_MARKER, INTERLEAVED8_MARKER, INTERLEAVED16_MARKER]
-            {
+            for bad_id in [
+                RAW_ID,
+                INTERLEAVED4_MARKER,
+                INTERLEAVED8_MARKER,
+                INTERLEAVED16_MARKER,
+                PLANES_MARKER,
+            ] {
                 assert!(is_reserved_id(bad_id));
                 let mut wire = vec![marker, bad_id];
                 wire.extend_from_slice(&0u32.to_le_bytes());
@@ -505,7 +599,36 @@ mod tests {
             // header truncated
             assert!(Frame::parse(&[marker, 1, 2]).is_err(), "{}", layout.name());
         }
-        assert!(!is_reserved_id(251));
+        assert!(!is_reserved_id(250));
+        assert!(is_reserved_id(PLANES_MARKER));
+    }
+
+    #[test]
+    fn plane_frame_roundtrip_and_wire_shape() {
+        let body = vec![0xDE, 0xAD, 0xBE, 0xEF];
+        let f = Frame::planes(PlaneTransform::Bf16Split, 3, body.clone());
+        assert_eq!(f.header.id, PLANES_MARKER);
+        let wire = f.to_bytes();
+        assert_eq!(wire[0], PLANES_MARKER);
+        assert_eq!(wire[1], PlaneTransform::Bf16Split.code());
+        assert_eq!(wire.len(), f.wire_bytes());
+        assert_eq!(f.wire_bytes(), PLANES_HEADER_BYTES + body.len());
+        let back = Frame::parse(&wire).unwrap();
+        assert_eq!(back, f);
+        assert_eq!(back.header.transform, PlaneTransform::Bf16Split);
+    }
+
+    #[test]
+    fn plane_frame_rejects_bad_transform_and_truncation() {
+        // unknown transform code, and the never-on-wire None code
+        for bad in [0u8, 7, 255] {
+            let mut wire = vec![PLANES_MARKER, bad];
+            wire.extend_from_slice(&0u32.to_le_bytes());
+            assert!(Frame::parse(&wire).is_err(), "transform code {bad}");
+        }
+        // header truncated
+        assert!(Frame::parse(&[PLANES_MARKER]).is_err());
+        assert!(Frame::parse(&[PLANES_MARKER, 1, 0, 0]).is_err());
     }
 
     #[test]

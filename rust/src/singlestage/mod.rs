@@ -56,9 +56,10 @@ pub mod stream;
 pub use drift::{DriftConfig, DriftMonitor};
 pub use frame::{
     is_reserved_id, Frame, FrameHeader, MultiFrame, PayloadLayout, INTERLEAVED16_MARKER,
-    INTERLEAVED4_MARKER, INTERLEAVED8_MARKER, RAW_ID,
+    INTERLEAVED4_MARKER, INTERLEAVED8_MARKER, PLANES_MARKER, RAW_ID,
 };
 pub use persist::{load_registry, save_registry};
+pub use planes::PlaneTransform;
 pub use stream::{block_spans, decode_block, decode_stream, encode_stream, StreamStats};
 
 /// How the "average distribution of previous batches" is maintained.
@@ -109,17 +110,18 @@ impl FixedCodebook {
 
 /// Codebook registry: id (u8) → codebook. Shared between the encoder and
 /// every decoder node — the paper's "code books are shared between the
-/// participating nodes". Id [`RAW_ID`] (255) is reserved for raw frames
-/// and [`INTERLEAVED4_MARKER`] (254), [`INTERLEAVED8_MARKER`] (253),
-/// [`INTERLEAVED16_MARKER`] (252) for the interleaved layout flags.
+/// participating nodes". Id [`RAW_ID`] (255) is reserved for raw frames,
+/// [`INTERLEAVED4_MARKER`] (254), [`INTERLEAVED8_MARKER`] (253),
+/// [`INTERLEAVED16_MARKER`] (252) for the interleaved layout flags, and
+/// [`PLANES_MARKER`] (251) for plane-transformed frames.
 #[derive(Default, Clone)]
 pub struct Registry {
     books: Vec<Arc<FixedCodebook>>,
 }
 
 impl Registry {
-    // 252..=254 = interleaved markers, 255 = RAW_ID
-    pub const MAX_BOOKS: usize = 252;
+    // 251 = planes marker, 252..=254 = interleaved markers, 255 = RAW_ID
+    pub const MAX_BOOKS: usize = 251;
 
     pub fn new() -> Self {
         Self::default()
@@ -315,6 +317,71 @@ pub fn interleaved_frame_or_raw(
     }
 }
 
+/// Every codec knob in one builder (ROADMAP item 5): thread count,
+/// payload layout, plane transform, and parallel chunk length. The
+/// spreading `with_layout`/`with_threads` constructor variants on
+/// [`SingleStageEncoder`], `EncoderPool`, `SingleStageCodec` and
+/// `Coordinator` are thin wrappers over this — new knobs land here
+/// once instead of as another constructor per type.
+///
+/// ```
+/// use sshuff::singlestage::{CodecConfig, PayloadLayout, PlaneTransform};
+/// let cfg = CodecConfig::new()
+///     .with_threads(2)
+///     .with_layout(PayloadLayout::Interleaved8)
+///     .with_planes(PlaneTransform::Bf16Split);
+/// assert_eq!(cfg.threads, 2);
+/// assert_eq!(cfg.planes, PlaneTransform::Bf16Split);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CodecConfig {
+    /// Worker threads for chunk-parallel paths (min 1).
+    pub threads: usize,
+    /// Payload bitstream layout of coded frames.
+    pub layout: PayloadLayout,
+    /// Plane transform applied ahead of entropy coding.
+    pub planes: PlaneTransform,
+    /// Chunk length (bytes) for the parallel engine (min 1).
+    pub chunk_len: usize,
+}
+
+impl Default for CodecConfig {
+    fn default() -> Self {
+        Self {
+            threads: std::thread::available_parallelism().map_or(1, |n| n.get()),
+            layout: PayloadLayout::default(),
+            planes: PlaneTransform::default(),
+            chunk_len: crate::parallel::DEFAULT_CHUNK_LEN,
+        }
+    }
+}
+
+impl CodecConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn with_layout(mut self, layout: PayloadLayout) -> Self {
+        self.layout = layout;
+        self
+    }
+
+    pub fn with_planes(mut self, planes: PlaneTransform) -> Self {
+        self.planes = planes;
+        self
+    }
+
+    pub fn with_chunk_len(mut self, chunk_len: usize) -> Self {
+        self.chunk_len = chunk_len.max(1);
+        self
+    }
+}
+
 /// Encoder statistics (per encoder instance).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct EncoderStats {
@@ -340,11 +407,23 @@ pub struct SingleStageEncoder {
     registry: Registry,
     stats: EncoderStats,
     layout: PayloadLayout,
+    planes: PlaneTransform,
 }
 
 impl SingleStageEncoder {
     pub fn new(registry: Registry) -> Self {
-        Self { registry, stats: EncoderStats::default(), layout: PayloadLayout::default() }
+        Self {
+            registry,
+            stats: EncoderStats::default(),
+            layout: PayloadLayout::default(),
+            planes: PlaneTransform::None,
+        }
+    }
+
+    /// Build an encoder from a [`CodecConfig`] (threads/chunk_len are
+    /// parallel-engine knobs and do not apply here).
+    pub fn with_config(registry: Registry, config: &CodecConfig) -> Self {
+        Self::new(registry).with_layout(config.layout).with_planes(config.planes)
     }
 
     /// Override the payload layout for subsequent encodes.
@@ -353,8 +432,20 @@ impl SingleStageEncoder {
         self
     }
 
+    /// Apply a plane transform ahead of entropy coding on subsequent
+    /// encodes ([`PlaneTransform::None`] restores the byte-oriented
+    /// path).
+    pub fn with_planes(mut self, planes: PlaneTransform) -> Self {
+        self.planes = planes;
+        self
+    }
+
     pub fn layout(&self) -> PayloadLayout {
         self.layout
+    }
+
+    pub fn planes(&self) -> PlaneTransform {
+        self.planes
     }
 
     pub fn registry(&self) -> &Registry {
@@ -378,8 +469,15 @@ impl SingleStageEncoder {
     /// not (callers wanting the bound there use
     /// [`encode_best`](Self::encode_best), which compares against raw
     /// before encoding).
+    /// When a plane transform is active the id is advisory: the
+    /// transform selects per-plane books itself (`Bf16Split`) or is
+    /// registry-free (`E4m3Quad`).
     pub fn encode_with(&mut self, id: u8, data: &[u8]) -> Frame {
-        let frame = encode_frame(&self.registry, id, data, self.layout);
+        let frame = if self.planes == PlaneTransform::None {
+            encode_frame(&self.registry, id, data, self.layout)
+        } else {
+            planes::encode_plane_frame(&self.registry, self.planes, data, self.layout)
+        };
         self.account(&frame, data.len());
         frame
     }
@@ -387,7 +485,12 @@ impl SingleStageEncoder {
     /// Encode with on-the-fly codebook selection (paper §4 hardware mode):
     /// one histogram pass + K dot products pick the best candidate, then
     /// the single encode pass runs. Still no codebook build or transmit.
+    /// With a plane transform active, selection happens inside the
+    /// transform (per plane), so `candidates` is unused.
     pub fn encode_best(&mut self, candidates: &[u8], data: &[u8]) -> Frame {
+        if self.planes != PlaneTransform::None {
+            return self.encode_with(RAW_ID, data);
+        }
         let hist = Histogram256::from_bytes(data);
         let (id, _) = select_codebook(&hist, &self.registry, candidates);
         self.encode_with(id, data)
@@ -415,6 +518,9 @@ impl SingleStageDecoder {
 
     /// Decode a frame back to the original symbol stream.
     pub fn decode(&self, frame: &Frame) -> crate::Result<Vec<u8>> {
+        if frame.header.id == PLANES_MARKER {
+            return planes::decode_plane_frame(&self.registry, frame);
+        }
         if frame.header.id == RAW_ID {
             return Ok(frame.payload.clone());
         }

@@ -24,14 +24,19 @@ use std::sync::Arc;
 const MAGIC: [u8; 4] = *b"SSHF";
 const FORMAT_VERSION: u16 = 1;
 
+// Codes 0..=4 are the pre-plane `DtypeTag::ALL` order, so old files
+// stay loadable; the plane dtypes extend the table at 5..=6.
+fn dtype_table() -> impl Iterator<Item = DtypeTag> {
+    DtypeTag::ALL.into_iter().chain(DtypeTag::PLANES)
+}
+
 fn dtype_code(d: DtypeTag) -> u8 {
-    DtypeTag::ALL.iter().position(|&x| x == d).unwrap() as u8
+    dtype_table().position(|x| x == d).unwrap() as u8
 }
 
 fn dtype_from(code: u8) -> crate::Result<DtypeTag> {
-    DtypeTag::ALL
-        .get(code as usize)
-        .copied()
+    dtype_table()
+        .nth(code as usize)
         .ok_or_else(|| crate::error::anyhow!("bad dtype code {code}"))
 }
 

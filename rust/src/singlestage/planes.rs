@@ -1,85 +1,438 @@
-//! Plane-split bf16 coding — the eXmY-style extension (paper ref [7]).
+//! Plane transforms — the dtype-aware stage ahead of entropy coding.
 //!
-//! A bf16 value is two very different bytes: the high byte
-//! (sign + exponent + m1) is highly skewed (~2.6 bits of entropy on
-//! activation tensors), the low byte (mantissa) is near-uniform
-//! (~8 bits). Interleaving them (the paper's default 8-bit symbols over
-//! the raw stream) hands the entropy coder a mixture that wastes the
-//! high plane's skew. Splitting the planes and coding each with its own
-//! fixed codebook recovers ~11% additional ideal compressibility on
-//! activation streams (ablation E in `benches/ablations.rs`) — and the
-//! single-stage design supports it for free: two codebook ids.
+//! The paper's byte-oriented single-stage view hands the entropy coder
+//! whatever bytes the tensor happens to serialize to. Real ML dtypes
+//! are *structured*: a bf16 value is two very different bytes (the
+//! high sign+exponent byte has ~2.6 bits of entropy on activation
+//! tensors, the low mantissa byte is near-uniform), and an e4m3 code
+//! stream has a strongly peaked exponent distribution that a small
+//! fixed set of code lengths captures almost optimally. A
+//! [`PlaneTransform`] reshapes the stream along those statistical
+//! seams before coding:
 //!
-//! Wire format: `[hi Frame bytes, length-prefixed][lo Frame bytes]`
-//! where the mantissa plane is usually a raw escape frame (it is
-//! incompressible by construction).
+//! * [`PlaneTransform::Bf16Split`] — split the interleaved bf16 byte
+//!   stream into its high and low byte planes and code each as its own
+//!   self-describing sub-frame (per-plane fixed codebooks trained via
+//!   [`observe_and_build_planes`] under the [`DtypeTag::Bf16Hi`] /
+//!   [`DtypeTag::Bf16Lo`] registry keys; the near-uniform mantissa
+//!   plane usually escapes to raw).
+//! * [`PlaneTransform::E4m3Quad`] — the fixed quad-length code path
+//!   from "Quad Length Codes for Lossless Compression of e4m3"
+//!   (arXiv 2602.17849): rank the byte histogram into four code-length
+//!   classes and ship a 64-byte class map instead of a codebook id —
+//!   see [`crate::huffman::quad`]. Registry-free and tree-free.
+//!
+//! Transformed frames are **wire-visible**: they ride the in-band
+//! marker machinery as a fifth reserved first byte
+//! ([`PLANES_MARKER`], 251) followed by the transform code, so they
+//! flow through every Frame-carrying container ([`MultiFrame`] chunks,
+//! stream blocks, coordinator results) unchanged and legacy frames
+//! keep parsing byte-identically.
+//!
+//! ```text
+//! [ PLANES_MARKER ][ transform: u8 ][ n_symbols: u32 LE ][ body ]
+//!
+//! Bf16Split body:
+//!   [ hi_len: u32 LE ][ hi sub-Frame ][ lo_len: u32 LE ][ lo sub-Frame ][ odd tail byte? ]
+//! E4m3Quad body:
+//!   [ layout: u8 (marker or 0xFF=legacy) ][ 64 B class map ][ payload ]
+//! ```
+//!
+//! Like every coded frame, a plane frame is emitted only when strictly
+//! smaller than the raw escape, so wire <= input + 5 B always holds.
 
-use super::{CodebookManager, Frame, Registry, SingleStageDecoder, SingleStageEncoder};
-use crate::dtype::{bf16_high_plane, bf16_low_plane};
+use super::{
+    encode_frame, frame, select_codebook, CodebookManager, Frame, PayloadLayout, Registry,
+    SingleStageDecoder, PLANES_MARKER, RAW_ID,
+};
+use crate::dtype::{bf16_symbols, SymbolMode};
+use crate::huffman::kernel::DecodeKernel;
+use crate::huffman::quad;
+use crate::stats::Histogram256;
 use crate::tensors::{DtypeTag, TensorKey, TensorKind};
 
-/// The per-plane keys a plane-split codebook pair is registered under.
-/// The high plane reuses the tensor's own key; the low plane trains its
-/// own book (usually degenerating to near-uniform → raw escape).
+/// The quad body's layout byte for [`PayloadLayout::Legacy`] (the
+/// interleaved layouts use their wire marker byte).
+const QUAD_LEGACY_LAYOUT: u8 = 0xFF;
+
+/// A dtype-aware plane transform applied to the byte stream before
+/// entropy coding. `None` is the identity (the paper's byte-oriented
+/// path) and never appears on the wire; the other variants produce
+/// [`PLANES_MARKER`]-flagged frames (see the module docs for the wire
+/// layout).
+///
+/// Encoding one e4m3 tensor through the quad-length path:
+///
+/// ```
+/// use sshuff::dtype::MiniFormat;
+/// use sshuff::singlestage::{planes, PlaneTransform, Registry};
+///
+/// let values: Vec<f32> = (0..2048).map(|i| ((i as f32) * 0.13).cos()).collect();
+/// let (codes, _scale) = MiniFormat::E4M3.quantize(&values);
+/// // Quad frames are self-describing: no registry entry needed.
+/// let registry = Registry::new();
+/// let frame = planes::encode_plane_frame(
+///     &registry,
+///     PlaneTransform::E4m3Quad,
+///     &codes,
+///     Default::default(),
+/// );
+/// assert!(frame.wire_bytes() < codes.len(), "beats the raw bytes");
+/// assert_eq!(planes::decode_plane_frame(&registry, &frame).unwrap(), codes);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PlaneTransform {
+    /// Identity: code the raw byte stream (never on the wire).
+    #[default]
+    None,
+    /// Split bf16 bytes into high (sign+exponent) and low (mantissa)
+    /// planes, each coded as its own sub-frame.
+    Bf16Split,
+    /// Fixed quad-length codes for e4m3 streams
+    /// ([`crate::huffman::quad`]).
+    E4m3Quad,
+}
+
+impl PlaneTransform {
+    /// Every transform, for tests and sweeps.
+    pub const ALL: [PlaneTransform; 3] =
+        [PlaneTransform::None, PlaneTransform::Bf16Split, PlaneTransform::E4m3Quad];
+
+    /// Wire code carried in the byte after [`PLANES_MARKER`].
+    pub fn code(self) -> u8 {
+        match self {
+            PlaneTransform::None => 0,
+            PlaneTransform::Bf16Split => 1,
+            PlaneTransform::E4m3Quad => 2,
+        }
+    }
+
+    /// Inverse of [`code`](Self::code).
+    pub fn from_code(code: u8) -> Option<PlaneTransform> {
+        Self::ALL.into_iter().find(|t| t.code() == code)
+    }
+
+    /// Parse a CLI/user name (`none` | `bf16-split` | `e4m3-quad`).
+    pub fn parse(s: &str) -> Option<PlaneTransform> {
+        Self::ALL.into_iter().find(|t| t.name() == s)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlaneTransform::None => "none",
+            PlaneTransform::Bf16Split => "bf16-split",
+            PlaneTransform::E4m3Quad => "e4m3-quad",
+        }
+    }
+
+    /// Lower bound (bits) a well-formed body must hold for `n_symbols`
+    /// symbols — the plausibility floor `Frame::symbol_count_plausible`
+    /// checks before decoders size output buffers. Sub-frames and
+    /// payloads spend at least 1 bit per symbol; the quad path
+    /// additionally always carries its layout byte + class map and
+    /// spends at least 4 bits per symbol.
+    pub fn min_body_bits(self, n_symbols: u64) -> u64 {
+        match self {
+            PlaneTransform::None | PlaneTransform::Bf16Split => n_symbols,
+            PlaneTransform::E4m3Quad => {
+                8 * (1 + quad::CLASS_MAP_BYTES as u64) + 4 * n_symbols
+            }
+        }
+    }
+}
+
+/// Encode `data` through `transform` into a plane frame, escaping to a
+/// raw frame when the transformed wire would not be strictly smaller
+/// (so the bounded-overhead guarantee `wire <= input + 5 B` holds).
+/// `transform` must not be [`PlaneTransform::None`] — the identity is
+/// the ordinary coded path (`encode_frame`), not a plane frame.
+pub fn encode_plane_frame(
+    registry: &Registry,
+    transform: PlaneTransform,
+    data: &[u8],
+    layout: PayloadLayout,
+) -> Frame {
+    let body = match transform {
+        PlaneTransform::None => {
+            debug_assert!(false, "PlaneTransform::None is not a wire transform");
+            return Frame::raw(data);
+        }
+        PlaneTransform::Bf16Split => bf16_split_body(registry, data, layout),
+        PlaneTransform::E4m3Quad => e4m3_quad_body(data, layout),
+    };
+    if frame::PLANES_HEADER_BYTES + body.len() < frame::HEADER_BYTES + data.len() {
+        Frame::planes(transform, data.len() as u32, body)
+    } else {
+        Frame::raw(data)
+    }
+}
+
+/// Decode a plane frame back to its original byte stream.
+pub fn decode_plane_frame(registry: &Registry, frame: &Frame) -> crate::Result<Vec<u8>> {
+    decode_plane_frame_kernel(registry, frame, None)
+}
+
+/// [`decode_plane_frame`] with an explicit decode kernel for the
+/// interleaved payloads (differential tests pin Scalar vs Simd).
+pub fn decode_plane_frame_with(
+    registry: &Registry,
+    frame: &Frame,
+    kernel: DecodeKernel,
+) -> crate::Result<Vec<u8>> {
+    decode_plane_frame_kernel(registry, frame, Some(kernel))
+}
+
+fn decode_plane_frame_kernel(
+    registry: &Registry,
+    f: &Frame,
+    kernel: Option<DecodeKernel>,
+) -> crate::Result<Vec<u8>> {
+    crate::error::ensure!(
+        f.header.id == PLANES_MARKER,
+        "not a plane frame (id {})",
+        f.header.id
+    );
+    crate::error::ensure!(
+        f.symbol_count_plausible(),
+        "plane frame claims {} symbols in {} body bytes",
+        f.header.n_symbols,
+        f.payload.len()
+    );
+    let n = f.header.n_symbols as usize;
+    match f.header.transform {
+        PlaneTransform::None => crate::error::bail!("plane frame with transform none"),
+        PlaneTransform::Bf16Split => decode_bf16_split(registry, n, &f.payload, kernel),
+        PlaneTransform::E4m3Quad => decode_e4m3_quad(n, &f.payload, kernel),
+    }
+}
+
+// ---- Bf16Split ------------------------------------------------------
+
+fn bf16_split_body(registry: &Registry, data: &[u8], layout: PayloadLayout) -> Vec<u8> {
+    let pairs = data.len() / 2;
+    let mut hi = Vec::with_capacity(pairs);
+    let mut lo = Vec::with_capacity(pairs);
+    for pair in data.chunks_exact(2) {
+        // bf16 streams are little-endian: low (mantissa) byte first
+        lo.push(pair[0]);
+        hi.push(pair[1]);
+    }
+    let hi_bytes = best_sub_frame(registry, &hi, layout).to_bytes();
+    let lo_bytes = best_sub_frame(registry, &lo, layout).to_bytes();
+    let mut body = Vec::with_capacity(8 + hi_bytes.len() + lo_bytes.len() + 1);
+    body.extend_from_slice(&(hi_bytes.len() as u32).to_le_bytes());
+    body.extend_from_slice(&hi_bytes);
+    body.extend_from_slice(&(lo_bytes.len() as u32).to_le_bytes());
+    body.extend_from_slice(&lo_bytes);
+    if data.len() % 2 == 1 {
+        body.push(data[data.len() - 1]);
+    }
+    body
+}
+
+/// Best registry book for one plane (or raw when nothing wins) — the
+/// sub-frame is a standard self-describing [`Frame`], so per-plane
+/// codebooks are just ordinary registry entries under the plane dtype
+/// keys ([`DtypeTag::Bf16Hi`] / [`DtypeTag::Bf16Lo`]).
+fn best_sub_frame(registry: &Registry, plane: &[u8], layout: PayloadLayout) -> Frame {
+    let hist = Histogram256::from_bytes(plane);
+    let candidates: Vec<u8> = registry.ids().collect();
+    let (id, _) = select_codebook(&hist, registry, &candidates);
+    if id == RAW_ID {
+        Frame::raw(plane)
+    } else {
+        encode_frame(registry, id, plane, layout)
+    }
+}
+
+fn decode_bf16_split(
+    registry: &Registry,
+    n: usize,
+    body: &[u8],
+    kernel: Option<DecodeKernel>,
+) -> crate::Result<Vec<u8>> {
+    let pairs = n / 2;
+    let (hi_wire, rest) = take_prefixed(body, "hi plane")?;
+    let (lo_wire, rest) = take_prefixed(rest, "lo plane")?;
+    let tail = n % 2;
+    crate::error::ensure!(
+        rest.len() == tail,
+        "bf16-split body has {} trailing bytes (expected {tail})",
+        rest.len()
+    );
+    let hi = decode_sub_frame(registry, hi_wire, pairs, kernel)?;
+    let lo = decode_sub_frame(registry, lo_wire, pairs, kernel)?;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..pairs {
+        out.push(lo[i]);
+        out.push(hi[i]);
+    }
+    if tail == 1 {
+        out.push(rest[0]);
+    }
+    Ok(out)
+}
+
+fn take_prefixed<'a>(body: &'a [u8], what: &str) -> crate::Result<(&'a [u8], &'a [u8])> {
+    crate::error::ensure!(body.len() >= 4, "bf16-split body truncated in {what} length prefix");
+    let len = u32::from_le_bytes(body[0..4].try_into().unwrap()) as usize;
+    crate::error::ensure!(
+        body.len() - 4 >= len,
+        "bf16-split {what} overruns body: {len} > {}",
+        body.len() - 4
+    );
+    Ok((&body[4..4 + len], &body[4 + len..]))
+}
+
+fn decode_sub_frame(
+    registry: &Registry,
+    wire: &[u8],
+    expect: usize,
+    kernel: Option<DecodeKernel>,
+) -> crate::Result<Vec<u8>> {
+    let f = Frame::parse(wire)?;
+    crate::error::ensure!(f.header.id != PLANES_MARKER, "nested plane frame");
+    crate::error::ensure!(
+        f.header.n_symbols as usize == expect,
+        "plane sub-frame claims {} symbols, expected {expect}",
+        f.header.n_symbols
+    );
+    if f.header.id == RAW_ID {
+        return Ok(f.payload);
+    }
+    crate::error::ensure!(
+        f.symbol_count_plausible(),
+        "plane sub-frame claims {expect} symbols in {} payload bytes",
+        f.payload.len()
+    );
+    let book = registry
+        .get(f.header.id)
+        .ok_or_else(|| crate::error::anyhow!("unknown codebook id {}", f.header.id))?;
+    match f.header.layout {
+        PayloadLayout::Legacy => Ok(book.decoder.decode(&f.payload, expect)),
+        l => {
+            let mut out = vec![0u8; expect];
+            match kernel {
+                None => book.decoder.decode_interleaved_n_into(&f.payload, &mut out, l.lanes())?,
+                Some(k) => book
+                    .decoder
+                    .decode_interleaved_n_into_with(&f.payload, &mut out, l.lanes(), k)?,
+            }
+            Ok(out)
+        }
+    }
+}
+
+// ---- E4m3Quad -------------------------------------------------------
+
+fn e4m3_quad_body(data: &[u8], layout: PayloadLayout) -> Vec<u8> {
+    let hist = Histogram256::from_bytes(data);
+    let (book, class_map) = quad::quad_book(&hist);
+    let payload = match layout {
+        PayloadLayout::Legacy => book.encode(data).0,
+        l => book.encode_interleaved_n(data, l.lanes()),
+    };
+    let mut body = Vec::with_capacity(1 + quad::CLASS_MAP_BYTES + payload.len());
+    body.push(layout.marker().unwrap_or(QUAD_LEGACY_LAYOUT));
+    body.extend_from_slice(&class_map);
+    body.extend_from_slice(&payload);
+    body
+}
+
+fn decode_e4m3_quad(
+    n: usize,
+    body: &[u8],
+    kernel: Option<DecodeKernel>,
+) -> crate::Result<Vec<u8>> {
+    crate::error::ensure!(
+        body.len() > quad::CLASS_MAP_BYTES,
+        "quad body truncated: {} bytes",
+        body.len()
+    );
+    let layout = match body[0] {
+        QUAD_LEGACY_LAYOUT => PayloadLayout::Legacy,
+        b => PayloadLayout::from_marker(b)
+            .ok_or_else(|| crate::error::anyhow!("bad quad layout byte {b}"))?,
+    };
+    let map: [u8; quad::CLASS_MAP_BYTES] =
+        body[1..1 + quad::CLASS_MAP_BYTES].try_into().unwrap();
+    let classes = quad::unpack_classes(&map);
+    crate::error::ensure!(
+        quad::classes_valid(&classes),
+        "quad class map violates the 6/20/30/200 class capacities"
+    );
+    let book = quad::book_from_classes(&classes);
+    let decoder = book.decoder();
+    let payload = &body[1 + quad::CLASS_MAP_BYTES..];
+    crate::error::ensure!(
+        n as u64 * 4 <= (payload.len().saturating_sub(layout.jump_table_bytes())) as u64 * 8,
+        "quad frame claims {n} symbols in {} payload bytes ({})",
+        payload.len(),
+        layout.name()
+    );
+    match layout {
+        PayloadLayout::Legacy => Ok(decoder.decode(payload, n)),
+        l => {
+            let mut out = vec![0u8; n];
+            match kernel {
+                None => decoder.decode_interleaved_n_into(payload, &mut out, l.lanes())?,
+                Some(k) => decoder.decode_interleaved_n_into_with(payload, &mut out, l.lanes(), k)?,
+            }
+            Ok(out)
+        }
+    }
+}
+
+// ---- bf16 convenience API + per-plane codebook lifecycle ------------
+
+/// The per-plane codebook ids a [`observe_and_build_planes`] call
+/// registered (both under their own plane dtype keys).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlaneIds {
     pub hi: u8,
     pub lo: u8,
 }
 
-/// Observe a bf16-bits batch plane-wise and (re)build both codebooks.
+/// Observe a bf16-bits batch plane-wise and (re)build both codebooks
+/// under the dedicated plane dtype keys — [`DtypeTag::Bf16Hi`] /
+/// [`DtypeTag::Bf16Lo`] — so plane statistics can never alias a real
+/// dtype's registry entry.
 pub fn observe_and_build_planes(
     mgr: &mut CodebookManager,
     kind: TensorKind,
     bits: &[u16],
 ) -> Option<PlaneIds> {
-    // distinct dtype tags keep the two planes' statistics separate
-    let hi_key = TensorKey::new(kind, DtypeTag::Bf16);
-    let lo_key = TensorKey::new(kind, DtypeTag::ALL[4]); // e2m1 slot reused as "lo plane"
-    mgr.observe_bytes(hi_key, &bf16_high_plane(bits));
-    mgr.observe_bytes(lo_key, &bf16_low_plane(bits));
+    let hi_key = TensorKey::new(kind, DtypeTag::Bf16Hi);
+    let lo_key = TensorKey::new(kind, DtypeTag::Bf16Lo);
+    mgr.observe_bytes(hi_key, &crate::dtype::bf16_high_plane(bits));
+    mgr.observe_bytes(lo_key, &crate::dtype::bf16_low_plane(bits));
     Some(PlaneIds { hi: mgr.build(hi_key)?, lo: mgr.build(lo_key)? })
 }
 
-/// Encode a bf16-bits tensor plane-split. Returns the wire bytes.
-pub fn encode_planes(registry: &Registry, ids: PlaneIds, bits: &[u16]) -> Vec<u8> {
-    let mut enc = SingleStageEncoder::new(registry.clone());
-    let hi_frame = enc.encode_with(ids.hi, &bf16_high_plane(bits));
-    let lo_data = bf16_low_plane(bits);
-    // mantissa plane: try the book, keep raw when it does not win
-    let lo_coded = enc.encode_with(ids.lo, &lo_data);
-    let lo_frame =
-        if lo_coded.wire_bytes() < lo_data.len() + super::frame::HEADER_BYTES {
-            lo_coded
-        } else {
-            Frame::raw(&lo_data)
-        };
-    let hi_bytes = hi_frame.to_bytes();
-    let lo_bytes = lo_frame.to_bytes();
-    let mut out = Vec::with_capacity(4 + hi_bytes.len() + lo_bytes.len());
-    out.extend_from_slice(&(hi_bytes.len() as u32).to_le_bytes());
-    out.extend_from_slice(&hi_bytes);
-    out.extend_from_slice(&lo_bytes);
-    out
+/// Encode a bf16-bits tensor plane-split (a [`PlaneTransform::Bf16Split`]
+/// frame, or its raw escape). Returns the wire bytes.
+pub fn encode_planes(registry: &Registry, bits: &[u16], layout: PayloadLayout) -> Vec<u8> {
+    let bytes = bf16_symbols(bits, SymbolMode::Bf16Interleaved);
+    encode_plane_frame(registry, PlaneTransform::Bf16Split, &bytes, layout).to_bytes()
 }
 
 /// Decode a plane-split wire buffer back to bf16 bits.
 pub fn decode_planes(registry: &Registry, wire: &[u8]) -> crate::Result<Vec<u16>> {
-    crate::error::ensure!(wire.len() >= 4, "plane wire too short");
-    let hi_len = u32::from_le_bytes(wire[0..4].try_into().unwrap()) as usize;
-    crate::error::ensure!(4 + hi_len <= wire.len(), "plane wire truncated");
-    let dec = SingleStageDecoder::new(registry.clone());
-    let hi = dec.decode_bytes(&wire[4..4 + hi_len])?;
-    let lo = dec.decode_bytes(&wire[4 + hi_len..])?;
-    crate::error::ensure!(hi.len() == lo.len(), "plane length mismatch");
-    Ok(hi.iter().zip(&lo).map(|(&h, &l)| ((h as u16) << 8) | l as u16).collect())
+    let f = Frame::parse(wire)?;
+    let bytes = if f.header.id == PLANES_MARKER {
+        decode_plane_frame(registry, &f)?
+    } else {
+        SingleStageDecoder::new(registry.clone()).decode(&f)?
+    };
+    crate::error::ensure!(bytes.len() % 2 == 0, "odd byte count for bf16 stream");
+    Ok(bytes.chunks_exact(2).map(|p| u16::from_le_bytes([p[0], p[1]])).collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dtype::{bf16_low_plane, MiniFormat};
     use crate::singlestage::AvgPolicy;
-    use crate::stats::Histogram256;
     use crate::tensors::shard_symbols;
     use crate::trainer::synthetic::synthetic_tap;
 
@@ -92,23 +445,50 @@ mod tests {
     }
 
     #[test]
+    fn transform_names_and_codes_roundtrip() {
+        for t in PlaneTransform::ALL {
+            assert_eq!(PlaneTransform::parse(t.name()), Some(t));
+            assert_eq!(PlaneTransform::from_code(t.code()), Some(t));
+        }
+        assert_eq!(PlaneTransform::parse("zstd"), None);
+        assert_eq!(PlaneTransform::from_code(9), None);
+        assert_eq!(PlaneTransform::default(), PlaneTransform::None);
+    }
+
+    #[test]
+    fn plane_keys_do_not_alias_real_dtypes() {
+        let (mgr, ids, _) = setup();
+        let hi = mgr.registry.get(ids.hi).unwrap();
+        let lo = mgr.registry.get(ids.lo).unwrap();
+        assert_eq!(hi.key.unwrap().dtype, DtypeTag::Bf16Hi);
+        assert_eq!(lo.key.unwrap().dtype, DtypeTag::Bf16Lo);
+        // the e2m1 slot the old sketch squatted on stays free
+        assert_ne!(lo.key.unwrap().dtype, DtypeTag::ALL[4]);
+    }
+
+    #[test]
     fn roundtrip_bit_exact() {
-        let (mgr, ids, bits) = setup();
-        let wire = encode_planes(&mgr.registry, ids, &bits);
-        assert_eq!(decode_planes(&mgr.registry, &wire).unwrap(), bits);
+        let (mgr, _ids, bits) = setup();
+        for layout in PayloadLayout::ALL {
+            let wire = encode_planes(&mgr.registry, &bits, layout);
+            assert_eq!(decode_planes(&mgr.registry, &wire).unwrap(), bits, "{}", layout.name());
+        }
     }
 
     #[test]
     fn beats_interleaved_on_activations() {
-        let (mgr, ids, bits) = setup();
-        let wire = encode_planes(&mgr.registry, ids, &bits);
+        let (mgr, _ids, bits) = setup();
+        let wire = encode_planes(&mgr.registry, &bits, PayloadLayout::default());
         // interleaved single-book coding of the same tensor
         let inter = shard_symbols(&bits, DtypeTag::Bf16);
-        let hi_key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+        let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
         let mut mgr2 = CodebookManager::new(AvgPolicy::CumulativeMean);
-        mgr2.observe_bytes(hi_key, &shard_symbols(&synthetic_tap(TensorKind::Ffn1Act, 1, 256, 256, 1), DtypeTag::Bf16));
-        let id = mgr2.build(hi_key).unwrap();
-        let mut enc = SingleStageEncoder::new(mgr2.registry.clone());
+        mgr2.observe_bytes(
+            key,
+            &shard_symbols(&synthetic_tap(TensorKind::Ffn1Act, 1, 256, 256, 1), DtypeTag::Bf16),
+        );
+        let id = mgr2.build(key).unwrap();
+        let mut enc = crate::singlestage::SingleStageEncoder::new(mgr2.registry.clone());
         let inter_wire = enc.encode_with(id, &inter).wire_bytes();
         assert!(
             (wire.len() as f64) < 0.92 * inter_wire as f64,
@@ -119,10 +499,13 @@ mod tests {
 
     #[test]
     fn mantissa_plane_escapes_to_raw() {
-        let (mgr, ids, bits) = setup();
-        let wire = encode_planes(&mgr.registry, ids, &bits);
-        let hi_len = u32::from_le_bytes(wire[0..4].try_into().unwrap()) as usize;
-        let lo_frame = Frame::parse(&wire[4 + hi_len..]).unwrap();
+        let (mgr, _ids, bits) = setup();
+        let wire = encode_planes(&mgr.registry, &bits, PayloadLayout::default());
+        let f = Frame::parse(&wire).unwrap();
+        assert_eq!(f.header.transform, PlaneTransform::Bf16Split);
+        let (_hi_wire, rest) = take_prefixed(&f.payload, "hi").unwrap();
+        let (lo_wire, _) = take_prefixed(rest, "lo").unwrap();
+        let lo_frame = Frame::parse(lo_wire).unwrap();
         // near-uniform mantissas: raw escape (or coded within a hair)
         let lo = bf16_low_plane(&bits);
         let h = Histogram256::from_bytes(&lo);
@@ -131,9 +514,44 @@ mod tests {
     }
 
     #[test]
-    fn empty_tensor() {
-        let (mgr, ids, _) = setup();
-        let wire = encode_planes(&mgr.registry, ids, &[]);
+    fn empty_and_tiny_tensors_escape_to_raw() {
+        let (mgr, _ids, _) = setup();
+        let wire = encode_planes(&mgr.registry, &[], PayloadLayout::default());
         assert_eq!(decode_planes(&mgr.registry, &wire).unwrap(), Vec::<u16>::new());
+        for transform in [PlaneTransform::Bf16Split, PlaneTransform::E4m3Quad] {
+            let tiny = [0x38u8, 0x12, 0x38];
+            let f = encode_plane_frame(&mgr.registry, transform, &tiny, PayloadLayout::default());
+            assert_eq!(f.header.id, RAW_ID, "{}", transform.name());
+            assert!(f.wire_bytes() <= tiny.len() + frame::HEADER_BYTES);
+        }
+    }
+
+    #[test]
+    fn odd_length_bf16_split_keeps_tail_byte() {
+        let (mgr, _ids, bits) = setup();
+        let mut bytes = bf16_symbols(&bits, SymbolMode::Bf16Interleaved);
+        bytes.push(0xA7); // stray trailing byte
+        let f = encode_plane_frame(
+            &mgr.registry,
+            PlaneTransform::Bf16Split,
+            &bytes,
+            PayloadLayout::default(),
+        );
+        assert_eq!(f.header.transform, PlaneTransform::Bf16Split);
+        assert_eq!(decode_plane_frame(&mgr.registry, &f).unwrap(), bytes);
+    }
+
+    #[test]
+    fn e4m3_quad_roundtrips_all_layouts_registry_free() {
+        let values: Vec<f32> = (0..4096).map(|i| ((i as f32) * 0.31).sin() * 2.0).collect();
+        let (codes, _) = MiniFormat::E4M3.quantize(&values);
+        let registry = Registry::new();
+        for layout in PayloadLayout::ALL {
+            let f = encode_plane_frame(&registry, PlaneTransform::E4m3Quad, &codes, layout);
+            assert_eq!(f.header.transform, PlaneTransform::E4m3Quad, "{}", layout.name());
+            assert!(f.wire_bytes() < codes.len(), "{}", layout.name());
+            let back = Frame::parse(&f.to_bytes()).unwrap();
+            assert_eq!(decode_plane_frame(&registry, &back).unwrap(), codes);
+        }
     }
 }

@@ -15,7 +15,10 @@
 //! block can be decoded as soon as its bytes land, out of order, and a
 //! corrupted block is contained (tested).
 
-use super::{select_codebook, Frame, PayloadLayout, Registry, SingleStageDecoder};
+use super::{
+    planes, select_codebook, CodecConfig, Frame, PayloadLayout, PlaneTransform, Registry,
+    SingleStageDecoder,
+};
 use crate::stats::Histogram256;
 
 const STREAM_MAGIC: [u8; 2] = *b"S1";
@@ -62,6 +65,24 @@ pub fn encode_stream_layout(
     block_log2: u8,
     layout: PayloadLayout,
 ) -> (Vec<u8>, StreamStats) {
+    let config = CodecConfig::new().with_layout(layout);
+    encode_stream_config(registry, candidates, data, block_log2, &config)
+}
+
+/// [`encode_stream`] with a full [`CodecConfig`]: per-block payload
+/// layout plus an optional plane transform (blocks become
+/// `PLANES_MARKER` frames when the transform wins; selection happens
+/// per plane inside the transform). `threads`/`chunk_len` are
+/// parallel-engine knobs and do not apply to the serial stream path.
+/// [`decode_stream`] accepts any mix — frames self-describe.
+pub fn encode_stream_config(
+    registry: &Registry,
+    candidates: &[u8],
+    data: &[u8],
+    block_log2: u8,
+    config: &CodecConfig,
+) -> (Vec<u8>, StreamStats) {
+    let layout = config.layout;
     assert!((8..=24).contains(&block_log2), "block 256B..16MiB");
     let block = 1usize << block_log2;
     let n_blocks = data.len().div_ceil(block).max(1) as u32;
@@ -80,6 +101,16 @@ pub fn encode_stream_layout(
         data.chunks(block).collect()
     };
     for chunk in chunks {
+        if config.planes != PlaneTransform::None {
+            let frame = planes::encode_plane_frame(registry, config.planes, chunk, layout);
+            if frame.header.id == super::RAW_ID {
+                stats.raw_blocks += 1;
+            }
+            let bytes = frame.to_bytes();
+            out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            out.extend_from_slice(&bytes);
+            continue;
+        }
         let hist = Histogram256::from_bytes(chunk);
         let (id, bits) = select_codebook(&hist, registry, candidates);
         // per-layout coded overhead beyond the packed bits: the header,
@@ -307,6 +338,40 @@ mod tests {
             let (wire_n, sn) = encode_stream_layout(&reg, &[0], &data, 12, layout);
             assert_eq!(sn.blocks, si.blocks, "{}", layout.name());
             assert_eq!(decode_stream(&reg, &wire_n).unwrap(), data, "{}", layout.name());
+        }
+    }
+
+    #[test]
+    fn plane_transform_streams_roundtrip() {
+        use crate::singlestage::{PLANES_MARKER, RAW_ID};
+        let (reg, _) = setup(31);
+        // bf16-activation-like bytes: skewed high plane interleaved with
+        // a near-uniform low plane, so the split has something to win on
+        let hi = skewed(32, 4 * 2048);
+        let mut lo = vec![0u8; hi.len()];
+        Pcg32::new(33).fill_bytes(&mut lo);
+        let mut data = Vec::with_capacity(2 * hi.len());
+        for i in 0..hi.len() {
+            data.push(lo[i]);
+            data.push(hi[i]);
+        }
+        for planes in [PlaneTransform::Bf16Split, PlaneTransform::E4m3Quad] {
+            let config = CodecConfig::new().with_planes(planes);
+            let (wire, stats) = encode_stream_config(&reg, &[0], &data, 12, &config);
+            assert_eq!(stats.blocks, 4);
+            assert_eq!(decode_stream(&reg, &wire).unwrap(), data, "{}", planes.name());
+            // plane blocks still support out-of-order single-block decode
+            assert_eq!(decode_block(&reg, &wire, 1).unwrap(), data[4096..2 * 4096]);
+            // every block is either a plane frame or a RAW escape
+            for (off, len) in block_spans(&wire).unwrap() {
+                let frame = Frame::parse(&wire[off..off + len]).unwrap();
+                assert!(
+                    frame.header.id == PLANES_MARKER || frame.header.id == RAW_ID,
+                    "{}: unexpected block id {}",
+                    planes.name(),
+                    frame.header.id
+                );
+            }
         }
     }
 

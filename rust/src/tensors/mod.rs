@@ -60,13 +60,27 @@ impl TensorKind {
 }
 
 /// Symbol datatype of a shard stream (paper §2 dtype sweep).
+///
+/// `Bf16Hi`/`Bf16Lo` are the **plane dtypes**: the high
+/// (sign+exponent) and low (mantissa) byte planes a
+/// `PlaneTransform::Bf16Split` carves out of a bf16 stream. They get
+/// their own registry keys so plane codebooks can never alias a real
+/// dtype's entry (the old `planes.rs` reused the e2m1 slot), but they
+/// are not members of [`DtypeTag::ALL`] — sweeps iterate source
+/// dtypes, not derived planes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DtypeTag {
     Bf16,
     Mini(MiniFormat),
+    /// High byte plane (sign + exponent bits) of a bf16 stream.
+    Bf16Hi,
+    /// Low byte plane (mantissa bits) of a bf16 stream.
+    Bf16Lo,
 }
 
 impl DtypeTag {
+    /// The source dtypes of the paper's sweep (plane dtypes excluded —
+    /// see [`DtypeTag::PLANES`]).
     pub const ALL: [DtypeTag; 5] = [
         DtypeTag::Bf16,
         DtypeTag::Mini(MiniFormat::E4M3),
@@ -75,22 +89,32 @@ impl DtypeTag {
         DtypeTag::Mini(MiniFormat::E2M1),
     ];
 
+    /// The derived plane dtypes (registry keys for per-plane codebooks).
+    pub const PLANES: [DtypeTag; 2] = [DtypeTag::Bf16Hi, DtypeTag::Bf16Lo];
+
     pub fn name(&self) -> &'static str {
         match self {
             DtypeTag::Bf16 => "bf16",
             DtypeTag::Mini(f) => f.name(),
+            DtypeTag::Bf16Hi => "bf16_hi",
+            DtypeTag::Bf16Lo => "bf16_lo",
         }
     }
 
     pub fn parse(s: &str) -> Option<DtypeTag> {
-        Self::ALL.into_iter().find(|d| d.name() == s)
+        Self::ALL
+            .into_iter()
+            .chain(Self::PLANES)
+            .find(|d| d.name() == s)
     }
 
-    /// Bits per tensor element at this dtype (pre-compression).
+    /// Bits per tensor element at this dtype (pre-compression). Plane
+    /// dtypes carry one byte per source value.
     pub fn bits_per_value(&self) -> u32 {
         match self {
             DtypeTag::Bf16 => 16,
             DtypeTag::Mini(f) => f.bits(),
+            DtypeTag::Bf16Hi | DtypeTag::Bf16Lo => 8,
         }
     }
 }
@@ -194,6 +218,8 @@ pub fn shard_symbols(bits: &[u16], dtype: DtypeTag) -> Vec<u8> {
 pub fn shard_symbols_with_scale(bits: &[u16], dtype: DtypeTag, log2_scale: Option<i32>) -> Vec<u8> {
     match dtype {
         DtypeTag::Bf16 => bf16_symbols(bits, SymbolMode::Bf16Interleaved),
+        DtypeTag::Bf16Hi => crate::dtype::bf16_high_plane(bits),
+        DtypeTag::Bf16Lo => crate::dtype::bf16_low_plane(bits),
         DtypeTag::Mini(f) => {
             let xs: Vec<f32> = bits.iter().map(|&b| {
                 let v = bf16_to_f32(b);
@@ -243,10 +269,20 @@ mod tests {
         for k in TensorKind::ALL {
             assert_eq!(TensorKind::parse(k.name()), Some(k));
         }
-        for d in DtypeTag::ALL {
+        for d in DtypeTag::ALL.into_iter().chain(DtypeTag::PLANES) {
             assert_eq!(DtypeTag::parse(d.name()), Some(d));
         }
         assert_eq!(TensorKind::parse("bogus"), None);
+        // plane dtypes are distinct keys, not members of the sweep set
+        assert!(!DtypeTag::ALL.contains(&DtypeTag::Bf16Hi));
+        assert!(!DtypeTag::ALL.contains(&DtypeTag::Bf16Lo));
+    }
+
+    #[test]
+    fn plane_dtypes_extract_their_byte_plane() {
+        let bits = vec![0x1234u16, 0xABCD];
+        assert_eq!(shard_symbols(&bits, DtypeTag::Bf16Hi), vec![0x12, 0xAB]);
+        assert_eq!(shard_symbols(&bits, DtypeTag::Bf16Lo), vec![0x34, 0xCD]);
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! Differential dtype tests: every plane transform × payload layout ×
+//! available decode kernel must reproduce the original byte stream
+//! bit-exactly, all kernels must agree on the same plane frame, and the
+//! encoder must emit identical wire bytes on repeat encodes (the wire
+//! is a pure function of `(registry, transform, data, layout)`).
+//!
+//! Input streams cover every [`MiniFormat`] quantizer plus
+//! activation-like bf16 words, so the e4m3 quad-length path and the
+//! bf16 plane split are both pinned against realistic symbol skews —
+//! and against arbitrary bytes, where the transforms must still
+//! round-trip (escaping to raw when they cannot win).
+//!
+//! Runs through [`proptest_lite::Runner`] so any failure is replayed
+//! and shrunk to a minimal counterexample; the `SSHUFF_FORCE_SCALAR=1`
+//! CI leg pins the scalar kernel path on SIMD machines too.
+
+use sshuff::dtype::MiniFormat;
+use sshuff::huffman::kernel;
+use sshuff::prng::Pcg32;
+use sshuff::proptest_lite::{gens, shrinks, Runner};
+use sshuff::singlestage::{
+    planes, AvgPolicy, CodebookManager, Frame, PayloadLayout, PlaneTransform, Registry,
+    PLANES_MARKER, RAW_ID,
+};
+use sshuff::tensors::{TensorKey, TensorKind};
+
+/// Registry with real per-plane bf16 books plus a trained e4m3 byte
+/// book, so `Bf16Split` has plane codes to select and the sub-frame
+/// selector has non-trivial candidates to reject.
+fn trained_registry() -> Registry {
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let words: Vec<u16> = Pcg32::new(41)
+        .normal_f32s(1 << 14, 1.0)
+        .into_iter()
+        .map(|v| (v.to_bits() >> 16) as u16)
+        .collect();
+    planes::observe_and_build_planes(&mut mgr, TensorKind::Ffn1Act, &words)
+        .expect("plane books build from activation-like words");
+    let key = TensorKey::new(TensorKind::Ffn1WGrad, sshuff::tensors::DtypeTag::Mini(MiniFormat::E4M3));
+    let (codes, _) = MiniFormat::E4M3.quantize(&Pcg32::new(43).normal_f32s(1 << 14, 1.0));
+    mgr.observe_bytes(key, &codes);
+    mgr.build(key).expect("e4m3 byte book builds");
+    mgr.registry.clone()
+}
+
+/// The differential property: for both wire transforms and every
+/// layout, encode is deterministic, the wire reparses, and every
+/// available kernel decodes back to the original bytes.
+fn plane_differential_check(registry: &Registry, data: &[u8]) -> Result<(), String> {
+    let kernels = kernel::available_kernels();
+    for transform in [PlaneTransform::Bf16Split, PlaneTransform::E4m3Quad] {
+        for layout in PayloadLayout::ALL {
+            let tag = format!("{}/{layout:?}", transform.name());
+            let wire = planes::encode_plane_frame(registry, transform, data, layout).to_bytes();
+            let wire2 = planes::encode_plane_frame(registry, transform, data, layout).to_bytes();
+            if wire != wire2 {
+                return Err(format!("{tag}: encoder wire bytes not deterministic"));
+            }
+            let parsed = Frame::parse(&wire).map_err(|e| format!("{tag}: reparse: {e}"))?;
+            if parsed.header.n_symbols as usize != data.len() {
+                return Err(format!(
+                    "{tag}: reparsed n_symbols {} != {}",
+                    parsed.header.n_symbols,
+                    data.len()
+                ));
+            }
+            match parsed.header.id {
+                PLANES_MARKER => {
+                    if parsed.header.transform != transform {
+                        return Err(format!(
+                            "{tag}: reparsed transform {:?}",
+                            parsed.header.transform
+                        ));
+                    }
+                    let mut previous: Option<(Vec<u8>, &'static str)> = None;
+                    for &k in &kernels {
+                        let out = planes::decode_plane_frame_with(registry, &parsed, k)
+                            .map_err(|e| format!("{tag} × {}: {e}", k.name()))?;
+                        if out != data {
+                            return Err(format!("{tag} × {}: decode mismatch", k.name()));
+                        }
+                        if let Some((prev, prev_name)) = &previous {
+                            if *prev != out {
+                                return Err(format!(
+                                    "{tag}: kernels {} and {} disagree",
+                                    prev_name,
+                                    k.name()
+                                ));
+                            }
+                        }
+                        previous = Some((out, k.name()));
+                    }
+                }
+                RAW_ID => {
+                    // size escape: raw frames carry the bytes verbatim
+                    if parsed.payload != data {
+                        return Err(format!("{tag}: raw escape payload mismatch"));
+                    }
+                }
+                id => return Err(format!("{tag}: unexpected frame id {id}")),
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn differential_on_bf16_activation_streams() {
+    let reg = trained_registry();
+    Runner::new("dtype-differential-bf16", 24).run(
+        |rng| {
+            let words = gens::bf16_activations(rng, 4096);
+            words.iter().flat_map(|w| w.to_le_bytes()).collect::<Vec<u8>>()
+        },
+        shrinks::vec_u8,
+        |data| plane_differential_check(&reg, data),
+    );
+}
+
+#[test]
+fn differential_on_e4m3_streams() {
+    let reg = trained_registry();
+    Runner::new("dtype-differential-e4m3", 24).run(
+        |rng| gens::e4m3_values(rng, 8192),
+        shrinks::vec_u8,
+        |data| plane_differential_check(&reg, data),
+    );
+}
+
+#[test]
+fn differential_on_every_mini_format() {
+    // each quantizer produces a different code distribution (e2m1 only
+    // has 16 codes; e4m3 uses most of the low half) — the quad
+    // classifier and the plane split must round-trip them all, with and
+    // without registry books
+    let reg = trained_registry();
+    let empty = Registry::new();
+    for fmt in MiniFormat::ALL {
+        for (seed, std) in [(3u64, 1.0f32), (5, 40.0)] {
+            let vals = Pcg32::new(seed).normal_f32s(4096, std);
+            let (codes, _) = fmt.quantize(&vals);
+            plane_differential_check(&reg, &codes)
+                .unwrap_or_else(|e| panic!("{} trained: {e}", fmt.name()));
+            plane_differential_check(&empty, &codes)
+                .unwrap_or_else(|e| panic!("{} registry-free: {e}", fmt.name()));
+        }
+    }
+}
+
+#[test]
+fn differential_on_arbitrary_bytes_registry_free() {
+    // incompressible and adversarial inputs: the transforms may escape
+    // to raw, but must never corrupt or panic
+    let reg = Registry::new();
+    Runner::new("dtype-differential-arbitrary", 24).run(
+        |rng| gens::bytes(rng, 8192),
+        shrinks::vec_u8,
+        |data| plane_differential_check(&reg, data),
+    );
+}
+
+#[test]
+fn differential_on_skewed_bytes_trained() {
+    let reg = trained_registry();
+    Runner::new("dtype-differential-skewed", 24).run(
+        |rng| gens::bytes_skewed(rng, 8192),
+        shrinks::vec_u8,
+        |data| plane_differential_check(&reg, data),
+    );
+}
+
+#[test]
+fn differential_on_degenerate_inputs() {
+    // deterministic edges: empty, single byte (odd bf16 tail with zero
+    // pairs), tiny odd/even lengths, and single-symbol runs crossing
+    // the quad class-map byte boundaries
+    let reg = trained_registry();
+    plane_differential_check(&reg, &[]).unwrap();
+    plane_differential_check(&reg, &[0x42]).unwrap();
+    plane_differential_check(&reg, &[7; 2]).unwrap();
+    plane_differential_check(&reg, &[7; 3]).unwrap();
+    for n in [15usize, 16, 17, 255, 256, 257, 4095, 4096, 4097] {
+        plane_differential_check(&reg, &vec![0xA5; n]).unwrap();
+        let ramp: Vec<u8> = (0..n).map(|i| (i % 256) as u8).collect();
+        plane_differential_check(&reg, &ramp).unwrap();
+    }
+}

@@ -90,13 +90,14 @@ fn registry_capacity_and_reserved_id_reservation() {
             "reserved marker byte {id} must never be allocated"
         );
     }
-    assert_eq!(reg.len(), 252);
-    // the four reserved bytes sit contiguously above MAX_BOOKS
+    assert_eq!(reg.len(), 251);
+    // the five reserved bytes sit contiguously above MAX_BOOKS
     for marker in [
         RAW_ID,
         sshuff::singlestage::INTERLEAVED4_MARKER,
         sshuff::singlestage::INTERLEAVED8_MARKER,
         sshuff::singlestage::INTERLEAVED16_MARKER,
+        sshuff::singlestage::PLANES_MARKER,
     ] {
         assert!(sshuff::singlestage::is_reserved_id(marker));
         assert!(marker as usize >= Registry::MAX_BOOKS);
@@ -104,7 +105,7 @@ fn registry_capacity_and_reserved_id_reservation() {
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         reg.add(std::sync::Arc::new(sshuff::singlestage::FixedCodebook::new(book, None, 0)))
     }));
-    assert!(result.is_err(), "registry must reject book 253");
+    assert!(result.is_err(), "registry must reject book 252");
 }
 
 #[test]
@@ -162,6 +163,78 @@ fn corrupt_interleaved_n_wires_error_cleanly() {
                     // decode may fail (overrunning jump table, implausible
                     // symbol count) or succeed with garbage; both fine
                     let _ = dec.decode(&frame);
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn corrupt_plane_wires_error_cleanly() {
+    // targeted corruption of plane-transform frames: invalid transform
+    // codes (0 is not a wire transform, 3..=255 are unassigned),
+    // truncation inside the header / plane length prefixes / quad class
+    // map, plane lengths overrunning the body, mangled quad layout
+    // bytes, and arbitrary bit flips (which also corrupt the class map,
+    // whose capacity check must reject over-full classes rather than
+    // build an invalid decoder). Every outcome must be Err or bounded
+    // garbage — never a panic or an out-of-bounds read.
+    use sshuff::proptest_lite::{gens, shrinks, Runner};
+    use sshuff::singlestage::{planes, PlaneTransform, PLANES_MARKER};
+    let mut mgr = CodebookManager::new(AvgPolicy::CumulativeMean);
+    let key = TensorKey::new(TensorKind::Ffn1Act, DtypeTag::Bf16);
+    let mut seed_rng = sshuff::prng::Pcg32::new(91);
+    mgr.observe_bytes(key, &gens::bytes_skewed(&mut seed_rng, 1 << 15));
+    mgr.build(key).unwrap();
+    let reg = mgr.registry;
+    let transforms = [PlaneTransform::Bf16Split, PlaneTransform::E4m3Quad];
+    Runner::new("plane-corrupt-wire", 150).run(
+        |rng| {
+            let transform = transforms[rng.gen_range(2) as usize];
+            let layout = PayloadLayout::ALL[rng.gen_range(4) as usize];
+            let data = gens::bytes_skewed(rng, 4096);
+            let mut wire =
+                planes::encode_plane_frame(&reg, transform, &data, layout).to_bytes();
+            match rng.gen_range(5) {
+                0 if wire[0] == PLANES_MARKER => {
+                    // flip the transform marker to an invalid code
+                    wire[1] = [0u8, 3, 7, 255][rng.gen_range(4) as usize];
+                }
+                1 => {
+                    // truncate in the header, a bf16 length prefix, or
+                    // the quad layout byte + class map
+                    let cap = wire.len().min(6 + 1 + 64 + 4);
+                    wire.truncate(rng.gen_range(cap as u32 + 1) as usize);
+                }
+                2 if wire.len() >= 10 => {
+                    // first body word -> bf16 hi-plane length far past
+                    // the body end (or a garbage quad layout byte)
+                    wire[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+                }
+                3 if wire.len() >= 7 => {
+                    wire[6] = rng.gen_range(256) as u8;
+                }
+                _ => {
+                    for _ in 0..=rng.gen_range(4) {
+                        let i = rng.gen_range(wire.len() as u32) as usize;
+                        wire[i] ^= 1 << rng.gen_range(8);
+                    }
+                }
+            }
+            wire
+        },
+        shrinks::vec_u8,
+        |wire| {
+            let dec = SingleStageDecoder::new(reg.clone());
+            match Frame::parse(wire) {
+                Err(_) => Ok(()), // clean reject
+                Ok(frame) => {
+                    // decode may fail (overrun plane offsets, invalid
+                    // class maps, implausible symbol counts) or succeed
+                    // with garbage; both are fine — panics are not
+                    let _ = dec.decode(&frame);
+                    let _ = planes::decode_plane_frame(&reg, &frame);
                     Ok(())
                 }
             }

@@ -5,8 +5,9 @@ use sshuff::baselines::{Codec, Lz77Codec, RawCodec, SingleStageCodec, ThreeStage
 use sshuff::huffman::{CodeBook, JUMP_TABLE_BYTES, MAX_CODE_LEN};
 use sshuff::proptest_lite::{gens, shrinks, Runner};
 use sshuff::singlestage::{
-    AvgPolicy, CodebookManager, Frame, PayloadLayout, SingleStageDecoder, SingleStageEncoder,
-    INTERLEAVED16_MARKER, INTERLEAVED4_MARKER, INTERLEAVED8_MARKER,
+    planes, AvgPolicy, CodebookManager, FixedCodebook, Frame, PayloadLayout, PlaneTransform,
+    Registry, SingleStageDecoder, SingleStageEncoder, INTERLEAVED16_MARKER, INTERLEAVED4_MARKER,
+    INTERLEAVED8_MARKER, PLANES_MARKER, RAW_ID,
 };
 use sshuff::stats::Histogram256;
 use sshuff::tensors::{DtypeTag, TensorKey, TensorKind};
@@ -485,6 +486,114 @@ fn golden_interleaved16_wire_bytes_are_pinned() {
     assert_eq!(&wire[..6], &[INTERLEAVED16_MARKER, 3, 11, 0, 0, 0]);
     assert_eq!(&wire[6..], &want_payload[..]);
     assert_eq!(Frame::parse(&wire).unwrap(), frame);
+}
+
+#[test]
+fn golden_e4m3_quad_wire_bytes_are_pinned() {
+    // 200 zero bytes: ranking puts symbol 0 (count 200) first, then
+    // symbols 1..=255 by value, so the class map is fully determined:
+    // symbols 0..=5 class 0 (4 bits), 6..=25 class 1 (6 bits), 26..=55
+    // class 2 (8 bits), 56..=255 class 3 (10 bits). Packed 2 bits per
+    // symbol (symbol 4i+j in bits 2j..2j+2 of byte i):
+    //   byte 0      = 0x00  (symbols 0-3: class 0)
+    //   byte 1      = 0x50  (4,5 class 0; 6,7 class 1)
+    //   bytes 2-5   = 0x55  (8-23: class 1)
+    //   byte 6      = 0xA5  (24,25 class 1; 26,27 class 2)
+    //   bytes 7-13  = 0xAA  (28-55: class 2)
+    //   bytes 14-63 = 0xFF  (56-255: class 3)
+    // Symbol 0 is the first 4-bit symbol -> canonical code 0000, so the
+    // payload is 200 x 4 zero bits = 100 zero bytes.
+    let mut class_map = vec![0x00u8, 0x50];
+    class_map.extend([0x55; 4]);
+    class_map.push(0xA5);
+    class_map.extend([0xAA; 7]);
+    class_map.extend([0xFF; 50]);
+    assert_eq!(class_map.len(), 64);
+    let data = vec![0u8; 200];
+    let reg = Registry::new(); // quad frames are registry-free
+
+    // legacy layout: quad layout byte 0xFF, then map, then payload
+    let frame = planes::encode_plane_frame(&reg, PlaneTransform::E4m3Quad, &data, PayloadLayout::Legacy);
+    let wire = frame.to_bytes();
+    let mut want = vec![PLANES_MARKER, 2, 200, 0, 0, 0, 0xFF];
+    want.extend_from_slice(&class_map);
+    want.extend_from_slice(&[0u8; 100]);
+    assert_eq!(wire, want, "legacy quad wire drifted");
+    let parsed = Frame::parse(&wire).unwrap();
+    assert_eq!(parsed, frame);
+    assert_eq!(planes::decode_plane_frame(&reg, &parsed).unwrap(), data);
+
+    // interleaved4: layout byte is the in-band marker, payload grows a
+    // jump table (lanes 0..=2 hold 50 x 4 bits = 25 bytes each)
+    let frame4 =
+        planes::encode_plane_frame(&reg, PlaneTransform::E4m3Quad, &data, PayloadLayout::Interleaved4);
+    let wire4 = frame4.to_bytes();
+    let mut want4 = vec![PLANES_MARKER, 2, 200, 0, 0, 0, INTERLEAVED4_MARKER];
+    want4.extend_from_slice(&class_map);
+    for _ in 0..3 {
+        want4.extend_from_slice(&25u32.to_le_bytes());
+    }
+    want4.extend_from_slice(&[0u8; 100]);
+    assert_eq!(wire4, want4, "interleaved4 quad wire drifted");
+    assert_eq!(planes::decode_plane_frame(&reg, &Frame::parse(&wire4).unwrap()).unwrap(), data);
+}
+
+#[test]
+fn golden_bf16_split_wire_bytes_are_pinned() {
+    // fully hand-built frame: 2 pairs + odd tail, both planes escaped
+    // to raw sub-frames. Body = [hi_len u32][hi wire][lo_len u32]
+    // [lo wire][tail byte]; the hi plane is the second byte of each LE
+    // pair.
+    let data = [0x11u8, 0x22, 0x33, 0x44, 0x55];
+    let hi_wire = [RAW_ID, 2, 0, 0, 0, 0x22, 0x44];
+    let lo_wire = [RAW_ID, 2, 0, 0, 0, 0x11, 0x33];
+    let mut body = 7u32.to_le_bytes().to_vec();
+    body.extend_from_slice(&hi_wire);
+    body.extend_from_slice(&7u32.to_le_bytes());
+    body.extend_from_slice(&lo_wire);
+    body.push(0x55);
+    let frame = Frame::planes(PlaneTransform::Bf16Split, 5, body.clone());
+    let wire = frame.to_bytes();
+    let mut want = vec![PLANES_MARKER, 1, 5, 0, 0, 0];
+    want.extend_from_slice(&body);
+    assert_eq!(wire, want, "raw-plane bf16-split wire drifted");
+    assert_eq!(Frame::parse(&wire).unwrap(), frame);
+    let reg = Registry::new();
+    assert_eq!(planes::decode_plane_frame(&reg, &frame).unwrap(), data.to_vec());
+
+    // coded planes through the real encoder: the pinned tiny book
+    // (a:0/1b, b:10/2b, c:110/3b, d:111/3b) wins both planes, so the
+    // body is two identical coded legacy sub-frames with id 0, length
+    // prefixed, hi first. The payload bytes reuse the book's own
+    // encode, which the legacy/interleaved goldens above pin.
+    let mut counts = [0u64; 256];
+    counts[b'a' as usize] = 5;
+    counts[b'b' as usize] = 2;
+    counts[b'c' as usize] = 1;
+    counts[b'd' as usize] = 1;
+    let book = CodeBook::from_counts(&counts).unwrap();
+    let plane: Vec<u8> = b"abcdabcaaaa".repeat(8); // 88 symbols per plane
+    let mut reg = Registry::new();
+    let id = reg.add(std::sync::Arc::new(FixedCodebook::new(book.clone(), None, 1)));
+    assert_eq!(id, 0);
+    let mut data = Vec::new();
+    for &b in &plane {
+        data.push(b); // lo byte
+        data.push(b); // hi byte
+    }
+    let frame = planes::encode_plane_frame(&reg, PlaneTransform::Bf16Split, &data, PayloadLayout::Legacy);
+    let (payload, _) = book.encode(&plane);
+    let mut sub = vec![id];
+    sub.extend_from_slice(&(plane.len() as u32).to_le_bytes());
+    sub.extend_from_slice(&payload);
+    let mut want = vec![PLANES_MARKER, 1];
+    want.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    for _ in 0..2 {
+        want.extend_from_slice(&(sub.len() as u32).to_le_bytes());
+        want.extend_from_slice(&sub);
+    }
+    assert_eq!(frame.to_bytes(), want, "coded bf16-split wire drifted");
+    assert_eq!(planes::decode_plane_frame(&reg, &frame).unwrap(), data);
 }
 
 #[test]
