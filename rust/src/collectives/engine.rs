@@ -50,6 +50,7 @@ use super::wire;
 use super::{chunk_bounds, CollectiveReport, WireFormat};
 use crate::baselines::Codec;
 use crate::fabric::{Fabric, LinkModel};
+use crate::trace::{ArgValue, Category, Span};
 
 /// One hop submitted to a [`Transport`]: `raw` serialized payload bytes
 /// moving from rank `from` to rank `to`.
@@ -234,13 +235,28 @@ impl Transport for SimTransport<'_> {
         let mut outs = Vec::with_capacity(hops.len());
         for h in hops {
             let te = Instant::now();
-            let wire = codec.encode(&h.raw);
+            let wire = {
+                let _s = Span::begin(Category::Encode, "hop_encode").arg("bytes", h.raw.len());
+                codec.encode(&h.raw)
+            };
             let encode_s = te.elapsed().as_secs_f64();
             let wire_s = self.fabric.send(h.from, h.to, wire.len());
+            crate::trace::mark_with(
+                Category::Wire,
+                "sim_send",
+                &mut [
+                    ("bytes", ArgValue::from(wire.len())),
+                    ("model_s", ArgValue::from(wire_s)),
+                ]
+                .into_iter(),
+            );
             let td = Instant::now();
-            let decoded = codec.decode(&wire).map_err(|e| {
-                crate::error::anyhow!("codec {} failed on its own output: {e}", codec.name())
-            })?;
+            let decoded = {
+                let _s = Span::begin(Category::Decode, "hop_decode").arg("bytes", wire.len());
+                codec.decode(&wire).map_err(|e| {
+                    crate::error::anyhow!("codec {} failed on its own output: {e}", codec.name())
+                })?
+            };
             let decode_s = td.elapsed().as_secs_f64();
             debug_assert_eq!(decoded, h.raw);
             outs.push(HopOut {
@@ -461,7 +477,11 @@ impl Transport for ChannelTransport {
                         let mut sds = Vec::with_capacity(sw.len());
                         for w in sw {
                             let te = Instant::now();
-                            let wire = codec.encode(&w.raw);
+                            let wire = {
+                                let _s = Span::begin(Category::Encode, "hop_encode")
+                                    .arg("bytes", w.raw.len());
+                                codec.encode(&w.raw)
+                            };
                             let encode_s = te.elapsed().as_secs_f64();
                             let wire_bytes = wire.len();
                             if w.tx.send(wire).is_err() {
@@ -475,16 +495,23 @@ impl Transport for ChannelTransport {
                         let mut rds = Vec::with_capacity(rw.len());
                         for w in rw {
                             let tw = Instant::now();
-                            let wire = match w.rx.recv() {
-                                Ok(wire) => wire,
-                                Err(_) => crate::error::bail!(
-                                    "rank link down: sender of hop {} died mid-step",
-                                    w.idx
-                                ),
+                            let wire = {
+                                let _s = Span::begin(Category::Wire, "recv_wait");
+                                match w.rx.recv() {
+                                    Ok(wire) => wire,
+                                    Err(_) => crate::error::bail!(
+                                        "rank link down: sender of hop {} died mid-step",
+                                        w.idx
+                                    ),
+                                }
                             };
                             let wire_wall_s = tw.elapsed().as_secs_f64();
                             let td = Instant::now();
-                            let decoded = codec.decode(&wire)?;
+                            let decoded = {
+                                let _s = Span::begin(Category::Decode, "hop_decode")
+                                    .arg("bytes", wire.len());
+                                codec.decode(&wire)?
+                            };
                             let decode_s = td.elapsed().as_secs_f64();
                             rds.push(RecvDone { idx: w.idx, decoded, decode_s, wire_wall_s });
                         }
@@ -518,6 +545,7 @@ impl Transport for ChannelTransport {
 /// Shut down every socket in a rank's link list, unblocking any peer
 /// parked in a read or write against this rank.
 fn poison(streams: &[Option<wire::FrameStream>]) {
+    crate::metrics::global().counter("transport_links_poisoned").inc();
     for s in streams.iter().flatten() {
         s.shutdown();
     }
@@ -605,7 +633,11 @@ impl SocketTransport {
                                 let mut sds = Vec::with_capacity(sw.len());
                                 for (idx, to, raw) in sw {
                                     let te = Instant::now();
-                                    let wire_buf = codec.encode(&raw);
+                                    let wire_buf = {
+                                        let _s = Span::begin(Category::Encode, "hop_encode")
+                                            .arg("bytes", raw.len());
+                                        codec.encode(&raw)
+                                    };
                                     let encode_s = te.elapsed().as_secs_f64();
                                     let stream = tx[to].as_mut().expect("socket mesh link");
                                     if let Err(e) = stream.send_frame(&wire_buf) {
@@ -627,16 +659,23 @@ impl SocketTransport {
                                 for (idx, from) in rw {
                                     let tw = Instant::now();
                                     let stream = rx[from].as_mut().expect("socket mesh link");
-                                    let wire_buf = match stream.recv_frame() {
-                                        Ok(w) => w,
-                                        Err(e) => {
-                                            poison(rx);
-                                            return Err(e);
+                                    let wire_buf = {
+                                        let _s = Span::begin(Category::Wire, "recv_wait");
+                                        match stream.recv_frame() {
+                                            Ok(w) => w,
+                                            Err(e) => {
+                                                poison(rx);
+                                                return Err(e);
+                                            }
                                         }
                                     };
                                     let wire_wall_s = tw.elapsed().as_secs_f64();
                                     let td = Instant::now();
-                                    let decoded = codec.decode(&wire_buf)?;
+                                    let decoded = {
+                                        let _s = Span::begin(Category::Decode, "hop_decode")
+                                            .arg("bytes", wire_buf.len());
+                                        codec.decode(&wire_buf)?
+                                    };
                                     let decode_s = td.elapsed().as_secs_f64();
                                     rds.push(RecvDone { idx, decoded, decode_s, wire_wall_s });
                                 }
@@ -854,11 +893,21 @@ impl<'a> CollectiveEngine<'a> {
             return Ok(Vec::new());
         }
         let link = self.transport.link();
+        let mut step_span = Span::begin(Category::Collective, "collective_step")
+            .arg("transport", self.transport.name())
+            .arg("hops", hops.len());
         let ins: Vec<HopIn> = hops
             .into_iter()
             .map(|(from, to, payload)| HopIn { from, to, raw: fmt.serialize(&payload) })
             .collect();
         let (outs, wall_s) = self.transport.exchange(self.codec, ins)?;
+        let step_wire_bytes: u64 = outs.iter().map(|h| h.wire_bytes as u64).sum();
+        step_span.add_arg("wire_bytes", step_wire_bytes);
+        drop(step_span);
+        let m = crate::metrics::global();
+        let tname = self.transport.name();
+        m.counter(&format!("transport_{tname}_frames")).add(outs.len() as u64);
+        m.counter(&format!("transport_{tname}_bytes")).add(step_wire_bytes);
 
         let (mut enc_max, mut dec_max, mut wire_max) = (0.0f64, 0.0f64, 0.0f64);
         let (mut pipe_max, mut lock_max, mut wirewall_max) = (0.0f64, 0.0f64, 0.0f64);

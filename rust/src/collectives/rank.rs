@@ -81,9 +81,16 @@ impl<'a> RankEngine<'a> {
         fmt: WireFormat,
     ) -> crate::Result<Vec<f32>> {
         let t_step = Instant::now();
+        let step_span = crate::trace::Span::begin(crate::trace::Category::Collective, "rank_hop")
+            .arg("to", to)
+            .arg("from", from);
         let raw = fmt.serialize(payload);
         let t0 = Instant::now();
-        let wire_buf = self.codec.encode(&raw);
+        let wire_buf = {
+            let _s = crate::trace::Span::begin(crate::trace::Category::Encode, "hop_encode")
+                .arg("bytes", raw.len());
+            self.codec.encode(&raw)
+        };
         let encode_s = t0.elapsed().as_secs_f64();
 
         let (tx, rx) = self.mesh.tx_rx(to, from);
@@ -96,7 +103,10 @@ impl<'a> RankEngine<'a> {
                 r
             });
             let t1 = Instant::now();
-            let got = rx.recv_frame();
+            let got = {
+                let _s = crate::trace::Span::begin(crate::trace::Category::Wire, "recv_wait");
+                rx.recv_frame()
+            };
             let wait_s = t1.elapsed().as_secs_f64();
             if got.is_err() {
                 rx.shutdown(); // unblock the sender half fast
@@ -119,8 +129,13 @@ impl<'a> RankEngine<'a> {
         };
 
         let t2 = Instant::now();
-        let decoded = self.codec.decode(&frame)?;
+        let decoded = {
+            let _s = crate::trace::Span::begin(crate::trace::Category::Decode, "hop_decode")
+                .arg("bytes", frame.len());
+            self.codec.decode(&frame)?
+        };
         let decode_s = t2.elapsed().as_secs_f64();
+        drop(step_span);
 
         // account the received hop (summing over ranks == global totals)
         self.report.wire_bytes += frame.len() as u64;

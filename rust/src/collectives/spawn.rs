@@ -56,6 +56,12 @@ pub struct SpawnConfig {
     pub pace_gbps: f64,
     /// Hard deadline for the whole run (rendezvous + collectives + reap).
     pub timeout: Duration,
+    /// Collect per-rank traces and write one merged, clock-aligned
+    /// Chrome trace-event JSON here.
+    pub trace: Option<std::path::PathBuf>,
+    /// Dump every rank's metrics exposition (plus the parent's) after
+    /// the run.
+    pub metrics: bool,
 }
 
 impl SpawnConfig {
@@ -82,6 +88,9 @@ pub struct WorkerConfig {
     pub seed: u64,
     pub pace_gbps: f64,
     pub timeout: Duration,
+    /// Enable span recording and ship the drained trace buffer home in
+    /// the report (`--trace-worker` on the re-exec argv).
+    pub trace: bool,
 }
 
 /// What the parent learned from a verified run.
@@ -142,6 +151,9 @@ pub fn build_codec(seed: u64, ranks: usize, elems: usize) -> SingleStageCodec {
 pub fn run_worker(cfg: &WorkerConfig) -> crate::Result<()> {
     crate::error::ensure!(cfg.rank < cfg.ranks, "worker rank out of range");
     crate::error::ensure!(cfg.nodes * cfg.locals == cfg.ranks, "hierarchy must cover ranks");
+    if cfg.trace {
+        crate::trace::set_enabled(true);
+    }
     let deadline = Instant::now() + cfg.timeout;
     let parent = wire::Endpoint::parse(&cfg.rendezvous)?;
     let (listener, scratch) = match &parent {
@@ -169,6 +181,17 @@ pub fn run_worker(cfg: &WorkerConfig) -> crate::Result<()> {
             report.err = format!("{e:#}");
         }
     }
+    // collectives are done (worker threads joined), so the sink holds
+    // every span this rank recorded; ship it home with the report
+    report.telemetry = Some(wire::Telemetry {
+        epoch_unix_ns: crate::trace::epoch_unix_ns(),
+        trace: if cfg.trace {
+            crate::trace::encode_events(&crate::trace::TraceSink::global().drain())
+        } else {
+            Vec::new()
+        },
+        metrics_text: crate::metrics::global().render(),
+    });
     control.send_frame(&report.encode())?;
     let bye = control.recv_frame()?;
     crate::error::ensure!(bye.first() == Some(&wire::MSG_BYE), "worker: expected BYE");
@@ -236,6 +259,11 @@ pub fn run_spawn(cfg: &SpawnConfig) -> crate::Result<SpawnSummary> {
         "--spawn needs a real wire: --transport tcp or uds"
     );
     crate::error::ensure!(cfg.nodes * cfg.locals == cfg.ranks, "--nodes*--locals must equal N");
+    if cfg.trace.is_some() {
+        // trace the parent too: its sim-reference replay shows up as
+        // one more pid next to the rank workers
+        crate::trace::set_enabled(true);
+    }
     let deadline = Instant::now() + cfg.timeout;
     let (listener, scratch) = match cfg.kind {
         TransportKind::Tcp => (wire::Listener::bind_tcp()?, None),
@@ -248,8 +276,8 @@ pub fn run_spawn(cfg: &SpawnConfig) -> crate::Result<SpawnSummary> {
     let exe = std::env::current_exe()?;
     let mut children = Vec::with_capacity(cfg.ranks);
     for r in 0..cfg.ranks {
-        let child = std::process::Command::new(&exe)
-            .arg("collective")
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("collective")
             .args(["--worker-rank", &r.to_string()])
             .args(["--ranks", &cfg.ranks.to_string()])
             .args(["--rendezvous", &uri])
@@ -259,7 +287,11 @@ pub fn run_spawn(cfg: &SpawnConfig) -> crate::Result<SpawnSummary> {
             .args(["--locals", &cfg.locals.to_string()])
             .args(["--seed", &cfg.seed.to_string()])
             .args(["--pace-gbps", &cfg.pace_gbps.to_string()])
-            .args(["--timeout-s", &cfg.timeout.as_secs_f64().to_string()])
+            .args(["--timeout-s", &cfg.timeout.as_secs_f64().to_string()]);
+        if cfg.trace.is_some() {
+            cmd.arg("--trace-worker");
+        }
+        let child = cmd
             .stdin(std::process::Stdio::null())
             .stdout(std::process::Stdio::null())
             .stderr(std::process::Stdio::inherit())
@@ -283,7 +315,56 @@ pub fn run_spawn(cfg: &SpawnConfig) -> crate::Result<SpawnSummary> {
         kill_all(&mut children);
         return Err(e);
     }
-    verify(cfg, &reports)
+    let summary = verify(cfg, &reports)?;
+    emit_telemetry(cfg, &reports)?;
+    Ok(summary)
+}
+
+/// Merge the workers' shipped trace buffers (plus the parent's own
+/// spans) into one clock-aligned Chrome trace, and dump the per-rank
+/// metrics expositions when asked.
+fn emit_telemetry(cfg: &SpawnConfig, reports: &[wire::WorkerReport]) -> crate::Result<()> {
+    if let Some(path) = &cfg.trace {
+        let mut ranks = Vec::with_capacity(reports.len() + 1);
+        for rep in reports {
+            let t = rep.telemetry.as_ref().ok_or_else(|| {
+                crate::error::anyhow!("rank {} report carries no trace buffer", rep.rank)
+            })?;
+            ranks.push(crate::trace::RankTrace {
+                pid: rep.rank,
+                epoch_unix_ns: t.epoch_unix_ns,
+                events: crate::trace::decode_events(&t.trace)?,
+            });
+        }
+        // the parent's own spans (sim-reference replay, codec training)
+        ranks.push(crate::trace::RankTrace {
+            pid: cfg.ranks as u32,
+            epoch_unix_ns: crate::trace::epoch_unix_ns(),
+            events: crate::trace::TraceSink::global().drain(),
+        });
+        let n_events: usize = ranks.iter().map(|r| r.events.len()).sum();
+        let f = std::fs::File::create(path)
+            .map_err(|e| crate::error::anyhow!("creating {}: {e}", path.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        crate::trace::write_chrome_trace(&mut w, &ranks)
+            .and_then(|()| std::io::Write::flush(&mut w))
+            .map_err(|e| crate::error::anyhow!("writing {}: {e}", path.display()))?;
+        println!(
+            "trace: {} events from {} ranks (+parent) -> {}",
+            n_events,
+            reports.len(),
+            path.display()
+        );
+    }
+    if cfg.metrics {
+        for rep in reports {
+            if let Some(t) = &rep.telemetry {
+                print!("--- metrics rank {} ---\n{}", rep.rank, t.metrics_text);
+            }
+        }
+        print!("--- metrics parent ---\n{}", crate::metrics::global().render());
+    }
+    Ok(())
 }
 
 fn parent_exchange(
@@ -453,6 +534,8 @@ mod tests {
             seed: 7,
             pace_gbps: 0.0,
             timeout: Duration::from_secs(5),
+            trace: None,
+            metrics: false,
         };
         let (a, wire_a, raw_a) = sim_reference(&cfg).unwrap();
         let (b, wire_b, raw_b) = sim_reference(&cfg).unwrap();
@@ -479,6 +562,8 @@ mod tests {
             seed: 11,
             pace_gbps: 0.0,
             timeout: Duration::from_secs(10),
+            trace: None,
+            metrics: false,
         };
         let (want, want_wire, want_raw) = sim_reference(&cfg).unwrap();
         let codec = build_codec(cfg.seed, cfg.ranks, cfg.elems);

@@ -120,6 +120,46 @@ impl Write for Socket {
     }
 }
 
+/// Frame-level counters on the process-global metrics registry
+/// (`wire_frames_sent/_recv`, `wire_bytes_sent/_recv` including the
+/// 4-byte length prefix, `wire_timeouts`).
+struct WireMetrics {
+    sent_frames: crate::metrics::Counter,
+    sent_bytes: crate::metrics::Counter,
+    recv_frames: crate::metrics::Counter,
+    recv_bytes: crate::metrics::Counter,
+    timeouts: crate::metrics::Counter,
+}
+
+fn wire_metrics() -> &'static WireMetrics {
+    static M: std::sync::OnceLock<WireMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| {
+        let reg = crate::metrics::global();
+        WireMetrics {
+            sent_frames: reg.counter("wire_frames_sent"),
+            sent_bytes: reg.counter("wire_bytes_sent"),
+            recv_frames: reg.counter("wire_frames_recv"),
+            recv_bytes: reg.counter("wire_bytes_recv"),
+            timeouts: reg.counter("wire_timeouts"),
+        }
+    })
+}
+
+/// Classify a frame-level I/O failure: timeouts (both the `TimedOut`
+/// and the Unix `WouldBlock` spelling) bump the timeout counter and
+/// drop an instant marker into the trace.
+fn note_io_error(dir: &'static str, e: &std::io::Error) {
+    use std::io::ErrorKind;
+    if matches!(e.kind(), ErrorKind::TimedOut | ErrorKind::WouldBlock) {
+        wire_metrics().timeouts.inc();
+        crate::trace::mark_with(
+            crate::trace::Category::Wire,
+            "timeout",
+            &mut std::iter::once(("dir", crate::trace::ArgValue::from(dir))),
+        );
+    }
+}
+
 /// A socket speaking `[len: u32 LE][payload]` frames, optionally paced
 /// to a target send bandwidth.
 ///
@@ -154,12 +194,19 @@ impl FrameStream {
             payload.len(),
             MAX_FRAME_BYTES
         );
+        let _span = crate::trace::Span::begin(crate::trace::Category::Wire, "send_frame")
+            .arg("bytes", payload.len());
         let t0 = Instant::now();
         self.sock
             .write_all(&(payload.len() as u32).to_le_bytes())
             .and_then(|()| self.sock.write_all(payload))
             .and_then(|()| self.sock.flush())
-            .map_err(|e| crate::error::anyhow!("frame send ({} bytes): {e}", payload.len()))?;
+            .map_err(|e| {
+                note_io_error("send", &e);
+                crate::error::anyhow!("frame send ({} bytes): {e}", payload.len())
+            })?;
+        wire_metrics().sent_frames.inc();
+        wire_metrics().sent_bytes.add(payload.len() as u64 + 4);
         if self.pace_bps > 0.0 {
             let want = (payload.len() + 4) as f64 / self.pace_bps;
             let spent = t0.elapsed().as_secs_f64();
@@ -171,19 +218,26 @@ impl FrameStream {
     }
 
     pub fn recv_frame(&mut self) -> crate::Result<Vec<u8>> {
+        let mut span = crate::trace::Span::begin(crate::trace::Category::Wire, "recv_frame");
         let mut hdr = [0u8; 4];
-        self.sock
-            .read_exact(&mut hdr)
-            .map_err(|e| crate::error::anyhow!("frame header recv: {e}"))?;
+        self.sock.read_exact(&mut hdr).map_err(|e| {
+            note_io_error("recv", &e);
+            crate::error::anyhow!("frame header recv: {e}")
+        })?;
         let len = u32::from_le_bytes(hdr) as usize;
         crate::error::ensure!(
             len <= MAX_FRAME_BYTES,
             "incoming frame claims {len} bytes (cap {MAX_FRAME_BYTES}) — corrupt stream?"
         );
         let mut payload = vec![0u8; len];
-        self.sock
-            .read_exact(&mut payload)
-            .map_err(|e| crate::error::anyhow!("frame body recv ({len} bytes): {e}"))?;
+        self.sock.read_exact(&mut payload).map_err(|e| {
+            note_io_error("recv", &e);
+            crate::error::anyhow!("frame body recv ({len} bytes): {e}")
+        })?;
+        span.add_arg("bytes", len);
+        drop(span);
+        wire_metrics().recv_frames.inc();
+        wire_metrics().recv_bytes.add(len as u64 + 4);
         Ok(payload)
     }
 
@@ -607,6 +661,23 @@ pub struct WorkerReport {
     pub walls_s: Vec<f64>,
     /// [`fnv64_f32s`] of each collective's result on this rank.
     pub checksums: Vec<u64>,
+    /// Drained observability payload (trace buffer + metrics), if the
+    /// worker collected one.
+    pub telemetry: Option<Telemetry>,
+}
+
+/// Observability payload a worker ships home inside its report: the
+/// binary-encoded trace buffer ([`crate::trace::encode_events`]), the
+/// worker's trace epoch for clock alignment, and its metrics exposition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Telemetry {
+    /// [`crate::trace::epoch_unix_ns`] of the worker process.
+    pub epoch_unix_ns: u64,
+    /// [`crate::trace::encode_events`] bytes (empty when tracing was
+    /// disabled in the worker).
+    pub trace: Vec<u8>,
+    /// The worker's process-global metrics rendered as text.
+    pub metrics_text: String,
 }
 
 impl WorkerReport {
@@ -620,6 +691,7 @@ impl WorkerReport {
             steps: 0,
             walls_s: Vec::new(),
             checksums: Vec::new(),
+            telemetry: None,
         }
     }
 
@@ -639,6 +711,17 @@ impl WorkerReport {
         out.extend_from_slice(&(self.checksums.len() as u32).to_le_bytes());
         for c in &self.checksums {
             out.extend_from_slice(&c.to_le_bytes());
+        }
+        match &self.telemetry {
+            None => out.push(0),
+            Some(t) => {
+                out.push(1);
+                out.extend_from_slice(&t.epoch_unix_ns.to_le_bytes());
+                out.extend_from_slice(&(t.trace.len() as u32).to_le_bytes());
+                out.extend_from_slice(&t.trace);
+                out.extend_from_slice(&(t.metrics_text.len() as u32).to_le_bytes());
+                out.extend_from_slice(t.metrics_text.as_bytes());
+            }
         }
         out
     }
@@ -666,8 +749,31 @@ impl WorkerReport {
         for _ in 0..n_sums {
             checksums.push(r.u64()?);
         }
+        let telemetry = match r.u8()? {
+            0 => None,
+            1 => {
+                let epoch_unix_ns = r.u64()?;
+                let trace_len = r.u32()? as usize;
+                let trace = r.take(trace_len)?.to_vec();
+                let text_len = r.u32()? as usize;
+                let metrics_text = String::from_utf8(r.take(text_len)?.to_vec())
+                    .map_err(|_| crate::error::anyhow!("worker report: non-utf8 metrics"))?;
+                Some(Telemetry { epoch_unix_ns, trace, metrics_text })
+            }
+            t => crate::error::bail!("worker report: bad telemetry tag {t}"),
+        };
         crate::error::ensure!(r.at == frame.len(), "worker report: trailing bytes");
-        Ok(WorkerReport { rank, ok, err, wire_bytes, raw_bytes, steps, walls_s, checksums })
+        Ok(WorkerReport {
+            rank,
+            ok,
+            err,
+            wire_bytes,
+            raw_bytes,
+            steps,
+            walls_s,
+            checksums,
+            telemetry,
+        })
     }
 }
 
@@ -783,6 +889,18 @@ mod tests {
         assert_eq!(decoded, r);
         assert!(WorkerReport::decode(&r.encode()[..10]).is_err());
         assert!(WorkerReport::decode(&[MSG_BYE]).is_err());
+        // telemetry section roundtrips, and a bad tag is a clean error
+        r.telemetry = Some(Telemetry {
+            epoch_unix_ns: 42,
+            trace: vec![1, 2, 3],
+            metrics_text: "a 1\n".to_string(),
+        });
+        let mut bytes = r.encode();
+        assert_eq!(WorkerReport::decode(&bytes).unwrap(), r);
+        let tag_at = bytes.len() - 4 - 3 - 4 - 4 - 8 - 1; // text+trace+2 lens+epoch+tag
+        assert_eq!(bytes[tag_at], 1);
+        bytes[tag_at] = 7;
+        assert!(WorkerReport::decode(&bytes).is_err());
     }
 
     #[test]

@@ -640,6 +640,10 @@ impl Decoder {
         lanes: usize,
         k: kernel::DecodeKernel,
     ) -> crate::Result<()> {
+        let _span = crate::trace::Span::begin(crate::trace::Category::Kernel, "decode_dispatch")
+            .arg("kernel", k.name())
+            .arg("lanes", lanes)
+            .arg("symbols", out.len());
         match lanes {
             4 => self.decode_lanes::<4>(payload, out, k),
             8 => self.decode_lanes::<8>(payload, out, k),

@@ -49,6 +49,7 @@ pub mod runtime;
 pub mod singlestage;
 pub mod stats;
 pub mod tensors;
+pub mod trace;
 pub mod trainer;
 
 /// Crate-wide result type (see [`error`]).

@@ -195,6 +195,22 @@ fn build_cli() -> Cli {
                         takes_value: true,
                         help: "internal: parent rendezvous URI (tcp://… or uds://…)",
                     },
+                    OptSpec {
+                        name: "trace",
+                        takes_value: true,
+                        help: "write a merged Chrome trace-event JSON (spawn: all ranks, \
+                               clock-aligned) to this path",
+                    },
+                    OptSpec {
+                        name: "metrics",
+                        takes_value: false,
+                        help: "dump the metrics exposition after the run (spawn: per rank)",
+                    },
+                    OptSpec {
+                        name: "trace-worker",
+                        takes_value: false,
+                        help: "internal: enable span recording in a spawned worker",
+                    },
                     codec,
                     threads,
                     layout,
@@ -369,6 +385,10 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
     if args.opt("spawn").is_some() {
         return cmd_collective_spawn(args);
     }
+    let trace_path = args.opt("trace").map(std::path::PathBuf::from);
+    if trace_path.is_some() {
+        sshuff::trace::set_enabled(true);
+    }
     let workers: usize = args.opt_parse("workers", 8).map_err(sshuff::error::Error::msg)?;
     let ranks: usize = args.opt_parse("ranks", workers).map_err(sshuff::error::Error::msg)?;
     let elems: usize = args.opt_parse("elems", 1 << 16).map_err(sshuff::error::Error::msg)?;
@@ -437,6 +457,22 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
          depth {depth}, transport {kind}"
     );
     println!("{}", table.render());
+    if let Some(path) = &trace_path {
+        use std::io::Write as _;
+        let rank = sshuff::trace::RankTrace {
+            pid: 0,
+            epoch_unix_ns: sshuff::trace::epoch_unix_ns(),
+            events: sshuff::trace::TraceSink::global().drain(),
+        };
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        sshuff::trace::write_chrome_trace(&mut w, &[rank])?;
+        w.flush()?;
+        println!("trace -> {}", path.display());
+    }
+    if args.has_flag("metrics") {
+        println!("--- metrics ---");
+        print!("{}", sshuff::metrics::global().render());
+    }
     Ok(())
 }
 
@@ -464,6 +500,7 @@ fn cmd_collective_worker(args: &Args) -> sshuff::Result<()> {
         seed,
         pace_gbps,
         timeout: std::time::Duration::from_secs_f64(timeout_s),
+        trace: args.has_flag("trace-worker"),
     })
 }
 
@@ -489,6 +526,8 @@ fn cmd_collective_spawn(args: &Args) -> sshuff::Result<()> {
         seed,
         pace_gbps,
         timeout: std::time::Duration::from_secs_f64(timeout_s),
+        trace: args.opt("trace").map(std::path::PathBuf::from),
+        metrics: args.has_flag("metrics"),
     })?;
     Ok(())
 }

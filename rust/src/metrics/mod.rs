@@ -7,7 +7,17 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Process-wide registry for components without a natural owner — the
+/// parallel encoder pool's latency histograms and the collective
+/// transports' frame/byte/timeout counters land here. The coordinator
+/// keeps its own per-instance registry; this one is scraped by
+/// `repro collective --metrics`.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
 
 /// Monotone counter.
 #[derive(Clone, Default)]
@@ -45,6 +55,7 @@ pub struct HistogramMetric {
     buckets: Arc<Vec<AtomicU64>>,
     sum_micro: Arc<AtomicU64>, // sum stored in micro-units for atomicity
     count: Arc<AtomicU64>,
+    dropped: Arc<AtomicU64>, // NaN / negative observations (not counted)
 }
 
 impl HistogramMetric {
@@ -55,6 +66,7 @@ impl HistogramMetric {
             buckets: Arc::new((0..=bounds.len()).map(|_| AtomicU64::new(0)).collect()),
             sum_micro: Arc::new(AtomicU64::new(0)),
             count: Arc::new(AtomicU64::new(0)),
+            dropped: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -69,15 +81,29 @@ impl HistogramMetric {
         Self::new(&bounds)
     }
 
+    /// Record one observation. NaN and negative values cannot be
+    /// represented in the unsigned micro-unit sum — an `as u64` cast
+    /// would silently saturate them to 0 — so they are dropped and
+    /// counted in [`HistogramMetric::dropped`] instead of corrupting
+    /// the distribution.
     pub fn observe(&self, v: f64) {
+        if v.is_nan() || v < 0.0 {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
         let idx = self.bounds.partition_point(|&b| b < v);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.sum_micro.fetch_add((v * 1e6) as u64, Ordering::Relaxed);
+        self.sum_micro.fetch_add((v * 1e6).round() as u64, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Observations rejected as NaN or negative.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
     }
 
     pub fn sum(&self) -> f64 {
@@ -169,6 +195,9 @@ impl MetricsRegistry {
                     out.push_str(&format!("{name}_sum {:.6}\n", h.sum()));
                     out.push_str(&format!("{name}_p50 {:.6}\n", h.quantile(0.5)));
                     out.push_str(&format!("{name}_p95 {:.6}\n", h.quantile(0.95)));
+                    if h.dropped() > 0 {
+                        out.push_str(&format!("{name}_nan_or_negative {}\n", h.dropped()));
+                    }
                 }
             }
         }
@@ -254,5 +283,91 @@ mod tests {
         let r = MetricsRegistry::new();
         r.counter("m");
         r.gauge("m");
+    }
+
+    #[test]
+    fn observe_rounds_instead_of_truncating() {
+        // 0.4 micro-units would truncate to 0 under `as u64`; 1000
+        // observations of 1.0000004 must sum to ~1000.0004, not 1000.0
+        let h = HistogramMetric::new(&[10.0]);
+        for _ in 0..1000 {
+            h.observe(1.000_000_4);
+        }
+        assert!((h.sum() - 1000.0004).abs() < 1e-4, "sum={}", h.sum());
+        // a single sub-micro value still registers in the sum
+        let tiny = HistogramMetric::new(&[10.0]);
+        tiny.observe(0.000_000_6); // 0.6 micro-units rounds to 1
+        assert!(tiny.sum() > 0.0);
+    }
+
+    #[test]
+    fn observe_drops_nan_and_negative() {
+        let h = HistogramMetric::new(&[1.0, 10.0]);
+        h.observe(5.0);
+        h.observe(-3.0); // would saturate to 0 micro-units under `as u64`
+        h.observe(f64::NAN);
+        assert_eq!(h.count(), 1, "only the valid observation counts");
+        assert_eq!(h.dropped(), 2);
+        assert!((h.sum() - 5.0).abs() < 1e-6);
+        assert_eq!(h.quantile(1.0), 10.0, "dropped values never land in buckets");
+        // drop counter shows up in the exposition
+        let r = MetricsRegistry::new();
+        let lat = r.histogram("lat", &[1.0]);
+        let clean = r.render();
+        assert!(!clean.contains("lat_nan_or_negative"), "no line until something drops");
+        lat.observe(-1.0);
+        assert!(r.render().contains("lat_nan_or_negative 1"));
+    }
+
+    #[test]
+    fn concurrent_writers_with_scraper() {
+        // N writer threads hammer a counter and a histogram while a
+        // scraper loops render(); totals must come out exact and the
+        // exposition must never tear or panic.
+        let r = MetricsRegistry::new();
+        let writers = 8u64;
+        let per = 2_000u64;
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|s| {
+            for t in 0..writers {
+                let r = r.clone();
+                s.spawn(move || {
+                    let c = r.counter("stress_total");
+                    let h = r.histogram("stress_lat", &[1.0, 100.0, 10_000.0]);
+                    for i in 0..per {
+                        c.inc();
+                        h.observe((t * 1000 + i) as f64 % 500.0);
+                    }
+                });
+            }
+            let scraper = {
+                let r = r.clone();
+                let stop = stop.clone();
+                s.spawn(move || {
+                    let mut scrapes = 0u64;
+                    loop {
+                        let text = r.render();
+                        // every emitted line parses as `name value`
+                        for line in text.lines() {
+                            let mut it = line.split_whitespace();
+                            let (name, val) = (it.next().unwrap(), it.next().unwrap());
+                            assert!(!name.is_empty() && val.parse::<f64>().is_ok(), "{line}");
+                            assert!(it.next().is_none(), "torn line: {line}");
+                        }
+                        scrapes += 1;
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                    }
+                    scrapes
+                })
+            };
+            // writers finish first (scope joins unfinished spawns last)
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            stop.store(true, Ordering::Relaxed);
+            assert!(scraper.join().unwrap() > 0, "scraper must have run");
+        });
+        assert_eq!(r.counter("stress_total").get(), writers * per);
+        assert_eq!(r.histogram("stress_lat", &[1.0, 100.0, 10_000.0]).count(), writers * per);
     }
 }

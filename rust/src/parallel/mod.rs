@@ -53,13 +53,32 @@
 //! ```
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 use crate::collectives::chunk_bounds;
+use crate::metrics::HistogramMetric;
 use crate::singlestage::{
     encode_frame, planes, select_codebook, CodecConfig, Frame, MultiFrame, PayloadLayout,
     PlaneTransform, Registry, PLANES_MARKER, RAW_ID,
 };
 use crate::stats::Histogram256;
+use crate::trace::{Category, Span};
+
+/// Pool chunk latency histograms on the process-global registry
+/// (`pool_encode_chunk_us` / `pool_decode_chunk_us`, microseconds).
+fn pool_metrics() -> &'static (HistogramMetric, HistogramMetric) {
+    static M: OnceLock<(HistogramMetric, HistogramMetric)> = OnceLock::new();
+    M.get_or_init(|| {
+        let reg = crate::metrics::global();
+        // 1 us .. ~1 s, x2 per bucket
+        let bounds: Vec<f64> = (0..20).map(|i| (1u64 << i) as f64).collect();
+        (
+            reg.histogram("pool_encode_chunk_us", &bounds),
+            reg.histogram("pool_decode_chunk_us", &bounds),
+        )
+    })
+}
 
 /// Default chunk length: 64 KiB — matches `stream::DEFAULT_BLOCK_LOG2`;
 /// large enough that per-chunk framing (9 B) is noise, small enough to
@@ -189,6 +208,14 @@ impl EncoderPool {
         // chunk sizes never exceed chunk_len, and Frame counts symbols
         // in a u32 — reject geometries that could silently truncate
         assert!(chunk_len <= u32::MAX as usize, "chunk_len must fit u32 symbol counts");
+        let encode_chunk = &move |chunk: &[u8]| -> Frame {
+            let span = Span::begin(Category::Encode, "chunk_encode").arg("bytes", chunk.len());
+            let t0 = Instant::now();
+            let frame = encode_chunk(chunk);
+            pool_metrics().0.observe(t0.elapsed().as_secs_f64() * 1e6);
+            drop(span);
+            frame
+        };
         let n_chunks = data.len().div_ceil(chunk_len).max(1);
         let bounds = chunk_bounds(data.len(), n_chunks);
         if self.threads == 1 || n_chunks == 1 {
@@ -316,6 +343,14 @@ fn encode_chunk_best(
 /// Decode one chunk frame into its output slice (either payload layout;
 /// the frame self-describes).
 fn decode_chunk(registry: &Registry, frame: &Frame, out: &mut [u8]) -> crate::Result<()> {
+    let _span = Span::begin(Category::Decode, "chunk_decode").arg("bytes", out.len());
+    let t0 = Instant::now();
+    let r = decode_chunk_inner(registry, frame, out);
+    pool_metrics().1.observe(t0.elapsed().as_secs_f64() * 1e6);
+    r
+}
+
+fn decode_chunk_inner(registry: &Registry, frame: &Frame, out: &mut [u8]) -> crate::Result<()> {
     crate::error::ensure!(
         frame.header.n_symbols as usize == out.len(),
         "chunk symbol count {} does not match slot {}",

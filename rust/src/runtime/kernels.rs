@@ -147,6 +147,9 @@ impl KernelRunner {
         id: u8,
         layout: PayloadLayout,
     ) -> crate::Result<MultiFrame> {
+        let _span = crate::trace::Span::begin(crate::trace::Category::Kernel, "multiframe_encode")
+            .arg("bytes", data.len())
+            .arg("layout", layout.lanes());
         let covers_all = book.support() == NUM_SYMBOLS;
         let mut frames = Vec::with_capacity(data.len() / self.kernel_n + 1);
         let mut chunks = data.chunks_exact(self.kernel_n);
@@ -232,6 +235,9 @@ impl KernelRunner {
         if config.planes == PlaneTransform::None {
             return self.encode_multiframe_layout(data, book, id, config.layout);
         }
+        let _span = crate::trace::Span::begin(crate::trace::Category::Kernel, "multiframe_encode")
+            .arg("bytes", data.len())
+            .arg("planes", config.planes.name());
         let mut frames = Vec::with_capacity(data.len() / self.kernel_n + 1);
         let mut chunks = data.chunks_exact(self.kernel_n);
         for chunk in &mut chunks {

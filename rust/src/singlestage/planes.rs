@@ -152,6 +152,9 @@ pub fn encode_plane_frame(
     data: &[u8],
     layout: PayloadLayout,
 ) -> Frame {
+    let _span = crate::trace::Span::begin(crate::trace::Category::Plane, "plane_encode")
+        .arg("transform", transform.name())
+        .arg("bytes", data.len());
     let body = match transform {
         PlaneTransform::None => {
             debug_assert!(false, "PlaneTransform::None is not a wire transform");
@@ -187,6 +190,9 @@ fn decode_plane_frame_kernel(
     f: &Frame,
     kernel: Option<DecodeKernel>,
 ) -> crate::Result<Vec<u8>> {
+    let _span = crate::trace::Span::begin(crate::trace::Category::Plane, "plane_decode")
+        .arg("transform", f.header.transform.name())
+        .arg("symbols", f.header.n_symbols as usize);
     crate::error::ensure!(
         f.header.id == PLANES_MARKER,
         "not a plane frame (id {})",

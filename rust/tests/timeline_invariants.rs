@@ -1,0 +1,110 @@
+//! Pins the [`Timeline`] accounting invariants across all four
+//! transports: measured wall time can never be smaller than the
+//! measured receive-wait it contains, the pipelined schedule can never
+//! be slower than lock-step, exposed latency is non-negative, and the
+//! hierarchical merge accumulates (never drops) the measured
+//! `wire_wall_s` through its parallel-fold and serial-add phases.
+
+use sshuff::baselines::{Codec, RawCodec, ThreeStage};
+use sshuff::collectives::{
+    hierarchical_all_reduce_on, CollectiveEngine, Hierarchy, Timeline, TransportKind,
+    DEFAULT_PIPELINE_DEPTH,
+};
+use sshuff::fabric::LinkModel;
+use sshuff::prng::Pcg32;
+
+fn inputs(n: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|r| Pcg32::substream(29, r as u64).normal_f32s(len, 1e-3)).collect()
+}
+
+/// The invariants every accumulated (or merged) timeline must satisfy,
+/// on every transport.
+fn assert_invariants(t: &Timeline, tag: &str) {
+    const EPS: f64 = 1e-9;
+    assert!(t.compute_s >= 0.0, "{tag}: negative compute {}", t.compute_s);
+    assert!(t.wire_s >= 0.0, "{tag}: negative wire {}", t.wire_s);
+    assert!(t.wire_wall_s >= 0.0, "{tag}: negative wire wall {}", t.wire_wall_s);
+    assert!(t.exposed_s >= 0.0, "{tag}: negative exposed {}", t.exposed_s);
+    assert!(
+        t.pipelined_s <= t.lockstep_s + EPS,
+        "{tag}: pipelined {} exceeds lockstep {}",
+        t.pipelined_s,
+        t.lockstep_s
+    );
+    assert!(t.overlap_gain() >= 1.0 - 1e-6, "{tag}: overlap gain {} < 1", t.overlap_gain());
+    // the receive-wait is measured inside the exchange the wall clock
+    // wraps, so it can never exceed the wall
+    assert!(
+        t.wall_s + EPS >= t.wire_wall_s,
+        "{tag}: wall {} smaller than the wire wall {} it contains",
+        t.wall_s,
+        t.wire_wall_s
+    );
+}
+
+#[test]
+fn timeline_invariants_hold_on_every_transport() {
+    let xs = inputs(4, 1 << 12);
+    for kind in TransportKind::ALL {
+        for codec in [&RawCodec as &dyn Codec, &ThreeStage] {
+            let mut tr = kind.build(4, LinkModel::DIE_TO_DIE).unwrap();
+            let mut eng = CollectiveEngine::new(tr.as_mut(), codec, DEFAULT_PIPELINE_DEPTH);
+            eng.all_reduce(&xs).unwrap();
+            eng.reduce_scatter(&xs).unwrap();
+            let rep = eng.take_report();
+            let tag = format!("{kind}/{}", codec.name());
+            assert_invariants(&rep.timeline, &tag);
+            // wire_s keeps sim_time_s's historical meaning exactly
+            assert!(
+                (rep.timeline.wire_s - rep.sim_time_s).abs() < 1e-12,
+                "{tag}: wire_s {} != sim_time_s {}",
+                rep.timeline.wire_s,
+                rep.sim_time_s
+            );
+            if matches!(kind, TransportKind::Sim) {
+                assert_eq!(
+                    rep.timeline.wire_wall_s, 0.0,
+                    "{tag}: the serial sim has no real wire to wait on"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_merge_accumulates_wire_wall_and_keeps_invariants() {
+    let h = Hierarchy {
+        nodes: 2,
+        locals: 2,
+        intra: LinkModel::DIE_TO_DIE,
+        inter: LinkModel::DATACENTER,
+    };
+    let xs = inputs(h.ranks(), 1 << 10);
+    for kind in TransportKind::ALL {
+        let (out, rep) = hierarchical_all_reduce_on(&h, kind, &RawCodec, &RawCodec, &xs).unwrap();
+        assert!(out.windows(2).all(|w| w[0] == w[1]), "{kind}: ranks disagree");
+        assert_invariants(&rep.intra.timeline, &format!("{kind}/intra"));
+        assert_invariants(&rep.inter.timeline, &format!("{kind}/inter"));
+        // the merge accumulates steps (never maxes them): 2 nodes x 1
+        // reduce-scatter step + 2 nodes x 1 all-gather step intra; 2
+        // slots x 2 all-reduce steps inter
+        assert_eq!(rep.intra.steps, 4, "{kind}: intra steps");
+        assert_eq!(rep.inter.steps, 4, "{kind}: inter steps");
+        if matches!(kind, TransportKind::Sim) {
+            assert_eq!(rep.intra.timeline.wire_wall_s, 0.0, "{kind}: sim intra");
+            assert_eq!(rep.inter.timeline.wire_wall_s, 0.0, "{kind}: sim inter");
+        } else {
+            // fold_parallel and add_serial must both carry the measured
+            // receive-wait through — a merge that drops the field zeroes
+            // these
+            assert!(
+                rep.intra.timeline.wire_wall_s > 0.0,
+                "{kind}: intra wire wall lost in the hierarchical merge"
+            );
+            assert!(
+                rep.inter.timeline.wire_wall_s > 0.0,
+                "{kind}: inter wire wall lost in the hierarchical merge"
+            );
+        }
+    }
+}
