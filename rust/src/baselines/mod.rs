@@ -11,7 +11,7 @@
 
 use crate::huffman::CodeBook;
 use crate::parallel::EncoderPool;
-use crate::singlestage::{CodecConfig, MultiFrame, PlaneTransform, Registry};
+use crate::singlestage::{CodecConfig, Frame, MultiFrame, PlaneTransform, Registry};
 use crate::stats::{Histogram256, NUM_SYMBOLS};
 use std::collections::HashMap;
 
@@ -20,6 +20,15 @@ pub trait Codec: Send + Sync {
     fn name(&self) -> &'static str;
     fn encode(&self, data: &[u8]) -> Vec<u8>;
     fn decode(&self, wire: &[u8]) -> crate::Result<Vec<u8>>;
+    /// A wire frame this codec's own `decode` accepts and round-trips to
+    /// `data` verbatim, bypassing the compressor entirely. The engine's
+    /// hop path uses it as a degradation escape when `encode` panics
+    /// mid-collective, so the step still completes bit-correctly.
+    /// `None` (the default) means the format has no raw frame and an
+    /// encode failure is fatal for the hop.
+    fn raw_escape(&self, _data: &[u8]) -> Option<Vec<u8>> {
+        None
+    }
 }
 
 // ------------------------------------------------------------------ raw
@@ -36,6 +45,9 @@ impl Codec for RawCodec {
     }
     fn decode(&self, wire: &[u8]) -> crate::Result<Vec<u8>> {
         Ok(wire.to_vec())
+    }
+    fn raw_escape(&self, data: &[u8]) -> Option<Vec<u8>> {
+        Some(data.to_vec())
     }
 }
 
@@ -132,6 +144,16 @@ impl Codec for ThreeStage {
             }
             f => crate::error::bail!("unknown three-stage flag {f}"),
         }
+    }
+
+    fn raw_escape(&self, data: &[u8]) -> Option<Vec<u8>> {
+        // the format's flag-1 escape frame (same layout encode emits for
+        // incompressible input)
+        let mut out = Vec::with_capacity(5 + data.len());
+        out.push(1u8);
+        out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+        out.extend_from_slice(data);
+        Some(out)
     }
 }
 
@@ -355,6 +377,11 @@ impl Codec for SingleStageCodec {
     }
     fn decode(&self, wire: &[u8]) -> crate::Result<Vec<u8>> {
         self.pool.decode_bytes(&self.registry, wire)
+    }
+    fn raw_escape(&self, data: &[u8]) -> Option<Vec<u8>> {
+        // a one-chunk MultiFrame holding a RAW_ID frame — decodable by
+        // any registry, no codebook involved
+        Some(MultiFrame::from_chunks(vec![Frame::raw(data)]).to_bytes())
     }
 }
 

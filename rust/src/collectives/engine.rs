@@ -44,13 +44,47 @@
 //! peers.
 
 use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use super::faults;
 use super::wire;
 use super::{chunk_bounds, CollectiveReport, WireFormat};
 use crate::baselines::Codec;
 use crate::fabric::{Fabric, LinkModel};
 use crate::trace::{ArgValue, Category, Span};
+
+/// Encode one hop with `codec`, trapping encoder panics. A panicking
+/// codec degrades to its [`Codec::raw_escape`] frame when it has one —
+/// the hop ships uncompressed, the collective completes bit-correctly,
+/// and the `codec_fallbacks` counter records the save. A codec without
+/// an escape surfaces a typed `Err` instead of unwinding through the
+/// transport.
+pub(crate) fn encode_hop(codec: &dyn Codec, raw: &[u8]) -> crate::Result<Vec<u8>> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| codec.encode(raw))) {
+        Ok(wire_buf) => Ok(wire_buf),
+        Err(_) => match codec.raw_escape(raw) {
+            Some(wire_buf) => {
+                crate::metrics::global().counter("codec_fallbacks").inc();
+                crate::trace::mark_with(
+                    Category::Encode,
+                    "codec_fallback",
+                    &mut [
+                        ("codec", ArgValue::from(codec.name())),
+                        ("bytes", ArgValue::from(raw.len())),
+                    ]
+                    .into_iter(),
+                );
+                Ok(wire_buf)
+            }
+            None => crate::error::bail!(
+                "codec {} panicked on a {}-byte hop and has no raw escape",
+                codec.name(),
+                raw.len()
+            ),
+        },
+    }
+}
 
 /// One hop submitted to a [`Transport`]: `raw` serialized payload bytes
 /// moving from rank `from` to rank `to`.
@@ -147,6 +181,13 @@ pub trait Transport {
     fn link(&self) -> LinkModel;
     fn exchange(&mut self, codec: &dyn Codec, hops: Vec<HopIn>)
         -> crate::Result<(Vec<HopOut>, f64)>;
+    /// Install a deterministic [`faults::FaultPlan`] on every send path
+    /// of this transport. Returns `false` when the transport has no real
+    /// wire to corrupt ([`SimTransport`]/[`ChannelTransport`]); the
+    /// socket transports override it and return `true`.
+    fn set_chaos(&mut self, _plan: Arc<faults::FaultPlan>) -> bool {
+        false
+    }
 }
 
 /// The in-process transport family, buildable by name — what the CLI,
@@ -237,7 +278,7 @@ impl Transport for SimTransport<'_> {
             let te = Instant::now();
             let wire = {
                 let _s = Span::begin(Category::Encode, "hop_encode").arg("bytes", h.raw.len());
-                codec.encode(&h.raw)
+                encode_hop(codec, &h.raw)?
             };
             let encode_s = te.elapsed().as_secs_f64();
             let wire_s = self.fabric.send(h.from, h.to, wire.len());
@@ -480,7 +521,7 @@ impl Transport for ChannelTransport {
                             let wire = {
                                 let _s = Span::begin(Category::Encode, "hop_encode")
                                     .arg("bytes", w.raw.len());
-                                codec.encode(&w.raw)
+                                encode_hop(codec, &w.raw)?
                             };
                             let encode_s = te.elapsed().as_secs_f64();
                             let wire_bytes = wire.len();
@@ -576,6 +617,7 @@ impl SocketTransport {
         n: usize,
         link: LinkModel,
         name: &'static str,
+        timeout: Duration,
         mk_pair: impl Fn() -> crate::Result<(wire::Socket, wire::Socket)>,
     ) -> crate::Result<SocketTransport> {
         crate::error::ensure!(n >= 1, "need at least one rank");
@@ -588,8 +630,14 @@ impl SocketTransport {
         for i in 0..n {
             for j in i + 1..n {
                 let (a, b) = mk_pair()?;
-                let da = wire::FrameStream::new(a).into_duplex()?;
-                let db = wire::FrameStream::new(b).into_duplex()?;
+                // both ends are this process: always speak wire v2
+                // (checksummed frames), no version negotiation needed
+                let mut da = wire::FrameStream::new(a).into_duplex()?;
+                let mut db = wire::FrameStream::new(b).into_duplex()?;
+                for s in [&mut da.tx, &mut da.rx, &mut db.tx, &mut db.rx] {
+                    s.set_check(true);
+                    s.set_timeout_hint(timeout);
+                }
                 ranks[i].tx[j] = Some(da.tx);
                 ranks[i].rx[j] = Some(da.rx);
                 ranks[j].tx[i] = Some(db.tx);
@@ -603,6 +651,18 @@ impl SocketTransport {
         for r in &mut self.ranks {
             for t in r.tx.iter_mut().flatten() {
                 t.set_pace_bps(bps);
+            }
+        }
+    }
+
+    /// One deterministic fault lane per directed link, keyed exactly like
+    /// the mesh path: `link_id = (sender << 32) | receiver`.
+    fn set_chaos(&mut self, plan: &Arc<faults::FaultPlan>) {
+        for (i, r) in self.ranks.iter_mut().enumerate() {
+            for (j, t) in r.tx.iter_mut().enumerate() {
+                if let Some(t) = t {
+                    t.set_chaos(Some(plan.lane(((i as u64) << 32) | j as u64)));
+                }
             }
         }
     }
@@ -636,7 +696,13 @@ impl SocketTransport {
                                     let wire_buf = {
                                         let _s = Span::begin(Category::Encode, "hop_encode")
                                             .arg("bytes", raw.len());
-                                        codec.encode(&raw)
+                                        match encode_hop(codec, &raw) {
+                                            Ok(w) => w,
+                                            Err(e) => {
+                                                poison(tx);
+                                                return Err(e);
+                                            }
+                                        }
                                     };
                                     let encode_s = te.elapsed().as_secs_f64();
                                     let stream = tx[to].as_mut().expect("socket mesh link");
@@ -722,8 +788,20 @@ pub struct TcpTransport(SocketTransport);
 
 impl TcpTransport {
     pub fn new(n: usize, link: LinkModel) -> crate::Result<TcpTransport> {
-        let timeout = wire::default_timeout();
-        Ok(TcpTransport(SocketTransport::build(n, link, "tcp", || wire::pair_tcp(timeout))?))
+        TcpTransport::new_with_timeout(n, link, wire::default_timeout())
+    }
+
+    /// Like [`TcpTransport::new`] with an explicit per-socket timeout —
+    /// chaos tests shrink it without racing the `SSHUFF_WIRE_TIMEOUT_S`
+    /// environment of parallel tests.
+    pub fn new_with_timeout(
+        n: usize,
+        link: LinkModel,
+        timeout: Duration,
+    ) -> crate::Result<TcpTransport> {
+        Ok(TcpTransport(SocketTransport::build(n, link, "tcp", timeout, || {
+            wire::pair_tcp(timeout)
+        })?))
     }
 
     /// Pace every rank's sends to `bps` bytes/second (0 disables).
@@ -757,6 +835,11 @@ impl Transport for TcpTransport {
     ) -> crate::Result<(Vec<HopOut>, f64)> {
         self.0.exchange(codec, hops)
     }
+
+    fn set_chaos(&mut self, plan: Arc<faults::FaultPlan>) -> bool {
+        self.0.set_chaos(&plan);
+        true
+    }
 }
 
 /// Unix-domain `socketpair(2)` links between in-process ranks — the
@@ -766,8 +849,18 @@ pub struct UdsTransport(SocketTransport);
 
 impl UdsTransport {
     pub fn new(n: usize, link: LinkModel) -> crate::Result<UdsTransport> {
-        let timeout = wire::default_timeout();
-        Ok(UdsTransport(SocketTransport::build(n, link, "uds", || wire::pair_uds(timeout))?))
+        UdsTransport::new_with_timeout(n, link, wire::default_timeout())
+    }
+
+    /// Like [`UdsTransport::new`] with an explicit per-socket timeout.
+    pub fn new_with_timeout(
+        n: usize,
+        link: LinkModel,
+        timeout: Duration,
+    ) -> crate::Result<UdsTransport> {
+        Ok(UdsTransport(SocketTransport::build(n, link, "uds", timeout, || {
+            wire::pair_uds(timeout)
+        })?))
     }
 
     /// Pace every rank's sends to `bps` bytes/second (0 disables).
@@ -800,6 +893,11 @@ impl Transport for UdsTransport {
         hops: Vec<HopIn>,
     ) -> crate::Result<(Vec<HopOut>, f64)> {
         self.0.exchange(codec, hops)
+    }
+
+    fn set_chaos(&mut self, plan: Arc<faults::FaultPlan>) -> bool {
+        self.0.set_chaos(&plan);
+        true
     }
 }
 
@@ -900,7 +998,15 @@ impl<'a> CollectiveEngine<'a> {
             .into_iter()
             .map(|(from, to, payload)| HopIn { from, to, raw: fmt.serialize(&payload) })
             .collect();
-        let (outs, wall_s) = self.transport.exchange(self.codec, ins)?;
+        let (outs, wall_s) = match self.transport.exchange(self.codec, ins) {
+            Ok(x) => x,
+            Err(e) => {
+                // the collective cannot complete — every surviving rank
+                // of this transport unwound with its own Err already
+                crate::metrics::global().counter("collective_aborts").inc();
+                return Err(e);
+            }
+        };
         let step_wire_bytes: u64 = outs.iter().map(|h| h.wire_bytes as u64).sum();
         step_span.add_arg("wire_bytes", step_wire_bytes);
         drop(step_span);

@@ -1,0 +1,537 @@
+//! Seeded fault injection + recovery primitives for the collective wire.
+//!
+//! Everything here is **deterministic**: a [`FaultPlan`] is a pure function
+//! of `(seed, link, frame-attempt, spec)` — no wall-clock randomness — so a
+//! chaos run that aborts in CI can be replayed bit-for-bit with the same
+//! `--chaos-seed`. The plan wraps the send side of a
+//! [`FrameStream`](super::wire::FrameStream) (via
+//! [`Mesh`](super::wire::Mesh) or `Transport::set_chaos`) and injects the
+//! six failure classes the chaos matrix exercises: delayed frames, dropped
+//! frames, truncated frames, bit-flips, stalled links, and rank crashes.
+//!
+//! Decisions are keyed on a per-link *physical attempt counter*, not the
+//! logical frame sequence number: a frame that was dropped once and is
+//! replayed after reconnect gets a fresh coin toss, so recovery converges
+//! instead of deterministically re-dropping the same frame forever.
+//!
+//! The module also hosts [`Backoff`], the shared jittered-exponential
+//! backoff helper used by `Endpoint::connect` and link recovery, and
+//! [`is_timeout`], the classifier that separates timeout-class wire errors
+//! (retryable in place) from hard failures (reconnect or abort).
+
+use crate::prng::SplitMix64;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Error-message marker for the simulated-crash path; [`is_crash`] keys on
+/// it so the rank engine can die silently (no ABORT broadcast) the way a
+/// real crashed process would.
+pub const CRASH_MSG: &str = "injected rank crash";
+
+// ---------------------------------------------------------------- kinds
+
+/// The six failure classes a [`FaultPlan`] can inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Frame delivery is delayed by a bounded amount (1–20 ms) — the only
+    /// class that never breaks a link.
+    Delay,
+    /// The frame is silently never written; the receiver sees a timeout.
+    Drop,
+    /// The frame header plus a prefix of the body are written, then the
+    /// socket is shut down mid-frame.
+    Truncate,
+    /// One payload bit is flipped *after* the FNV-1a trailer is computed,
+    /// so the receiver's checksum verification must catch it.
+    BitFlip,
+    /// The sender sleeps past the receiver's wire timeout before writing.
+    Stall,
+    /// The rank dies: `process::abort()` in spawned workers
+    /// ([`CrashMode::Process`]) or a fatal [`CRASH_MSG`] error in
+    /// threaded meshes ([`CrashMode::Error`]).
+    Crash,
+}
+
+impl FaultKind {
+    /// Every class, in chaos-matrix order.
+    pub const ALL: [FaultKind; 6] = [
+        FaultKind::Delay,
+        FaultKind::Drop,
+        FaultKind::Truncate,
+        FaultKind::BitFlip,
+        FaultKind::Stall,
+        FaultKind::Crash,
+    ];
+
+    /// Canonical spec-grammar name (also the metrics suffix).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Delay => "delay",
+            FaultKind::Drop => "drop",
+            FaultKind::Truncate => "truncate",
+            FaultKind::BitFlip => "flip",
+            FaultKind::Stall => "stall",
+            FaultKind::Crash => "crash",
+        }
+    }
+
+    /// Parse one class name; accepts the aliases used by `--chaos` specs.
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "delay" => Some(FaultKind::Delay),
+            "drop" => Some(FaultKind::Drop),
+            "truncate" | "trunc" => Some(FaultKind::Truncate),
+            "flip" | "bitflip" | "bit-flip" | "corrupt" => Some(FaultKind::BitFlip),
+            "stall" => Some(FaultKind::Stall),
+            "crash" => Some(FaultKind::Crash),
+            _ => None,
+        }
+    }
+
+    /// Per-frame firing probability when the spec names no explicit one.
+    /// Tuned low enough that a 4-rank CI smoke run converges.
+    fn default_prob(self) -> f64 {
+        match self {
+            FaultKind::Delay => 0.2,
+            FaultKind::Drop => 0.02,
+            FaultKind::Truncate => 0.02,
+            FaultKind::BitFlip => 0.05,
+            FaultKind::Stall => 0.02,
+            FaultKind::Crash => 0.02,
+        }
+    }
+}
+
+// ----------------------------------------------------------------- plan
+
+/// One term of a chaos spec: a class, a firing probability, and an
+/// optional pinned frame index (`@i` fires on exactly the i-th physical
+/// frame attempt of every link, regardless of probability).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    pub prob: f64,
+    pub at: Option<u64>,
+}
+
+/// What [`FaultKind::Crash`] does at the injection site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashMode {
+    /// Return a fatal [`CRASH_MSG`] error (threaded meshes in tests).
+    Error,
+    /// `std::process::abort()` — real process death (spawned workers).
+    Process,
+}
+
+/// A deterministic, seed-driven fault schedule shared by every link of a
+/// rank (wrapped in an [`Arc`]; each link derives its own
+/// [`FaultLane`]).
+///
+/// Spec grammar: `class[:prob][@frame]` terms joined by `+` (or `,`),
+/// where `class` is one of `delay | drop | truncate | flip` (aliases
+/// `corrupt`, `bitflip`) `| stall | crash`, `prob` is a per-frame firing
+/// probability in `[0, 1]`, and `@frame` pins the fault to one physical
+/// frame index per link.
+///
+/// ```
+/// use sshuff::collectives::faults::{FaultKind, FaultPlan};
+///
+/// let plan = FaultPlan::parse("drop:0.5+corrupt@3", 42).unwrap();
+/// assert_eq!(plan.specs().len(), 2);
+/// assert_eq!(plan.specs()[0].kind, FaultKind::Drop);
+/// assert_eq!(plan.specs()[0].prob, 0.5);
+/// assert_eq!(plan.specs()[1].kind, FaultKind::BitFlip);
+/// assert_eq!(plan.specs()[1].at, Some(3));
+/// assert!(FaultPlan::parse("gremlins", 42).is_err());
+/// assert!(FaultPlan::parse("drop:1.5", 42).is_err());
+/// ```
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    specs: Vec<FaultSpec>,
+    crash: CrashMode,
+}
+
+impl FaultPlan {
+    /// Parse a `--chaos` spec string under the given seed.
+    pub fn parse(spec: &str, seed: u64) -> crate::Result<FaultPlan> {
+        let mut specs = Vec::new();
+        for term in spec.split(['+', ',']) {
+            let term = term.trim();
+            crate::error::ensure!(!term.is_empty(), "chaos spec '{spec}': empty fault term");
+            let (head, at) = match term.split_once('@') {
+                Some((h, a)) => {
+                    let idx: u64 = a.parse().map_err(|_| {
+                        crate::error::anyhow!("chaos spec '{spec}': bad frame index '@{a}'")
+                    })?;
+                    (h, Some(idx))
+                }
+                None => (term, None),
+            };
+            let (name, prob) = match head.split_once(':') {
+                Some((n, p)) => {
+                    let p: f64 = p.parse().map_err(|_| {
+                        crate::error::anyhow!("chaos spec '{spec}': bad probability '{p}'")
+                    })?;
+                    crate::error::ensure!(
+                        (0.0..=1.0).contains(&p),
+                        "chaos spec '{spec}': probability {p} outside [0, 1]"
+                    );
+                    (n, Some(p))
+                }
+                None => (head, None),
+            };
+            let kind = FaultKind::parse(name).ok_or_else(|| {
+                crate::error::anyhow!(
+                    "chaos spec '{spec}': unknown fault class '{name}' \
+                     (want delay|drop|truncate|flip|stall|crash)"
+                )
+            })?;
+            specs.push(FaultSpec {
+                kind,
+                prob: prob.unwrap_or_else(|| kind.default_prob()),
+                at,
+            });
+        }
+        crate::error::ensure!(!specs.is_empty(), "chaos spec '{spec}': no fault terms");
+        Ok(FaultPlan {
+            seed,
+            specs,
+            crash: CrashMode::Error,
+        })
+    }
+
+    /// A plan with a single probabilistic fault class (test convenience).
+    pub fn single(kind: FaultKind, prob: f64, seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            specs: vec![FaultSpec {
+                kind,
+                prob,
+                at: None,
+            }],
+            crash: CrashMode::Error,
+        }
+    }
+
+    /// Choose what [`FaultKind::Crash`] does when it fires.
+    pub fn with_crash_mode(mut self, mode: CrashMode) -> FaultPlan {
+        self.crash = mode;
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    pub fn crash_mode(&self) -> CrashMode {
+        self.crash
+    }
+
+    /// Derive the per-link decision stream for `link_id` (a stable id such
+    /// as `sender_rank << 32 | peer_rank`).
+    pub fn lane(self: &Arc<FaultPlan>, link_id: u64) -> FaultLane {
+        FaultLane::new(Arc::clone(self), link_id)
+    }
+}
+
+// ----------------------------------------------------------------- lane
+
+/// The concrete fault a lane decided to inject on one frame attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Sleep this long, then deliver normally.
+    Delay(Duration),
+    /// Do not write the frame at all.
+    Drop,
+    /// Write the header and this many payload-prefix bytes, then shut the
+    /// socket down mid-frame.
+    Truncate,
+    /// Flip payload bit `index % payload_bits` after checksumming.
+    FlipBit(u64),
+    /// Sleep this long (past the peer's wire timeout), then deliver.
+    Stall(Duration),
+    /// Die, per the plan's [`CrashMode`].
+    Crash(CrashMode),
+}
+
+/// Per-link fault decision stream: a monotonically increasing physical
+/// attempt counter hashed against the plan seed.
+///
+/// ```
+/// use sshuff::collectives::faults::{FaultLane, FaultPlan};
+/// use std::sync::Arc;
+/// use std::time::Duration;
+///
+/// let plan = Arc::new(FaultPlan::parse("drop:0.5", 7).unwrap());
+/// let t = Duration::from_secs(1);
+/// let run = |mut lane: FaultLane| -> Vec<bool> {
+///     (0..32).map(|_| lane.next(t).is_some()).collect()
+/// };
+/// let a = run(plan.lane(3));
+/// let b = run(plan.lane(3));
+/// assert_eq!(a, b, "same seed + link => same decisions");
+/// assert!(a.iter().any(|f| *f), "p=0.5 over 32 frames fires w.h.p.");
+/// assert_ne!(a, run(plan.lane(4)), "links decide independently");
+/// ```
+#[derive(Debug)]
+pub struct FaultLane {
+    plan: Arc<FaultPlan>,
+    link_id: u64,
+    attempt: u64,
+}
+
+impl FaultLane {
+    pub fn new(plan: Arc<FaultPlan>, link_id: u64) -> FaultLane {
+        FaultLane {
+            plan,
+            link_id,
+            attempt: 0,
+        }
+    }
+
+    /// Decide the fate of the next physical frame on this link. `timeout`
+    /// is the link's wire timeout, used to size [`FaultAction::Stall`]
+    /// just past it. Increments the `faults_injected` counters when a
+    /// fault fires.
+    pub fn next(&mut self, timeout: Duration) -> Option<FaultAction> {
+        let attempt = self.attempt;
+        self.attempt += 1;
+        for (i, spec) in self.plan.specs.iter().enumerate() {
+            let fire = match spec.at {
+                Some(at) => at == attempt,
+                None => self.coin(attempt, i as u64) < spec.prob,
+            };
+            if !fire {
+                continue;
+            }
+            let m = crate::metrics::global();
+            m.counter("faults_injected").inc();
+            m.counter(&format!("faults_injected_{}", spec.kind.name())).inc();
+            crate::trace::mark_with(
+                crate::trace::Category::Wire,
+                "fault_injected",
+                &mut [
+                    ("kind", crate::trace::ArgValue::from(spec.kind.name())),
+                    ("link", crate::trace::ArgValue::from(self.link_id)),
+                    ("attempt", crate::trace::ArgValue::from(attempt)),
+                ]
+                .into_iter(),
+            );
+            let r = self.param(attempt, i as u64);
+            return Some(match spec.kind {
+                FaultKind::Delay => FaultAction::Delay(Duration::from_millis(1 + r % 20)),
+                FaultKind::Drop => FaultAction::Drop,
+                FaultKind::Truncate => FaultAction::Truncate,
+                FaultKind::BitFlip => FaultAction::FlipBit(r),
+                FaultKind::Stall => FaultAction::Stall(timeout.mul_f64(1.25)),
+                FaultKind::Crash => FaultAction::Crash(self.plan.crash),
+            });
+        }
+        None
+    }
+
+    /// Uniform f64 in [0, 1) for (seed, link, attempt, spec).
+    fn coin(&self, attempt: u64, spec_idx: u64) -> f64 {
+        let x = self.hash(attempt, spec_idx, 0x1);
+        (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Raw parameter word for the same tuple (independent of `coin`).
+    fn param(&self, attempt: u64, spec_idx: u64) -> u64 {
+        self.hash(attempt, spec_idx, 0x2)
+    }
+
+    fn hash(&self, attempt: u64, spec_idx: u64, salt: u64) -> u64 {
+        let mut h = SplitMix64::new(
+            self.plan
+                .seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(self.link_id),
+        );
+        let a = h.next_u64();
+        let mut h2 = SplitMix64::new(a ^ attempt.wrapping_mul(0xD605_0BB5_9DF0_20FB) ^ (spec_idx << 56) ^ salt);
+        h2.next_u64()
+    }
+}
+
+// -------------------------------------------------------------- backoff
+
+/// Jittered exponential backoff, seeded and deterministic: delays double
+/// from 2 ms up to a 200 ms cap, each scaled by a jitter factor in
+/// `[0.5, 1.0)` so competing dialers decorrelate.
+///
+/// ```
+/// use sshuff::collectives::faults::Backoff;
+/// use std::time::Duration;
+///
+/// let mut b = Backoff::new(7);
+/// let first = b.next_delay();
+/// assert!(first >= Duration::from_millis(1) && first <= Duration::from_millis(2));
+/// let later: Vec<_> = (0..20).map(|_| b.next_delay()).collect();
+/// assert!(later.iter().all(|d| *d <= Duration::from_millis(200)));
+/// assert!(later.last().unwrap() > &first, "delays grow toward the cap");
+/// assert_eq!(Backoff::new(7).next_delay(), first, "seeded => deterministic");
+/// ```
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: SplitMix64,
+}
+
+impl Backoff {
+    pub fn new(seed: u64) -> Backoff {
+        Backoff {
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(200),
+            attempt: 0,
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    /// Next delay in the schedule: `min(cap, base * 2^attempt)` scaled by
+    /// a jitter in `[0.5, 1.0)`.
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self
+            .base
+            .checked_mul(1u32 << self.attempt.min(20))
+            .map_or(self.cap, |d| d.min(self.cap));
+        self.attempt = self.attempt.saturating_add(1);
+        let u = (self.rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        exp.mul_f64(0.5 + 0.5 * u)
+    }
+
+    /// Sleep for [`Backoff::next_delay`].
+    pub fn sleep(&mut self) {
+        std::thread::sleep(self.next_delay());
+    }
+}
+
+// ----------------------------------------------------- error classifiers
+
+/// True when `e` is a timeout-class wire error (the peer may still be
+/// alive; retry in place before reconnecting). The wire layer stamps the
+/// marker into every `TimedOut`/`WouldBlock` io error it surfaces.
+pub fn is_timeout(e: &crate::error::Error) -> bool {
+    e.to_string().contains("wire timeout")
+}
+
+/// True when `e` is a simulated rank crash — fatal, die silently.
+pub fn is_crash(e: &crate::error::Error) -> bool {
+    e.to_string().contains(CRASH_MSG)
+}
+
+/// True when `e` is a coordinated-abort notification from a peer —
+/// fatal, cascade the abort instead of recovering.
+pub fn is_peer_abort(e: &crate::error::Error) -> bool {
+    e.to_string().contains("aborted by peer")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let p = FaultPlan::parse("delay+drop:0.25+trunc@7+corrupt:0.1@2+stall+crash", 9).unwrap();
+        let kinds: Vec<FaultKind> = p.specs().iter().map(|s| s.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                FaultKind::Delay,
+                FaultKind::Drop,
+                FaultKind::Truncate,
+                FaultKind::BitFlip,
+                FaultKind::Stall,
+                FaultKind::Crash,
+            ]
+        );
+        assert_eq!(p.specs()[0].prob, FaultKind::Delay.default_prob());
+        assert_eq!(p.specs()[1].prob, 0.25);
+        assert_eq!(p.specs()[2].at, Some(7));
+        assert_eq!(p.specs()[3].prob, 0.1);
+        assert_eq!(p.specs()[3].at, Some(2));
+        // comma works as a separator too
+        assert_eq!(FaultPlan::parse("drop,flip", 0).unwrap().specs().len(), 2);
+    }
+
+    #[test]
+    fn spec_grammar_rejects_garbage() {
+        for bad in ["", " ", "++", "nope", "drop:x", "drop:2.0", "drop@x", "drop:-0.1"] {
+            assert!(FaultPlan::parse(bad, 1).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn pinned_faults_fire_exactly_once_per_lane() {
+        let plan = Arc::new(FaultPlan::parse("drop@3", 11).unwrap());
+        let mut lane = plan.lane(0);
+        let t = Duration::from_secs(1);
+        let fired: Vec<bool> = (0..10).map(|_| lane.next(t).is_some()).collect();
+        let want: Vec<bool> = (0..10).map(|i| i == 3).collect();
+        assert_eq!(fired, want);
+    }
+
+    #[test]
+    fn probabilities_are_roughly_honored() {
+        let plan = Arc::new(FaultPlan::single(FaultKind::Drop, 0.5, 1234));
+        let mut lane = plan.lane(77);
+        let t = Duration::from_secs(1);
+        let fired = (0..2000).filter(|_| lane.next(t).is_some()).count();
+        assert!((800..1200).contains(&fired), "p=0.5 fired {fired}/2000");
+    }
+
+    #[test]
+    fn seeds_change_decisions() {
+        let t = Duration::from_secs(1);
+        let run = |seed: u64| -> Vec<bool> {
+            let plan = Arc::new(FaultPlan::single(FaultKind::Drop, 0.5, seed));
+            let mut lane = plan.lane(1);
+            (0..64).map(|_| lane.next(t).is_some()).collect()
+        };
+        assert_ne!(run(1), run(2));
+    }
+
+    #[test]
+    fn stall_outlives_the_wire_timeout() {
+        let plan = Arc::new(FaultPlan::parse("stall@0", 5).unwrap());
+        let mut lane = plan.lane(0);
+        match lane.next(Duration::from_millis(400)) {
+            Some(FaultAction::Stall(d)) => assert!(d > Duration::from_millis(400)),
+            other => panic!("expected stall, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backoff_grows_to_cap_with_jitter() {
+        let mut b = Backoff::new(99);
+        let ds: Vec<Duration> = (0..12).map(|_| b.next_delay()).collect();
+        assert!(ds[0] >= Duration::from_millis(1) && ds[0] <= Duration::from_millis(2));
+        assert!(ds.iter().all(|d| *d <= Duration::from_millis(200)));
+        assert!(ds[7] > ds[0]);
+        // deterministic under the same seed, different under another
+        let mut b2 = Backoff::new(99);
+        assert_eq!(b2.next_delay(), ds[0]);
+        let mut b3 = Backoff::new(100);
+        let other: Vec<Duration> = (0..12).map(|_| b3.next_delay()).collect();
+        assert_ne!(other, ds);
+    }
+
+    #[test]
+    fn classifiers_key_on_markers() {
+        let t = crate::error::Error::msg("recv header: wire timeout: resource busy");
+        assert!(is_timeout(&t));
+        assert!(!is_crash(&t));
+        let c = crate::error::Error::msg(CRASH_MSG.to_string());
+        assert!(is_crash(&c));
+        let a = crate::error::Error::msg("collective aborted by peer: recovery exhausted");
+        assert!(is_peer_abort(&a));
+        assert!(!is_timeout(&a));
+    }
+}

@@ -41,6 +41,7 @@ use crate::baselines::Codec;
 use crate::fabric::Fabric;
 
 pub mod engine;
+pub mod faults;
 pub mod hierarchical;
 pub mod rank;
 pub mod spawn;

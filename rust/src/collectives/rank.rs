@@ -20,10 +20,12 @@
 //! receive blocks on this thread — one send + one recv per rank per
 //! step, so a full OS-buffer can never deadlock the ring.
 
-use super::wire::{self, Mesh};
+use super::faults;
+use super::wire::{self, Mesh, MeshOpts};
 use super::{chunk_bounds, CollectiveReport, WireFormat};
 use crate::baselines::Codec;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// One rank's view of the collective schedules, over a connected
 /// [`Mesh`]. Accounting mirrors [`super::CollectiveReport`] but is
@@ -73,6 +75,14 @@ impl<'a> RankEngine<'a> {
     /// decode + deserialize the received frame. The send runs on a
     /// scoped thread so a full socket buffer cannot deadlock two ranks
     /// sending to each other.
+    ///
+    /// Failures are retried: timeout-class recv errors get one in-place
+    /// retry inside [`wire::LinkRx`], link-level failures trigger
+    /// [`Mesh::recover_link`] (re-dial + replay), and only after the
+    /// retry budget or the step deadline is exhausted does the hop turn
+    /// into a coordinated [`Mesh::abort_all`]. Two error classes skip
+    /// recovery entirely: an injected rank crash fails silently (a real
+    /// crash sends nothing), and a peer ABORT cascades immediately.
     fn step_to_from(
         &mut self,
         to: usize,
@@ -80,6 +90,7 @@ impl<'a> RankEngine<'a> {
         payload: &[f32],
         fmt: WireFormat,
     ) -> crate::Result<Vec<f32>> {
+        const STEP_RETRIES: usize = 3;
         let t_step = Instant::now();
         let step_span = crate::trace::Span::begin(crate::trace::Category::Collective, "rank_hop")
             .arg("to", to)
@@ -89,50 +100,124 @@ impl<'a> RankEngine<'a> {
         let wire_buf = {
             let _s = crate::trace::Span::begin(crate::trace::Category::Encode, "hop_encode")
                 .arg("bytes", raw.len());
-            self.codec.encode(&raw)
+            super::engine::encode_hop(self.codec, &raw)?
         };
         let encode_s = t0.elapsed().as_secs_f64();
 
-        let (tx, rx) = self.mesh.tx_rx(to, from);
-        let (sent, got) = std::thread::scope(|s| {
-            let sender = s.spawn(move || {
-                let r = tx.send_frame(&wire_buf);
-                if r.is_err() {
-                    tx.shutdown(); // unblock our own recv half fast
+        let step_deadline = Instant::now() + self.mesh.timeout() * 4;
+        let mut sent_ok = false;
+        let mut got: Option<(Vec<u8>, f64)> = None;
+        let mut attempts = 0usize;
+        loop {
+            let need_recv = got.is_none();
+            let (txl, rxl) = self.mesh.tx_rx(to, from);
+            let mut send_res: Option<crate::Result<()>> = None;
+            let mut recv_res: Option<crate::Result<(Vec<u8>, f64)>> = None;
+            std::thread::scope(|s| {
+                let sender = if !sent_ok {
+                    let buf = &wire_buf;
+                    Some(s.spawn(move || {
+                        let r = txl.send_data(buf);
+                        if r.is_err() {
+                            txl.shutdown(); // unblock our own recv half fast
+                        }
+                        r
+                    }))
+                } else {
+                    None
+                };
+                if need_recv {
+                    let t1 = Instant::now();
+                    let g = {
+                        let _s =
+                            crate::trace::Span::begin(crate::trace::Category::Wire, "recv_wait");
+                        rxl.recv_data()
+                    };
+                    if g.is_err() {
+                        rxl.shutdown(); // unblock the sender half fast
+                    }
+                    recv_res = Some(g.map(|f| (f, t1.elapsed().as_secs_f64())));
                 }
-                r
+                if let Some(h) = sender {
+                    send_res = Some(h.join().unwrap_or_else(|_| {
+                        Err(crate::error::anyhow!("send thread panicked"))
+                    }));
+                }
             });
-            let t1 = Instant::now();
-            let got = {
-                let _s = crate::trace::Span::begin(crate::trace::Category::Wire, "recv_wait");
-                rx.recv_frame()
-            };
-            let wait_s = t1.elapsed().as_secs_f64();
-            if got.is_err() {
-                rx.shutdown(); // unblock the sender half fast
+            let mut send_err = None;
+            match send_res {
+                Some(Ok(())) => sent_ok = true,
+                Some(Err(e)) => send_err = Some(e),
+                None => {}
             }
-            let sent = sender
-                .join()
-                .unwrap_or_else(|_| Err(crate::error::anyhow!("send thread panicked")));
-            (sent, got.map(|f| (f, wait_s)))
-        });
-        if let Err(e) = sent {
-            self.mesh.shutdown_all();
-            return Err(e);
+            let mut recv_err = None;
+            match recv_res {
+                Some(Ok(x)) => got = Some(x),
+                Some(Err(e)) => recv_err = Some(e),
+                None => {}
+            }
+            if sent_ok && got.is_some() {
+                break;
+            }
+            // Fatal classes skip recovery: a simulated crash dies without
+            // telling anyone (like the real thing), a peer ABORT cascades.
+            for e in send_err.iter().chain(recv_err.iter()) {
+                if faults::is_crash(e) {
+                    self.mesh.fail_silent();
+                    return Err(crate::error::anyhow!("{}", faults::CRASH_MSG));
+                }
+                if faults::is_peer_abort(e) {
+                    let msg = e.to_string();
+                    self.mesh.abort_all("cascading abort");
+                    return Err(crate::error::anyhow!("{msg}"));
+                }
+            }
+            attempts += 1;
+            if attempts > STEP_RETRIES || Instant::now() >= step_deadline {
+                let why = send_err
+                    .as_ref()
+                    .or(recv_err.as_ref())
+                    .map(|e| e.to_string())
+                    .unwrap_or_default();
+                self.mesh.abort_all("recovery exhausted");
+                return Err(crate::error::anyhow!(
+                    "hop send->{to}/recv<-{from} failed after {attempts} attempts: {why}"
+                ));
+            }
+            if send_err.is_some() {
+                if let Err(e) = self.mesh.recover_link(to, step_deadline) {
+                    self.mesh.abort_all("link recovery failed");
+                    return Err(crate::error::anyhow!("recovering link to rank {to}: {e}"));
+                }
+                // send_data buffered the frame before the failed write and
+                // recovery replayed everything the peer had not seen — the
+                // frame is delivered; re-sending would skew the sequence.
+                sent_ok = true;
+            }
+            if recv_err.is_some() && got.is_none() && !(to == from && send_err.is_some()) {
+                if let Err(e) = self.mesh.recover_link(from, step_deadline) {
+                    self.mesh.abort_all("link recovery failed");
+                    return Err(crate::error::anyhow!(
+                        "recovering link from rank {from}: {e}"
+                    ));
+                }
+            }
         }
-        let (frame, wait_s) = match got {
-            Ok(x) => x,
-            Err(e) => {
-                self.mesh.shutdown_all();
-                return Err(e);
-            }
-        };
+        let (frame, wait_s) = got.expect("loop exits only with a frame");
 
         let t2 = Instant::now();
         let decoded = {
             let _s = crate::trace::Span::begin(crate::trace::Category::Decode, "hop_decode")
                 .arg("bytes", frame.len());
-            self.codec.decode(&frame)?
+            match self.codec.decode(&frame) {
+                Ok(d) => d,
+                Err(e) => {
+                    // Integrity-checked wire says the frame arrived intact,
+                    // so this is a codec fault — abort so peers don't hang.
+                    self.mesh.abort_all("hop decode failed");
+                    return Err(e);
+                }
+            }
         };
         let decode_s = t2.elapsed().as_secs_f64();
         drop(step_span);
@@ -286,31 +371,69 @@ impl<'a> RankEngine<'a> {
     }
 }
 
-/// Run `f(rank_engine)` on every rank of a freshly connected in-process
-/// UDS mesh, one OS thread per rank, and return the per-rank results in
-/// rank order. Test/bench helper — the real harness crosses process
-/// boundaries in [`super::spawn`].
-pub fn run_local_mesh<T, F>(n: usize, codec: &dyn Codec, f: F) -> crate::Result<Vec<T>>
+/// Knobs for [`run_local_mesh_results`]: per-link wire timeout, an
+/// optional deterministic [`faults::FaultPlan`] installed on every
+/// link's send side, and the transport flavor. Explicit timeouts (not
+/// the `SSHUFF_WIRE_TIMEOUT_S` env var) so parallel tests can shrink
+/// them without racing each other's environment.
+pub struct LocalMeshOpts {
+    pub timeout: Duration,
+    pub chaos: Option<Arc<faults::FaultPlan>>,
+    /// Loopback TCP instead of UDS sockets.
+    pub tcp: bool,
+}
+
+impl Default for LocalMeshOpts {
+    fn default() -> Self {
+        Self { timeout: wire::default_timeout(), chaos: None, tcp: false }
+    }
+}
+
+/// Like [`run_local_mesh`] but configurable and non-short-circuiting:
+/// returns every rank's individual `Result` so chaos tests can assert
+/// mixed outcomes (some ranks recovered, some aborted cleanly).
+pub fn run_local_mesh_results<T, F>(
+    n: usize,
+    codec: &dyn Codec,
+    opts: &LocalMeshOpts,
+    f: F,
+) -> crate::Result<Vec<crate::Result<T>>>
 where
     T: Send,
     F: Fn(&mut RankEngine) -> crate::Result<T> + Sync,
 {
-    let timeout = wire::default_timeout();
+    let timeout = opts.timeout;
     let deadline = Instant::now() + timeout;
-    let dir = wire::scratch_dir("mesh")?;
-    let listeners: Vec<wire::Listener> = (0..n)
-        .map(|r| wire::Listener::bind_uds_in(&dir, &format!("rank{r}")))
-        .collect::<crate::Result<_>>()?;
+    let mut dir = None;
+    let listeners: Vec<wire::Listener> = if opts.tcp {
+        (0..n).map(|_| wire::Listener::bind_tcp()).collect::<crate::Result<_>>()?
+    } else {
+        let d = wire::scratch_dir("mesh")?;
+        let ls = (0..n)
+            .map(|r| wire::Listener::bind_uds_in(&d, &format!("rank{r}")))
+            .collect::<crate::Result<_>>()?;
+        dir = Some(d);
+        ls
+    };
     let peers: Vec<wire::Endpoint> =
         listeners.iter().map(|l| l.endpoint()).collect::<crate::Result<_>>()?;
     let mut out: Vec<crate::Result<T>> = Vec::new();
     std::thread::scope(|s| {
-        let handles: Vec<_> = (0..n)
-            .map(|r| {
-                let (listener, peers) = (&listeners[r], &peers);
+        let handles: Vec<_> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(r, listener)| {
+                let peers = &peers;
                 let f = &f;
+                let chaos = opts.chaos.clone();
                 s.spawn(move || -> crate::Result<T> {
-                    let mut mesh = Mesh::connect(r, n, listener, peers, deadline, timeout)?;
+                    let mopts = MeshOpts {
+                        deadline,
+                        timeout,
+                        version: wire::WIRE_PROTO_VERSION,
+                        chaos,
+                    };
+                    let mut mesh = Mesh::connect_opts(r, n, listener, peers, mopts)?;
                     let mut eng = RankEngine::new(&mut mesh, codec);
                     f(&mut eng)
                 })
@@ -322,9 +445,24 @@ where
             }));
         }
     });
-    drop(listeners); // Listener::drop unlinks the UDS socket files
-    let _ = std::fs::remove_dir(&dir);
-    out.into_iter().collect()
+    if let Some(d) = dir {
+        let _ = std::fs::remove_dir(&d); // Listener::drop unlinked the sockets
+    }
+    Ok(out)
+}
+
+/// Run `f(rank_engine)` on every rank of a freshly connected in-process
+/// UDS mesh, one OS thread per rank, and return the per-rank results in
+/// rank order (first `Err` wins). Test/bench helper — the real harness
+/// crosses process boundaries in [`super::spawn`].
+pub fn run_local_mesh<T, F>(n: usize, codec: &dyn Codec, f: F) -> crate::Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(&mut RankEngine) -> crate::Result<T> + Sync,
+{
+    run_local_mesh_results(n, codec, &LocalMeshOpts::default(), f)?
+        .into_iter()
+        .collect()
 }
 
 #[cfg(test)]

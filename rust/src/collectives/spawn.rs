@@ -25,9 +25,10 @@
 //! the identical single-stage codebook without any data exchange.
 
 use super::engine::{CollectiveEngine, OwnedSimTransport, TransportKind};
+use super::faults;
 use super::hierarchical::{hierarchical_all_reduce_on, Hierarchy};
 use super::rank::RankEngine;
-use super::wire::{self, Mesh};
+use super::wire::{self, Mesh, MeshOpts};
 use super::{CollectiveReport, WireFormat, DEFAULT_PIPELINE_DEPTH};
 use crate::baselines::{Codec, SingleStageCodec};
 use crate::dtype::{bf16_from_f32, bf16_to_f32};
@@ -62,6 +63,10 @@ pub struct SpawnConfig {
     /// Dump every rank's metrics exposition (plus the parent's) after
     /// the run.
     pub metrics: bool,
+    /// Fault-injection spec for every worker's mesh links (see
+    /// [`faults::FaultPlan::parse`]); `None` = no chaos.
+    pub chaos: Option<String>,
+    pub chaos_seed: u64,
 }
 
 impl SpawnConfig {
@@ -91,6 +96,9 @@ pub struct WorkerConfig {
     /// Enable span recording and ship the drained trace buffer home in
     /// the report (`--trace-worker` on the re-exec argv).
     pub trace: bool,
+    /// Fault-injection spec forwarded from the parent's `--chaos`.
+    pub chaos: Option<String>,
+    pub chaos_seed: u64,
 }
 
 /// What the parent learned from a verified run.
@@ -164,10 +172,10 @@ pub fn run_worker(cfg: &WorkerConfig) -> crate::Result<()> {
         }
     };
     let listen_uri = listener.endpoint()?.uri();
-    let (mut control, peers) =
+    let (mut control, peers, cluster_ver) =
         wire::join_rendezvous(&parent, cfg.rank, &listen_uri, deadline, cfg.timeout)?;
     let mut report = wire::WorkerReport::new(cfg.rank as u32);
-    match run_collectives(cfg, &listener, &peers, deadline) {
+    match run_collectives(cfg, listener, &peers, cluster_ver, deadline) {
         Ok((walls, checksums, agg)) => {
             report.ok = true;
             report.walls_s = walls;
@@ -195,7 +203,6 @@ pub fn run_worker(cfg: &WorkerConfig) -> crate::Result<()> {
     control.send_frame(&report.encode())?;
     let bye = control.recv_frame()?;
     crate::error::ensure!(bye.first() == Some(&wire::MSG_BYE), "worker: expected BYE");
-    drop(listener);
     if let Some(dir) = scratch {
         let _ = std::fs::remove_dir(&dir);
     }
@@ -207,11 +214,27 @@ pub fn run_worker(cfg: &WorkerConfig) -> crate::Result<()> {
 
 fn run_collectives(
     cfg: &WorkerConfig,
-    listener: &wire::Listener,
+    listener: wire::Listener,
     peers: &[wire::Endpoint],
+    cluster_ver: u32,
     deadline: Instant,
 ) -> crate::Result<(Vec<f64>, Vec<u64>, CollectiveReport)> {
-    let mut mesh = Mesh::connect(cfg.rank, cfg.ranks, listener, peers, deadline, cfg.timeout)?;
+    let chaos = match &cfg.chaos {
+        Some(spec) => Some(std::sync::Arc::new(
+            // a crash lane takes the whole process down, exactly like a
+            // real dead rank — peers see the link die, not an Err frame
+            faults::FaultPlan::parse(spec, cfg.chaos_seed)?
+                .with_crash_mode(faults::CrashMode::Process),
+        )),
+        None => None,
+    };
+    let opts = MeshOpts {
+        deadline,
+        timeout: cfg.timeout,
+        version: cluster_ver,
+        chaos,
+    };
+    let mut mesh = Mesh::connect_opts(cfg.rank, cfg.ranks, listener, peers, opts)?;
     if cfg.pace_gbps > 0.0 {
         mesh.set_pace_bps(cfg.pace_gbps * 1e9 / 8.0);
     }
@@ -274,7 +297,7 @@ pub fn run_spawn(cfg: &SpawnConfig) -> crate::Result<SpawnSummary> {
     };
     let uri = listener.endpoint()?.uri();
     let exe = std::env::current_exe()?;
-    let mut children = Vec::with_capacity(cfg.ranks);
+    let mut reaper = Reaper::default();
     for r in 0..cfg.ranks {
         let mut cmd = std::process::Command::new(&exe);
         cmd.arg("collective")
@@ -291,33 +314,116 @@ pub fn run_spawn(cfg: &SpawnConfig) -> crate::Result<SpawnSummary> {
         if cfg.trace.is_some() {
             cmd.arg("--trace-worker");
         }
+        if let Some(spec) = &cfg.chaos {
+            cmd.args(["--chaos", spec]).args(["--chaos-seed", &cfg.chaos_seed.to_string()]);
+        }
         let child = cmd
             .stdin(std::process::Stdio::null())
             .stdout(std::process::Stdio::null())
             .stderr(std::process::Stdio::inherit())
             .spawn()
             .map_err(|e| crate::error::anyhow!("spawning worker {r}: {e}"))?;
-        children.push(child);
+        reaper.push(child);
     }
+    // From here on every early `return Err(..)?` runs Reaper::drop, which
+    // kills and waits any worker still alive — no error path leaks
+    // children (verification failure and deadline overrun included).
     let exchanged = parent_exchange(&listener, cfg.ranks, deadline, cfg.timeout);
     drop(listener);
     if let Some(dir) = scratch {
         let _ = std::fs::remove_dir(&dir);
     }
-    let reports = match exchanged {
-        Ok(r) => r,
-        Err(e) => {
-            kill_all(&mut children);
-            return Err(e);
-        }
-    };
-    if let Err(e) = reap(&mut children, deadline) {
-        kill_all(&mut children);
-        return Err(e);
-    }
+    let reports = exchanged?;
+    reaper.reap(deadline)?;
     let summary = verify(cfg, &reports)?;
+    if cfg.chaos.is_some() {
+        print_chaos_summary(&reports);
+    }
     emit_telemetry(cfg, &reports)?;
     Ok(summary)
+}
+
+/// Kill-and-wait drop guard over the spawned worker processes: normal
+/// shutdown goes through [`Reaper::reap`] (clean exits under deadline),
+/// and any abandoned path — error return, panic unwind — falls back to
+/// `Drop`, which SIGKILLs and waits whatever is left so no worker ever
+/// outlives its parent run.
+#[derive(Default)]
+pub struct Reaper {
+    children: Vec<std::process::Child>,
+}
+
+impl Reaper {
+    pub fn push(&mut self, child: std::process::Child) {
+        self.children.push(child);
+    }
+
+    /// Wait for every child to exit successfully before `deadline`;
+    /// a failed exit or an overrun is a typed `Err` (the drop guard
+    /// then kills the stragglers).
+    pub fn reap(&mut self, deadline: Instant) -> crate::Result<()> {
+        for (r, c) in self.children.iter_mut().enumerate() {
+            loop {
+                match c.try_wait() {
+                    Ok(Some(status)) => {
+                        crate::error::ensure!(
+                            status.success(),
+                            "worker rank {r} exited with {status}"
+                        );
+                        break;
+                    }
+                    Ok(None) if Instant::now() >= deadline => {
+                        crate::error::bail!("worker rank {r} still running at deadline");
+                    }
+                    Ok(None) => std::thread::sleep(Duration::from_millis(10)),
+                    Err(e) => crate::error::bail!("waiting on worker rank {r}: {e}"),
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        for c in self.children.iter_mut() {
+            // kill() on an already-reaped child is an ignorable error
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Read one counter out of a metrics exposition (`name value` lines).
+fn metric_from_text(text: &str, name: &str) -> u64 {
+    text.lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(' ')?;
+            if k == name {
+                v.trim().parse().ok()
+            } else {
+                None
+            }
+        })
+        .unwrap_or(0)
+}
+
+/// Per-rank injected-fault and recovery counts, read from the metrics
+/// exposition each worker ships home with its report.
+fn print_chaos_summary(reports: &[wire::WorkerReport]) {
+    println!("chaos summary (per rank): injected / reconnects / retries / corrupt / aborts");
+    for rep in reports {
+        let Some(t) = &rep.telemetry else { continue };
+        println!(
+            "  rank {}: {} injected, {} reconnects, {} hop retries, {} corrupt frames, {} aborts",
+            rep.rank,
+            metric_from_text(&t.metrics_text, "faults_injected"),
+            metric_from_text(&t.metrics_text, "link_reconnects"),
+            metric_from_text(&t.metrics_text, "hop_retries"),
+            metric_from_text(&t.metrics_text, "wire_corrupt_frames"),
+            metric_from_text(&t.metrics_text, "collective_aborts"),
+        );
+    }
 }
 
 /// Merge the workers' shipped trace buffers (plus the parent's own
@@ -383,32 +489,6 @@ fn parent_exchange(
         c.send_frame(&[wire::MSG_BYE])?;
     }
     Ok(reports)
-}
-
-fn kill_all(children: &mut [std::process::Child]) {
-    for c in children.iter_mut() {
-        let _ = c.kill();
-        let _ = c.wait();
-    }
-}
-
-fn reap(children: &mut [std::process::Child], deadline: Instant) -> crate::Result<()> {
-    for (r, c) in children.iter_mut().enumerate() {
-        loop {
-            match c.try_wait() {
-                Ok(Some(status)) => {
-                    crate::error::ensure!(status.success(), "worker rank {r} exited with {status}");
-                    break;
-                }
-                Ok(None) if Instant::now() >= deadline => {
-                    crate::error::bail!("worker rank {r} still running at deadline");
-                }
-                Ok(None) => std::thread::sleep(Duration::from_millis(10)),
-                Err(e) => crate::error::bail!("waiting on worker rank {r}: {e}"),
-            }
-        }
-    }
-    Ok(())
 }
 
 /// The simulated global engine's view of the identical run: per-rank
@@ -516,6 +596,37 @@ mod tests {
     }
 
     #[test]
+    fn reaper_drop_kills_and_waits_stragglers() {
+        let child = std::process::Command::new("/bin/sh")
+            .args(["-c", "sleep 30"])
+            .stdin(std::process::Stdio::null())
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn sleeper");
+        let pid = child.id();
+        let t0 = Instant::now();
+        {
+            let mut reaper = Reaper::default();
+            reaper.push(child);
+            // dropped without reap() — the error-path shape
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "drop must kill, not wait out the sleep");
+        // waited, not just signalled: the pid is fully gone, no zombie
+        assert!(
+            !std::path::Path::new(&format!("/proc/{pid}")).exists(),
+            "child {pid} leaked past Reaper::drop"
+        );
+    }
+
+    #[test]
+    fn metrics_text_counter_lookup_is_exact_match() {
+        let text = "faults_injected_drop 3\nfaults_injected 7\nlink_reconnects 2\n";
+        assert_eq!(metric_from_text(text, "faults_injected"), 7);
+        assert_eq!(metric_from_text(text, "faults_injected_drop"), 3);
+        assert_eq!(metric_from_text(text, "no_such_counter"), 0);
+    }
+
+    #[test]
     fn default_hierarchy_covers_ranks() {
         for n in [2usize, 3, 4, 5, 8] {
             let (nodes, locals) = SpawnConfig::default_hierarchy(n);
@@ -536,6 +647,8 @@ mod tests {
             timeout: Duration::from_secs(5),
             trace: None,
             metrics: false,
+            chaos: None,
+            chaos_seed: 0,
         };
         let (a, wire_a, raw_a) = sim_reference(&cfg).unwrap();
         let (b, wire_b, raw_b) = sim_reference(&cfg).unwrap();
@@ -564,6 +677,8 @@ mod tests {
             timeout: Duration::from_secs(10),
             trace: None,
             metrics: false,
+            chaos: None,
+            chaos_seed: 0,
         };
         let (want, want_wire, want_raw) = sim_reference(&cfg).unwrap();
         let codec = build_codec(cfg.seed, cfg.ranks, cfg.elems);

@@ -12,6 +12,17 @@
 //! drop, so a worker whose peer dies mid-collective surfaces an `Err`
 //! instead of hanging.
 //!
+//! Protocol **v2** ([`WIRE_PROTO_VERSION`], negotiated down to the
+//! oldest peer during rendezvous) adds an integrity envelope: setting
+//! bit 31 of the length prefix ([`FLAG_CHECK`], unreachable by v1
+//! lengths thanks to the 1 GiB cap) reframes the payload as
+//! `[ftype u8][seq u64 LE][body][fnv64 u64 LE]` — a typed control
+//! channel ([`FT_DATA`]/[`FT_RESUME`]/[`FT_ABORT`]), a per-link frame
+//! sequence number for mid-collective resume, and an FNV-1a trailer
+//! over `[ftype][seq][body]`. A trailer mismatch surfaces as a typed
+//! `Err` plus the `wire_corrupt_frames` counter — never a garbled
+//! decode. v1 peers keep sending unflagged frames, which still parse.
+//!
 //! Rendezvous protocol (all frames over the same length-prefixed wire):
 //!
 //! 1. the parent binds a listener (TCP port 0 or a scratch UDS path)
@@ -35,8 +46,29 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
+use super::faults;
+
 /// Frames above this are treated as stream corruption, not data.
 pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Highest wire protocol revision this build speaks. v1 = bare
+/// `[len][payload]` frames; v2 adds the checksummed typed envelope.
+pub const WIRE_PROTO_VERSION: u32 = 2;
+
+/// Length-prefix flag bit marking a v2 checksummed frame. The 1 GiB
+/// frame cap keeps bit 31 of every v1 length clear, so flagged and
+/// unflagged frames coexist on one stream.
+pub const FLAG_CHECK: u32 = 1 << 31;
+
+/// v2 frame types.
+pub const FT_DATA: u8 = 0;
+/// Reconnect handshake: body is the LE next-expected receive seq.
+pub const FT_RESUME: u8 = 1;
+/// Coordinated abort: body is a human-readable reason.
+pub const FT_ABORT: u8 = 2;
+
+/// v2 envelope overhead: `[ftype u8][seq u64][fnv64 u64]`.
+const V2_OVERHEAD: usize = 1 + 8 + 8;
 
 /// Rendezvous message tags (first payload byte of control frames).
 pub const MSG_HELLO: u8 = 1;
@@ -122,13 +154,18 @@ impl Write for Socket {
 
 /// Frame-level counters on the process-global metrics registry
 /// (`wire_frames_sent/_recv`, `wire_bytes_sent/_recv` including the
-/// 4-byte length prefix, `wire_timeouts`).
+/// 4-byte length prefix, `wire_timeouts`, `wire_corrupt_frames`,
+/// `wire_dup_frames`, `link_reconnects`, `hop_retries`).
 struct WireMetrics {
     sent_frames: crate::metrics::Counter,
     sent_bytes: crate::metrics::Counter,
     recv_frames: crate::metrics::Counter,
     recv_bytes: crate::metrics::Counter,
     timeouts: crate::metrics::Counter,
+    corrupt: crate::metrics::Counter,
+    dup: crate::metrics::Counter,
+    reconnects: crate::metrics::Counter,
+    hop_retries: crate::metrics::Counter,
 }
 
 fn wire_metrics() -> &'static WireMetrics {
@@ -141,6 +178,10 @@ fn wire_metrics() -> &'static WireMetrics {
             recv_frames: reg.counter("wire_frames_recv"),
             recv_bytes: reg.counter("wire_bytes_recv"),
             timeouts: reg.counter("wire_timeouts"),
+            corrupt: reg.counter("wire_corrupt_frames"),
+            dup: reg.counter("wire_dup_frames"),
+            reconnects: reg.counter("link_reconnects"),
+            hop_retries: reg.counter("hop_retries"),
         }
     })
 }
@@ -160,8 +201,25 @@ fn note_io_error(dir: &'static str, e: &std::io::Error) {
     }
 }
 
+/// Wrap a frame-level I/O failure into the crate error, stamping the
+/// `wire timeout` marker [`faults::is_timeout`] keys on so recovery can
+/// tell retryable timeouts from dead links.
+fn wire_io_error(dir: &'static str, what: &str, e: std::io::Error) -> crate::error::Error {
+    note_io_error(dir, &e);
+    if matches!(e.kind(), std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock) {
+        crate::error::anyhow!("{what}: wire timeout: {e}")
+    } else {
+        crate::error::anyhow!("{what}: {e}")
+    }
+}
+
 /// A socket speaking `[len: u32 LE][payload]` frames, optionally paced
 /// to a target send bandwidth.
+///
+/// With [`FrameStream::set_check`] enabled (protocol v2), sends are
+/// wrapped in the checksummed typed envelope and receives verify the
+/// FNV-1a trailer of flagged frames; unflagged v1 frames still parse,
+/// so mixed-version links degrade instead of breaking.
 ///
 /// Pacing sleeps after each send until the frame has "occupied the
 /// wire" for `bytes / pace_bps` seconds — a deliberately simple token
@@ -170,11 +228,22 @@ fn note_io_error(dir: &'static str, e: &std::io::Error) {
 pub struct FrameStream {
     sock: Socket,
     pace_bps: f64,
+    check: bool,
+    send_seq: u64,
+    timeout_hint: Duration,
+    chaos: Option<faults::FaultLane>,
 }
 
 impl FrameStream {
     pub fn new(sock: Socket) -> FrameStream {
-        FrameStream { sock, pace_bps: 0.0 }
+        FrameStream {
+            sock,
+            pace_bps: 0.0,
+            check: false,
+            send_seq: 0,
+            timeout_hint: default_timeout(),
+            chaos: None,
+        }
     }
 
     /// Target send bandwidth in bytes/second; 0 disables pacing.
@@ -182,12 +251,50 @@ impl FrameStream {
         self.pace_bps = if bps.is_finite() && bps > 0.0 { bps } else { 0.0 };
     }
 
+    pub fn pace_bps(&self) -> f64 {
+        self.pace_bps
+    }
+
+    /// Enable the v2 checksummed envelope on sends (receives always
+    /// accept both framings). Flip this only after version negotiation
+    /// says the peer speaks v2.
+    pub fn set_check(&mut self, on: bool) {
+        self.check = on;
+    }
+
+    pub fn check(&self) -> bool {
+        self.check
+    }
+
+    /// Tell the stream what wire timeout its socket carries, so fault
+    /// injection can size stalls just past it. Purely advisory.
+    pub fn set_timeout_hint(&mut self, t: Duration) {
+        self.timeout_hint = t;
+    }
+
+    /// Install (or clear) a fault-injection lane on this send half.
+    pub fn set_chaos(&mut self, lane: Option<faults::FaultLane>) {
+        self.chaos = lane;
+    }
+
+    /// Remove and return the fault lane (to carry across a reconnect).
+    pub fn take_chaos(&mut self) -> Option<faults::FaultLane> {
+        self.chaos.take()
+    }
+
     /// Shut the underlying socket down (both directions, clones too).
     pub fn shutdown(&self) {
         self.sock.shutdown();
     }
 
+    /// Send one logical frame. On a v2 stream this wraps the payload in
+    /// the checksummed envelope with an auto-assigned sequence number.
     pub fn send_frame(&mut self, payload: &[u8]) -> crate::Result<()> {
+        if self.check {
+            let seq = self.send_seq;
+            self.send_seq += 1;
+            return self.send_typed(FT_DATA, seq, payload);
+        }
         crate::error::ensure!(
             payload.len() <= MAX_FRAME_BYTES,
             "frame of {} bytes exceeds cap {}",
@@ -202,53 +309,187 @@ impl FrameStream {
             .and_then(|()| self.sock.write_all(payload))
             .and_then(|()| self.sock.flush())
             .map_err(|e| {
-                note_io_error("send", &e);
-                crate::error::anyhow!("frame send ({} bytes): {e}", payload.len())
+                let what = format!("frame send ({} bytes)", payload.len());
+                wire_io_error("send", &what, e)
             })?;
         wire_metrics().sent_frames.inc();
         wire_metrics().sent_bytes.add(payload.len() as u64 + 4);
+        self.pace(t0, payload.len() + 4);
+        Ok(())
+    }
+
+    /// Send one v2 frame with an explicit type and sequence number. The
+    /// chaos lane (if any) gets to mangle `FT_DATA` frames here — this
+    /// is the single injection point for every socket transport.
+    pub fn send_typed(&mut self, ftype: u8, seq: u64, payload: &[u8]) -> crate::Result<()> {
+        crate::error::ensure!(
+            payload.len() <= MAX_FRAME_BYTES - V2_OVERHEAD,
+            "frame of {} bytes exceeds cap {}",
+            payload.len(),
+            MAX_FRAME_BYTES - V2_OVERHEAD
+        );
+        let _span = crate::trace::Span::begin(crate::trace::Category::Wire, "send_frame")
+            .arg("bytes", payload.len())
+            .arg("seq", seq);
+        let inner = V2_OVERHEAD + payload.len();
+        let mut buf = Vec::with_capacity(4 + inner);
+        buf.extend_from_slice(&(inner as u32 | FLAG_CHECK).to_le_bytes());
+        buf.push(ftype);
+        buf.extend_from_slice(&seq.to_le_bytes());
+        buf.extend_from_slice(payload);
+        let crc = fnv64(&buf[4..4 + 1 + 8 + payload.len()]);
+        buf.extend_from_slice(&crc.to_le_bytes());
+
+        let mut kill_after_write = false;
+        if ftype == FT_DATA {
+            if let Some(lane) = &mut self.chaos {
+                match lane.next(self.timeout_hint) {
+                    None => {}
+                    Some(faults::FaultAction::Delay(d)) => std::thread::sleep(d),
+                    Some(faults::FaultAction::Stall(d)) => std::thread::sleep(d),
+                    Some(faults::FaultAction::Drop) => return Ok(()),
+                    Some(faults::FaultAction::FlipBit(bit)) => {
+                        // flip past the header/type/seq prefix so the
+                        // receiver's trailer verification must fire (the
+                        // payload+trailer region is never empty)
+                        let lo = 4 + 1 + 8;
+                        let span_bytes = buf.len() - lo;
+                        let b = lo + (bit as usize / 8) % span_bytes;
+                        buf[b] ^= 1 << (bit % 8);
+                    }
+                    Some(faults::FaultAction::Truncate) => {
+                        kill_after_write = true;
+                        buf.truncate(4 + 1 + 8 + payload.len() / 2);
+                    }
+                    Some(faults::FaultAction::Crash(faults::CrashMode::Process)) => {
+                        eprintln!("sshuff chaos: injected rank crash (process abort)");
+                        std::process::abort();
+                    }
+                    Some(faults::FaultAction::Crash(faults::CrashMode::Error)) => {
+                        self.sock.shutdown();
+                        crate::error::bail!("{}", faults::CRASH_MSG);
+                    }
+                }
+            }
+        }
+
+        let t0 = Instant::now();
+        let res = self
+            .sock
+            .write_all(&buf)
+            .and_then(|()| self.sock.flush())
+            .map_err(|e| {
+                let what = format!("frame send ({} bytes, seq {seq})", payload.len());
+                wire_io_error("send", &what, e)
+            });
+        if kill_after_write {
+            self.sock.shutdown();
+            res?;
+            crate::error::bail!("injected truncated frame (chaos)");
+        }
+        res?;
+        wire_metrics().sent_frames.inc();
+        wire_metrics().sent_bytes.add(buf.len() as u64);
+        self.pace(t0, buf.len());
+        Ok(())
+    }
+
+    fn pace(&self, t0: Instant, bytes: usize) {
         if self.pace_bps > 0.0 {
-            let want = (payload.len() + 4) as f64 / self.pace_bps;
+            let want = bytes as f64 / self.pace_bps;
             let spent = t0.elapsed().as_secs_f64();
             if want > spent {
                 std::thread::sleep(Duration::from_secs_f64(want - spent));
             }
         }
-        Ok(())
     }
 
-    pub fn recv_frame(&mut self) -> crate::Result<Vec<u8>> {
+    /// Receive one frame in either framing. Returns `(ftype, seq,
+    /// payload)`; v1 frames come back as `(FT_DATA, 0, payload)`. A
+    /// checksum mismatch is a typed `Err` + `wire_corrupt_frames`.
+    pub fn recv_typed(&mut self) -> crate::Result<(u8, u64, Vec<u8>)> {
         let mut span = crate::trace::Span::begin(crate::trace::Category::Wire, "recv_frame");
         let mut hdr = [0u8; 4];
-        self.sock.read_exact(&mut hdr).map_err(|e| {
-            note_io_error("recv", &e);
-            crate::error::anyhow!("frame header recv: {e}")
-        })?;
-        let len = u32::from_le_bytes(hdr) as usize;
+        self.sock
+            .read_exact(&mut hdr)
+            .map_err(|e| wire_io_error("recv", "frame header recv", e))?;
+        let word = u32::from_le_bytes(hdr);
+        let flagged = word & FLAG_CHECK != 0;
+        let len = (word & !FLAG_CHECK) as usize;
         crate::error::ensure!(
             len <= MAX_FRAME_BYTES,
             "incoming frame claims {len} bytes (cap {MAX_FRAME_BYTES}) — corrupt stream?"
         );
-        let mut payload = vec![0u8; len];
-        self.sock.read_exact(&mut payload).map_err(|e| {
-            note_io_error("recv", &e);
-            crate::error::anyhow!("frame body recv ({len} bytes): {e}")
+        if !flagged {
+            let mut payload = vec![0u8; len];
+            self.sock.read_exact(&mut payload).map_err(|e| {
+                let what = format!("frame body recv ({len} bytes)");
+                wire_io_error("recv", &what, e)
+            })?;
+            span.add_arg("bytes", len);
+            drop(span);
+            wire_metrics().recv_frames.inc();
+            wire_metrics().recv_bytes.add(len as u64 + 4);
+            return Ok((FT_DATA, 0, payload));
+        }
+        if len < V2_OVERHEAD {
+            wire_metrics().corrupt.inc();
+            crate::error::bail!("corrupt frame: v2 frame of {len} bytes is below envelope size");
+        }
+        let mut body = vec![0u8; len];
+        self.sock.read_exact(&mut body).map_err(|e| {
+            let what = format!("frame body recv ({len} bytes)");
+            wire_io_error("recv", &what, e)
         })?;
-        span.add_arg("bytes", len);
+        let ftype = body[0];
+        let seq = u64::from_le_bytes(body[1..9].try_into().expect("8 bytes"));
+        let crc_at = len - 8;
+        let want = u64::from_le_bytes(body[crc_at..].try_into().expect("8 bytes"));
+        let got = fnv64(&body[..crc_at]);
+        if got != want {
+            wire_metrics().corrupt.inc();
+            crate::trace::mark(crate::trace::Category::Wire, "corrupt_frame");
+            crate::error::bail!(
+                "corrupt frame: checksum mismatch on {len}-byte frame (type {ftype}, seq {seq})"
+            );
+        }
+        body.truncate(crc_at);
+        body.drain(..9);
+        span.add_arg("bytes", body.len());
+        span.add_arg("seq", seq);
         drop(span);
         wire_metrics().recv_frames.inc();
         wire_metrics().recv_bytes.add(len as u64 + 4);
-        Ok(payload)
+        Ok((ftype, seq, body))
+    }
+
+    /// Receive one logical data frame, mapping control frames to typed
+    /// errors (an ABORT from the peer is fatal, not data).
+    pub fn recv_frame(&mut self) -> crate::Result<Vec<u8>> {
+        let (ftype, _seq, payload) = self.recv_typed()?;
+        match ftype {
+            FT_DATA => Ok(payload),
+            FT_ABORT => crate::error::bail!(
+                "collective aborted by peer: {}",
+                String::from_utf8_lossy(&payload)
+            ),
+            FT_RESUME => crate::error::bail!("unexpected RESUME frame on data stream"),
+            t => crate::error::bail!("unknown frame type {t}"),
+        }
     }
 
     /// Split into independently borrowable send/receive halves (clones
     /// of one underlying socket, so `shutdown` on either kills both).
+    /// The receive half inherits checksum mode and the timeout hint.
     pub fn into_duplex(self) -> crate::Result<Duplex> {
         let rx = self
             .sock
             .try_clone()
             .map_err(|e| crate::error::anyhow!("socket clone for duplex: {e}"))?;
-        Ok(Duplex { tx: self, rx: FrameStream::new(rx) })
+        let mut rx = FrameStream::new(rx);
+        rx.check = self.check;
+        rx.timeout_hint = self.timeout_hint;
+        Ok(Duplex { tx: self, rx })
     }
 }
 
@@ -300,10 +541,15 @@ impl Endpoint {
         crate::error::bail!("endpoint '{s}': expected tcp://host:port or uds:///path");
     }
 
-    /// Connect, retrying until `deadline` (the peer's listener may not
-    /// be up yet). The returned stream has `timeout` applied to reads
-    /// and writes, and `TCP_NODELAY` set on TCP.
+    /// Connect, retrying with jittered exponential backoff until
+    /// `deadline` (the peer's listener may not be up yet). The returned
+    /// stream has `timeout` applied to reads and writes, and
+    /// `TCP_NODELAY` set on TCP.
     pub fn connect(&self, deadline: Instant, timeout: Duration) -> crate::Result<FrameStream> {
+        // Seed jitter from the target address and our pid so concurrent
+        // dialers of one listener decorrelate deterministically.
+        let mut backoff =
+            faults::Backoff::new(fnv64(self.uri().as_bytes()) ^ (std::process::id() as u64) << 32);
         let mut last = String::new();
         loop {
             let remaining = deadline.saturating_duration_since(Instant::now());
@@ -323,11 +569,14 @@ impl Endpoint {
                 Ok(sock) => {
                     sock.set_timeouts(timeout)
                         .map_err(|e| crate::error::anyhow!("connect {}: {e}", self.uri()))?;
-                    return Ok(FrameStream::new(sock));
+                    let mut s = FrameStream::new(sock);
+                    s.set_timeout_hint(timeout);
+                    return Ok(s);
                 }
                 Err(e) => {
                     last = e.to_string();
-                    std::thread::sleep(Duration::from_millis(5));
+                    let delay = backoff.next_delay().min(remaining);
+                    std::thread::sleep(delay);
                 }
             }
         }
@@ -392,7 +641,9 @@ impl Listener {
                         Socket::Uds(s) => s.set_nonblocking(false)?,
                     }
                     sock.set_timeouts(timeout)?;
-                    return Ok(FrameStream::new(sock));
+                    let mut s = FrameStream::new(sock);
+                    s.set_timeout_hint(timeout);
+                    return Ok(s);
                 }
                 None => {
                     if Instant::now() >= deadline {
@@ -455,45 +706,251 @@ pub fn pair_uds(timeout: Duration) -> crate::Result<(Socket, Socket)> {
     Ok((a, b))
 }
 
+/// How many recently sent data frames each mesh link keeps for replay
+/// after a reconnect. In-flight depth per link is one frame per
+/// direction per step, so a handful is plenty.
+pub const REPLAY_WINDOW: usize = 8;
+
+/// Per-hop receive retries for timeout-class errors before the rank
+/// engine escalates to reconnect/abort.
+const RECV_TIMEOUT_RETRIES: u32 = 1;
+
+/// Options for [`Mesh::connect_opts`].
+pub struct MeshOpts {
+    pub deadline: Instant,
+    pub timeout: Duration,
+    /// Protocol version this rank offers (negotiated down per link).
+    pub version: u32,
+    /// Fault plan to install on every outgoing link (tests/chaos runs).
+    pub chaos: Option<std::sync::Arc<faults::FaultPlan>>,
+}
+
+impl MeshOpts {
+    pub fn new(deadline: Instant, timeout: Duration) -> MeshOpts {
+        MeshOpts {
+            deadline,
+            timeout,
+            version: WIRE_PROTO_VERSION,
+            chaos: None,
+        }
+    }
+}
+
+/// Send half of one mesh link: assigns per-link sequence numbers and
+/// keeps a bounded replay buffer so a reconnected peer can ask for the
+/// frames it missed.
+pub struct LinkTx {
+    s: FrameStream,
+    next_seq: u64,
+    sent: std::collections::VecDeque<(u64, Vec<u8>)>,
+}
+
+impl LinkTx {
+    fn new(s: FrameStream) -> LinkTx {
+        LinkTx {
+            s,
+            next_seq: 0,
+            sent: std::collections::VecDeque::new(),
+        }
+    }
+
+    /// Send one data frame. On v2 links the frame is buffered for
+    /// replay *before* the write, so a transport failure here still
+    /// leaves the frame recoverable: after a successful
+    /// [`Mesh::recover_link`] the peer's RESUME triggers the resend and
+    /// the caller must treat the frame as delivered.
+    pub fn send_data(&mut self, payload: &[u8]) -> crate::Result<()> {
+        if !self.s.check() {
+            return self.s.send_frame(payload);
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.sent.push_back((seq, payload.to_vec()));
+        while self.sent.len() > REPLAY_WINDOW {
+            self.sent.pop_front();
+        }
+        self.s.send_typed(FT_DATA, seq, payload)
+    }
+
+    /// Resend every buffered frame with `seq >= from_seq` (the peer's
+    /// RESUME watermark after a reconnect).
+    fn replay_from(&mut self, from_seq: u64) -> crate::Result<()> {
+        let oldest = self.sent.front().map(|(s, _)| *s).unwrap_or(self.next_seq);
+        crate::error::ensure!(
+            from_seq >= oldest || from_seq >= self.next_seq,
+            "link replay: peer wants seq {from_seq} but buffer starts at {oldest} \
+             (window {REPLAY_WINDOW} exceeded)"
+        );
+        let stream = &mut self.s;
+        for (seq, payload) in self.sent.iter().filter(|(s, _)| *s >= from_seq) {
+            stream.send_typed(FT_DATA, *seq, payload)?;
+        }
+        Ok(())
+    }
+
+    pub fn set_pace_bps(&mut self, bps: f64) {
+        self.s.set_pace_bps(bps);
+    }
+
+    pub fn shutdown(&self) {
+        self.s.shutdown();
+    }
+}
+
+/// Receive half of one mesh link: verifies the per-link sequence,
+/// skips duplicates replayed after a reconnect, retries timeout-class
+/// errors in place, and surfaces peer ABORTs as typed errors.
+pub struct LinkRx {
+    s: FrameStream,
+    next_seq: u64,
+}
+
+impl LinkRx {
+    fn new(s: FrameStream) -> LinkRx {
+        LinkRx { s, next_seq: 0 }
+    }
+
+    /// Receive the next in-sequence data frame.
+    pub fn recv_data(&mut self) -> crate::Result<Vec<u8>> {
+        let mut timeouts = 0u32;
+        loop {
+            let (ftype, seq, payload) = match self.s.recv_typed() {
+                Ok(x) => x,
+                Err(e) if faults::is_timeout(&e) && timeouts < RECV_TIMEOUT_RETRIES => {
+                    timeouts += 1;
+                    wire_metrics().hop_retries.inc();
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            match ftype {
+                FT_DATA => {
+                    if !self.s.check() {
+                        return Ok(payload);
+                    }
+                    if seq < self.next_seq {
+                        // replayed duplicate after a reconnect
+                        wire_metrics().dup.inc();
+                        continue;
+                    }
+                    crate::error::ensure!(
+                        seq == self.next_seq,
+                        "link sequence gap: got frame {seq}, expected {}",
+                        self.next_seq
+                    );
+                    self.next_seq += 1;
+                    return Ok(payload);
+                }
+                FT_ABORT => crate::error::bail!(
+                    "collective aborted by peer: {}",
+                    String::from_utf8_lossy(&payload)
+                ),
+                FT_RESUME => {
+                    crate::error::bail!("unexpected RESUME frame mid-stream")
+                }
+                t => crate::error::bail!("unknown frame type {t}"),
+            }
+        }
+    }
+
+    pub fn shutdown(&self) {
+        self.s.shutdown();
+    }
+}
+
+/// One established mesh link plus what's needed to re-establish it:
+/// the endpoint we dialed (`None` when we were the accepting side).
+struct Link {
+    tx: LinkTx,
+    rx: LinkRx,
+    dial: Option<Endpoint>,
+}
+
 /// This rank's full mesh of peer links: `links[p]` is the duplex to
 /// rank `p` (`None` for self). Built by dialing every lower rank and
 /// accepting from every higher one, so exactly one connection exists
-/// per unordered pair.
+/// per unordered pair. The mesh owns its listener so dropped links can
+/// be re-accepted during recovery.
 pub struct Mesh {
     rank: usize,
     n: usize,
-    links: Vec<Option<Duplex>>,
+    links: Vec<Option<Link>>,
+    listener: Listener,
+    timeout: Duration,
+    ver: u32,
+    aborted: bool,
 }
 
 impl Mesh {
+    /// Protocol-v2 mesh with default options (no chaos).
     pub fn connect(
         rank: usize,
         n: usize,
-        listener: &Listener,
+        listener: Listener,
         peers: &[Endpoint],
         deadline: Instant,
         timeout: Duration,
     ) -> crate::Result<Mesh> {
+        Mesh::connect_opts(rank, n, listener, peers, MeshOpts::new(deadline, timeout))
+    }
+
+    pub fn connect_opts(
+        rank: usize,
+        n: usize,
+        listener: Listener,
+        peers: &[Endpoint],
+        opts: MeshOpts,
+    ) -> crate::Result<Mesh> {
         crate::error::ensure!(rank < n, "rank {rank} out of range for {n} ranks");
         crate::error::ensure!(peers.len() == n, "need {n} peer endpoints, got {}", peers.len());
-        let mut links: Vec<Option<Duplex>> = (0..n).map(|_| None).collect();
+        let MeshOpts { deadline, timeout, version, chaos } = opts;
+        let my_ver = version.min(WIRE_PROTO_VERSION).max(1);
+        let mut links: Vec<Option<Link>> = (0..n).map(|_| None).collect();
+        let mut mk_link = |s: FrameStream, p: usize, peer_ver: u32, dial: Option<Endpoint>| {
+            let ver = my_ver.min(peer_ver);
+            let mut d = match s.into_duplex() {
+                Ok(d) => d,
+                Err(e) => return Err(e),
+            };
+            d.tx.set_check(ver >= 2);
+            d.rx.set_check(ver >= 2);
+            d.tx.set_timeout_hint(timeout);
+            d.rx.set_timeout_hint(timeout);
+            if ver >= 2 {
+                if let Some(plan) = &chaos {
+                    d.tx.set_chaos(Some(plan.lane(link_id(rank, p))));
+                }
+            }
+            Ok(Link { tx: LinkTx::new(d.tx), rx: LinkRx::new(d.rx), dial })
+        };
         for (p, peer) in peers.iter().enumerate().take(rank) {
             let mut s = peer.connect(deadline, timeout)?;
-            s.send_frame(&(rank as u32).to_le_bytes())?;
-            links[p] = Some(s.into_duplex()?);
+            let mut hello = Vec::with_capacity(8);
+            hello.extend_from_slice(&(rank as u32).to_le_bytes());
+            hello.extend_from_slice(&my_ver.to_le_bytes());
+            s.send_frame(&hello)?;
+            links[p] = Some(mk_link(s, p, my_ver, Some(peer.clone()))?);
         }
         for _ in rank + 1..n {
             let mut s = listener.accept(deadline, timeout)?;
             let hello = s.recv_frame()?;
-            crate::error::ensure!(hello.len() == 4, "mesh hello: bad frame");
-            let p = u32::from_le_bytes([hello[0], hello[1], hello[2], hello[3]]) as usize;
+            let (p, peer_ver) = parse_mesh_hello(&hello)?;
+            let p = p as usize;
             crate::error::ensure!(
                 p > rank && p < n && links[p].is_none(),
                 "mesh hello: unexpected rank {p} (I am {rank} of {n})"
             );
-            links[p] = Some(s.into_duplex()?);
+            links[p] = Some(mk_link(s, p, peer_ver, None)?);
         }
-        Ok(Mesh { rank, n, links })
+        Ok(Mesh {
+            rank,
+            n,
+            links,
+            listener,
+            timeout,
+            ver: my_ver,
+            aborted: false,
+        })
     }
 
     pub fn rank(&self) -> usize {
@@ -502,6 +959,16 @@ impl Mesh {
 
     pub fn n_ranks(&self) -> usize {
         self.n
+    }
+
+    pub fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// True once this rank has aborted (or silently failed) the
+    /// collective; all links are down.
+    pub fn aborted(&self) -> bool {
+        self.aborted
     }
 
     /// Pace every outgoing link to `bps` bytes/second (0 disables).
@@ -513,8 +980,8 @@ impl Mesh {
 
     /// Mutably borrow the send half toward `to` and the receive half
     /// from `from` at once (they may be the same peer — the halves are
-    /// distinct fields of one [`Duplex`]).
-    pub fn tx_rx(&mut self, to: usize, from: usize) -> (&mut FrameStream, &mut FrameStream) {
+    /// distinct fields of one link).
+    pub fn tx_rx(&mut self, to: usize, from: usize) -> (&mut LinkTx, &mut LinkRx) {
         assert!(to < self.n && from < self.n, "peer out of range");
         assert!(to != self.rank && from != self.rank, "no self link in mesh");
         if to == from {
@@ -533,10 +1000,158 @@ impl Mesh {
         }
     }
 
+    /// Re-establish the link to rank `p` after a failure: the original
+    /// dialer re-dials with backoff, the original acceptor re-accepts;
+    /// both exchange RESUME watermarks and the send side replays any
+    /// frames the peer missed. Bounded by `deadline`.
+    pub fn recover_link(&mut self, p: usize, deadline: Instant) -> crate::Result<()> {
+        crate::error::ensure!(!self.aborted, "mesh aborted");
+        crate::error::ensure!(
+            p != self.rank && p < self.n && self.links[p].is_some(),
+            "recover_link: no link to rank {p}"
+        );
+        let timeout = self.timeout;
+        let rank = self.rank;
+        let (want_seq, dial, v2) = {
+            let l = self.links[p].as_ref().expect("checked above");
+            (l.rx.next_seq, l.dial.clone(), l.tx.s.check())
+        };
+        crate::error::ensure!(v2, "cannot resume link to rank {p}: peer speaks wire v1");
+        {
+            let l = self.links[p].as_ref().expect("checked above");
+            l.tx.shutdown();
+            l.rx.shutdown();
+        }
+        crate::trace::mark_with(
+            crate::trace::Category::Wire,
+            "link_recover",
+            &mut std::iter::once(("peer", crate::trace::ArgValue::from(p))),
+        );
+        // Fresh socket + RESUME handshake. Dialer sends hello + its
+        // watermark first; acceptor answers with its own watermark.
+        let (stream, peer_want) = match dial.clone() {
+            Some(ep) => {
+                let mut backoff = faults::Backoff::new(
+                    fnv64(ep.uri().as_bytes()) ^ (rank as u64).wrapping_mul(0x9E37_79B9),
+                );
+                loop {
+                    crate::error::ensure!(
+                        Instant::now() < deadline,
+                        "reconnect to rank {p}: deadline exhausted"
+                    );
+                    let mut s = match ep.connect(deadline, timeout) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            crate::error::bail!("reconnect to rank {p}: {e}")
+                        }
+                    };
+                    let mut hello = Vec::with_capacity(8);
+                    hello.extend_from_slice(&(rank as u32).to_le_bytes());
+                    hello.extend_from_slice(&self.ver.to_le_bytes());
+                    if s.send_frame(&hello).is_err() {
+                        backoff.sleep();
+                        continue;
+                    }
+                    s.set_check(true);
+                    s.set_timeout_hint(timeout);
+                    if s.send_typed(FT_RESUME, 0, &want_seq.to_le_bytes()).is_err() {
+                        backoff.sleep();
+                        continue;
+                    }
+                    match s.recv_typed() {
+                        Ok((FT_RESUME, _, body)) if body.len() == 8 => {
+                            let peer_want =
+                                u64::from_le_bytes(body.try_into().expect("8 bytes"));
+                            break (s, peer_want);
+                        }
+                        _ => {
+                            backoff.sleep();
+                            continue;
+                        }
+                    }
+                }
+            }
+            None => loop {
+                crate::error::ensure!(
+                    Instant::now() < deadline,
+                    "re-accept from rank {p}: deadline exhausted"
+                );
+                let mut s = self.listener.accept(deadline, timeout)?;
+                let hello = match s.recv_frame() {
+                    Ok(h) => h,
+                    Err(_) => continue,
+                };
+                let (hr, _hv) = match parse_mesh_hello(&hello) {
+                    Ok(x) => x,
+                    Err(_) => continue,
+                };
+                if hr as usize != p {
+                    // a different peer's stray reconnect — drop it and
+                    // keep waiting for ours
+                    continue;
+                }
+                s.set_check(true);
+                s.set_timeout_hint(timeout);
+                let peer_want = match s.recv_typed() {
+                    Ok((FT_RESUME, _, body)) if body.len() == 8 => {
+                        u64::from_le_bytes(body.try_into().expect("8 bytes"))
+                    }
+                    _ => continue,
+                };
+                if s.send_typed(FT_RESUME, 0, &want_seq.to_le_bytes()).is_err() {
+                    continue;
+                }
+                break (s, peer_want);
+            },
+        };
+        let link = self.links[p].as_mut().expect("checked above");
+        let mut d = stream.into_duplex()?;
+        d.tx.set_check(true);
+        d.rx.set_check(true);
+        d.tx.set_timeout_hint(timeout);
+        d.rx.set_timeout_hint(timeout);
+        d.tx.set_pace_bps(link.tx.s.pace_bps());
+        if let Some(lane) = link.tx.s.take_chaos() {
+            d.tx.set_chaos(Some(lane));
+        }
+        link.tx.s = d.tx;
+        link.rx.s = d.rx;
+        link.tx.replay_from(peer_want)?;
+        wire_metrics().reconnects.inc();
+        Ok(())
+    }
+
+    /// Coordinated abort: broadcast an ABORT control frame to every
+    /// live peer (best-effort), bump `collective_aborts`, and shut all
+    /// links down. Idempotent.
+    pub fn abort_all(&mut self, reason: &str) {
+        if self.aborted {
+            return;
+        }
+        self.aborted = true;
+        crate::metrics::global().counter("collective_aborts").inc();
+        crate::trace::mark(crate::trace::Category::Wire, "collective_abort");
+        for link in self.links.iter_mut().flatten() {
+            if link.tx.s.check() {
+                let seq = link.tx.next_seq;
+                let _ = link.tx.s.send_typed(FT_ABORT, seq, reason.as_bytes());
+            }
+        }
+        self.shutdown_all();
+    }
+
+    /// Die silently, the way a crashed rank would: no ABORT broadcast,
+    /// just dead sockets. Peers discover the failure via timeouts.
+    pub fn fail_silent(&mut self) {
+        self.aborted = true;
+        self.shutdown_all();
+    }
+
     /// Shut every link down — peers blocked on us fail fast.
     pub fn shutdown_all(&self) {
         for link in self.links.iter().flatten() {
-            link.shutdown();
+            link.tx.shutdown();
+            link.rx.shutdown();
         }
     }
 }
@@ -547,67 +1162,92 @@ impl Drop for Mesh {
     }
 }
 
-/// Parent side of the rendezvous: accept `n` worker hellos, then
-/// broadcast the address table. Returns the control connections in
-/// rank order.
-pub fn serve_rendezvous(
-    listener: &Listener,
-    n: usize,
-    deadline: Instant,
-    timeout: Duration,
-) -> crate::Result<Vec<FrameStream>> {
-    let mut conns: Vec<Option<FrameStream>> = (0..n).map(|_| None).collect();
-    let mut uris: Vec<String> = vec![String::new(); n];
-    for _ in 0..n {
-        let mut s = listener.accept(deadline, timeout)?;
-        let f = s.recv_frame()?;
-        crate::error::ensure!(
-            f.len() >= 5 && f[0] == MSG_HELLO,
-            "rendezvous: expected HELLO, got {} bytes",
-            f.len()
-        );
-        let rank = u32::from_le_bytes([f[1], f[2], f[3], f[4]]) as usize;
-        crate::error::ensure!(rank < n, "rendezvous: rank {rank} out of range");
-        crate::error::ensure!(conns[rank].is_none(), "rendezvous: duplicate rank {rank}");
-        uris[rank] = String::from_utf8(f[5..].to_vec())
-            .map_err(|_| crate::error::anyhow!("rendezvous: non-utf8 listen uri"))?;
-        conns[rank] = Some(s);
+/// Stable id for the directed link `rank -> peer` (chaos lane keying).
+fn link_id(rank: usize, peer: usize) -> u64 {
+    ((rank as u64) << 32) | peer as u64
+}
+
+/// Parse a mesh hello frame: v1 is `[rank u32]`, v2 is
+/// `[rank u32][ver u32]`.
+fn parse_mesh_hello(hello: &[u8]) -> crate::Result<(u32, u32)> {
+    match hello.len() {
+        4 => Ok((u32::from_le_bytes(hello.try_into().expect("4 bytes")), 1)),
+        8 => {
+            let rank = u32::from_le_bytes(hello[..4].try_into().expect("4 bytes"));
+            let ver = u32::from_le_bytes(hello[4..].try_into().expect("4 bytes"));
+            crate::error::ensure!(
+                (1..=256).contains(&ver),
+                "mesh hello: absurd protocol version {ver}"
+            );
+            Ok((rank, ver))
+        }
+        n => crate::error::bail!("mesh hello: bad frame ({n} bytes)"),
     }
+}
+
+/// Build a HELLO control frame: `[MSG_HELLO][rank u32][ver u32][uri]`.
+/// (v1 workers omitted the version word; [`parse_hello`] accepts both.)
+pub fn encode_hello(rank: u32, listen_uri: &str, ver: u32) -> Vec<u8> {
+    let mut f = vec![MSG_HELLO];
+    f.extend_from_slice(&rank.to_le_bytes());
+    f.extend_from_slice(&ver.to_le_bytes());
+    f.extend_from_slice(listen_uri.as_bytes());
+    f
+}
+
+/// Parse a HELLO frame into `(rank, listen_uri, version)`. The v1
+/// layout put the URI right after the rank; URIs always start with a
+/// scheme prefix, so the two layouts are distinguishable.
+pub fn parse_hello(f: &[u8]) -> crate::Result<(u32, String, u32)> {
+    crate::error::ensure!(
+        f.len() >= 5 && f[0] == MSG_HELLO,
+        "rendezvous: expected HELLO, got {} bytes",
+        f.len()
+    );
+    let rank = u32::from_le_bytes(f[1..5].try_into().expect("4 bytes"));
+    let rest = &f[5..];
+    let (ver, uri_bytes) = if rest.starts_with(b"tcp://") || rest.starts_with(b"uds://") {
+        (1u32, rest)
+    } else {
+        crate::error::ensure!(rest.len() >= 4, "rendezvous: truncated HELLO");
+        let v = u32::from_le_bytes(rest[..4].try_into().expect("4 bytes"));
+        crate::error::ensure!(
+            (1..=256).contains(&v),
+            "rendezvous: absurd protocol version {v}"
+        );
+        (v, &rest[4..])
+    };
+    let uri = String::from_utf8(uri_bytes.to_vec())
+        .map_err(|_| crate::error::anyhow!("rendezvous: non-utf8 listen uri"))?;
+    Ok((rank, uri, ver))
+}
+
+/// Build a TABLE control frame:
+/// `[MSG_TABLE][n u32][(len u16)(uri)]* [cluster_ver u32]`. The
+/// trailing version word is invisible to v1 parsers, which stop after
+/// `n` entries.
+pub fn encode_table(uris: &[String], cluster_ver: u32) -> Vec<u8> {
     let mut table = vec![MSG_TABLE];
-    table.extend_from_slice(&(n as u32).to_le_bytes());
-    for uri in &uris {
+    table.extend_from_slice(&(uris.len() as u32).to_le_bytes());
+    for uri in uris {
         table.extend_from_slice(&(uri.len() as u16).to_le_bytes());
         table.extend_from_slice(uri.as_bytes());
     }
-    for c in conns.iter_mut() {
-        c.as_mut().expect("all ranks checked in").send_frame(&table)?;
-    }
-    Ok(conns.into_iter().map(|c| c.expect("all ranks checked in")).collect())
+    table.extend_from_slice(&cluster_ver.to_le_bytes());
+    table
 }
 
-/// Worker side of the rendezvous: connect to the parent, announce our
-/// rank + peer-listener URI, receive the address table. Returns the
-/// parent control connection plus every rank's endpoint.
-pub fn join_rendezvous(
-    parent: &Endpoint,
-    rank: usize,
-    listen_uri: &str,
-    deadline: Instant,
-    timeout: Duration,
-) -> crate::Result<(FrameStream, Vec<Endpoint>)> {
-    let mut s = parent.connect(deadline, timeout)?;
-    let mut hello = vec![MSG_HELLO];
-    hello.extend_from_slice(&(rank as u32).to_le_bytes());
-    hello.extend_from_slice(listen_uri.as_bytes());
-    s.send_frame(&hello)?;
-    let t = s.recv_frame()?;
+/// Parse a TABLE frame into `(uris, cluster_version)`. A missing
+/// trailing version word means a v1 parent.
+pub fn parse_table(t: &[u8]) -> crate::Result<(Vec<String>, u32)> {
     crate::error::ensure!(
         t.len() >= 5 && t[0] == MSG_TABLE,
         "rendezvous: expected TABLE, got {} bytes",
         t.len()
     );
-    let n = u32::from_le_bytes([t[1], t[2], t[3], t[4]]) as usize;
-    let mut peers = Vec::with_capacity(n);
+    let n = u32::from_le_bytes(t[1..5].try_into().expect("4 bytes")) as usize;
+    crate::error::ensure!(n <= 4096, "rendezvous: absurd rank count {n}");
+    let mut uris = Vec::with_capacity(n);
     let mut at = 5usize;
     for _ in 0..n {
         crate::error::ensure!(at + 2 <= t.len(), "rendezvous: truncated TABLE");
@@ -616,10 +1256,80 @@ pub fn join_rendezvous(
         crate::error::ensure!(at + len <= t.len(), "rendezvous: truncated TABLE entry");
         let uri = std::str::from_utf8(&t[at..at + len])
             .map_err(|_| crate::error::anyhow!("rendezvous: non-utf8 TABLE entry"))?;
-        peers.push(Endpoint::parse(uri)?);
+        uris.push(uri.to_string());
         at += len;
     }
-    Ok((s, peers))
+    let ver = match t.len() - at {
+        0 => 1,
+        4 => {
+            let v = u32::from_le_bytes(t[at..].try_into().expect("4 bytes"));
+            crate::error::ensure!(
+                (1..=256).contains(&v),
+                "rendezvous: absurd protocol version {v}"
+            );
+            v
+        }
+        extra => crate::error::bail!("rendezvous: {extra} trailing TABLE bytes"),
+    };
+    Ok((uris, ver))
+}
+
+/// Parent side of the rendezvous: accept `n` worker hellos, negotiate
+/// the cluster protocol version (minimum over all workers and our
+/// own), then broadcast the address table. Returns the control
+/// connections in rank order; on a v2 cluster they carry checksummed
+/// framing from the TABLE onward.
+pub fn serve_rendezvous(
+    listener: &Listener,
+    n: usize,
+    deadline: Instant,
+    timeout: Duration,
+) -> crate::Result<Vec<FrameStream>> {
+    let mut conns: Vec<Option<FrameStream>> = (0..n).map(|_| None).collect();
+    let mut uris: Vec<String> = vec![String::new(); n];
+    let mut cluster_ver = WIRE_PROTO_VERSION;
+    for _ in 0..n {
+        let mut s = listener.accept(deadline, timeout)?;
+        let f = s.recv_frame()?;
+        let (rank, uri, ver) = parse_hello(&f)?;
+        let rank = rank as usize;
+        crate::error::ensure!(rank < n, "rendezvous: rank {rank} out of range");
+        crate::error::ensure!(conns[rank].is_none(), "rendezvous: duplicate rank {rank}");
+        uris[rank] = uri;
+        cluster_ver = cluster_ver.min(ver);
+        conns[rank] = Some(s);
+    }
+    let table = encode_table(&uris, cluster_ver);
+    for c in conns.iter_mut() {
+        let c = c.as_mut().expect("all ranks checked in");
+        c.send_frame(&table)?;
+        // REPORT/BYE frames after the table ride the integrity envelope
+        c.set_check(cluster_ver >= 2);
+    }
+    Ok(conns.into_iter().map(|c| c.expect("all ranks checked in")).collect())
+}
+
+/// Worker side of the rendezvous: connect to the parent, announce our
+/// rank + peer-listener URI + protocol version, receive the address
+/// table. Returns the parent control connection, every rank's
+/// endpoint, and the negotiated cluster protocol version.
+pub fn join_rendezvous(
+    parent: &Endpoint,
+    rank: usize,
+    listen_uri: &str,
+    deadline: Instant,
+    timeout: Duration,
+) -> crate::Result<(FrameStream, Vec<Endpoint>, u32)> {
+    let mut s = parent.connect(deadline, timeout)?;
+    s.send_frame(&encode_hello(rank as u32, listen_uri, WIRE_PROTO_VERSION))?;
+    let t = s.recv_frame()?;
+    let (uris, cluster_ver) = parse_table(&t)?;
+    let mut peers = Vec::with_capacity(uris.len());
+    for uri in &uris {
+        peers.push(Endpoint::parse(uri)?);
+    }
+    s.set_check(cluster_ver >= 2);
+    Ok((s, peers, cluster_ver))
 }
 
 /// FNV-1a 64-bit hash — the harness's cheap cross-process checksum.
@@ -916,7 +1626,7 @@ mod tests {
         let deadline = Instant::now() + secs(20);
         std::thread::scope(|s| {
             let handles: Vec<_> = listeners
-                .iter()
+                .into_iter()
                 .enumerate()
                 .map(|(r, l)| {
                     let peers = peers.clone();
@@ -927,19 +1637,19 @@ mod tests {
                         let to = (r + 1) % n;
                         let from = (r + n - 1) % n;
                         let (tx, rx) = mesh.tx_rx(to, from);
-                        tx.send_frame(&[r as u8; 5]).unwrap();
-                        assert_eq!(rx.recv_frame().unwrap(), vec![from as u8; 5]);
+                        tx.send_data(&[r as u8; 5]).unwrap();
+                        assert_eq!(rx.recv_data().unwrap(), vec![from as u8; 5]);
                         // reversed ring: send to prev, receive from next
                         let (tx, rx) = mesh.tx_rx(from, to);
-                        tx.send_frame(&[100 + r as u8]).unwrap();
-                        assert_eq!(rx.recv_frame().unwrap(), vec![100 + to as u8]);
+                        tx.send_data(&[100 + r as u8]).unwrap();
+                        assert_eq!(rx.recv_data().unwrap(), vec![100 + to as u8]);
                         // same-peer send+recv: ranks 0 and 1 exchange
                         // directly (duplex halves split cleanly)
                         if r <= 1 {
                             let peer = 1 - r;
                             let (tx, rx) = mesh.tx_rx(peer, peer);
-                            tx.send_frame(&[200 + r as u8]).unwrap();
-                            assert_eq!(rx.recv_frame().unwrap(), vec![200 + peer as u8]);
+                            tx.send_data(&[200 + r as u8]).unwrap();
+                            assert_eq!(rx.recv_data().unwrap(), vec![200 + peer as u8]);
                         }
                     })
                 })
@@ -986,8 +1696,9 @@ mod tests {
                     let parent_ep = parent_ep.clone();
                     s.spawn(move || {
                         let uri = format!("tcp://127.0.0.1:{}", 9000 + r);
-                        let (mut c, peers) =
+                        let (mut c, peers, ver) =
                             join_rendezvous(&parent_ep, r, &uri, deadline, secs(10)).unwrap();
+                        assert_eq!(ver, WIRE_PROTO_VERSION);
                         assert_eq!(peers.len(), n);
                         assert_eq!(peers[r].uri(), uri);
                         c.send_frame(&WorkerReport::new(r as u32).encode()).unwrap();
@@ -999,6 +1710,188 @@ mod tests {
                 w.join().unwrap();
             }
             server.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn checksummed_frames_round_trip_both_framings() {
+        let (a, b) = pair_uds(secs(5)).unwrap();
+        let mut tx = FrameStream::new(a);
+        let mut rx = FrameStream::new(b);
+        tx.set_check(true);
+        tx.send_frame(b"guarded").unwrap();
+        tx.send_typed(FT_DATA, 41, &[]).unwrap();
+        tx.set_check(false);
+        tx.send_frame(b"legacy").unwrap();
+        let (ft, seq, payload) = rx.recv_typed().unwrap();
+        assert_eq!((ft, seq, payload.as_slice()), (FT_DATA, 0, b"guarded".as_slice()));
+        let (ft, seq, payload) = rx.recv_typed().unwrap();
+        assert_eq!((ft, seq, payload.len()), (FT_DATA, 41, 0));
+        let (ft, seq, payload) = rx.recv_typed().unwrap();
+        assert_eq!((ft, seq, payload.as_slice()), (FT_DATA, 0, b"legacy".as_slice()));
+    }
+
+    #[test]
+    fn corrupt_checksummed_frame_is_a_typed_error_and_counted() {
+        use std::io::Write as _;
+        let (a, b) = pair_uds(secs(5)).unwrap();
+        // hand-build a valid v2 frame, then flip one payload bit
+        let payload = b"precious bits";
+        let inner = V2_OVERHEAD + payload.len();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(inner as u32 | FLAG_CHECK).to_le_bytes());
+        buf.push(FT_DATA);
+        buf.extend_from_slice(&7u64.to_le_bytes());
+        buf.extend_from_slice(payload);
+        let crc = fnv64(&buf[4..]);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf[4 + 1 + 8 + 2] ^= 0x10;
+        let before = wire_metrics().corrupt.get();
+        let mut raw = a;
+        raw.write_all(&buf).unwrap();
+        let mut rx = FrameStream::new(b);
+        let err = rx.recv_frame().unwrap_err().to_string();
+        assert!(err.contains("corrupt frame"), "{err}");
+        assert!(err.contains("seq 7"), "{err}");
+        assert_eq!(wire_metrics().corrupt.get(), before + 1);
+    }
+
+    #[test]
+    fn abort_frames_surface_as_typed_errors() {
+        let (a, b) = pair_uds(secs(5)).unwrap();
+        let mut tx = FrameStream::new(a);
+        let mut rx = FrameStream::new(b);
+        tx.send_typed(FT_ABORT, 0, b"recovery exhausted on rank 2").unwrap();
+        let err = rx.recv_frame().unwrap_err().to_string();
+        assert!(err.contains("aborted by peer"), "{err}");
+        assert!(err.contains("recovery exhausted on rank 2"), "{err}");
+    }
+
+    #[test]
+    fn timeout_errors_carry_the_wire_timeout_marker() {
+        let (_a, b) = pair_uds(Duration::from_millis(50)).unwrap();
+        let mut rx = FrameStream::new(b);
+        let err = rx.recv_frame().unwrap_err();
+        assert!(super::faults::is_timeout(&err), "{err}");
+    }
+
+    #[test]
+    fn hello_and_table_parse_both_protocol_versions() {
+        // v2 round trip
+        let f = encode_hello(3, "uds:///tmp/w3.sock", WIRE_PROTO_VERSION);
+        assert_eq!(
+            parse_hello(&f).unwrap(),
+            (3, "uds:///tmp/w3.sock".to_string(), WIRE_PROTO_VERSION)
+        );
+        // v1 layout: uri immediately after the rank
+        let mut v1 = vec![MSG_HELLO];
+        v1.extend_from_slice(&9u32.to_le_bytes());
+        v1.extend_from_slice(b"tcp://127.0.0.1:80");
+        assert_eq!(parse_hello(&v1).unwrap(), (9, "tcp://127.0.0.1:80".to_string(), 1));
+        // garbage versions / tags / truncations are typed errors
+        assert!(parse_hello(&[MSG_TABLE, 0, 0, 0, 0]).is_err());
+        assert!(parse_hello(&[MSG_HELLO, 1, 2]).is_err());
+        let mut absurd = vec![MSG_HELLO];
+        absurd.extend_from_slice(&1u32.to_le_bytes());
+        absurd.extend_from_slice(&99_999u32.to_le_bytes());
+        absurd.extend_from_slice(b"uds:///x");
+        assert!(parse_hello(&absurd).is_err());
+
+        let uris = vec!["tcp://127.0.0.1:1".to_string(), "uds:///tmp/a".to_string()];
+        let t = encode_table(&uris, 2);
+        assert_eq!(parse_table(&t).unwrap(), (uris.clone(), 2));
+        // a v1 table (no trailing version word) still parses
+        assert_eq!(parse_table(&t[..t.len() - 4]).unwrap(), (uris, 1));
+        assert!(parse_table(&[MSG_TABLE, 255, 255, 255, 255]).is_err(), "absurd rank count");
+        assert!(parse_table(&t[..t.len() - 5]).is_err(), "truncated entry");
+    }
+
+    #[test]
+    fn mesh_hello_parses_v1_and_v2() {
+        assert_eq!(parse_mesh_hello(&5u32.to_le_bytes()).unwrap(), (5, 1));
+        let mut v2 = Vec::new();
+        v2.extend_from_slice(&5u32.to_le_bytes());
+        v2.extend_from_slice(&2u32.to_le_bytes());
+        assert_eq!(parse_mesh_hello(&v2).unwrap(), (5, 2));
+        assert!(parse_mesh_hello(&[1, 2, 3]).is_err());
+        let mut absurd = Vec::new();
+        absurd.extend_from_slice(&5u32.to_le_bytes());
+        absurd.extend_from_slice(&0u32.to_le_bytes());
+        assert!(parse_mesh_hello(&absurd).is_err());
+    }
+
+    #[test]
+    fn mesh_link_recovers_and_replays_after_a_dead_socket() {
+        let before = wire_metrics().reconnects.get();
+        let listeners: Vec<Listener> = (0..2).map(|_| Listener::bind_tcp().unwrap()).collect();
+        let peers: Vec<Endpoint> = listeners.iter().map(|l| l.endpoint().unwrap()).collect();
+        let deadline = Instant::now() + secs(30);
+        let barrier = std::sync::Barrier::new(2);
+        std::thread::scope(|s| {
+            let barrier = &barrier;
+            let mut handles = Vec::new();
+            for (r, l) in listeners.into_iter().enumerate() {
+                let peers = peers.clone();
+                handles.push(s.spawn(move || {
+                    let mut mesh = Mesh::connect(r, 2, l, &peers, deadline, secs(5)).unwrap();
+                    let peer = 1 - r;
+                    if r == 1 {
+                        // healthy frame, then the link dies mid-send
+                        mesh.tx_rx(peer, peer).0.send_data(b"alpha").unwrap();
+                        barrier.wait(); // peer got alpha
+                        mesh.tx_rx(peer, peer).0.shutdown();
+                        let err = mesh.tx_rx(peer, peer).0.send_data(b"beta");
+                        assert!(err.is_err(), "send on a dead socket must fail");
+                        barrier.wait(); // both sides enter recovery
+                        mesh.recover_link(peer, deadline).unwrap();
+                        // beta was buffered pre-failure and replayed by
+                        // recovery; only gamma needs an explicit send
+                        mesh.tx_rx(peer, peer).0.send_data(b"gamma").unwrap();
+                        assert_eq!(mesh.tx_rx(peer, peer).1.recv_data().unwrap(), b"delta");
+                    } else {
+                        assert_eq!(mesh.tx_rx(peer, peer).1.recv_data().unwrap(), b"alpha");
+                        barrier.wait(); // let rank 1 kill the link
+                        barrier.wait(); // both sides enter recovery
+                        mesh.recover_link(peer, deadline).unwrap();
+                        assert_eq!(mesh.tx_rx(peer, peer).1.recv_data().unwrap(), b"beta");
+                        assert_eq!(mesh.tx_rx(peer, peer).1.recv_data().unwrap(), b"gamma");
+                        mesh.tx_rx(peer, peer).0.send_data(b"delta").unwrap();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        assert!(wire_metrics().reconnects.get() >= before + 2);
+    }
+
+    #[test]
+    fn abort_all_notifies_the_peer_and_is_idempotent() {
+        let listeners: Vec<Listener> = (0..2).map(|_| Listener::bind_tcp().unwrap()).collect();
+        let peers: Vec<Endpoint> = listeners.iter().map(|l| l.endpoint().unwrap()).collect();
+        let deadline = Instant::now() + secs(20);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (r, l) in listeners.into_iter().enumerate() {
+                let peers = peers.clone();
+                handles.push(s.spawn(move || {
+                    let mut mesh = Mesh::connect(r, 2, l, &peers, deadline, secs(5)).unwrap();
+                    if r == 1 {
+                        mesh.abort_all("rank 1 gave up");
+                        mesh.abort_all("second call is a no-op");
+                        assert!(mesh.aborted());
+                        assert!(mesh.recover_link(0, deadline).is_err());
+                    } else {
+                        let err = mesh.tx_rx(1, 1).1.recv_data().unwrap_err().to_string();
+                        assert!(err.contains("aborted by peer"), "{err}");
+                        assert!(err.contains("rank 1 gave up"), "{err}");
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
         });
     }
 

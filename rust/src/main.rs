@@ -19,7 +19,7 @@
 
 use sshuff::baselines::{baseline_codecs, Codec, SingleStageCodec};
 use sshuff::cli::{Args, Cli, CommandSpec, OptSpec};
-use sshuff::collectives::{spawn, CollectiveEngine, TransportKind};
+use sshuff::collectives::{faults, spawn, CollectiveEngine, TransportKind};
 use sshuff::coordinator::{CompressJob, Coordinator};
 use sshuff::experiments::{capture_cached, figures, measure_shards, CaptureSpec};
 use sshuff::fabric::LinkModel;
@@ -210,6 +210,18 @@ fn build_cli() -> Cli {
                         name: "trace-worker",
                         takes_value: false,
                         help: "internal: enable span recording in a spawned worker",
+                    },
+                    OptSpec {
+                        name: "chaos",
+                        takes_value: true,
+                        help: "inject seeded faults: class[:prob][@frame] joined by '+' \
+                               (classes: delay|drop|truncate|flip|stall|crash; \
+                               'corrupt' = flip); needs a socket transport",
+                    },
+                    OptSpec {
+                        name: "chaos-seed",
+                        takes_value: true,
+                        help: "deterministic seed for --chaos decisions (default 7)",
                     },
                     codec,
                     threads,
@@ -422,6 +434,13 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
             .with_layout(layout)
             .with_planes(planes),
     ));
+    let chaos_seed: u64 = args.opt_parse("chaos-seed", 7u64).map_err(sshuff::error::Error::msg)?;
+    let chaos_plan = match args.opt("chaos") {
+        // in-process ranks are threads: a crash fault is a typed Err,
+        // not a process abort
+        Some(spec) => Some(std::sync::Arc::new(faults::FaultPlan::parse(spec, chaos_seed)?)),
+        None => None,
+    };
     let only = args.opt("codec");
     let mut table = sshuff::benchkit::Table::new(&[
         "codec", "wire MB", "gain", "sim ms", "lockstep ms", "pipelined ms", "overlap",
@@ -434,6 +453,13 @@ fn cmd_collective(args: &Args) -> sshuff::Result<()> {
             }
         }
         let mut tr = kind.build(ranks, link)?;
+        if let Some(plan) = &chaos_plan {
+            if !tr.set_chaos(std::sync::Arc::clone(plan)) {
+                return Err(sshuff::error::Error::msg(
+                    "--chaos needs a real wire: --transport tcp or uds",
+                ));
+            }
+        }
         let mut eng = CollectiveEngine::new(tr.as_mut(), c.as_ref(), depth);
         let out = eng.all_reduce(&inputs)?;
         assert!(out.windows(2).all(|w| w[0] == w[1]), "{}: ranks disagree", c.name());
@@ -501,6 +527,8 @@ fn cmd_collective_worker(args: &Args) -> sshuff::Result<()> {
         pace_gbps,
         timeout: std::time::Duration::from_secs_f64(timeout_s),
         trace: args.has_flag("trace-worker"),
+        chaos: args.opt("chaos").map(str::to_string),
+        chaos_seed: args.opt_parse("chaos-seed", 7u64).map_err(sshuff::error::Error::msg)?,
     })
 }
 
@@ -528,6 +556,8 @@ fn cmd_collective_spawn(args: &Args) -> sshuff::Result<()> {
         timeout: std::time::Duration::from_secs_f64(timeout_s),
         trace: args.opt("trace").map(std::path::PathBuf::from),
         metrics: args.has_flag("metrics"),
+        chaos: args.opt("chaos").map(str::to_string),
+        chaos_seed: args.opt_parse("chaos-seed", 7u64).map_err(sshuff::error::Error::msg)?,
     })?;
     Ok(())
 }

@@ -1,0 +1,239 @@
+//! Chaos matrix: every transport × fault class, asserting the ISSUE 10
+//! contract — each rank either completes bit-identical to the fault-free
+//! reference or returns a typed `Err` within the wire-timeout budget.
+//! Zero hangs, zero panics, and injected-fault/recovery counts visible
+//! in the global metrics.
+//!
+//! Counters are process-global and the test harness runs tests in
+//! parallel, so every assertion reads a *delta* and only requires it to
+//! be positive — concurrent increments can only help.
+
+use sshuff::baselines::{Codec, RawCodec, ThreeStage};
+use sshuff::collectives::faults::FaultPlan;
+use sshuff::collectives::rank::{run_local_mesh_results, LocalMeshOpts};
+use sshuff::collectives::{
+    all_reduce_reference, ChannelTransport, CollectiveEngine, OwnedSimTransport, TcpTransport,
+    Transport, UdsTransport, DEFAULT_PIPELINE_DEPTH,
+};
+use sshuff::fabric::LinkModel;
+use sshuff::prng::Pcg32;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n).map(|r| Pcg32::substream(seed, r as u64).normal_f32s(len, 1.0)).collect()
+}
+
+fn counter(name: &str) -> u64 {
+    sshuff::metrics::global().counter(name).get()
+}
+
+const TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Recoverable classes on a 2-rank socket mesh: every fault fires (the
+/// `@1` specs pin the second frame of each link; `delay:1.0` hits every
+/// frame) and every rank must still finish bit-identical to the
+/// fault-free reference via in-place retry or reconnect + replay.
+#[test]
+fn mesh_recovers_from_recoverable_fault_classes() {
+    let n = 2;
+    let xs = inputs(n, 201, 61);
+    let want = all_reduce_reference(&xs);
+    let group: Vec<usize> = (0..n).collect();
+
+    let injected0 = counter("faults_injected");
+    let reconnects0 = counter("link_reconnects");
+    let corrupt0 = counter("wire_corrupt_frames");
+
+    for tcp in [false, true] {
+        for spec in ["delay:1.0", "drop@1", "truncate@1", "flip@1", "stall@1"] {
+            let t0 = Instant::now();
+            let opts = LocalMeshOpts {
+                timeout: TIMEOUT,
+                chaos: Some(Arc::new(FaultPlan::parse(spec, 7).unwrap())),
+                tcp,
+            };
+            let results = run_local_mesh_results(n, &ThreeStage, &opts, |eng| {
+                eng.all_reduce_group(&group, &xs[eng.rank()])
+            })
+            .unwrap();
+            for (r, res) in results.iter().enumerate() {
+                match res {
+                    Ok(out) => assert_eq!(
+                        out, &want,
+                        "rank {r} diverged under '{spec}' (tcp={tcp})"
+                    ),
+                    Err(e) => panic!("rank {r} failed under '{spec}' (tcp={tcp}): {e}"),
+                }
+            }
+            // Budget: connect + 2 hops, each hop allowed timeout*4 of
+            // recovery, plus slack for a loaded CI box.
+            assert!(
+                t0.elapsed() < TIMEOUT * 4 * 3 + Duration::from_secs(10),
+                "'{spec}' (tcp={tcp}) took {:?}",
+                t0.elapsed()
+            );
+        }
+    }
+
+    assert!(counter("faults_injected") > injected0, "chaos plans never fired");
+    assert!(
+        counter("link_reconnects") > reconnects0,
+        "drop/truncate faults must force at least one reconnect"
+    );
+    assert!(
+        counter("wire_corrupt_frames") > corrupt0,
+        "flip faults must be caught by the frame checksum"
+    );
+}
+
+/// An injected crash (threaded mesh => fatal typed error) must take the
+/// whole collective down cleanly: every rank returns `Err` — the crashed
+/// ranks with the crash marker, the survivors via timeout-exhausted
+/// recovery or a cascaded ABORT — and nobody hangs or panics.
+#[test]
+fn crash_faults_abort_every_rank_cleanly() {
+    let n = 3;
+    let xs = inputs(n, 120, 67);
+    let group: Vec<usize> = (0..n).collect();
+    let t0 = Instant::now();
+    let opts = LocalMeshOpts {
+        timeout: TIMEOUT,
+        chaos: Some(Arc::new(FaultPlan::parse("crash@2", 13).unwrap())),
+        tcp: false,
+    };
+    let results = run_local_mesh_results(n, &RawCodec, &opts, |eng| {
+        eng.all_reduce_group(&group, &xs[eng.rank()])
+    })
+    .unwrap();
+    assert_eq!(results.len(), n);
+    for (r, res) in results.iter().enumerate() {
+        match res {
+            Ok(_) => panic!("rank {r} completed despite every rank crashing at frame 2"),
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(!msg.contains("panicked"), "rank {r} panicked: {msg}");
+            }
+        }
+    }
+    // Each hop may burn its full recovery budget (timeout * 4) before
+    // aborting; 2(n-1) hops would be the pathological ceiling.
+    assert!(t0.elapsed() < Duration::from_secs(30), "crash run took {:?}", t0.elapsed());
+}
+
+/// The global engine's socket transports accept a chaos plan; the
+/// in-memory transports refuse it (no real wire to corrupt).
+#[test]
+fn only_socket_transports_accept_chaos() {
+    let plan = Arc::new(FaultPlan::parse("drop", 1).unwrap());
+    let mut sim = OwnedSimTransport::new(2, LinkModel::DIE_TO_DIE);
+    assert!(!sim.set_chaos(Arc::clone(&plan)));
+    let mut chan = ChannelTransport::new(2, LinkModel::DIE_TO_DIE);
+    assert!(!chan.set_chaos(Arc::clone(&plan)));
+    let mut tcp = TcpTransport::new_with_timeout(2, LinkModel::DIE_TO_DIE, TIMEOUT).unwrap();
+    assert!(tcp.set_chaos(Arc::clone(&plan)));
+    let mut uds = UdsTransport::new_with_timeout(2, LinkModel::DIE_TO_DIE, TIMEOUT).unwrap();
+    assert!(uds.set_chaos(plan));
+}
+
+/// Engine-level chaos (no recovery layer there): a pure delay still
+/// completes bit-exact; every link-breaking class turns into a typed
+/// `Err` within the timeout budget — never a garbled result, a panic,
+/// or a hang.
+#[test]
+fn engine_chaos_completes_or_fails_typed() {
+    let n = 3;
+    let xs = inputs(n, 150, 71);
+    let want = all_reduce_reference(&xs);
+
+    for uds in [false, true] {
+        let run = |spec: &str| -> (Result<Vec<Vec<f32>>, String>, Duration) {
+            let plan = Arc::new(FaultPlan::parse(spec, 7).unwrap());
+            let t0 = Instant::now();
+            let out = if uds {
+                let mut tr =
+                    UdsTransport::new_with_timeout(n, LinkModel::DIE_TO_DIE, TIMEOUT).unwrap();
+                assert!(tr.set_chaos(plan));
+                let mut eng = CollectiveEngine::new(&mut tr, &ThreeStage, DEFAULT_PIPELINE_DEPTH);
+                eng.all_reduce(&xs).map_err(|e| e.to_string())
+            } else {
+                let mut tr =
+                    TcpTransport::new_with_timeout(n, LinkModel::DIE_TO_DIE, TIMEOUT).unwrap();
+                assert!(tr.set_chaos(plan));
+                let mut eng = CollectiveEngine::new(&mut tr, &ThreeStage, DEFAULT_PIPELINE_DEPTH);
+                eng.all_reduce(&xs).map_err(|e| e.to_string())
+            };
+            (out, t0.elapsed())
+        };
+
+        let (ok, took) = run("delay:1.0");
+        let out = ok.unwrap_or_else(|e| panic!("delay must not break the wire (uds={uds}): {e}"));
+        for (r, o) in out.iter().enumerate() {
+            assert_eq!(o, &want, "rank {r} diverged under delay (uds={uds})");
+        }
+        assert!(took < Duration::from_secs(30), "delay run took {took:?}");
+
+        let aborts0 = counter("collective_aborts");
+        for spec in ["drop@1", "flip@1", "truncate@1"] {
+            let (res, took) = run(spec);
+            assert!(res.is_err(), "engine has no recovery: '{spec}' must fail (uds={uds})");
+            assert!(
+                took < TIMEOUT * 8 + Duration::from_secs(10),
+                "'{spec}' (uds={uds}) took {took:?}"
+            );
+        }
+        assert!(
+            counter("collective_aborts") > aborts0,
+            "failed engine steps must count as collective aborts"
+        );
+    }
+}
+
+/// A codec whose `encode` panics periodically but whose format has a raw
+/// escape frame: [`ThreeStage`] wrapped so every third encode dies.
+struct FlakyCodec {
+    inner: ThreeStage,
+    calls: AtomicUsize,
+}
+
+impl Codec for FlakyCodec {
+    fn name(&self) -> &'static str {
+        "flaky-3stage"
+    }
+    fn encode(&self, data: &[u8]) -> Vec<u8> {
+        if self.calls.fetch_add(1, Ordering::Relaxed) % 3 == 2 {
+            panic!("injected codec panic");
+        }
+        self.inner.encode(data)
+    }
+    fn decode(&self, wire: &[u8]) -> sshuff::Result<Vec<u8>> {
+        self.inner.decode(wire)
+    }
+    fn raw_escape(&self, data: &[u8]) -> Option<Vec<u8>> {
+        self.inner.raw_escape(data)
+    }
+}
+
+/// Graceful degradation: when a codec panics mid-collective, the hop
+/// falls back to the codec's raw escape frame and the collective still
+/// completes bit-correctly, with the fallback visible in metrics.
+#[test]
+fn codec_panic_degrades_to_raw_escape() {
+    let n = 3;
+    let xs = inputs(n, 180, 73);
+    let want = all_reduce_reference(&xs);
+    let flaky = FlakyCodec { inner: ThreeStage, calls: AtomicUsize::new(0) };
+    let fallbacks0 = counter("codec_fallbacks");
+    let mut tr = ChannelTransport::new(n, LinkModel::DIE_TO_DIE);
+    let mut eng = CollectiveEngine::new(&mut tr, &flaky, DEFAULT_PIPELINE_DEPTH);
+    let out = eng.all_reduce(&xs).expect("raw escape keeps the collective alive");
+    for (r, o) in out.iter().enumerate() {
+        assert_eq!(o, &want, "rank {r} diverged across the escape path");
+    }
+    assert!(flaky.calls.load(Ordering::Relaxed) >= 3, "panic branch never exercised");
+    assert!(
+        counter("codec_fallbacks") > fallbacks0,
+        "escape-path hops must increment codec_fallbacks"
+    );
+}

@@ -1,0 +1,250 @@
+//! Property tests for the spawn rendezvous protocol parsers.
+//!
+//! The parent/worker control plane exchanges HELLO/TABLE/REPORT/BYE
+//! frames over sockets that chaos testing deliberately corrupts, so the
+//! parsers must turn every mangled frame into a typed `Err` — never a
+//! panic, never a silently-wrong `Ok`.
+
+use sshuff::collectives::wire::{
+    encode_hello, encode_table, parse_hello, parse_table, Telemetry, WorkerReport, MSG_HELLO,
+    MSG_REPORT, MSG_TABLE,
+};
+use sshuff::prng::Pcg32;
+use sshuff::proptest_lite::{gens, shrinks, Runner};
+
+/// Run `f` and report a panic as a property failure instead of
+/// unwinding through the runner (which would skip shrinking). The
+/// parsers are expected never to panic, so this stays silent on the
+/// happy path; a real panic prints its message, which is exactly when
+/// we want it.
+fn no_panic<R>(what: &str, f: impl FnOnce() -> R + std::panic::UnwindSafe) -> Result<(), String> {
+    match std::panic::catch_unwind(f) {
+        Ok(_) => Ok(()),
+        Err(_) => Err(format!("{what} panicked")),
+    }
+}
+
+#[test]
+fn arbitrary_bytes_never_panic_the_parsers() {
+    Runner::new("protocol-fuzz", 400).run(
+        |rng| gens::bytes(rng, 512),
+        shrinks::vec_u8,
+        |frame| {
+            let f = frame.clone();
+            no_panic("parse_hello", move || {
+                let _ = parse_hello(&f);
+            })?;
+            let f = frame.clone();
+            no_panic("parse_table", move || {
+                let _ = parse_table(&f);
+            })?;
+            let f = frame.clone();
+            no_panic("WorkerReport::decode", move || {
+                let _ = WorkerReport::decode(&f);
+            })?;
+            Ok(())
+        },
+    );
+}
+
+fn sample_report(rng: &mut Pcg32) -> WorkerReport {
+    let mut rep = WorkerReport::new(rng.gen_range(64));
+    rep.ok = rng.gen_range(2) == 0;
+    if !rep.ok {
+        rep.err = "wire timeout after 3 attempts".into();
+    }
+    rep.wire_bytes = rng.gen_range(1 << 20) as u64;
+    rep.raw_bytes = rep.wire_bytes * 2;
+    rep.steps = rng.gen_range(32);
+    rep.walls_s = (0..rng.gen_range(4)).map(|i| i as f64 * 0.25).collect();
+    rep.checksums = (0..rng.gen_range(4)).map(|i| 0xdead_beef + i as u64).collect();
+    if rng.gen_range(2) == 0 {
+        rep.telemetry = Some(Telemetry {
+            epoch_unix_ns: 1_700_000_000_000_000_000,
+            trace: gens::bytes(rng, 64),
+            metrics_text: "wire_corrupt_frames 0\nlink_reconnects 1\n".into(),
+        });
+    }
+    rep
+}
+
+#[test]
+fn truncated_report_frames_are_typed_errors() {
+    Runner::new("report-truncation", 200).run(
+        |rng| {
+            let full = sample_report(rng).encode();
+            // any strict prefix, including the empty frame
+            let cut = rng.gen_range(full.len() as u32) as usize;
+            full[..cut].to_vec()
+        },
+        shrinks::vec_u8,
+        |prefix| {
+            let p = prefix.clone();
+            no_panic("WorkerReport::decode", move || {
+                let _ = WorkerReport::decode(&p);
+            })?;
+            match WorkerReport::decode(prefix) {
+                Err(_) => Ok(()),
+                Ok(rep) => Err(format!("truncated report decoded as Ok: {rep:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn report_roundtrip_survives_but_flipped_tag_does_not() {
+    Runner::new("report-tag-flip", 200).run(
+        |rng| {
+            let rep = sample_report(rng);
+            let bad_tag = loop {
+                let t = rng.gen_range(256) as u8;
+                if t != MSG_REPORT {
+                    break t;
+                }
+            };
+            (rep, bad_tag)
+        },
+        |_| Vec::new(),
+        |(rep, bad_tag)| {
+            let mut frame = rep.encode();
+            match WorkerReport::decode(&frame) {
+                Ok(ref d) if d == rep => {}
+                other => return Err(format!("valid report failed to roundtrip: {other:?}")),
+            }
+            frame[0] = *bad_tag;
+            let f = frame.clone();
+            no_panic("WorkerReport::decode", move || {
+                let _ = WorkerReport::decode(&f);
+            })?;
+            match WorkerReport::decode(&frame) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("report with tag {bad_tag:#x} decoded as Ok")),
+            }
+        },
+    );
+}
+
+#[test]
+fn hello_roundtrip_and_mangled_hello_rejected() {
+    Runner::new("hello-mangle", 300).run(
+        |rng| {
+            let rank = rng.gen_range(4096);
+            let scheme = if rng.gen_range(2) == 0 { "tcp" } else { "uds" };
+            let uri = format!("{scheme}://127.0.0.1:{}", 1024 + rng.gen_range(60000));
+            let ver = 1 + rng.gen_range(4);
+            (rank, uri, ver, rng.gen_range(4) as u8, rng.gen_range(256) as u8)
+        },
+        |_| Vec::new(),
+        |(rank, uri, ver, mode, byte)| {
+            let frame = encode_hello(*rank, uri, *ver);
+            let (r, u, v) =
+                parse_hello(&frame).map_err(|e| format!("valid HELLO rejected: {e}"))?;
+            if (r, u.as_str(), v) != (*rank, uri.as_str(), *ver) {
+                return Err(format!("HELLO roundtrip mismatch: ({r}, {u}, {v})"));
+            }
+            let mangled = match mode {
+                // flipped type tag
+                0 => {
+                    let mut f = frame.clone();
+                    f[0] = if *byte == MSG_HELLO { MSG_TABLE } else { *byte };
+                    f
+                }
+                // absurd version word (outside 1..=256, and not a URI scheme)
+                1 => {
+                    let mut f = frame[..5].to_vec();
+                    f.extend_from_slice(&u32::MAX.to_le_bytes());
+                    f.extend_from_slice(b"zzz");
+                    f
+                }
+                // truncated below the fixed header
+                2 => frame[..(*byte as usize).min(4)].to_vec(),
+                // non-utf8 URI bytes
+                _ => {
+                    let mut f = frame.clone();
+                    f.extend_from_slice(&[0xff, 0xfe]);
+                    f
+                }
+            };
+            let m = mangled.clone();
+            no_panic("parse_hello", move || {
+                let _ = parse_hello(&m);
+            })?;
+            match parse_hello(&mangled) {
+                Err(_) => Ok(()),
+                Ok(ok) => Err(format!("mangled HELLO (mode {mode}) parsed as {ok:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn table_roundtrip_and_absurd_lengths_rejected() {
+    Runner::new("table-mangle", 200).run(
+        |rng| {
+            let n = 1 + rng.gen_range(8) as usize;
+            let uris: Vec<String> = (0..n)
+                .map(|i| format!("uds:///tmp/sock-{i}-{}", rng.gen_range(1000)))
+                .collect();
+            (uris, 1 + rng.gen_range(2), rng.gen_range(3) as u8)
+        },
+        |_| Vec::new(),
+        |(uris, ver, mode)| {
+            let frame = encode_table(uris, *ver);
+            let (u, v) = parse_table(&frame).map_err(|e| format!("valid TABLE rejected: {e}"))?;
+            if (&u, v) != (uris, *ver) {
+                return Err("TABLE roundtrip mismatch".into());
+            }
+            let mangled = match mode {
+                // absurd rank count
+                0 => {
+                    let mut f = frame.clone();
+                    f[1..5].copy_from_slice(&u32::MAX.to_le_bytes());
+                    f
+                }
+                // first entry length points past the end of the frame
+                1 => {
+                    let mut f = frame.clone();
+                    f[5..7].copy_from_slice(&u16::MAX.to_le_bytes());
+                    f
+                }
+                // wrong type tag
+                _ => {
+                    let mut f = frame.clone();
+                    f[0] = MSG_REPORT;
+                    f
+                }
+            };
+            let m = mangled.clone();
+            no_panic("parse_table", move || {
+                let _ = parse_table(&m);
+            })?;
+            match parse_table(&mangled) {
+                Err(_) => Ok(()),
+                Ok(ok) => Err(format!("mangled TABLE (mode {mode}) parsed as {ok:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn table_truncations_never_panic() {
+    // A prefix cut at an entry boundary minus the trailing version word
+    // legitimately parses as a v1 table, so the property here is "typed
+    // result, no panic" — not "always Err".
+    Runner::new("table-truncation", 200).run(
+        |rng| {
+            let uris: Vec<String> =
+                (0..1 + rng.gen_range(6)).map(|i| format!("tcp://10.0.0.{i}:9000")).collect();
+            let full = encode_table(&uris, 2);
+            let cut = rng.gen_range(full.len() as u32) as usize;
+            full[..cut].to_vec()
+        },
+        shrinks::vec_u8,
+        |prefix| {
+            let p = prefix.clone();
+            no_panic("parse_table", move || {
+                let _ = parse_table(&p);
+            })
+        },
+    );
+}
